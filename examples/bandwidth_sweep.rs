@@ -1,0 +1,71 @@
+//! Bandwidth x context "winning area" sweep (paper Fig. 3): for each
+//! (bandwidth, context-length) cell, which prefill strategy has the
+//! lowest TTFT — full prefill, raw KV reuse, or compressed KV reuse
+//! (CacheGen vs KVFetcher)?
+//!
+//! Run: `cargo run --release --example bandwidth_sweep [--model yi-34b]`
+
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::engine::single_request_ttft;
+use kvfetcher::fetcher::FetchConfig;
+use kvfetcher::net::BandwidthTrace;
+
+const BANDWIDTHS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 40.0, 100.0, 200.0];
+const CONTEXTS: [usize; 6] = [5_000, 20_000, 50_000, 100_000, 150_000, 200_000];
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args
+        .iter()
+        .position(|a| a == "--model")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|m| ModelSpec::by_name(m))
+        .unwrap_or_else(ModelSpec::yi_34b);
+    let dev = DeviceSpec::h20();
+    let perf = PerfModel::new(dev.clone(), model.clone());
+    let cfg = FetchConfig::default();
+
+    println!("== winning areas (Fig. 3): {} on {} x{} ==", model.name, dev.name, perf.n_gpus);
+    println!("cell = fastest of: F(ull prefill) R(aw reuse) C(acheGen) K(VFetcher)\n");
+
+    print!("{:>9} |", "ctx\\bw");
+    for bw in BANDWIDTHS {
+        print!("{:>7} ", format!("{bw}G"));
+    }
+    println!();
+    println!("{}", "-".repeat(11 + 8 * BANDWIDTHS.len()));
+
+    let systems = [
+        ("F", SystemProfile::full_prefill()),
+        ("R", SystemProfile::raw_reuse()),
+        ("C", SystemProfile::cachegen(&dev)),
+        ("K", SystemProfile::kvfetcher()),
+    ];
+    for ctx in CONTEXTS {
+        print!("{:>9} |", format!("{}K", ctx / 1000));
+        for bw in BANDWIDTHS {
+            let trace = BandwidthTrace::constant(bw);
+            let reusable = (ctx as f64 * 0.95) as usize;
+            let mut best = ("?", f64::INFINITY);
+            for (tag, p) in &systems {
+                let r = if p.kind == kvfetcher::baselines::SystemKind::FullPrefill {
+                    0
+                } else {
+                    reusable
+                };
+                let t = single_request_ttft(&perf, p, &cfg, &trace, ctx, r).total();
+                if t < best.1 {
+                    best = (tag, t);
+                }
+            }
+            print!("{:>5}{:>2} ", format!("{:.1}s", best.1.min(999.0)), best.0);
+        }
+        println!();
+    }
+    println!(
+        "\nExpected shape (paper Fig. 3): K wins the low-bandwidth band and its area\n\
+         is much wider than C's; R takes over as bandwidth -> RDMA rates; F only\n\
+         wins tiny contexts at very low bandwidth."
+    );
+}

@@ -1,0 +1,87 @@
+//! §6 (Limitation and Discussion) — online KV compression for
+//! prefill/decode disaggregation: KV produced on the prefill node must
+//! be compressed *online* (NVENC), transmitted, and decoded (NVDEC) on
+//! the decode node. The paper argues today's scarce NVENCs make this
+//! the bottleneck; this example quantifies exactly that with the
+//! encode-pool model (NVENC ~2x NVDEC latency, 1-3 units per GPU).
+//!
+//! Run: `cargo run --release --example pd_disaggregation`
+
+use kvfetcher::asic::{encode_pool, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::net::{transfer_secs, BandwidthTrace, NetLink};
+use kvfetcher::util::table::{fmt_secs, markdown};
+
+fn main() {
+    println!("== P-D disaggregation: online KV compression (paper §6) ==\n");
+    let dev = DeviceSpec::h20();
+    let model = ModelSpec::yi_34b();
+    let perf = PerfModel::new(dev.clone(), model.clone());
+    let profile = SystemProfile::kvfetcher();
+    let bw_gbps = 16.0;
+
+    // a prefill node streams the KV of finished prefills to the decode
+    // node; chunks of 10K tokens
+    let chunk_tokens = 10_000usize;
+    let raw_chunk = perf.kv_bytes(chunk_tokens);
+    let wire_chunk = profile.wire_bytes(raw_chunk);
+
+    println!(
+        "{} on {} x{}: {:.2} GB raw KV per 10K-token chunk, {:.0} MB compressed\n",
+        model.name,
+        dev.name,
+        perf.n_gpus,
+        raw_chunk as f64 / 1e9,
+        wire_chunk as f64 / 1e6
+    );
+
+    let mut rows = Vec::new();
+    for contexts_per_sec in [0.1f64, 0.3, 0.6, 1.0, 1.6] {
+        let ctx = 100_000usize;
+        let chunks_per_sec = contexts_per_sec * (ctx / chunk_tokens) as f64;
+
+        // NVENC pool: nvencs per GPU x GPUs, ~2x decode latency
+        let mut enc = encode_pool(dev.nvencs * perf.n_gpus, dev.decode_table());
+        let mut dec = DecodePool::new(dev.nvdecs * perf.n_gpus, dev.decode_table());
+        let mut link = NetLink::new(BandwidthTrace::constant(bw_gbps));
+
+        // simulate 60s of steady-state streaming
+        let horizon = 60.0;
+        let n_chunks = (chunks_per_sec * horizon) as usize;
+        let mut done = 0.0f64;
+        let mut enc_backlog = 0.0f64;
+        for i in 0..n_chunks {
+            let t = i as f64 / chunks_per_sec;
+            let e = enc.decode(t, 3, 1.0); // encode job
+            enc_backlog = enc_backlog.max(e.start - t);
+            let (_, te) = link.transmit(e.end, wire_chunk);
+            let d = dec.decode(te, 3, 1.0);
+            done = done.max(d.end);
+        }
+        let enc_util = enc.utilization(done);
+        let dec_util = dec.utilization(done);
+        let sustainable = done <= horizon * 1.2;
+        rows.push(vec![
+            format!("{contexts_per_sec} ctx/s ({chunks_per_sec:.1} chunks/s)"),
+            format!("{:.0}%", enc_util * 100.0),
+            format!("{:.0}%", dec_util * 100.0),
+            fmt_secs(enc_backlog),
+            if sustainable { "yes".into() } else { "NO (NVENC-bound)".into() },
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(
+            &["prefill rate", "NVENC util", "NVDEC util", "max encode queueing", "sustainable?"],
+            &rows
+        )
+    );
+    println!(
+        "\nraw-KV alternative at {bw_gbps} Gbps: {} per chunk transmission — online\n\
+         compression pays off only while NVENC keeps up; beyond that the paper's\n\
+         observation holds: \"limited NVENC resources make the KV compression\n\
+         procedure insufficient to meet runtime requirements\".",
+        fmt_secs(transfer_secs(raw_chunk, bw_gbps))
+    );
+}

@@ -1,0 +1,97 @@
+//! Quickstart: the KVFetcher data path in one file.
+//!
+//! 1. make a KV cache (synthetic, LLM-shaped),
+//! 2. quantize it (CacheGen-style per-channel u8),
+//! 3. lay it out codec-friendly and encode it losslessly as video,
+//! 4. "fetch" it over a simulated 8 Gbps link + NVDEC pool,
+//! 5. decode frame-wise, restore, dequantize,
+//! 6. verify the round trip is bit-exact and print the numbers.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::codec::CodecConfig;
+use kvfetcher::engine::real::best_intra;
+use kvfetcher::layout::{self, Resolution};
+use kvfetcher::net::{transfer_secs, BandwidthTrace, NetLink};
+use kvfetcher::quant::{dequantize, quantize};
+use kvfetcher::tensor::KvCache;
+use kvfetcher::util::table::{fmt_bytes, fmt_secs};
+use kvfetcher::util::Prng;
+
+fn main() {
+    println!("== KVFetcher quickstart ==\n");
+
+    // 1. an LLM-shaped KV cache: 512 tokens, 8 KV planes (4 layers),
+    //    8 heads x 32 dims
+    let mut rng = Prng::new(42);
+    let kv = KvCache::synthetic(&mut rng, 512, 8, 8, 32, 0.97);
+    let raw_f16 = kv.byte_len_f16();
+    println!(
+        "KV cache: {} tokens, {} planes -> raw fp16 {}",
+        kv.tokens,
+        kv.planes,
+        fmt_bytes(raw_f16)
+    );
+
+    // 2. quantize
+    let q = quantize(&kv);
+    println!(
+        "quantized: {} (+scales) = {:.2}x",
+        fmt_bytes(q.byte_len()),
+        raw_f16 as f64 / q.byte_len() as f64
+    );
+
+    // 3. codec-friendly layout + lossless encode
+    let res = Resolution { name: "240p", w: 128, h: 64 };
+    let intra = best_intra(&q, res);
+    println!(
+        "intra layout: heads ({},{}) x dims ({},{}) -> tile {}x{}",
+        intra.hr,
+        intra.hc,
+        intra.dr,
+        intra.dc,
+        intra.tile_h(),
+        intra.tile_w()
+    );
+    let groups =
+        layout::encode_chunk(&q, res, intra, &CodecConfig::lossless()).expect("layout feasible");
+    let wire = layout::chunk_wire_bytes(&groups, q.scales.len());
+    println!(
+        "encoded: {} videos, {} on the wire = {:.2}x vs fp16",
+        groups.len(),
+        fmt_bytes(wire),
+        raw_f16 as f64 / wire as f64
+    );
+
+    // 4. fetch over a simulated 8 Gbps link, decode on a simulated
+    //    H20 NVDEC pool (timing), real decode on CPU (functional)
+    let mut link = NetLink::new(BandwidthTrace::constant(8.0));
+    let (_, t_done) = link.transmit(0.0, wire);
+    let mut pool = DecodePool::new(7, h20_table());
+    let job = pool.decode(t_done, 0, kv.tokens as f64 / 10_000.0);
+    println!(
+        "\nsimulated fetch: transmission {} (8 Gbps), NVDEC decode {} -> ready at {}",
+        fmt_secs(t_done),
+        fmt_secs(job.end - job.start),
+        fmt_secs(job.end)
+    );
+    println!(
+        "(raw fp16 would have taken {} to transmit)",
+        fmt_secs(transfer_secs(raw_f16, 8.0))
+    );
+
+    // 5. decode + restore for real
+    let t0 = std::time::Instant::now();
+    let restored_q = layout::decode_chunk(&groups, q.scales.clone()).expect("decode");
+    let restored = dequantize(&restored_q);
+    let host_decode = t0.elapsed().as_secs_f64();
+
+    // 6. verify
+    assert_eq!(restored_q.data, q.data, "lossless codec must round-trip bit-exact");
+    let max_err = restored.max_abs_diff(&kv);
+    println!("\nhost decode+restore took {} (functional check)", fmt_secs(host_decode));
+    println!("u8 payload round-trip: bit-exact OK");
+    println!("f32 error vs original: {max_err:.6} (= quantization only, bounded by scale/2)");
+    println!("\nquickstart OK");
+}

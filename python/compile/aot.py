@@ -1,0 +1,162 @@
+"""AOT export: lower the L2 model to HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+  tiny_prefill_full.hlo.txt    (weights..., tokens[1,160]) -> (logits, kv)
+  tiny_prefill_prefix.hlo.txt  (weights..., tokens[1,128]) -> (logits, kv)
+  tiny_suffix.hlo.txt          (weights..., kv_p, tokens[1,32]) -> (logits, kv_s)
+  tiny_decode.hlo.txt          (weights..., kv, cur_len, token) -> (logits, kv')
+  weights.bin                  concatenated f32 LE weight arrays
+  manifest.json                shapes/dtypes/offsets for the rust loader
+
+Python runs only here (`make artifacts`); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = M.CFG
+    l, h, dh = cfg.layers, cfg.heads, cfg.head_dim
+    wspecs = M.weight_specs(cfg)
+    w_arg_specs = [spec(s) for _, s in wspecs]
+
+    entries = {}
+
+    def export(name, fn, extra_specs, extra_args_desc, outputs_desc):
+        lowered = jax.jit(fn).lower(*(w_arg_specs + extra_specs))
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entries[name] = {
+            "file": f"{name}.hlo.txt",
+            "weight_args": len(wspecs),
+            "extra_args": extra_args_desc,
+            "outputs": outputs_desc,
+        }
+        print(f"exported {name}: {len(text)} chars")
+
+    kv_shape = lambda t: [l, 2, t, h, dh]
+
+    export(
+        "tiny_prefill_full",
+        lambda *a: M.prefill(list(a[: len(wspecs)]), a[len(wspecs)]),
+        [spec([1, M.FULL_LEN], jnp.int32)],
+        [{"name": "tokens", "shape": [1, M.FULL_LEN], "dtype": "i32"}],
+        [
+            {"name": "logits", "shape": [M.FULL_LEN, cfg.vocab], "dtype": "f32"},
+            {"name": "kv", "shape": kv_shape(M.FULL_LEN), "dtype": "f32"},
+        ],
+    )
+    export(
+        "tiny_prefill_prefix",
+        lambda *a: M.prefill(list(a[: len(wspecs)]), a[len(wspecs)]),
+        [spec([1, M.PREFIX_LEN], jnp.int32)],
+        [{"name": "tokens", "shape": [1, M.PREFIX_LEN], "dtype": "i32"}],
+        [
+            {"name": "logits", "shape": [M.PREFIX_LEN, cfg.vocab], "dtype": "f32"},
+            {"name": "kv", "shape": kv_shape(M.PREFIX_LEN), "dtype": "f32"},
+        ],
+    )
+    export(
+        "tiny_suffix",
+        lambda *a: M.prefill_with_prefix(
+            list(a[: len(wspecs)]), a[len(wspecs)], a[len(wspecs) + 1]
+        ),
+        [spec(kv_shape(M.PREFIX_LEN)), spec([1, M.SUFFIX_LEN], jnp.int32)],
+        [
+            {"name": "kv_prefix", "shape": kv_shape(M.PREFIX_LEN), "dtype": "f32"},
+            {"name": "tokens", "shape": [1, M.SUFFIX_LEN], "dtype": "i32"},
+        ],
+        [
+            {"name": "logits", "shape": [M.SUFFIX_LEN, cfg.vocab], "dtype": "f32"},
+            {"name": "kv_suffix", "shape": kv_shape(M.SUFFIX_LEN), "dtype": "f32"},
+        ],
+    )
+    export(
+        "tiny_decode",
+        lambda *a: M.decode_step(
+            list(a[: len(wspecs)]), a[len(wspecs)], a[len(wspecs) + 1], a[len(wspecs) + 2]
+        ),
+        [spec(kv_shape(M.DECODE_CAP)), spec([], jnp.int32), spec([1], jnp.int32)],
+        [
+            {"name": "kv", "shape": kv_shape(M.DECODE_CAP), "dtype": "f32"},
+            {"name": "cur_len", "shape": [], "dtype": "i32"},
+            {"name": "token", "shape": [1], "dtype": "i32"},
+        ],
+        [
+            {"name": "logits", "shape": [cfg.vocab], "dtype": "f32"},
+            {"name": "kv_next", "shape": kv_shape(M.DECODE_CAP), "dtype": "f32"},
+        ],
+    )
+
+    # Weights: one flat f32 LE blob + offsets.
+    weights = M.init_weights(args.seed, cfg)
+    offsets, off = [], 0
+    with open(os.path.join(args.out_dir, "weights.bin"), "wb") as f:
+        for (name, shape), arr in zip(wspecs, weights):
+            data = np.asarray(arr, dtype="<f4").tobytes()
+            offsets.append(
+                {"name": name, "shape": list(shape), "byte_offset": off, "byte_len": len(data)}
+            )
+            f.write(data)
+            off += len(data)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn,
+            "prefix_len": M.PREFIX_LEN,
+            "suffix_len": M.SUFFIX_LEN,
+            "full_len": M.FULL_LEN,
+            "decode_cap": M.DECODE_CAP,
+            "seed": args.seed,
+        },
+        "weights": offsets,
+        "entries": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote weights.bin ({off} bytes) and manifest.json")
+
+
+if __name__ == "__main__":
+    main()

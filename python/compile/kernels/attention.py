@@ -1,0 +1,120 @@
+"""Layer-1 Pallas kernels: causal / prefix-reuse attention.
+
+The paper's GPU hot spot on the serving path is the cross-attention of
+newly arrived query tokens over a fetched KV prefix (prefix-reuse
+prefill).  On TPU we express the CUDA threadblock tiling as a Pallas
+``grid`` over attention heads with VMEM-resident [S, Dh] / [T, Dh]
+blocks; the q·kᵀ and p·v contractions land on the MXU.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret mode lowers the kernel
+to plain HLO so the AOT artifact runs anywhere (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, offset: int, scale: float):
+    """One head of causal attention.
+
+    q_ref: [1, S, Dh] query block (suffix tokens)
+    k_ref/v_ref: [1, T, Dh] key/value block (prefix + suffix tokens)
+    o_ref: [1, S, Dh]
+
+    Query row i (global position ``offset + i``) may attend to key
+    column j iff ``j <= offset + i`` — standard causal masking shifted
+    by the reused-prefix length.
+    """
+    q = q_ref[0]  # [S, Dh]
+    k = k_ref[0]  # [T, Dh]
+    v = v_ref[0]  # [T, Dh]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [S, T]
+    s_len, t_len = s.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (s_len, t_len), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (s_len, t_len), 1)
+    mask = cols <= rows + offset
+    s = jnp.where(mask, s, NEG_INF)
+    # numerically stable softmax in f32
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("offset",))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, offset: int = 0) -> jax.Array:
+    """Multi-head causal attention via the Pallas kernel.
+
+    q: [H, S, Dh]; k, v: [H, T, Dh] with T = offset + S.
+    Returns [H, S, Dh].
+    """
+    h, s_len, dh = q.shape
+    _, t_len, _ = k.shape
+    assert k.shape == v.shape and k.shape[0] == h
+    assert t_len >= offset + s_len, (t_len, offset, s_len)
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_attn_kernel, offset=offset, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, s_len, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t_len, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, t_len, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s_len, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s_len, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale: float):
+    """Single-token decode attention over a fixed-capacity KV window.
+
+    q_ref: [1, 1, Dh]; k_ref/v_ref: [1, C, Dh]; len_ref: [1] current
+    sequence length (number of valid KV rows).  Positions >= len are
+    masked out.
+    """
+    q = q_ref[0]  # [1, Dh]
+    k = k_ref[0]  # [C, Dh]
+    v = v_ref[0]
+    cur = len_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [1, C]
+    cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(cols < cur, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, cur_len: jax.Array) -> jax.Array:
+    """Decode-step attention. q: [H, 1, Dh]; k, v: [H, C, Dh]; cur_len: i32 scalar."""
+    h, one, dh = q.shape
+    assert one == 1
+    _, cap, _ = k.shape
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_decode_kernel, scale=scale)
+    len_arr = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32).reshape(1), (1,))
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, cap, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, 1, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v, len_arr)

@@ -1,0 +1,79 @@
+"""Layer-1 Pallas kernel: fused dequantize + KV restore.
+
+This is the TPU analogue of the paper's ``Sparse_frame_KV_transfer``
+CUDA operator (§4): decoded video frames arrive as u8 pixels plus
+per-channel quantization scales; the kernel dequantizes and writes f32
+KV tiles in one pass, so restoration never materializes an
+intermediate f32 frame (the frame-wise memory story of §3.3.2).
+
+Tiled over the token dimension so each grid step touches one
+[TILE, C] u8 block resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ZERO_POINT = 128.0
+
+
+def _dequant_kernel(x_ref, scale_ref, o_ref):
+    """x_ref: [TILE, C] u8; scale_ref: [C] f32; o_ref: [TILE, C] f32."""
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (x - ZERO_POINT) * scale_ref[...][None, :]
+
+
+@jax.jit
+def dequantize(x: jax.Array, scales: jax.Array, tile: int = 64) -> jax.Array:
+    """Dequantize u8 KV pixels to f32: (x - 128) * scale, per channel.
+
+    x: [T, C] u8; scales: [C] f32. Returns [T, C] f32.
+    """
+    t, c = x.shape
+    assert scales.shape == (c,)
+    tile = min(tile, t)
+    while t % tile != 0:  # shrink to a divisor — shapes here are tiny
+        tile -= 1
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(t // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.float32),
+        interpret=True,
+    )(x, scales)
+
+
+def _quant_kernel(x_ref, scale_ref, o_ref):
+    """Inverse of the dequant kernel, used on the compression side."""
+    inv = 1.0 / scale_ref[...][None, :]
+    q = jnp.round(x_ref[...] * inv) + ZERO_POINT
+    o_ref[...] = jnp.clip(q, 0.0, 255.0).astype(jnp.uint8)
+
+
+@jax.jit
+def quantize(x: jax.Array, scales: jax.Array, tile: int = 64) -> jax.Array:
+    """Quantize f32 KV values to u8 pixels with per-channel scales."""
+    t, c = x.shape
+    assert scales.shape == (c,)
+    tile = min(tile, t)
+    while t % tile != 0:
+        tile -= 1
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(t // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, c), jnp.uint8),
+        interpret=True,
+    )(x, scales)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; the
+pytest suite (and its hypothesis shape/dtype sweeps) asserts
+``assert_allclose(kernel(...), ref(...))``.  These functions use only
+plain jnp ops so they are trivially correct by inspection.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, offset: int = 0) -> jnp.ndarray:
+    """Causal multi-head attention. q: [H,S,Dh]; k,v: [H,T,Dh] -> [H,S,Dh]."""
+    h, s_len, dh = q.shape
+    t_len = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("hsd,htd->hst", q, k) * scale
+    rows = jnp.arange(s_len)[:, None]
+    cols = jnp.arange(t_len)[None, :]
+    mask = cols <= rows + offset
+    s = jnp.where(mask[None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hst,htd->hsd", p, v)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, cur_len) -> jnp.ndarray:
+    """Decode-step attention over a fixed window. q: [H,1,Dh]; k,v: [H,C,Dh]."""
+    h, _, dh = q.shape
+    cap = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("hsd,htd->hst", q, k) * scale
+    cols = jnp.arange(cap)[None, None, :]
+    s = jnp.where(cols < cur_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hst,htd->hsd", p, v)
+
+
+def dequantize_ref(x: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """(x - 128) * scale, per channel. x: [T,C] u8; scales: [C]."""
+    return (x.astype(jnp.float32) - 128.0) * scales[None, :]
+
+
+def quantize_ref(x: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """round(x/scale) + 128 clipped to u8. x: [T,C] f32."""
+    q = jnp.round(x / scales[None, :]) + 128.0
+    return jnp.clip(q, 0.0, 255.0).astype(jnp.uint8)

@@ -1,0 +1,215 @@
+"""Layer-2: tiny transformer LM in JAX, calling the Pallas kernels.
+
+This is the real-numerics model used by the accuracy benches and the
+end-to-end serving example: a 4-layer, 8-head, RoPE, RMSNorm decoder LM
+(~3.4M params).  It exposes the three entry points the serving path
+needs, mirroring the paper's full-prefill / prefix-reuse / decode split:
+
+  * ``prefill(weights, tokens)``                 — full prefill
+  * ``prefill_with_prefix(weights, kv_p, toks)`` — reuse a fetched KV prefix
+  * ``decode_step(weights, kv, cur_len, token)`` — one autoregressive step
+
+The KV cache layout is ``[layer, 2(k|v), token, head, head_dim]`` f32 —
+the exact tensor the Rust side quantizes, lays out as video frames,
+encodes, fetches, decodes, and restores.
+
+Invariant (tested): ``prefill_with_prefix(kv(p), s)`` produces the same
+logits as the suffix rows of ``prefill(p ++ s)``.  That is precisely the
+correctness contract of KV-cache reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.attention import attention, decode_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    layers: int = 4
+    heads: int = 8
+    head_dim: int = 32
+    ffn: int = 1024
+    rope_theta: float = 10000.0
+
+    @property
+    def d_model(self) -> int:
+        return self.heads * self.head_dim
+
+
+CFG = ModelConfig()
+
+# Fixed export shapes (shared with rust via artifacts/manifest.json).
+PREFIX_LEN = 128
+SUFFIX_LEN = 32
+FULL_LEN = PREFIX_LEN + SUFFIX_LEN
+DECODE_CAP = 256
+
+
+def weight_specs(cfg: ModelConfig = CFG) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Weight arrays in the canonical order of weights.bin / rust runtime."""
+    d, f, l, v = cfg.d_model, cfg.ffn, cfg.layers, cfg.vocab
+    return [
+        ("emb", (v, d)),
+        ("wq", (l, d, d)),
+        ("wk", (l, d, d)),
+        ("wv", (l, d, d)),
+        ("wo", (l, d, d)),
+        ("w1", (l, d, f)),
+        ("w2", (l, f, d)),
+        ("ln1", (l, d)),
+        ("ln2", (l, d)),
+        ("lnf", (d,)),
+    ]
+
+
+def init_weights(seed: int = 0, cfg: ModelConfig = CFG) -> List[jnp.ndarray]:
+    """Deterministic small-scale init; norm gains start at 1."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in weight_specs(cfg):
+        if name.startswith("ln"):
+            out.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            w = rng.standard_normal(shape).astype(np.float32) / np.sqrt(fan_in)
+            out.append(jnp.asarray(w))
+    return out
+
+
+def _rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def _rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [H, T, Dh]; positions: [T] i32."""
+    h, t, dh = x.shape
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos[None] - x2 * sin[None], x1 * sin[None] + x2 * cos[None]], axis=-1
+    )
+
+
+def _layer_qkv(w, layer: int, h_normed: jnp.ndarray, cfg: ModelConfig):
+    """Project to per-head q/k/v: returns three [H, T, Dh] arrays."""
+    wq, wk, wv = w[1], w[2], w[3]
+    t = h_normed.shape[0]
+
+    def proj(mat):
+        y = h_normed @ mat[layer]  # [T, D]
+        return y.reshape(t, cfg.heads, cfg.head_dim).transpose(1, 0, 2)
+
+    return proj(wq), proj(wk), proj(wv)
+
+
+def prefill(w: List[jnp.ndarray], tokens: jnp.ndarray, cfg: ModelConfig = CFG):
+    """Full prefill. tokens: [1, T] i32 -> (logits [T, V], kv [L,2,T,H,Dh])."""
+    emb, wo, w1, w2 = w[0], w[4], w[5], w[6]
+    ln1, ln2, lnf = w[7], w[8], w[9]
+    toks = tokens[0]
+    t = toks.shape[0]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    x = emb[toks]  # [T, D]
+    kv_layers = []
+    for l in range(cfg.layers):
+        h = _rmsnorm(x, ln1[l])
+        q, k, v = _layer_qkv(w, l, h, cfg)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        kv_layers.append(jnp.stack([k.transpose(1, 0, 2), v.transpose(1, 0, 2)]))
+        o = attention(q, k, v, offset=0)  # [H, T, Dh]
+        x = x + o.transpose(1, 0, 2).reshape(t, cfg.d_model) @ wo[l]
+        h2 = _rmsnorm(x, ln2[l])
+        x = x + jax.nn.gelu(h2 @ w1[l]) @ w2[l]
+    logits = _rmsnorm(x, lnf) @ emb.T  # [T, V]
+    kv = jnp.stack(kv_layers)  # [L, 2, T, H, Dh]
+    return logits, kv
+
+
+def prefill_with_prefix(
+    w: List[jnp.ndarray], kv_prefix: jnp.ndarray, tokens: jnp.ndarray, cfg: ModelConfig = CFG
+):
+    """Prefix-reuse prefill.
+
+    kv_prefix: [L, 2, P, H, Dh] (fetched from remote storage);
+    tokens: [1, S] i32 — the new suffix.
+    Returns (logits [S, V], kv_suffix [L, 2, S, H, Dh]).
+    """
+    emb, wo, w1, w2 = w[0], w[4], w[5], w[6]
+    ln1, ln2, lnf = w[7], w[8], w[9]
+    toks = tokens[0]
+    s = toks.shape[0]
+    p = kv_prefix.shape[2]
+    pos = p + jnp.arange(s, dtype=jnp.int32)
+    x = emb[toks]
+    kv_layers = []
+    for l in range(cfg.layers):
+        h = _rmsnorm(x, ln1[l])
+        q, k, v = _layer_qkv(w, l, h, cfg)
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        kv_layers.append(jnp.stack([k.transpose(1, 0, 2), v.transpose(1, 0, 2)]))
+        k_full = jnp.concatenate([kv_prefix[l, 0].transpose(1, 0, 2), k], axis=1)
+        v_full = jnp.concatenate([kv_prefix[l, 1].transpose(1, 0, 2), v], axis=1)
+        o = attention(q, k_full, v_full, offset=p)
+        x = x + o.transpose(1, 0, 2).reshape(s, cfg.d_model) @ wo[l]
+        h2 = _rmsnorm(x, ln2[l])
+        x = x + jax.nn.gelu(h2 @ w1[l]) @ w2[l]
+    logits = _rmsnorm(x, lnf) @ emb.T
+    return logits, jnp.stack(kv_layers)
+
+
+def decode_step(
+    w: List[jnp.ndarray],
+    kv: jnp.ndarray,
+    cur_len: jnp.ndarray,
+    token: jnp.ndarray,
+    cfg: ModelConfig = CFG,
+):
+    """One decode step over a fixed-capacity KV window.
+
+    kv: [L, 2, C, H, Dh] with valid rows [0, cur_len); token: [1] i32.
+    Returns (logits [V], kv_next) where kv_next has the new token's K/V
+    written at row ``cur_len``.
+    """
+    emb, wo, w1, w2 = w[0], w[4], w[5], w[6]
+    ln1, ln2, lnf = w[7], w[8], w[9]
+    cur_len = jnp.asarray(cur_len, jnp.int32)
+    pos = cur_len.reshape(1)
+    x = emb[token]  # [1, D]
+    kv_next = kv
+    for l in range(cfg.layers):
+        h = _rmsnorm(x, ln1[l])
+        q, k, v = _layer_qkv(w, l, h, cfg)  # [H, 1, Dh]
+        q = _rope(q, pos, cfg.rope_theta)
+        k = _rope(k, pos, cfg.rope_theta)
+        zero = jnp.zeros((), jnp.int32)
+        kv_next = jax.lax.dynamic_update_slice(
+            kv_next,
+            k.transpose(1, 0, 2)[None, None],
+            (jnp.asarray(l, jnp.int32), zero, cur_len, zero, zero),
+        )
+        kv_next = jax.lax.dynamic_update_slice(
+            kv_next,
+            v.transpose(1, 0, 2)[None, None],
+            (jnp.asarray(l, jnp.int32), jnp.asarray(1, jnp.int32), cur_len, zero, zero),
+        )
+        k_win = kv_next[l, 0].transpose(1, 0, 2)  # [H, C, Dh]
+        v_win = kv_next[l, 1].transpose(1, 0, 2)
+        o = decode_attention(q, k_win, v_win, cur_len + 1)
+        x = x + o.transpose(1, 0, 2).reshape(1, cfg.d_model) @ wo[l]
+        h2 = _rmsnorm(x, ln2[l])
+        x = x + jax.nn.gelu(h2 @ w1[l]) @ w2[l]
+    logits = (_rmsnorm(x, lnf) @ emb.T)[0]
+    return logits, kv_next

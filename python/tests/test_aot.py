@@ -1,0 +1,73 @@
+"""AOT export checks: HLO text round-trips and the manifest is coherent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.aot import to_hlo_text
+from compile.kernels.attention import attention
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_lowering_smoke():
+    """A pallas-bearing jitted fn lowers to parseable HLO text."""
+    spec = jax.ShapeDtypeStruct((2, 8, 16), jnp.float32)
+    lowered = jax.jit(lambda q, k, v: attention(q, k, v, offset=0)).lower(spec, spec, spec)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # interpret-mode pallas must not leave custom-calls the CPU client can't run
+    assert "custom-call" not in text.lower() or "mosaic" not in text.lower()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_consistent_with_model():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    cfg = M.CFG
+    assert man["model"]["layers"] == cfg.layers
+    assert man["model"]["heads"] == cfg.heads
+    assert man["model"]["head_dim"] == cfg.head_dim
+    assert man["model"]["vocab"] == cfg.vocab
+    assert man["model"]["prefix_len"] == M.PREFIX_LEN
+    assert man["model"]["full_len"] == M.FULL_LEN
+    # weights.bin length == sum of weight byte lens == end offset
+    total = sum(wi["byte_len"] for wi in man["weights"])
+    assert os.path.getsize(os.path.join(ART, "weights.bin")) == total
+    for wi, (name, shape) in zip(man["weights"], M.weight_specs(cfg)):
+        assert wi["name"] == name
+        assert tuple(wi["shape"]) == shape
+        assert wi["byte_len"] == 4 * int(np.prod(shape))
+    # every exported entry's HLO file exists and is text HLO
+    for name, e in man["entries"].items():
+        p = os.path.join(ART, e["file"])
+        assert os.path.exists(p), p
+        with open(p) as f:
+            head = f.read(200)
+        assert "HloModule" in head
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_weights_bin_matches_init():
+    """weights.bin must be exactly init_weights(seed) in canonical order."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    weights = M.init_weights(man["model"]["seed"])
+    blob = open(os.path.join(ART, "weights.bin"), "rb").read()
+    for wi, arr in zip(man["weights"], weights):
+        got = np.frombuffer(
+            blob[wi["byte_offset"] : wi["byte_offset"] + wi["byte_len"]], dtype="<f4"
+        ).reshape(wi["shape"])
+        assert np.array_equal(got, np.asarray(arr)), wi["name"]

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref.py.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.attention import attention, decode_attention
+from compile.kernels.dequant import dequantize, quantize
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------- attention
+@hypothesis.given(
+    h=st.sampled_from([1, 2, 8]),
+    s=st.sampled_from([1, 3, 16, 32]),
+    p=st.sampled_from([0, 1, 17, 128]),
+    dh=st.sampled_from([4, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_attention_matches_ref(h, s, p, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (h, s, dh))
+    k = rand(rng, (h, p + s, dh))
+    v = rand(rng, (h, p + s, dh))
+    got = attention(q, k, v, offset=p)
+    want = ref.attention_ref(q, k, v, offset=p)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_attention_causality():
+    """Future keys must not influence the output."""
+    rng = np.random.default_rng(0)
+    h, s, dh = 2, 8, 16
+    q, k, v = rand(rng, (h, s, dh)), rand(rng, (h, s, dh)), rand(rng, (h, s, dh))
+    o1 = np.asarray(attention(q, k, v, offset=0))
+    # perturb the *last* key/value: rows 0..s-2 must be unchanged
+    k2 = k.at[:, -1].add(100.0)
+    v2 = v.at[:, -1].add(100.0)
+    o2 = np.asarray(attention(q, k2, v2, offset=0))
+    assert_allclose(o1[:, : s - 1], o2[:, : s - 1], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(o1[:, -1], o2[:, -1])
+
+
+def test_attention_offset_consistency():
+    """Prefix-reuse attention == suffix rows of full causal attention."""
+    rng = np.random.default_rng(1)
+    h, p, s, dh = 4, 24, 8, 16
+    q_full = rand(rng, (h, p + s, dh))
+    k = rand(rng, (h, p + s, dh))
+    v = rand(rng, (h, p + s, dh))
+    full = np.asarray(attention(q_full, k, v, offset=0))
+    part = np.asarray(attention(q_full[:, p:], k, v, offset=p))
+    assert_allclose(part, full[:, p:], rtol=2e-5, atol=2e-5)
+
+
+@hypothesis.given(
+    h=st.sampled_from([1, 4]),
+    cap=st.sampled_from([8, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.floats(0.1, 1.0),
+)
+@hypothesis.settings(**SETTINGS)
+def test_decode_attention_matches_ref(h, cap, seed, frac):
+    rng = np.random.default_rng(seed)
+    cur = max(1, int(cap * frac))
+    dh = 32
+    q = rand(rng, (h, 1, dh))
+    k = rand(rng, (h, cap, dh))
+    v = rand(rng, (h, cap, dh))
+    got = decode_attention(q, k, v, jnp.asarray(cur, jnp.int32))
+    want = ref.decode_attention_ref(q, k, v, cur)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_ignores_stale_rows():
+    """Rows beyond cur_len are masked: garbage there must not matter."""
+    rng = np.random.default_rng(2)
+    h, cap, dh, cur = 2, 32, 16, 10
+    q, k, v = rand(rng, (h, 1, dh)), rand(rng, (h, cap, dh)), rand(rng, (h, cap, dh))
+    o1 = np.asarray(decode_attention(q, k, v, jnp.asarray(cur, jnp.int32)))
+    k2 = k.at[:, cur:].set(1e6)
+    v2 = v.at[:, cur:].set(-1e6)
+    o2 = np.asarray(decode_attention(q, k2, v2, jnp.asarray(cur, jnp.int32)))
+    assert_allclose(o1, o2, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- quant/dequant
+@hypothesis.given(
+    t=st.sampled_from([1, 7, 64, 130]),
+    c=st.sampled_from([4, 32, 96]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_dequantize_matches_ref(t, c, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, size=(t, c), dtype=np.uint8))
+    scales = jnp.asarray(rng.uniform(1e-3, 0.1, size=(c,)).astype(np.float32))
+    got = dequantize(x, scales)
+    want = ref.dequantize_ref(x, scales)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-7)
+
+
+@hypothesis.given(
+    t=st.sampled_from([1, 16, 65]),
+    c=st.sampled_from([8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_quantize_matches_ref(t, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (t, c), scale=0.05)
+    scales = jnp.asarray(np.full((c,), 0.01, np.float32))
+    got = quantize(x, scales)
+    want = ref.quantize_ref(x, scales)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quant_dequant_roundtrip_error_bound():
+    """|dequant(quant(x)) - x| <= scale/2 wherever no clipping occurs."""
+    rng = np.random.default_rng(3)
+    x = rand(rng, (64, 32), scale=0.02)
+    scales = jnp.asarray(np.full((32,), 0.001, np.float32))
+    q = quantize(x, scales)
+    back = np.asarray(dequantize(q, scales))
+    unclipped = (np.asarray(q) > 0) & (np.asarray(q) < 255)
+    err = np.abs(back - np.asarray(x))
+    assert np.all(err[unclipped] <= 0.001 / 2 + 1e-7)

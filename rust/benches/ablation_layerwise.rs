@@ -1,0 +1,81 @@
+//! Ablation (Appx. A.3 / §4 Compatibility) — layer-wise fetch/compute
+//! pipelining: a fetch request may enter the running queue before its
+//! last layer arrives, provided every layer's KV lands before compute
+//! reaches it. Compares fetch-request TTFT with the pipeline on vs off
+//! across bandwidths, plus the admission-rule unit economics.
+
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::engine::{EngineConfig, EngineSim};
+use kvfetcher::fetcher::layerwise_admission;
+use kvfetcher::net::BandwidthTrace;
+use kvfetcher::trace::{generate, TraceConfig};
+use kvfetcher::util::table::{fmt_secs, markdown};
+
+fn main() {
+    println!("# Ablation — layer-wise fetch/compute pipeline (Appx. A.3)\n");
+    let perf = PerfModel::new(DeviceSpec::h20(), ModelSpec::yi_34b());
+    let trace = generate(&TraceConfig {
+        seed: 33,
+        n_requests: 16,
+        rate: 0.05, // isolated requests: pure pipeline effect
+        ctx_min: 60_000,
+        ctx_max: 160_000,
+        reuse_frac: 1.0,
+        reuse_threshold: 40_000,
+        reuse_share: 0.9, // a 10% suffix gives compute to overlap with
+        ..Default::default()
+    });
+
+    let mut rows = Vec::new();
+    for bw in [2.0, 4.0, 8.0, 16.0] {
+        let run = |layerwise: bool| {
+            let cfg = EngineConfig { layerwise_pipeline: layerwise, ..Default::default() };
+            EngineSim::new(
+                perf.clone(),
+                SystemProfile::kvfetcher(),
+                cfg,
+                BandwidthTrace::constant(bw),
+            )
+            .run(&trace)
+            .ttft_summary(Some(true))
+        };
+        let with = run(true);
+        let without = run(false);
+        // earlier admission of one request can occasionally delay a
+        // neighbour's batch slot (work-conserving schedulers are not
+        // TTFT-monotone per request), so allow a small tolerance on the
+        // aggregate; isolated requests always win (see dbg below)
+        assert!(
+            with.mean <= without.mean * 1.05,
+            "pipeline must not hurt materially: {} vs {} at {bw} Gbps",
+            with.mean,
+            without.mean
+        );
+        rows.push(vec![
+            format!("{bw} Gbps"),
+            fmt_secs(without.mean),
+            fmt_secs(with.mean),
+            format!("{:.1}%", (1.0 - with.mean / without.mean) * 100.0),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(&["bandwidth", "fetch TTFT (no pipeline)", "fetch TTFT (layer-wise)", "saving"], &rows)
+    );
+
+    // admission-rule micro-view: when compute per layer covers the
+    // per-layer fetch time, admission is immediate after layer 1
+    println!("\nadmission rule examples (fetch [0,10s], 32 layers):");
+    let mut rows = Vec::new();
+    for per_layer in [0.0, 0.1, 0.3, 0.5, 1.0] {
+        let admit = layerwise_admission(0.0, 10.0, 32, per_layer, 0);
+        rows.push(vec![
+            format!("{per_layer:.1}s/layer compute"),
+            fmt_secs(admit),
+            fmt_secs((10.0f64 - admit).max(0.0)),
+        ]);
+    }
+    println!("{}", markdown(&["compute speed", "admit at", "overlap won"], &rows));
+    println!("paper: the non-blocking condition hides the remaining layers' fetch\nbehind inference, eliminating the pipeline bubbles of the layer-wise design.");
+}

@@ -1,0 +1,82 @@
+//! Fig. 3 — "winning areas" of full prefill / raw KV reuse / compressed
+//! KV reuse across bandwidth x context length. Reproduces the paper's
+//! claim that KVFetcher widens the compressed-reuse winning area far
+//! beyond CacheGen's dashed box.
+
+use kvfetcher::baselines::{SystemKind, SystemProfile};
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::engine::single_request_ttft;
+use kvfetcher::fetcher::FetchConfig;
+use kvfetcher::net::BandwidthTrace;
+
+const BANDWIDTHS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 40.0, 100.0, 200.0];
+const CONTEXTS: [usize; 6] = [5_000, 20_000, 50_000, 100_000, 150_000, 200_000];
+
+fn ttft(perf: &PerfModel, p: &SystemProfile, bw: f64, ctx: usize) -> f64 {
+    let reusable = if p.kind == SystemKind::FullPrefill { 0 } else { (ctx as f64 * 0.95) as usize };
+    single_request_ttft(perf, p, &FetchConfig::default(), &BandwidthTrace::constant(bw), ctx, reusable)
+        .total()
+}
+
+fn grid(perf: &PerfModel, dev: &DeviceSpec, include_kvf: bool) {
+    let mut systems = vec![
+        ("F", SystemProfile::full_prefill()),
+        ("R", SystemProfile::raw_reuse()),
+        ("C", SystemProfile::cachegen(dev)),
+    ];
+    if include_kvf {
+        systems.push(("K", SystemProfile::kvfetcher()));
+    }
+    print!("{:>9} |", "ctx\\bw");
+    for bw in BANDWIDTHS {
+        print!("{:>6} ", format!("{bw}G"));
+    }
+    println!();
+    let mut k_cells = 0;
+    let mut c_cells = 0;
+    for ctx in CONTEXTS {
+        print!("{:>9} |", format!("{}K", ctx / 1000));
+        for bw in BANDWIDTHS {
+            let winner = systems
+                .iter()
+                .map(|(tag, p)| (*tag, ttft(perf, p, bw, ctx)))
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0;
+            if winner == "K" {
+                k_cells += 1;
+            }
+            if winner == "C" {
+                c_cells += 1;
+            }
+            print!("{:>6} ", winner);
+        }
+        println!();
+    }
+    if include_kvf {
+        println!(
+            "\ncompressed-reuse winning cells: KVFetcher {k_cells}/{} vs CacheGen-only run below",
+            BANDWIDTHS.len() * CONTEXTS.len()
+        );
+    } else {
+        println!(
+            "\ncompressed-reuse winning cells: CacheGen {c_cells}/{}",
+            BANDWIDTHS.len() * CONTEXTS.len()
+        );
+    }
+}
+
+fn main() {
+    let dev = DeviceSpec::h20();
+    let model = ModelSpec::lwm_7b(); // the paper's Fig. 3 uses LWM-7B on H20
+    let perf = PerfModel::new(dev.clone(), model.clone());
+    println!("# Fig. 3 — winning areas ({} on {} x{})", model.name, dev.name, perf.n_gpus);
+    println!("\n## with KVFetcher available (paper: right panel)");
+    grid(&perf, &dev, true);
+    println!("\n## compressed reuse = CacheGen only (paper: left panel, dashed box)");
+    grid(&perf, &dev, false);
+    println!(
+        "\npaper shape check: KVFetcher extends the compressed-reuse area across\n\
+         nearly the whole 1-40 Gbps band; CacheGen's area is much smaller."
+    );
+}

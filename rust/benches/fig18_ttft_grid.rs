@@ -1,0 +1,68 @@
+//! Fig. 18 — TTFT of a fetch request vs context length, for every
+//! (device, model) pair of the paper's testbed and all five systems,
+//! at the paper's default 16 Gbps.
+
+use kvfetcher::baselines::{SystemKind, SystemProfile};
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::engine::single_request_ttft;
+use kvfetcher::fetcher::FetchConfig;
+use kvfetcher::net::BandwidthTrace;
+use kvfetcher::util::table::{fmt_secs, markdown};
+
+fn main() {
+    println!("# Fig. 18 — fetch-request TTFT across devices, models, contexts (16 Gbps)\n");
+    let devices = [DeviceSpec::a100(), DeviceSpec::h20(), DeviceSpec::l20()];
+    let models = [ModelSpec::lwm_7b(), ModelSpec::yi_34b(), ModelSpec::llama3_70b()];
+    let bw = BandwidthTrace::constant(16.0);
+    let cfg = FetchConfig::default();
+
+    let mut speedups_vs_full = Vec::new();
+    let mut speedups_vs_raw = Vec::new();
+    let mut speedups_vs_cg = Vec::new();
+
+    for dev in &devices {
+        for model in &models {
+            let perf = PerfModel::new(dev.clone(), model.clone());
+            // context range scaled to each model's window (paper panels)
+            let max_ctx = match model.name {
+                "LWM-7B" => 200_000,
+                "Yi-34B" => 160_000,
+                _ => 120_000,
+            };
+            let contexts = [max_ctx / 8, max_ctx / 4, max_ctx / 2, max_ctx];
+            println!("## {} x{} | {}", dev.name, perf.n_gpus, model.name);
+            let systems = SystemProfile::all(dev);
+            let mut rows = Vec::new();
+            for ctx in contexts {
+                let reusable = (ctx as f64 * 0.95) as usize;
+                let mut cells = vec![format!("{}K", ctx / 1000)];
+                let mut ttfts = std::collections::BTreeMap::new();
+                for p in &systems {
+                    let r = if p.kind == SystemKind::FullPrefill { 0 } else { reusable };
+                    let t = single_request_ttft(&perf, p, &cfg, &bw, ctx, r).total();
+                    ttfts.insert(p.name, t);
+                    cells.push(fmt_secs(t));
+                }
+                speedups_vs_full.push(ttfts["FullPrefill"] / ttfts["KVFetcher"]);
+                speedups_vs_raw.push(ttfts["RawReuse"] / ttfts["KVFetcher"]);
+                speedups_vs_cg.push(ttfts["CacheGen"] / ttfts["KVFetcher"]);
+                rows.push(cells);
+            }
+            let headers: Vec<&str> = std::iter::once("ctx")
+                .chain(systems.iter().map(|p| p.name))
+                .collect();
+            println!("{}", markdown(&headers, &rows));
+        }
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "average KVFetcher speedup: {:.2}x vs FullPrefill (paper 13.63x), {:.2}x vs RawReuse \
+         (paper 3.51x), {:.2}x vs CacheGen (paper 1.52x)",
+        avg(&speedups_vs_full),
+        avg(&speedups_vs_raw),
+        avg(&speedups_vs_cg)
+    );
+    assert!(avg(&speedups_vs_full) > 3.0);
+    assert!(avg(&speedups_vs_raw) > 1.3);
+    assert!(avg(&speedups_vs_cg) > 1.05);
+}

@@ -1,0 +1,60 @@
+//! Fig. 21 — heatmap of CacheGen TTFT ÷ KVFetcher TTFT over
+//! bandwidth (1-40 Gbps+) x context (20K-200K). Paper: 1.29x-3.50x
+//! average gain below 40 Gbps, diminishing as bandwidth grows.
+
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::engine::single_request_ttft;
+use kvfetcher::fetcher::FetchConfig;
+use kvfetcher::net::BandwidthTrace;
+
+const BANDWIDTHS: [f64; 7] = [1.0, 2.0, 4.0, 8.0, 16.0, 40.0, 100.0];
+const CONTEXTS: [usize; 5] = [20_000, 50_000, 100_000, 150_000, 200_000];
+
+fn main() {
+    println!("# Fig. 21 — CacheGen TTFT / KVFetcher TTFT (LWM-7B on 2x H20)\n");
+    let dev = DeviceSpec::h20();
+    let perf = PerfModel::new(dev.clone(), ModelSpec::lwm_7b());
+    let cfg = FetchConfig::default();
+    let ours = SystemProfile::kvfetcher();
+    let cg = SystemProfile::cachegen(&dev);
+
+    print!("{:>9} |", "ctx\\bw");
+    for bw in BANDWIDTHS {
+        print!("{:>6} ", format!("{bw}G"));
+    }
+    println!();
+    println!("{}", "-".repeat(11 + 7 * BANDWIDTHS.len()));
+    let mut low_bw_ratios = Vec::new();
+    let mut hi_bw_ratios = Vec::new();
+    for ctx in CONTEXTS {
+        print!("{:>9} |", format!("{}K", ctx / 1000));
+        let reusable = (ctx as f64 * 0.95) as usize;
+        for bw in BANDWIDTHS {
+            let tr = BandwidthTrace::constant(bw);
+            let t_ours = single_request_ttft(&perf, &ours, &cfg, &tr, ctx, reusable).total();
+            let t_cg = single_request_ttft(&perf, &cg, &cfg, &tr, ctx, reusable).total();
+            let ratio = t_cg / t_ours;
+            if bw <= 40.0 {
+                low_bw_ratios.push(ratio);
+            } else {
+                hi_bw_ratios.push(ratio);
+            }
+            print!("{:>6} ", format!("{ratio:.2}"));
+        }
+        println!();
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let amax = |v: &[f64]| v.iter().cloned().fold(f64::MIN, f64::max);
+    println!(
+        "\n<=40 Gbps: mean {:.2}x, max {:.2}x (paper: 1.29x-3.50x range); >40 Gbps mean {:.2}x",
+        avg(&low_bw_ratios),
+        amax(&low_bw_ratios),
+        avg(&hi_bw_ratios)
+    );
+    assert!(avg(&low_bw_ratios) > 1.0, "KVFetcher must beat CacheGen below 40 Gbps");
+    assert!(
+        avg(&hi_bw_ratios) < amax(&low_bw_ratios),
+        "the gain must diminish as bandwidth grows"
+    );
+}

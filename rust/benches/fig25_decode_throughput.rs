@@ -1,0 +1,57 @@
+//! Fig. 25 — KV decode throughput (tokens/s) per platform, NVDEC pool
+//! vs CacheGen's CUDA kernel, using the paper's testbed GPU counts
+//! (Yi-34B: 4x L20, 2x H20, 2x A100).
+//!
+//! Known deviation (see EXPERIMENTS.md): the paper's Tables 1-3
+//! per-chunk latencies imply a *higher* steady-state NVDEC throughput
+//! than its Fig. 25 reports; we reproduce the table-implied numbers and
+//! the CacheGen comparison, and state the paper values alongside.
+
+use kvfetcher::asic::DecodePool;
+use kvfetcher::baselines::cachegen_tokens_per_sec;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec};
+use kvfetcher::util::table::markdown;
+
+fn main() {
+    println!("# Fig. 25 — decode throughput by platform (Yi-34B)\n");
+    let model = ModelSpec::yi_34b();
+    let devices = [DeviceSpec::l20(), DeviceSpec::h20(), DeviceSpec::a100()];
+    let paper_ours = [27_000.0, 67_000.0, 47_000.0];
+    let chunk_tokens = 10_000usize;
+    let n_chunks = 64;
+
+    let mut rows = Vec::new();
+    for (dev, paper) in devices.iter().zip(paper_ours) {
+        let n_gpus = model.gpus_on(dev);
+        let units = dev.nvdecs * n_gpus;
+        let mut pool = DecodePool::new(units, dev.decode_table());
+        // saturate the pool: decode n_chunks back-to-back at 1080p
+        let mut last_end = 0.0f64;
+        for _ in 0..n_chunks {
+            let job = pool.decode(0.0, 3, 1.0);
+            last_end = last_end.max(job.end);
+        }
+        let ours_tps = (n_chunks * chunk_tokens) as f64 / last_end;
+        let cg_tps = cachegen_tokens_per_sec(dev) * n_gpus as f64 / 2.0; // paper used 2-GPU cachegen numbers
+        rows.push(vec![
+            format!("{}x {}", n_gpus, dev.name),
+            format!("{units}"),
+            format!("{:.0}K", ours_tps / 1e3),
+            format!("{:.0}K", paper / 1e3),
+            format!("{:.0}K", cg_tps / 1e3),
+            format!("{:.2}", ours_tps / cg_tps),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(
+            &["platform", "NVDECs", "ours (sim, table-implied)", "ours (paper)", "CacheGen CUDA", "ratio"],
+            &rows
+        )
+    );
+    println!(
+        "paper ratios ours/CacheGen: L20 0.3x, H20 1.34x, A100 0.88x. Our pool is\n\
+         bounded by unit count x per-chunk table latency; the paper's Fig. 25 is\n\
+         lower than its own tables imply — we report both."
+    );
+}

@@ -1,0 +1,81 @@
+//! §Perf — codec hot-path throughput: rANS encode/decode, full video
+//! encode/decode, and end-to-end chunk restore, in MB/s. The L3 target
+//! (DESIGN.md §7): encode >= 200 MB/s, decode >= 300 MB/s per core so
+//! the simulated NVDEC latency — not host CPU — is always the modelled
+//! cost in the examples.
+
+use kvfetcher::codec::{decode_video, encode_video, rans, CodecConfig};
+use kvfetcher::engine::real::best_intra;
+use kvfetcher::layout::{decode_chunk, encode_chunk, Resolution};
+use kvfetcher::quant::quantize;
+use kvfetcher::tensor::KvCache;
+use kvfetcher::util::proptest::gen_bytes;
+use kvfetcher::util::table::markdown;
+use kvfetcher::util::Prng;
+
+fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    println!("# perf_codec — host codec throughput\n");
+    let mut rng = Prng::new(123);
+    let mut rows = Vec::new();
+
+    // rANS on residual-like (peaked) data, 8 MB
+    let peaked = gen_bytes(&mut rng, 8 << 20, true);
+    let enc = rans::encode(&peaked);
+    let t_enc = time(3, || {
+        std::hint::black_box(rans::encode(&peaked));
+    });
+    let t_dec = time(3, || {
+        std::hint::black_box(rans::decode(&enc).unwrap());
+    });
+    let mb = (peaked.len() >> 20) as f64;
+    rows.push(vec!["rANS encode (peaked 8MB)".into(), format!("{:.0} MB/s", mb / t_enc)]);
+    rows.push(vec!["rANS decode (peaked 8MB)".into(), format!("{:.0} MB/s", mb / t_dec)]);
+
+    // full video pipeline on a 1024-token chunk (8 planes, 8x32)
+    let kv = KvCache::synthetic(&mut rng, 1024, 8, 8, 32, 0.97);
+    let q = quantize(&kv);
+    let res = Resolution { name: "640p", w: 256, h: 128 };
+    let intra = best_intra(&q, res);
+    let raw_mb = q.data.len() as f64 / (1 << 20) as f64;
+    let groups = encode_chunk(&q, res, intra, &CodecConfig::lossless()).unwrap();
+    let t_venc = time(3, || {
+        std::hint::black_box(encode_chunk(&q, res, intra, &CodecConfig::lossless()).unwrap());
+    });
+    let t_vdec = time(3, || {
+        std::hint::black_box(decode_chunk(&groups, q.scales.clone()).unwrap());
+    });
+    rows.push(vec![
+        format!("video encode ({raw_mb:.0}MB chunk)"),
+        format!("{:.0} MB/s", raw_mb / t_venc),
+    ]);
+    rows.push(vec![
+        format!("video decode+restore ({raw_mb:.0}MB chunk)"),
+        format!("{:.0} MB/s", raw_mb / t_vdec),
+    ]);
+
+    // single-video paths (frames only, no layout) for profiling deltas
+    let frames = groups[0].layout.build_frames(&q);
+    let (bytes, _) = encode_video(&frames, &CodecConfig::lossless(), &[]);
+    let t_e1 = time(3, || {
+        std::hint::black_box(encode_video(&frames, &CodecConfig::lossless(), &[]));
+    });
+    let t_d1 = time(3, || {
+        std::hint::black_box(decode_video(&bytes).unwrap());
+    });
+    let fmb = frames.iter().map(|f| f.byte_len()).sum::<usize>() as f64 / (1 << 20) as f64;
+    rows.push(vec![format!("encode_video ({fmb:.1}MB frames)"), format!("{:.0} MB/s", fmb / t_e1)]);
+    rows.push(vec![format!("decode_video ({fmb:.1}MB frames)"), format!("{:.0} MB/s", fmb / t_d1)]);
+
+    println!("{}", markdown(&["path", "throughput"], &rows));
+    println!("targets (DESIGN.md §7): encode >= 200 MB/s, decode >= 300 MB/s");
+}

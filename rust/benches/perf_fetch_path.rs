@@ -1,0 +1,85 @@
+//! §Perf — L3 coordinator hot path: fetch planning, scheduler
+//! admission, paged allocation, and full-engine simulation throughput.
+//! Target (DESIGN.md §7): >= 100k scheduling/fetch events per second.
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cache::BlockAllocator;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::engine::{EngineConfig, EngineSim};
+use kvfetcher::fetcher::{plan_fetch, select_resolution, FetchConfig};
+use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+use kvfetcher::trace::{generate, TraceConfig};
+use kvfetcher::util::table::markdown;
+
+fn main() {
+    println!("# perf_fetch_path — coordinator hot-path throughput\n");
+    let mut rows = Vec::new();
+
+    // Alg. 1 resolution selection rate
+    let pool = DecodePool::new(7, h20_table());
+    let n = 1_000_000;
+    let t0 = std::time::Instant::now();
+    let mut acc = 0usize;
+    for i in 0..n {
+        acc += select_resolution(2.0 + (i % 30) as f64, 200_000_000, &pool, 0.0, 1.0);
+    }
+    std::hint::black_box(acc);
+    let dt = t0.elapsed().as_secs_f64();
+    rows.push(vec!["Alg.1 select_resolution".into(), format!("{:.1}M ops/s", n as f64 / dt / 1e6)]);
+
+    // fetch planning rate (10-chunk plans)
+    let profile = SystemProfile::kvfetcher();
+    let cfg = FetchConfig::default();
+    let perf = PerfModel::new(DeviceSpec::h20(), ModelSpec::yi_34b());
+    let raw = perf.kv_bytes(100_000);
+    let t0 = std::time::Instant::now();
+    let plans = 20_000;
+    for i in 0..plans {
+        let mut link = NetLink::new(BandwidthTrace::constant(16.0));
+        let mut p = DecodePool::new(14, h20_table());
+        let mut est = BandwidthEstimator::new(0.5);
+        std::hint::black_box(plan_fetch(
+            i as f64, 100_000, raw, &profile, &cfg, &mut link, &mut p, &mut est,
+        ));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    rows.push(vec![
+        "plan_fetch (10 chunks, fresh state)".into(),
+        format!("{:.0}K plans/s ({:.0}K chunk-events/s)", plans as f64 / dt / 1e3, plans as f64 * 10.0 / dt / 1e3),
+    ]);
+
+    // allocator churn
+    let mut alloc = BlockAllocator::new(4096, 256);
+    let t0 = std::time::Instant::now();
+    let rounds = 200_000;
+    for _ in 0..rounds {
+        let b = alloc.alloc(8).unwrap();
+        alloc.release_all(&b);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    rows.push(vec![
+        "paged alloc/release (8 blocks)".into(),
+        format!("{:.1}M ops/s", rounds as f64 / dt / 1e6),
+    ]);
+
+    // full engine sim throughput (requests simulated per second)
+    let trace = generate(&TraceConfig { n_requests: 256, rate: 1.0, ..Default::default() });
+    let t0 = std::time::Instant::now();
+    let mut eng = EngineSim::new(
+        perf.clone(),
+        SystemProfile::kvfetcher(),
+        EngineConfig::default(),
+        BandwidthTrace::constant(16.0),
+    );
+    let rec = eng.run(&trace);
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(rec.records.len(), trace.len());
+    rows.push(vec![
+        "EngineSim end-to-end (256 reqs)".into(),
+        format!("{:.0} simulated reqs/s", trace.len() as f64 / dt),
+    ]);
+
+    println!("{}", markdown(&["hot path", "throughput"], &rows));
+    println!("target (DESIGN.md §7): fetch-path event loop >= 100k events/s");
+}

@@ -1,0 +1,282 @@
+//! GPU media-ASIC (NVDEC/NVENC) simulator.
+//!
+//! Functional decoding is done by `codec::decode_video` on the CPU; this
+//! module supplies the *timing* and *occupancy* model of the dedicated
+//! hardware units, parameterized by the paper's own measurements
+//! (Appx. A.2, Tables 1–3: per-resolution decode latency vs pool
+//! concurrency, resolution-switch penalty, nominal chunk sizes).
+//!
+//! Key properties reproduced:
+//!   * few units per GPU (A100: 5, H20: 7, L20: 3) — queueing under load;
+//!   * decode latency *decreases* with resolution (low-res frames
+//!     underutilize the 64x64 block-parallel units);
+//!   * switching the pool's active resolution costs a penalty;
+//!   * the units are independent of SMs: decoding causes **zero**
+//!     contention with LLM inference (the whole point of the paper).
+
+/// Index into the resolution ladder used by the lookup tables.
+pub const TABLE_RESOLUTIONS: [&str; 4] = ["240p", "480p", "640p", "1080p"];
+
+/// Per-device decode lookup table (paper Tables 1–3).
+#[derive(Debug, Clone)]
+pub struct LookupTable {
+    /// latency[c][r]: seconds to decode one nominal chunk at
+    /// concurrency c+1, resolution index r.
+    pub latency: Vec<[f64; 4]>,
+    /// Switch penalty per resolution (seconds).
+    pub penalty: [f64; 4],
+    /// Nominal encoded size of one 10K-token chunk (MB) per resolution.
+    pub size_mb: [f64; 4],
+}
+
+impl LookupTable {
+    /// Decode latency at `concurrency` (>=1), clamped to the table.
+    pub fn latency_at(&self, res_idx: usize, concurrency: usize) -> f64 {
+        let row = concurrency.clamp(1, self.latency.len()) - 1;
+        self.latency[row][res_idx]
+    }
+
+    pub fn max_concurrency(&self) -> usize {
+        self.latency.len()
+    }
+}
+
+/// Paper Table 1 — NVIDIA H20 (7 NVDECs).
+pub fn h20_table() -> LookupTable {
+    LookupTable {
+        latency: vec![
+            [0.21, 0.20, 0.20, 0.19],
+            [0.22, 0.22, 0.21, 0.19],
+            [0.29, 0.30, 0.29, 0.26],
+            [0.32, 0.31, 0.30, 0.30],
+            [0.46, 0.42, 0.37, 0.35],
+            [0.52, 0.43, 0.41, 0.40],
+            [0.62, 0.51, 0.45, 0.43],
+        ],
+        penalty: [0.08, 0.06, 0.03, 0.0],
+        size_mb: [180.0, 205.0, 235.0, 256.0],
+    }
+}
+
+/// Paper Table 2 — NVIDIA L20 (3 NVDECs).
+pub fn l20_table() -> LookupTable {
+    LookupTable {
+        latency: vec![
+            [0.18, 0.175, 0.17, 0.16],
+            [0.18, 0.178, 0.175, 0.16],
+            [0.19, 0.183, 0.175, 0.161],
+        ],
+        penalty: [0.06, 0.06, 0.04, 0.0],
+        size_mb: [180.0, 205.0, 235.0, 256.0],
+    }
+}
+
+/// Paper Table 3 — NVIDIA A100 (5 NVDECs).
+pub fn a100_table() -> LookupTable {
+    LookupTable {
+        latency: vec![
+            [0.25, 0.24, 0.231, 0.20],
+            [0.252, 0.241, 0.235, 0.21],
+            [0.252, 0.25, 0.24, 0.22],
+            [0.26, 0.26, 0.25, 0.24],
+            [0.29, 0.27, 0.27, 0.25],
+        ],
+        penalty: [0.04, 0.04, 0.03, 0.0],
+        size_mb: [180.0, 205.0, 235.0, 256.0],
+    }
+}
+
+/// One scheduled decode job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DecodeJob {
+    pub start: f64,
+    pub end: f64,
+    pub unit: usize,
+    pub res_idx: usize,
+}
+
+/// Simulated NVDEC pool: N units, latency from the lookup table at the
+/// instantaneous concurrency, plus switch penalties.
+#[derive(Debug, Clone)]
+pub struct DecodePool {
+    table: LookupTable,
+    /// per-unit busy-until time
+    units: Vec<f64>,
+    /// (end_time, res_idx) of in-flight jobs, for concurrency counting
+    active: Vec<(f64, usize)>,
+    /// resolution the pool last decoded (switch-penalty state)
+    last_res: Option<usize>,
+    /// total busy seconds accumulated (utilization accounting)
+    pub busy_time: f64,
+    pub jobs_done: usize,
+}
+
+impl DecodePool {
+    pub fn new(n_units: usize, table: LookupTable) -> Self {
+        assert!(n_units > 0);
+        DecodePool {
+            table,
+            units: vec![0.0; n_units],
+            active: Vec::new(),
+            last_res: None,
+            busy_time: 0.0,
+            jobs_done: 0,
+        }
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn table(&self) -> &LookupTable {
+        &self.table
+    }
+
+    /// Current number of in-flight decodes at time `now`.
+    pub fn concurrency(&self, now: f64) -> usize {
+        self.active.iter().filter(|(end, _)| *end > now).count()
+    }
+
+    /// Predicted decode latency if a chunk were enqueued now — the
+    /// quantity Alg. 1 looks up (`LookupTable(T_prof, r, L_pool)`).
+    pub fn predict_latency(&self, now: f64, res_idx: usize, scale: f64) -> (f64, f64) {
+        let conc = (self.concurrency(now) + 1).min(self.table.max_concurrency());
+        let dec = self.table.latency_at(res_idx, conc) * scale;
+        let pen = match self.last_res {
+            Some(r) if r != res_idx => self.table.penalty[res_idx],
+            None => 0.0,
+            _ => 0.0,
+        };
+        (dec, pen)
+    }
+
+    /// Schedule a decode arriving at `now`; `scale` linearly scales the
+    /// nominal chunk latency (chunk_tokens / 10_000). Returns the job.
+    pub fn decode(&mut self, now: f64, res_idx: usize, scale: f64) -> DecodeJob {
+        self.active.retain(|(end, _)| *end > now);
+        // earliest-free unit
+        let (unit, free_at) = self
+            .units
+            .iter()
+            .cloned()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let start = now.max(free_at);
+        let conc = (self.concurrency(start) + 1).min(self.table.max_concurrency());
+        let mut latency = self.table.latency_at(res_idx, conc) * scale;
+        if let Some(last) = self.last_res {
+            if last != res_idx {
+                latency += self.table.penalty[res_idx];
+            }
+        }
+        let end = start + latency;
+        self.units[unit] = end;
+        self.active.push((end, res_idx));
+        self.last_res = Some(res_idx);
+        self.busy_time += latency;
+        self.jobs_done += 1;
+        DecodeJob { start, end, unit, res_idx }
+    }
+
+    /// Pool utilization over [0, horizon].
+    pub fn utilization(&self, horizon: f64) -> f64 {
+        if horizon <= 0.0 {
+            return 0.0;
+        }
+        (self.busy_time / (horizon * self.units.len() as f64)).min(1.0)
+    }
+}
+
+/// NVENC pool: same queueing structure; encode is ~2x decode latency on
+/// these parts (the paper's §6 notes NVENC is the scarcer resource).
+pub fn encode_pool(n_units: usize, mut table: LookupTable) -> DecodePool {
+    for row in table.latency.iter_mut() {
+        for v in row.iter_mut() {
+            *v *= 2.0;
+        }
+    }
+    DecodePool::new(n_units, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_match_paper_values() {
+        let h20 = h20_table();
+        assert_eq!(h20.latency.len(), 7);
+        assert!((h20.latency_at(0, 1) - 0.21).abs() < 1e-9);
+        assert!((h20.latency_at(3, 7) - 0.43).abs() < 1e-9);
+        assert_eq!(h20.penalty[3], 0.0);
+        let l20 = l20_table();
+        assert_eq!(l20.latency.len(), 3);
+        let a100 = a100_table();
+        assert_eq!(a100.latency.len(), 5);
+        assert!((a100.latency_at(1, 5) - 0.27).abs() < 1e-9);
+    }
+
+    #[test]
+    fn higher_resolution_decodes_faster_at_fixed_concurrency() {
+        // the paper's observation (iii): low-res underutilizes NVDEC
+        let t = h20_table();
+        for conc in 1..=7 {
+            assert!(t.latency_at(0, conc) >= t.latency_at(3, conc));
+        }
+    }
+
+    #[test]
+    fn pool_serializes_beyond_unit_count() {
+        let mut pool = DecodePool::new(2, l20_table());
+        let j1 = pool.decode(0.0, 3, 1.0);
+        let j2 = pool.decode(0.0, 3, 1.0);
+        let j3 = pool.decode(0.0, 3, 1.0);
+        assert_eq!(j1.start, 0.0);
+        assert_eq!(j2.start, 0.0);
+        assert!(j3.start > 0.0, "third job must wait for a unit");
+        assert!(j3.start >= j1.end.min(j2.end) - 1e-12);
+    }
+
+    #[test]
+    fn switch_penalty_applied_once_per_switch() {
+        let mut pool = DecodePool::new(4, h20_table());
+        let a = pool.decode(0.0, 3, 1.0); // first decode: no penalty
+        assert!((a.end - a.start - 0.19).abs() < 1e-9);
+        let b = pool.decode(10.0, 0, 1.0); // switch 1080p -> 240p
+        assert!((b.end - b.start) > 0.21, "switch penalty missing");
+        let c = pool.decode(20.0, 0, 1.0); // same res: no penalty
+        assert!((c.end - c.start - 0.21).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concurrency_raises_latency() {
+        let mut pool = DecodePool::new(7, h20_table());
+        let solo = pool.decode(0.0, 1, 1.0);
+        let solo_lat = solo.end - solo.start;
+        // enqueue 5 concurrent at t=100
+        let mut last = 0.0f64;
+        for _ in 0..5 {
+            let j = pool.decode(100.0, 1, 1.0);
+            last = j.end - j.start;
+        }
+        assert!(last > solo_lat, "{last} vs {solo_lat}");
+    }
+
+    #[test]
+    fn scale_shrinks_latency_linearly() {
+        let mut pool = DecodePool::new(1, a100_table());
+        let j = pool.decode(0.0, 2, 0.1);
+        assert!((j.end - j.start - 0.0231).abs() < 1e-6);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut pool = DecodePool::new(2, l20_table());
+        for i in 0..10 {
+            pool.decode(i as f64 * 0.01, 3, 1.0);
+        }
+        let u = pool.utilization(2.0);
+        assert!(u > 0.0 && u <= 1.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Paged KV-cache memory manager (vLLM-style).
+//!
+//! Fixed-size token blocks, ref-counted for prefix sharing, with a
+//! free-list allocator. The fetcher writes restored KV directly into
+//! pre-allocated pages (the paper "preallocat[es] memory for all KV
+//! caches upfront", §6), and the engine's admission control is bounded
+//! by free blocks.
+
+/// Identifier of one physical KV block.
+pub type BlockId = usize;
+
+/// Paged allocator over `total_blocks` physical blocks of
+/// `block_tokens` tokens each.
+#[derive(Debug)]
+pub struct BlockAllocator {
+    pub block_tokens: usize,
+    ref_counts: Vec<u32>,
+    free: Vec<BlockId>,
+    /// high-water mark of allocated blocks (memory accounting)
+    pub peak_used: usize,
+}
+
+impl BlockAllocator {
+    pub fn new(total_blocks: usize, block_tokens: usize) -> Self {
+        assert!(total_blocks > 0 && block_tokens > 0);
+        BlockAllocator {
+            block_tokens,
+            ref_counts: vec![0; total_blocks],
+            free: (0..total_blocks).rev().collect(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.ref_counts.len()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks() - self.free.len()
+    }
+
+    /// Blocks needed for `tokens` tokens.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Allocate `n` blocks, or None if not enough free (caller decides
+    /// whether to wait, evict, or reject).
+    pub fn alloc(&mut self, n: usize) -> Option<Vec<BlockId>> {
+        if self.free.len() < n {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = self.free.pop().unwrap();
+            debug_assert_eq!(self.ref_counts[b], 0);
+            self.ref_counts[b] = 1;
+            out.push(b);
+        }
+        self.peak_used = self.peak_used.max(self.used_blocks());
+        Some(out)
+    }
+
+    /// Add a reference (prefix sharing between requests).
+    pub fn retain(&mut self, b: BlockId) {
+        assert!(self.ref_counts[b] > 0, "retain of free block {b}");
+        self.ref_counts[b] += 1;
+    }
+
+    /// Drop a reference; the block returns to the free list at zero.
+    pub fn release(&mut self, b: BlockId) {
+        assert!(self.ref_counts[b] > 0, "double free of block {b}");
+        self.ref_counts[b] -= 1;
+        if self.ref_counts[b] == 0 {
+            self.free.push(b);
+        }
+    }
+
+    pub fn release_all(&mut self, blocks: &[BlockId]) {
+        for &b in blocks {
+            self.release(b);
+        }
+    }
+
+    pub fn ref_count(&self, b: BlockId) -> u32 {
+        self.ref_counts[b]
+    }
+}
+
+/// Per-request block table: logical token position -> physical block.
+#[derive(Debug, Clone, Default)]
+pub struct BlockTable {
+    pub blocks: Vec<BlockId>,
+    pub tokens: usize,
+}
+
+impl BlockTable {
+    pub fn block_of(&self, token_pos: usize, block_tokens: usize) -> BlockId {
+        self.blocks[token_pos / block_tokens]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{proptest, Prng};
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut a = BlockAllocator::new(10, 16);
+        let blocks = a.alloc(4).unwrap();
+        assert_eq!(a.used_blocks(), 4);
+        a.release_all(&blocks);
+        assert_eq!(a.used_blocks(), 0);
+        assert_eq!(a.free_blocks(), 10);
+    }
+
+    #[test]
+    fn alloc_fails_when_exhausted() {
+        let mut a = BlockAllocator::new(3, 16);
+        assert!(a.alloc(4).is_none());
+        let b = a.alloc(3).unwrap();
+        assert!(a.alloc(1).is_none());
+        a.release(b[0]);
+        assert!(a.alloc(1).is_some());
+    }
+
+    #[test]
+    fn refcount_sharing() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b = a.alloc(1).unwrap()[0];
+        a.retain(b); // second reader
+        a.release(b);
+        assert_eq!(a.used_blocks(), 1, "still referenced");
+        a.release(b);
+        assert_eq!(a.used_blocks(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_detected() {
+        let mut a = BlockAllocator::new(2, 16);
+        let b = a.alloc(1).unwrap()[0];
+        a.release(b);
+        a.release(b);
+    }
+
+    #[test]
+    fn blocks_for_rounds_up() {
+        let a = BlockAllocator::new(10, 16);
+        assert_eq!(a.blocks_for(1), 1);
+        assert_eq!(a.blocks_for(16), 1);
+        assert_eq!(a.blocks_for(17), 2);
+        assert_eq!(a.blocks_for(0), 0);
+    }
+
+    #[test]
+    fn prop_allocator_never_leaks_or_double_allocates() {
+        proptest::check(31, 50, "allocator-invariants", |rng: &mut Prng| {
+            let total = 1 + rng.below(64) as usize;
+            let mut a = BlockAllocator::new(total, 8);
+            let mut live: Vec<Vec<BlockId>> = Vec::new();
+            for _ in 0..100 {
+                if rng.f64() < 0.6 {
+                    let n = 1 + rng.below(8) as usize;
+                    if let Some(bs) = a.alloc(n) {
+                        // no block may appear in two live allocations
+                        for b in &bs {
+                            for other in &live {
+                                if other.contains(b) {
+                                    return Err(format!("block {b} double-allocated"));
+                                }
+                            }
+                        }
+                        live.push(bs);
+                    }
+                } else if !live.is_empty() {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let bs = live.swap_remove(i);
+                    a.release_all(&bs);
+                }
+                let live_count: usize = live.iter().map(Vec::len).sum();
+                if a.used_blocks() != live_count {
+                    return Err(format!(
+                        "leak: used {} != live {}",
+                        a.used_blocks(),
+                        live_count
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn peak_used_tracks_high_water() {
+        let mut a = BlockAllocator::new(8, 4);
+        let x = a.alloc(6).unwrap();
+        a.release_all(&x);
+        a.alloc(2).unwrap();
+        assert_eq!(a.peak_used, 6);
+    }
+}

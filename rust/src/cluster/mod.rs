@@ -1,0 +1,255 @@
+//! Device and model specifications + the analytic serving-time model.
+//!
+//! This is the substitution for the paper's physical testbed (3 GPU
+//! types x 3 models, DESIGN.md §1): a standard roofline model —
+//! prefill is compute-bound (FLOPs / effective TFLOPS), decode is
+//! memory-bound (weight + KV bytes / HBM bandwidth). Absolute numbers
+//! are not the target; the *shape* across devices/models/bandwidths is.
+
+use crate::asic::{a100_table, h20_table, l20_table, LookupTable};
+
+/// GPU device model.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// dense bf16 throughput per GPU (TFLOPS)
+    pub tflops: f64,
+    /// HBM bandwidth per GPU (GB/s)
+    pub hbm_gbps: f64,
+    /// device memory (GB)
+    pub mem_gb: f64,
+    /// media decode units per GPU
+    pub nvdecs: usize,
+    /// media encode units per GPU
+    pub nvencs: usize,
+    /// fraction of peak FLOPs achieved in prefill
+    pub mfu: f64,
+}
+
+impl DeviceSpec {
+    pub fn a100() -> Self {
+        DeviceSpec { name: "A100", tflops: 312.0, hbm_gbps: 2039.0, mem_gb: 80.0, nvdecs: 5, nvencs: 1, mfu: 0.45 }
+    }
+    pub fn h20() -> Self {
+        DeviceSpec { name: "H20", tflops: 148.0, hbm_gbps: 4000.0, mem_gb: 96.0, nvdecs: 7, nvencs: 3, mfu: 0.45 }
+    }
+    pub fn l20() -> Self {
+        DeviceSpec { name: "L20", tflops: 119.5, hbm_gbps: 864.0, mem_gb: 48.0, nvdecs: 3, nvencs: 2, mfu: 0.45 }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" => Some(Self::a100()),
+            "h20" => Some(Self::h20()),
+            "l20" => Some(Self::l20()),
+            _ => None,
+        }
+    }
+
+    /// The paper's decode-latency lookup table for this device.
+    pub fn decode_table(&self) -> LookupTable {
+        match self.name {
+            "A100" => a100_table(),
+            "H20" => h20_table(),
+            "L20" => l20_table(),
+            _ => h20_table(),
+        }
+    }
+}
+
+/// Transformer model spec (GQA-aware).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub params_b: f64,
+    pub layers: usize,
+    pub heads: usize,
+    /// KV heads (< heads under GQA)
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub hidden: usize,
+    /// GPUs used per device class in the paper's testbed:
+    /// (A100, H20, L20)
+    pub gpus: (usize, usize, usize),
+}
+
+impl ModelSpec {
+    /// LWM-7B (1M context, MHA).
+    pub fn lwm_7b() -> Self {
+        ModelSpec {
+            name: "LWM-7B", params_b: 7.0, layers: 32, heads: 32, kv_heads: 32,
+            head_dim: 128, hidden: 4096, gpus: (2, 2, 2),
+        }
+    }
+    /// Yi-34B (200K context, GQA 8 KV heads).
+    pub fn yi_34b() -> Self {
+        ModelSpec {
+            name: "Yi-34B", params_b: 34.0, layers: 60, heads: 56, kv_heads: 8,
+            head_dim: 128, hidden: 7168, gpus: (2, 2, 4),
+        }
+    }
+    /// Llama3-70B (128K context, GQA 8 KV heads).
+    pub fn llama3_70b() -> Self {
+        ModelSpec {
+            name: "Llama3-70B", params_b: 70.0, layers: 80, heads: 64, kv_heads: 8,
+            head_dim: 128, hidden: 8192, gpus: (4, 4, 8),
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "lwm-7b" | "lwm" | "7b" => Some(Self::lwm_7b()),
+            "yi-34b" | "yi" | "34b" => Some(Self::yi_34b()),
+            "llama3-70b" | "llama" | "70b" => Some(Self::llama3_70b()),
+            _ => None,
+        }
+    }
+
+    /// GPUs used for this model on `dev` per the paper's testbed table.
+    pub fn gpus_on(&self, dev: &DeviceSpec) -> usize {
+        match dev.name {
+            "A100" => self.gpus.0,
+            "H20" => self.gpus.1,
+            "L20" => self.gpus.2,
+            _ => 1,
+        }
+    }
+
+    /// KV-cache bytes per token at fp16: 2(K,V) * layers * kv_heads *
+    /// head_dim * 2 bytes. GQA models are ~7x smaller here — which is
+    /// why the paper's Fig. 18(d,g) show reduced compression benefit.
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.layers * self.kv_heads * self.head_dim * 2
+    }
+
+    /// Weight bytes at fp16.
+    pub fn weight_bytes(&self) -> f64 {
+        self.params_b * 1e9 * 2.0
+    }
+}
+
+/// Analytic serving-time model for one (device, model, n_gpus) triple.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    pub dev: DeviceSpec,
+    pub model: ModelSpec,
+    pub n_gpus: usize,
+}
+
+impl PerfModel {
+    pub fn new(dev: DeviceSpec, model: ModelSpec) -> Self {
+        let n_gpus = model.gpus_on(&dev);
+        PerfModel { dev, model, n_gpus }
+    }
+
+    /// Prefill FLOPs for `tokens` new tokens attending over `context`
+    /// total tokens: 2*P per token (GEMMs) + the quadratic attention term.
+    pub fn prefill_flops(&self, tokens: usize, context: usize) -> f64 {
+        let p = self.model.params_b * 1e9;
+        let gemm = 2.0 * p * tokens as f64;
+        gemm + attention_flops(&self.model, tokens, context)
+    }
+
+    /// Seconds to prefill `tokens` tokens with `context` total attended.
+    pub fn prefill_time(&self, tokens: usize, context: usize) -> f64 {
+        let flops = self.prefill_flops(tokens, context);
+        flops / (self.n_gpus as f64 * self.dev.tflops * 1e12 * self.dev.mfu)
+    }
+
+    /// Full prefill of a `context`-token prompt.
+    pub fn full_prefill_time(&self, context: usize) -> f64 {
+        self.prefill_time(context, context)
+    }
+
+    /// Seconds per decode step for a batch: memory-bound — stream the
+    /// weights once plus each sequence's KV.
+    pub fn decode_step_time(&self, batch_contexts: &[usize]) -> f64 {
+        let kv: f64 = batch_contexts
+            .iter()
+            .map(|&c| (self.model.kv_bytes_per_token() * c) as f64)
+            .sum();
+        let bytes = self.model.weight_bytes() + kv;
+        bytes / (self.n_gpus as f64 * self.dev.hbm_gbps * 1e9)
+    }
+
+    /// Per-layer prefill compute time (for the layer-wise pipeline's
+    /// admission condition, Appx. A.3).
+    pub fn per_layer_prefill_time(&self, tokens: usize, context: usize) -> f64 {
+        self.prefill_time(tokens, context) / self.model.layers as f64
+    }
+
+    /// Raw fp16 KV bytes of a `tokens`-token prefix (what raw-reuse
+    /// transmits and what compression ratios are relative to).
+    pub fn kv_bytes(&self, tokens: usize) -> usize {
+        self.model.kv_bytes_per_token() * tokens
+    }
+}
+
+fn attention_flops(m: &ModelSpec, tokens: usize, context: usize) -> f64 {
+    // per layer: QK^T (2*T*C*d_attn) + PV (2*T*C*d_attn), causal ~ /2
+    let d_attn = (m.heads * m.head_dim) as f64;
+    2.0 * 2.0 * tokens as f64 * context as f64 * d_attn * 0.5 * m.layers as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_sizes_match_known_figures() {
+        // LWM-7B: 2*32*32*128*2 = 524288 B/token = 0.5 MiB/token
+        assert_eq!(ModelSpec::lwm_7b().kv_bytes_per_token(), 524_288);
+        // GQA models are much smaller per token
+        assert_eq!(ModelSpec::yi_34b().kv_bytes_per_token(), 2 * 60 * 8 * 128 * 2);
+        assert!(
+            ModelSpec::yi_34b().kv_bytes_per_token() < ModelSpec::lwm_7b().kv_bytes_per_token()
+        );
+    }
+
+    #[test]
+    fn prefill_superlinear_in_context() {
+        let pm = PerfModel::new(DeviceSpec::h20(), ModelSpec::yi_34b());
+        let t1 = pm.full_prefill_time(20_000);
+        let t2 = pm.full_prefill_time(40_000);
+        let t4 = pm.full_prefill_time(80_000);
+        assert!(t2 > 2.0 * t1, "attention term should make prefill superlinear");
+        assert!(t4 > 2.0 * t2);
+    }
+
+    #[test]
+    fn decode_time_grows_with_context_and_batch() {
+        let pm = PerfModel::new(DeviceSpec::a100(), ModelSpec::lwm_7b());
+        let t_small = pm.decode_step_time(&[1_000]);
+        let t_big = pm.decode_step_time(&[100_000]);
+        let t_batch = pm.decode_step_time(&[1_000; 8]);
+        assert!(t_big > t_small);
+        assert!(t_batch > t_small);
+        // weights dominate at small context: batching is cheap
+        assert!(t_batch < 8.0 * t_small);
+    }
+
+    #[test]
+    fn l20_slower_than_a100_prefill() {
+        let m = ModelSpec::lwm_7b();
+        let a = PerfModel::new(DeviceSpec::a100(), m.clone());
+        let l = PerfModel::new(DeviceSpec::l20(), m);
+        assert!(l.full_prefill_time(50_000) > a.full_prefill_time(50_000));
+    }
+
+    #[test]
+    fn specs_resolve_by_name() {
+        assert!(DeviceSpec::by_name("h20").is_some());
+        assert!(ModelSpec::by_name("Yi-34B").is_some());
+        assert!(DeviceSpec::by_name("b200").is_none());
+        assert_eq!(ModelSpec::yi_34b().gpus_on(&DeviceSpec::l20()), 4);
+    }
+
+    #[test]
+    fn sanity_prefill_magnitude() {
+        // 7B on 2xH20, 100K tokens: paper Fig. 18 shows full prefill
+        // tens-of-seconds scale.
+        let pm = PerfModel::new(DeviceSpec::h20(), ModelSpec::lwm_7b());
+        let t = pm.full_prefill_time(100_000);
+        assert!(t > 5.0 && t < 300.0, "t={t}");
+    }
+}

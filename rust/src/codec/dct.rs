@@ -1,0 +1,246 @@
+//! 8x8 DCT-II + uniform quantization — the *lossy* steps of the standard
+//! H.265 pipeline (Fig. 7). KVFetcher's lossless mode skips this file
+//! entirely; it exists to reproduce the paper's Default / QP0 / llm.265
+//! configurations and their accuracy drops (Fig. 8).
+
+use super::frame::BLOCK;
+
+/// Quantization step for a given QP, H.265-style: step = 2^((qp-4)/6).
+/// QP0 gives step ≈ 0.63 — still lossy because of coefficient rounding,
+/// exactly the paper's observation that QP0 "applies all steps" and
+/// hurts accuracy.
+pub fn qp_to_step(qp: u8) -> f32 {
+    2f32.powf((qp as f32 - 4.0) / 6.0)
+}
+
+fn basis(k: usize, n: usize) -> f32 {
+    let c = if k == 0 { (1.0f32 / BLOCK as f32).sqrt() } else { (2.0f32 / BLOCK as f32).sqrt() };
+    c * ((std::f32::consts::PI * (2.0 * n as f32 + 1.0) * k as f32) / (2.0 * BLOCK as f32)).cos()
+}
+
+/// Forward 8x8 DCT-II of a residual block (i16 values in [-255, 255]).
+pub fn forward(block: &[f32; 64], out: &mut [f32; 64]) {
+    // rows then columns (separable)
+    let mut tmp = [0f32; 64];
+    for r in 0..BLOCK {
+        for k in 0..BLOCK {
+            let mut acc = 0.0;
+            for n in 0..BLOCK {
+                acc += block[r * BLOCK + n] * basis(k, n);
+            }
+            tmp[r * BLOCK + k] = acc;
+        }
+    }
+    for c in 0..BLOCK {
+        for k in 0..BLOCK {
+            let mut acc = 0.0;
+            for n in 0..BLOCK {
+                acc += tmp[n * BLOCK + c] * basis(k, n);
+            }
+            out[k * BLOCK + c] = acc;
+        }
+    }
+}
+
+/// Inverse 8x8 DCT.
+pub fn inverse(coef: &[f32; 64], out: &mut [f32; 64]) {
+    let mut tmp = [0f32; 64];
+    for c in 0..BLOCK {
+        for n in 0..BLOCK {
+            let mut acc = 0.0;
+            for k in 0..BLOCK {
+                acc += coef[k * BLOCK + c] * basis(k, n);
+            }
+            tmp[n * BLOCK + c] = acc;
+        }
+    }
+    for r in 0..BLOCK {
+        for n in 0..BLOCK {
+            let mut acc = 0.0;
+            for k in 0..BLOCK {
+                acc += tmp[r * BLOCK + k] * basis(k, n);
+            }
+            out[r * BLOCK + n] = acc;
+        }
+    }
+}
+
+/// Quantize DCT coefficients with a uniform step -> i32 levels.
+pub fn quantize(coef: &[f32; 64], step: f32, out: &mut [i32; 64]) {
+    for i in 0..64 {
+        out[i] = (coef[i] / step).round() as i32;
+    }
+}
+
+/// Dequantize levels back to coefficients.
+pub fn dequantize(levels: &[i32; 64], step: f32, out: &mut [f32; 64]) {
+    for i in 0..64 {
+        out[i] = levels[i] as f32 * step;
+    }
+}
+
+/// Zigzag scan order for an 8x8 block (low frequencies first, so the
+/// long zero tail compresses well).
+pub fn zigzag_order() -> [usize; 64] {
+    let mut order = [0usize; 64];
+    let mut idx = 0;
+    for s in 0..15 {
+        if s % 2 == 0 {
+            // up-right
+            let mut r = s.min(7) as i32;
+            let mut c = (s as i32) - r;
+            while r >= 0 && c <= 7 {
+                order[idx] = (r * 8 + c) as usize;
+                idx += 1;
+                r -= 1;
+                c += 1;
+            }
+        } else {
+            let mut c = s.min(7) as i32;
+            let mut r = (s as i32) - c;
+            while c >= 0 && r <= 7 {
+                order[idx] = (r * 8 + c) as usize;
+                idx += 1;
+                c -= 1;
+                r += 1;
+            }
+        }
+    }
+    order
+}
+
+/// Encode quantized levels in zigzag order as zigzag-varint bytes.
+pub fn levels_to_bytes(levels: &[i32; 64], order: &[usize; 64], out: &mut Vec<u8>) {
+    for &pos in order {
+        let v = levels[pos];
+        let z = ((v << 1) ^ (v >> 31)) as u32; // zigzag sign fold
+        let mut z = z;
+        loop {
+            let byte = (z & 0x7f) as u8;
+            z >>= 7;
+            if z == 0 {
+                out.push(byte);
+                break;
+            }
+            out.push(byte | 0x80);
+        }
+    }
+}
+
+/// Decode 64 zigzag-varint levels; returns bytes consumed.
+pub fn bytes_to_levels(
+    data: &[u8],
+    order: &[usize; 64],
+    out: &mut [i32; 64],
+) -> Result<usize, String> {
+    let mut pos = 0usize;
+    for &dst in order {
+        let mut z: u32 = 0;
+        let mut shift = 0;
+        loop {
+            let b = *data.get(pos).ok_or("dct: truncated level stream")?;
+            pos += 1;
+            z |= ((b & 0x7f) as u32) << shift;
+            if b & 0x80 == 0 {
+                break;
+            }
+            shift += 7;
+            if shift > 28 {
+                return Err("dct: varint overflow".into());
+            }
+        }
+        out[dst] = ((z >> 1) as i32) ^ -((z & 1) as i32);
+    }
+    Ok(pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn dct_inverse_roundtrip() {
+        let mut rng = Prng::new(1);
+        let mut block = [0f32; 64];
+        for b in block.iter_mut() {
+            *b = rng.f64_range(-255.0, 255.0) as f32;
+        }
+        let mut coef = [0f32; 64];
+        let mut back = [0f32; 64];
+        forward(&block, &mut coef);
+        inverse(&coef, &mut back);
+        for i in 0..64 {
+            assert!((block[i] - back[i]).abs() < 1e-2, "i={i}");
+        }
+    }
+
+    #[test]
+    fn dct_energy_compaction_on_smooth_block() {
+        // smooth gradient: energy should concentrate in low frequencies
+        let mut block = [0f32; 64];
+        for r in 0..8 {
+            for c in 0..8 {
+                block[r * 8 + c] = (r as f32) * 2.0 + (c as f32);
+            }
+        }
+        let mut coef = [0f32; 64];
+        forward(&block, &mut coef);
+        let order = zigzag_order();
+        let first4: f32 = order[..4].iter().map(|&i| coef[i].abs()).sum();
+        let rest: f32 = order[4..].iter().map(|&i| coef[i].abs()).sum();
+        assert!(first4 > rest * 10.0, "first4={first4} rest={rest}");
+    }
+
+    #[test]
+    fn zigzag_is_permutation() {
+        let order = zigzag_order();
+        let mut seen = [false; 64];
+        for &i in &order {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+        assert_eq!(order[0], 0);
+        assert_eq!(order[63], 63);
+    }
+
+    #[test]
+    fn levels_bytes_roundtrip() {
+        let mut rng = Prng::new(2);
+        let order = zigzag_order();
+        let mut levels = [0i32; 64];
+        for l in levels.iter_mut() {
+            *l = (rng.normal() * 20.0) as i32;
+        }
+        let mut bytes = Vec::new();
+        levels_to_bytes(&levels, &order, &mut bytes);
+        let mut back = [0i32; 64];
+        let used = bytes_to_levels(&bytes, &order, &mut back).unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(back, levels);
+    }
+
+    #[test]
+    fn qp_steps_monotone() {
+        assert!(qp_to_step(0) < 1.0);
+        assert!(qp_to_step(20) > qp_to_step(10));
+        assert!((qp_to_step(4) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quant_dequant_error_bounded() {
+        let mut rng = Prng::new(3);
+        let mut coef = [0f32; 64];
+        for c in coef.iter_mut() {
+            *c = rng.f64_range(-100.0, 100.0) as f32;
+        }
+        let step = qp_to_step(12);
+        let mut levels = [0i32; 64];
+        let mut back = [0f32; 64];
+        quantize(&coef, step, &mut levels);
+        dequantize(&levels, step, &mut back);
+        for i in 0..64 {
+            assert!((coef[i] - back[i]).abs() <= step / 2.0 + 1e-4);
+        }
+    }
+}

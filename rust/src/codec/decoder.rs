@@ -1,0 +1,277 @@
+//! Video decoder: mirror of the encoder's reconstruction loop.
+//!
+//! Supports frame-wise delivery through [`decode_video_with`] — the
+//! host-side analogue of the paper's `On_frame_probe` callback, which
+//! lets restoration run per frame instead of per chunk (§3.3.2).
+
+use super::dct;
+use super::encoder::{CodecMode, MAGIC};
+use super::frame::Frame;
+use super::predict::{self, PredMode};
+use super::rans;
+
+/// Parsed container header.
+#[derive(Debug, Clone)]
+pub struct VideoHeader {
+    pub w: usize,
+    pub h: usize,
+    pub n_frames: usize,
+    pub mode: CodecMode,
+    pub inter: bool,
+    pub gop: usize,
+    pub meta: Vec<u8>,
+    /// Offset of the mode stream within the container.
+    streams_at: usize,
+}
+
+pub fn parse_header(bytes: &[u8]) -> Result<VideoHeader, String> {
+    if bytes.len() < 18 || &bytes[0..4] != MAGIC {
+        return Err("codec: bad magic".into());
+    }
+    let w = u16::from_le_bytes(bytes[4..6].try_into().unwrap()) as usize;
+    let h = u16::from_le_bytes(bytes[6..8].try_into().unwrap()) as usize;
+    let n_frames = u16::from_le_bytes(bytes[8..10].try_into().unwrap()) as usize;
+    let mode = match bytes[10] {
+        0 => CodecMode::Lossless,
+        1 => CodecMode::Lossy { qp: bytes[11] },
+        m => return Err(format!("codec: bad mode byte {m}")),
+    };
+    let inter = bytes[12] != 0;
+    let gop = u16::from_le_bytes(bytes[13..15].try_into().unwrap()) as usize;
+    // a decoder that parses network bytes must reject malformed
+    // geometry instead of panicking in Frame::new
+    if w == 0 || h == 0 || w % 8 != 0 || h % 8 != 0 || n_frames == 0 {
+        return Err(format!("codec: bad geometry {w}x{h}x{n_frames}"));
+    }
+    let meta_len = u32::from_le_bytes(bytes[15..19].try_into().unwrap()) as usize;
+    let meta = bytes
+        .get(19..19 + meta_len)
+        .ok_or("codec: truncated meta")?
+        .to_vec();
+    Ok(VideoHeader { w, h, n_frames, mode, inter, gop, meta, streams_at: 19 + meta_len })
+}
+
+/// Decode all frames at once.
+pub fn decode_video(bytes: &[u8]) -> Result<(Vec<Frame>, Vec<u8>), String> {
+    let mut frames = Vec::new();
+    let meta = decode_video_with(bytes, |f| frames.push(f.clone()))?;
+    Ok((frames, meta))
+}
+
+/// Decode with a per-frame callback (`On_frame_probe` analogue): the
+/// callback fires as soon as each frame is reconstructed, so the caller
+/// can restore tensors frame-wise without buffering the whole chunk.
+/// Returns the layout metadata blob.
+pub fn decode_video_with<F: FnMut(&Frame)>(
+    bytes: &[u8],
+    mut on_frame: F,
+) -> Result<Vec<u8>, String> {
+    let hdr = parse_header(bytes)?;
+    let (modes, used) = rans::decode(&bytes[hdr.streams_at..])?;
+    let (resid, _) = rans::decode(&bytes[hdr.streams_at + used..])?;
+
+    let order = dct::zigzag_order();
+    let bx_count = hdr.w / 8;
+    let by_count = hdr.h / 8;
+    let mut mode_pos = 0usize;
+    let mut res_pos = 0usize;
+    let mut prev_recon: Option<Frame> = None;
+
+    for _fi in 0..hdr.n_frames {
+        let mut recon = Frame::new(hdr.w, hdr.h);
+        for plane in 0..3 {
+            for by in 0..by_count {
+                for bx in 0..bx_count {
+                    let mode = PredMode::from_u8(
+                        *modes.get(mode_pos).ok_or("codec: mode stream underrun")?,
+                    )?;
+                    mode_pos += 1;
+                    if prev_recon.is_none()
+                        && matches!(mode, PredMode::Inter | PredMode::Skip)
+                    {
+                        return Err("codec: inter mode without reference frame".into());
+                    }
+                    let mut pred = [0u8; 64];
+                    predict::predict(mode, &recon, prev_recon.as_ref(), plane, bx, by, &mut pred);
+                    let mut rblock = [0u8; 64];
+                    match hdr.mode {
+                        CodecMode::Lossless => {
+                            if mode == PredMode::Skip {
+                                rblock = pred;
+                            } else {
+                                let r: &[u8] = resid
+                                    .get(res_pos..res_pos + 64)
+                                    .ok_or("codec: residual underrun")?;
+                                res_pos += 64;
+                                let mut rarr = [0u8; 64];
+                                rarr.copy_from_slice(r);
+                                predict::reconstruct(&pred, &rarr, &mut rblock);
+                            }
+                        }
+                        CodecMode::Lossy { qp } => {
+                            if mode == PredMode::Skip {
+                                rblock = pred;
+                            } else {
+                                let step = dct::qp_to_step(qp);
+                                let mut levels = [0i32; 64];
+                                res_pos += dct::bytes_to_levels(
+                                    resid.get(res_pos..).ok_or("codec: residual underrun")?,
+                                    &order,
+                                    &mut levels,
+                                )?;
+                                let mut deq = [0f32; 64];
+                                dct::dequantize(&levels, step, &mut deq);
+                                let mut rec = [0f32; 64];
+                                dct::inverse(&deq, &mut rec);
+                                for i in 0..64 {
+                                    rblock[i] = (pred[i] as f32 + rec[i])
+                                        .round()
+                                        .clamp(0.0, 255.0)
+                                        as u8;
+                                }
+                            }
+                        }
+                    }
+                    recon.write_block(plane, bx, by, &rblock);
+                }
+            }
+        }
+        on_frame(&recon);
+        prev_recon = Some(recon);
+    }
+    Ok(hdr.meta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::encoder::{encode_video, CodecConfig};
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::Prng;
+
+    fn structured_frames(rng: &mut Prng, n: usize, w: usize, h: usize, drift: f64) -> Vec<Frame> {
+        // frames with spatial structure + temporal drift: exercises all modes
+        let mut frames = Vec::new();
+        let mut base = Frame::new(w, h);
+        for p in 0..3 {
+            for y in 0..h {
+                for x in 0..w {
+                    let v = 100.0 + 20.0 * ((x / 4) as f64).sin() + 10.0 * ((y / 4) as f64)
+                        + rng.normal() * 3.0;
+                    base.set(p, x, y, v.clamp(0.0, 255.0) as u8);
+                }
+            }
+        }
+        frames.push(base);
+        for _ in 1..n {
+            let mut f = frames.last().unwrap().clone();
+            for p in 0..3 {
+                for v in f.planes[p].iter_mut() {
+                    if rng.f64() < drift {
+                        *v = (*v).wrapping_add((rng.below(5) as u8).wrapping_sub(2));
+                    }
+                }
+            }
+            frames.push(f);
+        }
+        frames
+    }
+
+    #[test]
+    fn lossless_roundtrip_bit_exact() {
+        let mut rng = Prng::new(1);
+        let frames = structured_frames(&mut rng, 5, 32, 24, 0.1);
+        let meta = b"layout-metadata".to_vec();
+        let (bytes, _) = encode_video(&frames, &CodecConfig::lossless(), &meta);
+        let (decoded, got_meta) = decode_video(&bytes).unwrap();
+        assert_eq!(got_meta, meta);
+        assert_eq!(decoded, frames);
+    }
+
+    #[test]
+    fn prop_lossless_roundtrip_random_content() {
+        proptest::check(23, 15, "codec-lossless-roundtrip", |rng| {
+            let n = 1 + rng.below(4) as usize;
+            let w = 8 * (1 + rng.below(4) as usize);
+            let h = 8 * (1 + rng.below(4) as usize);
+            let mut frames = Vec::new();
+            for _ in 0..n {
+                let mut f = Frame::new(w, h);
+                for p in 0..3 {
+                    for v in f.planes[p].iter_mut() {
+                        *v = rng.next_u64() as u8;
+                    }
+                }
+                frames.push(f);
+            }
+            for cfg in [
+                CodecConfig::lossless(),
+                CodecConfig { inter: false, ..CodecConfig::lossless() },
+                CodecConfig { gop: 2, ..CodecConfig::lossless() },
+            ] {
+                let (bytes, _) = encode_video(&frames, &cfg, b"m");
+                let (dec, _) = decode_video(&bytes).map_err(|e| e)?;
+                if dec != frames {
+                    return Err(format!("lossless mismatch under {cfg:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lossy_roundtrip_bounded_error() {
+        let mut rng = Prng::new(2);
+        let frames = structured_frames(&mut rng, 4, 32, 32, 0.05);
+        let (bytes, stats) = encode_video(&frames, &CodecConfig::lossy(12), &[]);
+        let (decoded, _) = decode_video(&bytes).unwrap();
+        let step = dct::qp_to_step(12);
+        let mut max_err = 0f32;
+        for (a, b) in frames.iter().zip(&decoded) {
+            for p in 0..3 {
+                for (x, y) in a.planes[p].iter().zip(&b.planes[p]) {
+                    max_err = max_err.max((*x as f32 - *y as f32).abs());
+                }
+            }
+        }
+        // quantization error per coefficient step/2; block error is bounded
+        // by a few steps in practice
+        assert!(max_err <= step * 4.0 + 1.0, "max_err={max_err} step={step}");
+        assert!(max_err > 0.0, "qp=12 should actually be lossy");
+        assert!(stats.encoded_bytes < stats.raw_bytes);
+    }
+
+    #[test]
+    fn lossy_default_compresses_more_than_lossless() {
+        let mut rng = Prng::new(3);
+        let frames = structured_frames(&mut rng, 4, 32, 32, 0.3);
+        let (ll, _) = encode_video(&frames, &CodecConfig::lossless(), &[]);
+        let (ly, _) = encode_video(&frames, &CodecConfig::lossy(20), &[]);
+        assert!(ly.len() < ll.len(), "lossy {} vs lossless {}", ly.len(), ll.len());
+    }
+
+    #[test]
+    fn frame_callback_order_and_count() {
+        let mut rng = Prng::new(4);
+        let frames = structured_frames(&mut rng, 6, 16, 16, 0.1);
+        let (bytes, _) = encode_video(&frames, &CodecConfig::lossless(), &[]);
+        let mut seen = 0usize;
+        decode_video_with(&bytes, |f| {
+            assert_eq!(f.planes[0], frames[seen].planes[0]);
+            seen += 1;
+        })
+        .unwrap();
+        assert_eq!(seen, 6);
+    }
+
+    #[test]
+    fn decoder_rejects_corruption() {
+        let mut rng = Prng::new(5);
+        let frames = structured_frames(&mut rng, 2, 16, 16, 0.1);
+        let (bytes, _) = encode_video(&frames, &CodecConfig::lossless(), &[]);
+        assert!(decode_video(&bytes[..10]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(decode_video(&bad).is_err());
+    }
+}

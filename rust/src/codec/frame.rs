@@ -1,0 +1,96 @@
+//! Video frames: three full-resolution 8-bit planes (4:4:4).
+//!
+//! The paper maps each three-layer KV group to the three colour planes
+//! ("the three layers (lowest similarity) are mapped to independently
+//! coded color channels"), so planes here are coded independently.
+
+pub const BLOCK: usize = 8;
+
+/// One video frame: `w` x `h`, three u8 planes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub w: usize,
+    pub h: usize,
+    pub planes: [Vec<u8>; 3],
+}
+
+impl Frame {
+    /// Create a frame filled with the neutral value 128. Dimensions must
+    /// be multiples of the 8x8 block size.
+    pub fn new(w: usize, h: usize) -> Self {
+        assert!(w % BLOCK == 0 && h % BLOCK == 0, "frame dims must be multiples of 8");
+        assert!(w > 0 && h > 0);
+        Frame { w, h, planes: [vec![128; w * h], vec![128; w * h], vec![128; w * h]] }
+    }
+
+    #[inline]
+    pub fn get(&self, plane: usize, x: usize, y: usize) -> u8 {
+        self.planes[plane][y * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, plane: usize, x: usize, y: usize, v: u8) {
+        self.planes[plane][y * self.w + x] = v;
+    }
+
+    pub fn blocks_x(&self) -> usize {
+        self.w / BLOCK
+    }
+
+    pub fn blocks_y(&self) -> usize {
+        self.h / BLOCK
+    }
+
+    /// Copy an 8x8 block out of a plane into `buf` (row-major).
+    pub fn read_block(&self, plane: usize, bx: usize, by: usize, buf: &mut [u8; 64]) {
+        let x0 = bx * BLOCK;
+        let y0 = by * BLOCK;
+        for r in 0..BLOCK {
+            let src = (y0 + r) * self.w + x0;
+            buf[r * BLOCK..(r + 1) * BLOCK].copy_from_slice(&self.planes[plane][src..src + BLOCK]);
+        }
+    }
+
+    /// Write an 8x8 block into a plane.
+    pub fn write_block(&mut self, plane: usize, bx: usize, by: usize, buf: &[u8; 64]) {
+        let x0 = bx * BLOCK;
+        let y0 = by * BLOCK;
+        for r in 0..BLOCK {
+            let dst = (y0 + r) * self.w + x0;
+            self.planes[plane][dst..dst + BLOCK].copy_from_slice(&buf[r * BLOCK..(r + 1) * BLOCK]);
+        }
+    }
+
+    /// Total pixel bytes across planes (uncompressed size).
+    pub fn byte_len(&self) -> usize {
+        3 * self.w * self.h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_roundtrip() {
+        let mut f = Frame::new(16, 8);
+        let mut buf = [0u8; 64];
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        f.write_block(1, 1, 0, &buf);
+        let mut got = [0u8; 64];
+        f.read_block(1, 1, 0, &mut got);
+        assert_eq!(got, buf);
+        // plane 0 untouched
+        assert!(f.planes[0].iter().all(|&p| p == 128));
+        assert_eq!(f.get(1, 8, 0), 0);
+        assert_eq!(f.get(1, 15, 7), 63);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_multiple_dims() {
+        Frame::new(10, 8);
+    }
+}

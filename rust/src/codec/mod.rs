@@ -1,0 +1,26 @@
+//! From-scratch lossless block video codec — the functional stand-in for
+//! NVENC/NVDEC H.265 (see DESIGN.md §1 substitution table).
+//!
+//! Pipeline (Fig. 7 of the paper):
+//!
+//! ```text
+//!   frames -> block prediction (intra DC/left/up, inter co-located)
+//!          -> [lossy only: 8x8 DCT + uniform quantization]
+//!          -> residuals -> rANS entropy coding -> container
+//! ```
+//!
+//! KVFetcher's configuration is `CodecConfig::lossless()` (skip the
+//! bracketed steps); `lossy(qp)` reproduces the Default/QP0 baselines
+//! and `llm265()` the no-inter-prediction concurrent work.
+
+pub mod dct;
+pub mod decoder;
+pub mod encoder;
+pub mod frame;
+pub mod predict;
+pub mod rans;
+
+pub use decoder::{decode_video, decode_video_with, parse_header, VideoHeader};
+pub use encoder::{encode_video, CodecConfig, CodecMode, CodecStats};
+pub use frame::{Frame, BLOCK};
+pub use predict::PredMode;

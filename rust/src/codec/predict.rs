@@ -1,0 +1,238 @@
+//! Block prediction: intra (DC / left / up) and inter (co-located block
+//! in the reference frame).
+//!
+//! These are the lossless redundancy-elimination steps of §3.2 ("fully
+//! utilize the lossless intra- and inter-frame redundancy elimination
+//! capability"). Residuals are taken mod 256 (wrapping), which makes
+//! prediction exactly invertible without range expansion.
+
+use super::frame::{Frame, BLOCK};
+
+/// Prediction mode for one 8x8 block. Discriminants are the on-wire
+/// mode-stream bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum PredMode {
+    /// DC: mean of the reconstructed up-row + left-column neighbours.
+    IntraDc = 0,
+    /// Horizontal: each row predicted from the pixel left of the block.
+    IntraLeft = 1,
+    /// Vertical: each column predicted from the pixel above the block.
+    IntraUp = 2,
+    /// Co-located block of the reference (previous reconstructed) frame.
+    Inter = 3,
+    /// Inter with all-zero residual: no residual bytes in the stream.
+    Skip = 4,
+}
+
+impl PredMode {
+    pub fn from_u8(b: u8) -> Result<PredMode, String> {
+        Ok(match b {
+            0 => PredMode::IntraDc,
+            1 => PredMode::IntraLeft,
+            2 => PredMode::IntraUp,
+            3 => PredMode::Inter,
+            4 => PredMode::Skip,
+            _ => return Err(format!("bad prediction mode {b}")),
+        })
+    }
+}
+
+/// Compute the prediction for block (bx, by) of `plane` in `recon`
+/// (the reconstructed current frame — only already-coded pixels are
+/// read), with `reference` = previous reconstructed frame for inter.
+pub fn predict(
+    mode: PredMode,
+    recon: &Frame,
+    reference: Option<&Frame>,
+    plane: usize,
+    bx: usize,
+    by: usize,
+    out: &mut [u8; 64],
+) {
+    match mode {
+        PredMode::IntraDc => {
+            let dc = dc_value(recon, plane, bx, by);
+            out.fill(dc);
+        }
+        PredMode::IntraLeft => {
+            let x0 = bx * BLOCK;
+            let y0 = by * BLOCK;
+            for r in 0..BLOCK {
+                let p = if x0 > 0 { recon.get(plane, x0 - 1, y0 + r) } else { 128 };
+                out[r * BLOCK..(r + 1) * BLOCK].fill(p);
+            }
+        }
+        PredMode::IntraUp => {
+            let x0 = bx * BLOCK;
+            let y0 = by * BLOCK;
+            let mut top = [128u8; BLOCK];
+            if y0 > 0 {
+                for c in 0..BLOCK {
+                    top[c] = recon.get(plane, x0 + c, y0 - 1);
+                }
+            }
+            for r in 0..BLOCK {
+                out[r * BLOCK..(r + 1) * BLOCK].copy_from_slice(&top);
+            }
+        }
+        PredMode::Inter | PredMode::Skip => {
+            let rf = reference.expect("inter prediction requires a reference frame");
+            rf.read_block(plane, bx, by, out);
+        }
+    }
+}
+
+fn dc_value(recon: &Frame, plane: usize, bx: usize, by: usize) -> u8 {
+    let x0 = bx * BLOCK;
+    let y0 = by * BLOCK;
+    let mut sum = 0u32;
+    let mut n = 0u32;
+    if y0 > 0 {
+        for c in 0..BLOCK {
+            sum += recon.get(plane, x0 + c, y0 - 1) as u32;
+            n += 1;
+        }
+    }
+    if x0 > 0 {
+        for r in 0..BLOCK {
+            sum += recon.get(plane, x0 - 1, y0 + r) as u32;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        128
+    } else {
+        ((sum + n / 2) / n) as u8
+    }
+}
+
+/// Wrapping residual: actual - prediction (mod 256).
+#[inline]
+pub fn residual(actual: &[u8; 64], pred: &[u8; 64], out: &mut [u8; 64]) {
+    for i in 0..64 {
+        out[i] = actual[i].wrapping_sub(pred[i]);
+    }
+}
+
+/// Invert [`residual`].
+#[inline]
+pub fn reconstruct(pred: &[u8; 64], resid: &[u8; 64], out: &mut [u8; 64]) {
+    for i in 0..64 {
+        out[i] = pred[i].wrapping_add(resid[i]);
+    }
+}
+
+/// Cost proxy for mode decision: sum of centered absolute residuals
+/// (residual r scores min(r, 256-r), the distance from zero mod 256).
+#[inline]
+pub fn residual_cost(resid: &[u8; 64]) -> u32 {
+    resid
+        .iter()
+        .map(|&r| (r as u32).min(256 - r as u32))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    fn random_frame(rng: &mut Prng, w: usize, h: usize) -> Frame {
+        let mut f = Frame::new(w, h);
+        for p in 0..3 {
+            for v in f.planes[p].iter_mut() {
+                *v = rng.next_u64() as u8;
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn residual_reconstruct_inverse() {
+        let mut rng = Prng::new(1);
+        let mut a = [0u8; 64];
+        let mut p = [0u8; 64];
+        for i in 0..64 {
+            a[i] = rng.next_u64() as u8;
+            p[i] = rng.next_u64() as u8;
+        }
+        let mut r = [0u8; 64];
+        residual(&a, &p, &mut r);
+        let mut back = [0u8; 64];
+        reconstruct(&p, &r, &mut back);
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn inter_prediction_of_identical_frame_is_perfect() {
+        let mut rng = Prng::new(2);
+        let f = random_frame(&mut rng, 16, 16);
+        let mut pred = [0u8; 64];
+        let mut actual = [0u8; 64];
+        for by in 0..2 {
+            for bx in 0..2 {
+                predict(PredMode::Inter, &f, Some(&f), 0, bx, by, &mut pred);
+                f.read_block(0, bx, by, &mut actual);
+                assert_eq!(pred, actual);
+                let mut r = [0u8; 64];
+                residual(&actual, &pred, &mut r);
+                assert_eq!(residual_cost(&r), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn intra_left_predicts_horizontal_gradient_exactly() {
+        // A frame where every row is constant: IntraLeft residual of
+        // non-border blocks is zero.
+        let mut f = Frame::new(16, 8);
+        for y in 0..8 {
+            for x in 0..16 {
+                f.set(0, x, y, (y * 10) as u8);
+            }
+        }
+        let mut pred = [0u8; 64];
+        predict(PredMode::IntraLeft, &f, None, 0, 1, 0, &mut pred);
+        let mut actual = [0u8; 64];
+        f.read_block(0, 1, 0, &mut actual);
+        assert_eq!(pred, actual);
+    }
+
+    #[test]
+    fn intra_up_predicts_vertical_structure_exactly() {
+        let mut f = Frame::new(8, 16);
+        for y in 0..16 {
+            for x in 0..8 {
+                f.set(2, x, y, (x * 7 + 3) as u8);
+            }
+        }
+        let mut pred = [0u8; 64];
+        predict(PredMode::IntraUp, &f, None, 2, 0, 1, &mut pred);
+        let mut actual = [0u8; 64];
+        f.read_block(2, 0, 1, &mut actual);
+        assert_eq!(pred, actual);
+    }
+
+    #[test]
+    fn dc_of_topleft_block_is_neutral() {
+        let f = Frame::new(8, 8);
+        let mut pred = [0u8; 64];
+        predict(PredMode::IntraDc, &f, None, 0, 0, 0, &mut pred);
+        assert!(pred.iter().all(|&v| v == 128));
+    }
+
+    #[test]
+    fn mode_byte_roundtrip() {
+        for m in [
+            PredMode::IntraDc,
+            PredMode::IntraLeft,
+            PredMode::IntraUp,
+            PredMode::Inter,
+            PredMode::Skip,
+        ] {
+            assert_eq!(PredMode::from_u8(m as u8).unwrap(), m);
+        }
+        assert!(PredMode::from_u8(9).is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Static byte-wise rANS entropy coder (ryg-style, 12-bit probabilities).
+//!
+//! This is the entropy-coding stage shared by every compression path in
+//! the repo: the video codec's mode/residual streams, and the
+//! CacheGen/ShadowServe baselines (which are "arithmetic coding over raw
+//! bytes" — i.e. exactly this coder with no prediction in front).
+//!
+//! Format: [u32 raw_len][freq table][u32 payload_len][payload].
+//! The frequency table is dense (flag 0: 256 x u16) or sparse (flag 1:
+//! u16 count + (u8 sym, u16 freq) entries) — whichever is smaller.
+//! Frequencies are normalized to sum 1<<12; encoding walks the input in
+//! reverse so the decoder streams forward.
+
+const PROB_BITS: u32 = 12;
+const PROB_SCALE: u32 = 1 << PROB_BITS;
+const RANS_L: u32 = 1 << 23; // lower bound of the normalized interval
+
+/// Normalize a histogram to sum to PROB_SCALE, keeping every present
+/// symbol's frequency >= 1.
+fn normalize_freqs(hist: &[u64; 256]) -> [u16; 256] {
+    let total: u64 = hist.iter().sum();
+    assert!(total > 0);
+    let mut freqs = [0u16; 256];
+    let mut assigned: u32 = 0;
+    let mut max_sym = 0usize;
+    let mut max_val: u32 = 0;
+    for i in 0..256 {
+        if hist[i] == 0 {
+            continue;
+        }
+        let mut f = ((hist[i] as u128 * PROB_SCALE as u128) / total as u128) as u32;
+        if f == 0 {
+            f = 1;
+        }
+        freqs[i] = f.min(u16::MAX as u32) as u16;
+        assigned += f;
+        if f > max_val {
+            max_val = f;
+            max_sym = i;
+        }
+    }
+    // fix drift on the most frequent symbol
+    let diff = PROB_SCALE as i64 - assigned as i64;
+    let fixed = freqs[max_sym] as i64 + diff;
+    assert!(fixed >= 1, "normalization underflow (too many distinct symbols?)");
+    freqs[max_sym] = fixed as u16;
+    freqs
+}
+
+/// Encode `data`. Empty input yields a minimal valid stream.
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 2 + 520);
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    if data.is_empty() {
+        return out;
+    }
+    let mut hist = [0u64; 256];
+    for &b in data {
+        hist[b as usize] += 1;
+    }
+    let freqs = normalize_freqs(&hist);
+    write_freq_table(&mut out, &freqs);
+    let mut cum = [0u32; 257];
+    for i in 0..256 {
+        cum[i + 1] = cum[i] + freqs[i] as u32;
+    }
+
+    // Per-symbol encode constants: renorm threshold, start offset, and
+    // a reciprocal so the hot loop has no division (q = x*rcp >> 52 is
+    // exact for x < 2^31, f <= 2^12; verified exhaustively in tests).
+    let mut x_max = [0u32; 256];
+    let mut rcp = [0u64; 256];
+    let mut start = [0u32; 256];
+    for s in 0..256 {
+        let f = freqs[s] as u32;
+        if f == 0 {
+            continue;
+        }
+        x_max[s] = ((RANS_L >> PROB_BITS) << 8) * f;
+        rcp[s] = ((1u64 << 52) + f as u64 - 1) / f as u64;
+        start[s] = cum[s];
+    }
+
+    // Two-way interleaved rANS: symbol i uses state i%2, breaking the
+    // serial dependency chain so the CPU overlaps consecutive steps.
+    // Encoding walks the input in reverse (alternating states in step),
+    // so the decoder's forward alternation pops bytes in exact mirror
+    // order.
+    let mut rev = Vec::with_capacity(data.len() / 2 + 12);
+    let mut states = [RANS_L, RANS_L];
+    for (i, &sym) in data.iter().enumerate().rev() {
+        let x = &mut states[i & 1];
+        let s = sym as usize;
+        let f = freqs[s] as u32;
+        debug_assert!(f > 0);
+        let xm = x_max[s];
+        while *x >= xm {
+            rev.push(*x as u8);
+            *x >>= 8;
+        }
+        let q = ((*x as u128 * rcp[s] as u128) >> 52) as u32; // == x / f
+        *x = (q << PROB_BITS) + (*x - q * f) + start[s];
+    }
+    // flush both states (x1 first so x0 leads after reversal)
+    for x in [states[1], states[0]] {
+        rev.extend_from_slice(&[(x >> 24) as u8, (x >> 16) as u8, (x >> 8) as u8, x as u8]);
+    }
+    rev.reverse();
+    out.extend_from_slice(&(rev.len() as u32).to_le_bytes());
+    out.extend_from_slice(&rev);
+    out
+}
+
+/// Serialize the frequency table, picking the smaller representation.
+fn write_freq_table(out: &mut Vec<u8>, freqs: &[u16; 256]) {
+    let nonzero: Vec<(u8, u16)> = freqs
+        .iter()
+        .enumerate()
+        .filter(|(_, &f)| f > 0)
+        .map(|(i, &f)| (i as u8, f))
+        .collect();
+    if 3 + 3 * nonzero.len() < 1 + 512 {
+        out.push(1); // sparse
+        out.extend_from_slice(&(nonzero.len() as u16).to_le_bytes());
+        for (sym, f) in nonzero {
+            out.push(sym);
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+    } else {
+        out.push(0); // dense
+        for f in freqs {
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+    }
+}
+
+/// Parse a frequency table; returns (freqs, bytes consumed).
+fn read_freq_table(stream: &[u8]) -> Result<([u16; 256], usize), String> {
+    let mut freqs = [0u16; 256];
+    match stream.first() {
+        Some(0) => {
+            if stream.len() < 1 + 512 {
+                return Err("rans: truncated dense table".into());
+            }
+            for i in 0..256 {
+                freqs[i] =
+                    u16::from_le_bytes(stream[1 + 2 * i..3 + 2 * i].try_into().unwrap());
+            }
+            Ok((freqs, 1 + 512))
+        }
+        Some(1) => {
+            if stream.len() < 3 {
+                return Err("rans: truncated sparse table header".into());
+            }
+            let n = u16::from_le_bytes(stream[1..3].try_into().unwrap()) as usize;
+            let need = 3 + 3 * n;
+            if stream.len() < need {
+                return Err("rans: truncated sparse table".into());
+            }
+            for e in 0..n {
+                let sym = stream[3 + 3 * e] as usize;
+                let f = u16::from_le_bytes(
+                    stream[4 + 3 * e..6 + 3 * e].try_into().unwrap(),
+                );
+                freqs[sym] = f;
+            }
+            Ok((freqs, need))
+        }
+        _ => Err("rans: bad table flag".into()),
+    }
+}
+
+/// Decode a stream produced by [`encode`]. Returns (bytes, consumed).
+pub fn decode(stream: &[u8]) -> Result<(Vec<u8>, usize), String> {
+    if stream.len() < 4 {
+        return Err("rans: truncated header".into());
+    }
+    let raw_len = u32::from_le_bytes(stream[0..4].try_into().unwrap()) as usize;
+    if raw_len == 0 {
+        return Ok((Vec::new(), 4));
+    }
+    let (freqs, table_len) = read_freq_table(&stream[4..])?;
+    let hdr = 4 + table_len;
+    let mut cum = [0u32; 257];
+    for i in 0..256 {
+        cum[i + 1] = cum[i] + freqs[i] as u32;
+    }
+    if cum[256] != PROB_SCALE {
+        return Err(format!("rans: bad freq table (sum {})", cum[256]));
+    }
+    // slot -> packed (symbol | (freq-1)<<8 | cum<<20): one load per
+    // step (freq-1 fits 12 bits even for a single-symbol stream)
+    let mut slot_tab = vec![0u32; PROB_SCALE as usize];
+    for s in 0..256 {
+        if freqs[s] == 0 {
+            continue;
+        }
+        let packed = s as u32 | ((freqs[s] as u32 - 1) << 8) | (cum[s] << 20);
+        for slot in cum[s]..cum[s + 1] {
+            slot_tab[slot as usize] = packed;
+        }
+    }
+    let payload_len = u32::from_le_bytes(
+        stream
+            .get(hdr..hdr + 4)
+            .ok_or("rans: truncated length")?
+            .try_into()
+            .unwrap(),
+    ) as usize;
+    let payload = stream
+        .get(hdr + 4..hdr + 4 + payload_len)
+        .ok_or("rans: truncated payload")?;
+
+    // the flush pushed both states high-byte-first; after the buffer
+    // reversal they sit at the front in little-endian order, x0 first
+    if payload.len() < 8 {
+        return Err("rans: payload too short".into());
+    }
+    let mut states = [
+        u32::from_le_bytes(payload[0..4].try_into().unwrap()),
+        u32::from_le_bytes(payload[4..8].try_into().unwrap()),
+    ];
+    let mut it = payload[8..].iter();
+    let mut out = Vec::with_capacity(raw_len);
+    let mask = PROB_SCALE - 1;
+    for i in 0..raw_len {
+        let x = &mut states[i & 1];
+        let packed = slot_tab[(*x & mask) as usize];
+        let f = ((packed >> 8) & 0xfff) + 1;
+        let c = packed >> 20;
+        *x = f * (*x >> PROB_BITS) + (*x & mask) - c;
+        while *x < RANS_L {
+            let b = *it.next().ok_or("rans: payload underrun")?;
+            *x = (*x << 8) | b as u32;
+        }
+        out.push(packed as u8);
+    }
+    Ok((out, hdr + 4 + payload_len))
+}
+
+/// Compressed size of `data` under this coder, without materializing the
+/// stream twice (used by layout search cost evaluation).
+pub fn compressed_len(data: &[u8]) -> usize {
+    encode(data).len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check_sized, gen_bytes};
+    use crate::util::stats::byte_entropy;
+    use crate::util::Prng;
+
+    fn roundtrip(data: &[u8]) {
+        let enc = encode(data);
+        let (dec, used) = decode(&enc).unwrap();
+        assert_eq!(used, enc.len());
+        assert_eq!(dec, data);
+    }
+
+    #[test]
+    fn roundtrip_basics() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"aaaaaaaaaaaaaaaa");
+        roundtrip(b"hello rans, hello rans, hello rans");
+        roundtrip(&(0u32..=255).map(|x| x as u8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prop_roundtrip_uniform_and_peaked() {
+        check_sized(
+            11,
+            40,
+            5000,
+            "rans-roundtrip-uniform",
+            |rng, size| gen_bytes(rng, size, false),
+            |v| {
+                let enc = encode(v);
+                let (dec, _) = decode(&enc).map_err(|e| e)?;
+                if &dec != v {
+                    return Err("mismatch".into());
+                }
+                Ok(())
+            },
+        );
+        check_sized(
+            13,
+            40,
+            5000,
+            "rans-roundtrip-peaked",
+            |rng, size| gen_bytes(rng, size, true),
+            |v| {
+                let enc = encode(v);
+                let (dec, _) = decode(&enc).map_err(|e| e)?;
+                if &dec != v {
+                    return Err("mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn approaches_entropy_bound() {
+        // peaked data: compressed size should be close to H(X) * n / 8
+        let mut rng = Prng::new(17);
+        let data = gen_bytes(&mut rng, 200_000, true);
+        let h = byte_entropy(&data);
+        let enc = encode(&data);
+        let actual_bits_per_byte = (enc.len() as f64 - 521.0) * 8.0 / data.len() as f64;
+        assert!(
+            actual_bits_per_byte < h * 1.02 + 0.05,
+            "rans {actual_bits_per_byte:.3} bpb vs entropy {h:.3}"
+        );
+    }
+
+    #[test]
+    fn constant_data_compresses_hugely() {
+        let data = vec![42u8; 100_000];
+        let enc = encode(&data);
+        assert!(enc.len() < 2000, "len {}", enc.len());
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_table() {
+        let mut enc = encode(b"some reasonable data here");
+        enc[4] = 7; // invalid table flag
+        assert!(decode(&enc).is_err());
+    }
+
+    #[test]
+    fn reciprocal_division_exact() {
+        // the encode fast path replaces x/f with (x*rcp)>>52; verify
+        // exactness over the full operating range boundaries
+        let mut rng = Prng::new(4242);
+        for _ in 0..200_000 {
+            let f = 1 + (rng.next_u64() % 4096) as u32;
+            let rcp = ((1u64 << 52) + f as u64 - 1) / f as u64;
+            let x = (rng.next_u64() % (1u64 << 31)) as u32;
+            let q = ((x as u128 * rcp as u128) >> 52) as u32;
+            assert_eq!(q, x / f, "x={x} f={f}");
+        }
+        // explicit boundaries
+        for f in [1u32, 2, 3, 4095, 4096] {
+            let rcp = ((1u64 << 52) + f as u64 - 1) / f as u64;
+            for x in [0u32, 1, f - 1, f, f + 1, (1 << 31) - 1] {
+                assert_eq!(((x as u128 * rcp as u128) >> 52) as u32, x / f);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_table_kicks_in_for_few_symbols() {
+        // residual-like data with few distinct symbols selects the
+        // sparse representation (flag 1) and stays small
+        let data: Vec<u8> = (0..10_000).map(|i| if i % 97 == 0 { 9 } else { 0 }).collect();
+        let enc = encode(&data);
+        assert_eq!(enc[4], 1, "sparse flag expected");
+        assert!(enc.len() < 300, "len {}", enc.len());
+        let (dec, _) = decode(&enc).unwrap();
+        assert_eq!(dec, data);
+    }
+
+    #[test]
+    fn decode_rejects_truncation() {
+        let enc = encode(b"some reasonable data here");
+        assert!(decode(&enc[..enc.len() - 3]).is_err());
+        assert!(decode(&enc[..10]).is_err());
+    }
+}

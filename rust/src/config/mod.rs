@@ -1,0 +1,159 @@
+//! Experiment configuration: maps `configs/*.toml` onto engine /
+//! fetcher / trace settings so experiments are reproducible from files
+//! (and the CLI can override individual keys).
+
+use crate::cluster::{DeviceSpec, ModelSpec};
+use crate::engine::EngineConfig;
+use crate::fetcher::FetchConfig;
+use crate::net::BandwidthTrace;
+use crate::scheduler::SchedulerConfig;
+use crate::trace::TraceConfig;
+use crate::util::config::Config;
+
+/// A fully resolved experiment setup.
+#[derive(Debug, Clone)]
+pub struct Experiment {
+    pub name: String,
+    pub device: DeviceSpec,
+    pub model: ModelSpec,
+    pub bandwidth_gbps: f64,
+    pub jitter: bool,
+    pub engine: EngineConfig,
+    pub trace: TraceConfig,
+}
+
+impl Default for Experiment {
+    fn default() -> Self {
+        Experiment {
+            name: "default".into(),
+            device: DeviceSpec::h20(),
+            model: ModelSpec::yi_34b(),
+            bandwidth_gbps: 16.0,
+            jitter: false,
+            engine: EngineConfig::default(),
+            trace: TraceConfig::default(),
+        }
+    }
+}
+
+impl Experiment {
+    /// Load from a TOML file (every key optional, defaults otherwise).
+    pub fn load(path: &str) -> Result<Experiment, String> {
+        let c = Config::load(path)?;
+        Ok(Self::from_config(&c))
+    }
+
+    pub fn from_config(c: &Config) -> Experiment {
+        let d = Experiment::default();
+        let device = DeviceSpec::by_name(c.get_str("cluster", "device", "h20"))
+            .unwrap_or_else(DeviceSpec::h20);
+        let model = ModelSpec::by_name(c.get_str("cluster", "model", "yi-34b"))
+            .unwrap_or_else(ModelSpec::yi_34b);
+        let engine = EngineConfig {
+            sched: SchedulerConfig {
+                fetching_aware: c.get_bool("scheduler", "fetching_aware", true),
+                max_batch: c.get_i64("scheduler", "max_batch", 16) as usize,
+                prefill_budget: c.get_i64("scheduler", "prefill_budget", 8192) as usize,
+            },
+            fetch: FetchConfig {
+                chunk_tokens: c.get_i64("fetch", "chunk_tokens", 10_000) as usize,
+                adaptive: c.get_bool("fetch", "adaptive", true),
+                fixed_res: c.get_i64("fetch", "fixed_res", 3) as usize,
+                default_bw_gbps: c.get_f64("fetch", "default_bw_gbps", 16.0),
+                framewise_restore: c.get_bool("fetch", "framewise_restore", true),
+                restore_bps: c.get_f64("fetch", "restore_bps", 50e9),
+            },
+            layerwise_pipeline: c.get_bool("engine", "layerwise_pipeline", true),
+            block_tokens: c.get_i64("engine", "block_tokens", 256) as usize,
+            kv_capacity_tokens: match c.get_i64("engine", "kv_capacity_tokens", 0) {
+                0 => None,
+                n => Some(n as usize),
+            },
+        };
+        let trace = TraceConfig {
+            seed: c.get_i64("trace", "seed", 0) as u64,
+            n_requests: c.get_i64("trace", "n_requests", 64) as usize,
+            rate: c.get_f64("trace", "rate", 0.2),
+            ctx_min: c.get_i64("trace", "ctx_min", 2_000) as usize,
+            ctx_max: c.get_i64("trace", "ctx_max", 200_000) as usize,
+            reuse_frac: c.get_f64("trace", "reuse_frac", 0.5),
+            reuse_share: c.get_f64("trace", "reuse_share", 0.95),
+            reuse_threshold: c.get_i64("trace", "reuse_threshold", 40_000) as usize,
+            out_min: c.get_i64("trace", "out_min", 16) as usize,
+            out_max: c.get_i64("trace", "out_max", 256) as usize,
+        };
+        Experiment {
+            name: c.get_str("", "name", &d.name).to_string(),
+            device,
+            model,
+            bandwidth_gbps: c.get_f64("network", "bandwidth_gbps", 16.0),
+            jitter: c.get_bool("network", "jitter", false),
+            engine,
+            trace,
+        }
+    }
+
+    pub fn bandwidth_trace(&self) -> BandwidthTrace {
+        if self.jitter {
+            BandwidthTrace::jitter(
+                self.trace.seed ^ 0x9e37,
+                self.bandwidth_gbps,
+                (self.bandwidth_gbps * 0.25).max(0.5),
+                self.bandwidth_gbps * 2.0,
+                1.0,
+                3600.0,
+            )
+        } else {
+            BandwidthTrace::constant(self.bandwidth_gbps)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let e = Experiment::from_config(&Config::parse("").unwrap());
+        assert_eq!(e.device.name, "H20");
+        assert_eq!(e.model.name, "Yi-34B");
+        assert!(e.engine.sched.fetching_aware);
+    }
+
+    #[test]
+    fn parses_overrides() {
+        let text = r#"
+name = "fig18-l20"
+[cluster]
+device = "l20"
+model = "llama3-70b"
+[network]
+bandwidth_gbps = 4.0
+jitter = true
+[scheduler]
+fetching_aware = false
+[fetch]
+adaptive = false
+chunk_tokens = 5000
+[trace]
+n_requests = 10
+"#;
+        let e = Experiment::from_config(&Config::parse(text).unwrap());
+        assert_eq!(e.name, "fig18-l20");
+        assert_eq!(e.device.name, "L20");
+        assert_eq!(e.model.name, "Llama3-70B");
+        assert_eq!(e.bandwidth_gbps, 4.0);
+        assert!(!e.engine.sched.fetching_aware);
+        assert!(!e.engine.fetch.adaptive);
+        assert_eq!(e.engine.fetch.chunk_tokens, 5000);
+        assert_eq!(e.trace.n_requests, 10);
+        assert!(e.jitter);
+        // jitter trace stays within its clamp bounds
+        let tr = e.bandwidth_trace();
+        for i in 0..100 {
+            let b = tr.at(i as f64);
+            assert!(b >= 1.0 && b <= 8.0, "bw {b}");
+        }
+    }
+}

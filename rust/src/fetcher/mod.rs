@@ -1,0 +1,390 @@
+//! Efficient remote KV fetcher (§3.3): adaptive-resolution chunk
+//! pipeline, frame-wise restoration accounting, and the layer-wise
+//! fetch/compute admission rule (Appx. A.3).
+//!
+//! A fetch is a sequence of 10K-token chunks. Each chunk is transmitted
+//! (FIFO link), decoded (NVDEC pool / CUDA kernel / SmartNIC, per
+//! system), and restored. Transmission of chunk i+1 overlaps decoding
+//! of chunk i; Alg. 1 picks the resolution that minimizes the bubble
+//! between the two stages under the predicted bandwidth.
+
+use crate::asic::DecodePool;
+use crate::baselines::{Decompress, SystemProfile};
+use crate::metrics::TtftBreakdown;
+use crate::net::{BandwidthEstimator, NetLink};
+
+/// Relative wire-size factor per resolution index (240p..1080p),
+/// normalized to 1080p — from the paper's Size (MB) rows (180/205/235/256).
+pub const RES_SIZE_FACTOR: [f64; 4] = [180.0 / 256.0, 205.0 / 256.0, 235.0 / 256.0, 1.0];
+
+/// Fetch configuration.
+#[derive(Debug, Clone)]
+pub struct FetchConfig {
+    /// tokens per video chunk (paper: 10_000)
+    pub chunk_tokens: usize,
+    /// adaptive resolution per Alg. 1; if false use `fixed_res`
+    pub adaptive: bool,
+    /// resolution index used when not adaptive (3 = 1080p)
+    pub fixed_res: usize,
+    /// bandwidth assumed before the first observation (Gbps)
+    pub default_bw_gbps: f64,
+    /// frame-wise restoration (vs chunk-wise)
+    pub framewise_restore: bool,
+    /// GPU-side restore (dequant + scatter) bandwidth, bytes/s
+    pub restore_bps: f64,
+}
+
+impl Default for FetchConfig {
+    fn default() -> Self {
+        FetchConfig {
+            chunk_tokens: 10_000,
+            adaptive: true,
+            fixed_res: 3,
+            default_bw_gbps: 16.0,
+            framewise_restore: true,
+            restore_bps: 50e9,
+        }
+    }
+}
+
+/// Algorithm 1: Adaptive Resolution Selection via Bubble Minimization.
+/// `wire_1080p` is the chunk's wire bytes at 1080p; per-resolution sizes
+/// scale by RES_SIZE_FACTOR. `scale` converts nominal table latency to
+/// this chunk (chunk_tokens / 10_000).
+pub fn select_resolution(
+    est_gbps: f64,
+    wire_1080p: usize,
+    pool: &DecodePool,
+    now: f64,
+    scale: f64,
+) -> usize {
+    let mut best = 3usize;
+    let mut best_bubble = f64::INFINITY;
+    for r in 0..4 {
+        let size = wire_1080p as f64 * RES_SIZE_FACTOR[r];
+        let t_trans = size * 8.0 / (est_gbps * 1e9);
+        let (t_dec, t_pen) = pool.predict_latency(now, r, scale);
+        let bubble = (t_trans - t_dec - t_pen).abs();
+        if bubble < best_bubble {
+            best_bubble = bubble;
+            best = r;
+        }
+    }
+    best
+}
+
+/// Timeline of one fetched chunk.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkFetch {
+    pub res_idx: usize,
+    pub wire_bytes: usize,
+    pub trans_start: f64,
+    pub trans_end: f64,
+    pub dec_start: f64,
+    pub dec_end: f64,
+    /// idle gap between this chunk's transmission end and decode start
+    /// availability — the pipeline bubble Fig. 17 minimizes
+    pub bubble: f64,
+}
+
+/// Complete fetch plan for one request's reusable prefix.
+#[derive(Debug, Clone)]
+pub struct FetchPlan {
+    pub chunks: Vec<ChunkFetch>,
+    pub started_at: f64,
+    pub done_at: f64,
+    pub breakdown: TtftBreakdown,
+    /// peak device memory of decode + restore (Fig. 24)
+    pub restore_peak_bytes: usize,
+}
+
+/// Plan the fetch of `reusable_tokens` of KV whose raw fp16 size is
+/// `raw_bytes_total`, under `profile`, mutating the shared link / pool /
+/// estimator state (so concurrent fetches contend realistically).
+#[allow(clippy::too_many_arguments)]
+pub fn plan_fetch(
+    now: f64,
+    reusable_tokens: usize,
+    raw_bytes_total: usize,
+    profile: &SystemProfile,
+    cfg: &FetchConfig,
+    link: &mut NetLink,
+    pool: &mut DecodePool,
+    est: &mut BandwidthEstimator,
+) -> FetchPlan {
+    assert!(reusable_tokens > 0);
+    let n_chunks = reusable_tokens.div_ceil(cfg.chunk_tokens);
+    let raw_per_chunk = raw_bytes_total / n_chunks;
+    let scale = (cfg.chunk_tokens.min(reusable_tokens)) as f64 / 10_000.0;
+    let mut chunks = Vec::with_capacity(n_chunks);
+    let mut prev_dec_end = now;
+    let mut decode_busy = 0.0;
+
+    for _ in 0..n_chunks {
+        let wire_1080p = profile.wire_bytes(raw_per_chunk);
+        // resolution choice (only meaningful for video systems)
+        let res_idx = if matches!(profile.decompress, Decompress::NvdecPool) {
+            if cfg.adaptive && profile.adaptive_resolution {
+                select_resolution(
+                    est.estimate(cfg.default_bw_gbps),
+                    wire_1080p,
+                    pool,
+                    link.busy_until().max(now),
+                    scale,
+                )
+            } else {
+                cfg.fixed_res
+            }
+        } else {
+            3
+        };
+        let wire = if matches!(profile.decompress, Decompress::NvdecPool) {
+            (wire_1080p as f64 * RES_SIZE_FACTOR[res_idx]) as usize
+        } else {
+            wire_1080p
+        };
+        let (ts, te) = link.transmit(now, wire);
+        est.observe(wire, te - ts);
+
+        // decompression stage
+        let (ds, de) = match profile.decompress {
+            Decompress::None => (te, te),
+            Decompress::NvdecPool => {
+                let job = pool.decode(te, res_idx, scale);
+                (job.start, job.end)
+            }
+            Decompress::CudaKernel { tokens_per_sec, .. } => {
+                let start = te.max(prev_dec_end);
+                let dt = cfg.chunk_tokens.min(reusable_tokens) as f64 / tokens_per_sec;
+                (start, start + dt)
+            }
+            Decompress::SmartNic { gbps, .. } => {
+                let start = te.max(prev_dec_end);
+                (start, start + wire as f64 * 8.0 / (gbps * 1e9))
+            }
+        };
+        decode_busy += de - ds;
+        let bubble = (ds - te).max(0.0);
+        prev_dec_end = de;
+        chunks.push(ChunkFetch {
+            res_idx,
+            wire_bytes: wire,
+            trans_start: ts,
+            trans_end: te,
+            dec_start: ds,
+            dec_end: de,
+            bubble,
+        });
+    }
+
+    // restoration: frame-wise overlaps decoding (tail of one frame);
+    // chunk-wise serializes a full-chunk dequant+scatter after decode.
+    let restore_tail = if cfg.framewise_restore && profile.framewise_restore {
+        // one frame's worth of restore after the last decode
+        (raw_per_chunk as f64 / 16.0) / cfg.restore_bps
+    } else {
+        raw_per_chunk as f64 / cfg.restore_bps * n_chunks as f64
+    };
+
+    let last_trans_end = chunks.last().map(|c| c.trans_end).unwrap_or(now);
+    let done_at = prev_dec_end + restore_tail;
+    let breakdown = TtftBreakdown {
+        wait: chunks.first().map(|c| c.trans_start - now).unwrap_or(0.0),
+        transmission: last_trans_end - chunks.first().map(|c| c.trans_start).unwrap_or(now),
+        decode: (prev_dec_end - last_trans_end).max(0.0),
+        restore: restore_tail,
+        prefill: 0.0,
+    };
+    let _ = decode_busy;
+
+    FetchPlan {
+        restore_peak_bytes: restore_memory(profile, cfg, raw_per_chunk),
+        chunks,
+        started_at: now,
+        done_at,
+        breakdown,
+    }
+}
+
+/// Peak device-memory footprint of decode + restore for one in-flight
+/// chunk (Fig. 6 vs Fig. 24).
+pub fn restore_memory(profile: &SystemProfile, cfg: &FetchConfig, raw_per_chunk: usize) -> usize {
+    match profile.decompress {
+        Decompress::None => 0,
+        Decompress::SmartNic { .. } => 0, // off-device
+        Decompress::CudaKernel { mem_factor, .. } => {
+            (raw_per_chunk as f64 * mem_factor) as usize
+        }
+        Decompress::NvdecPool => {
+            if cfg.framewise_restore && profile.framewise_restore {
+                // <=4 reference frames (~20MB at 2K) + ~50MB frame-wise
+                // restore buffer (§3.3.2)
+                20 * 1024 * 1024 + 50 * 1024 * 1024
+            } else {
+                // chunk-wise: the whole decoded chunk is buffered
+                raw_per_chunk + 20 * 1024 * 1024
+            }
+        }
+    }
+}
+
+/// Appx. A.3 layer-wise admission: earliest time a fetch request may
+/// enter the running queue such that every layer's KV arrives before
+/// the compute reaches it. Fetch progress is assumed uniform over
+/// [start, end]; layer k is ready at start + k/L * (end-start).
+/// Condition: ready(k) <= admit + (k-1) * per_layer_comp for all k.
+pub fn layerwise_admission(
+    fetch_start: f64,
+    fetch_end: f64,
+    layers: usize,
+    per_layer_comp: f64,
+    buffered_layers: usize,
+) -> f64 {
+    let dur = fetch_end - fetch_start;
+    let mut admit: f64 = fetch_start;
+    for k in (buffered_layers + 1)..=layers {
+        let ready_k = fetch_start + dur * k as f64 / layers as f64;
+        let needed = ready_k - (k as f64 - 1.0) * per_layer_comp;
+        admit = admit.max(needed);
+    }
+    admit.min(fetch_end)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asic::h20_table;
+    use crate::cluster::DeviceSpec;
+    use crate::net::BandwidthTrace;
+
+    fn setup(gbps: f64) -> (NetLink, DecodePool, BandwidthEstimator) {
+        (
+            NetLink::new(BandwidthTrace::constant(gbps)),
+            DecodePool::new(7, h20_table()),
+            BandwidthEstimator::new(0.5),
+        )
+    }
+
+    #[test]
+    fn alg1_picks_low_res_on_slow_network() {
+        let (_, pool, _) = setup(1.0);
+        // slow network: transmission dominates -> lowest-size resolution
+        let r_slow = select_resolution(1.0, 200_000_000, &pool, 0.0, 1.0);
+        // fast network: decode dominates -> highest resolution decodes fastest
+        let r_fast = select_resolution(100.0, 200_000_000, &pool, 0.0, 1.0);
+        assert!(r_slow < r_fast, "slow {r_slow} fast {r_fast}");
+        assert_eq!(r_fast, 3);
+    }
+
+    #[test]
+    fn alg1_matches_fig17_example() {
+        // Fig. 17: ~6 Gbps -> mid/high res; drop to 3 Gbps -> 240p.
+        let (_, pool, _) = setup(6.0);
+        // chunk of 256MB at 1080p (the table's nominal size)
+        let at6 = select_resolution(6.0, 256_000_000, &pool, 0.0, 1.0);
+        let at3 = select_resolution(3.0, 256_000_000, &pool, 0.0, 1.0);
+        assert!(at3 <= at6, "bw drop must not raise resolution: {at3} vs {at6}");
+        assert_eq!(at3, 0, "3 Gbps should select 240p");
+    }
+
+    #[test]
+    fn pipeline_overlaps_transmission_and_decode() {
+        // 4 Gbps: transmission-bound regime (at tens of Gbps the paper
+        // itself notes NVDEC capacity becomes the bottleneck, §5.2)
+        let (mut link, mut pool, mut est) = setup(4.0);
+        let profile = SystemProfile::kvfetcher();
+        let cfg = FetchConfig::default();
+        let raw = 500_000 * 10_000usize; // 10 chunks x 10K tokens x 0.5MB
+        let plan = plan_fetch(0.0, 100_000, raw, &profile, &cfg, &mut link, &mut pool, &mut est);
+        assert_eq!(plan.chunks.len(), 10);
+        // decoding of chunk i overlaps transmission of chunk i+1
+        for w in plan.chunks.windows(2) {
+            assert!(w[1].trans_start <= w[0].dec_end + 1e-9);
+        }
+        // critical path: done_at >= last transmission end
+        assert!(plan.done_at >= plan.chunks.last().unwrap().trans_end);
+        // non-overlapped decode tail is small relative to transmission
+        assert!(plan.breakdown.decode < plan.breakdown.transmission);
+    }
+
+    #[test]
+    fn adaptive_beats_fixed_resolution_under_jitter() {
+        let profile = SystemProfile::kvfetcher();
+        let raw = 500_000 * 10_000usize;
+        let trace = BandwidthTrace::jitter(5, 6.0, 2.0, 10.0, 0.8, 500.0);
+
+        let mut link_a = NetLink::new(trace.clone());
+        let mut pool_a = DecodePool::new(7, h20_table());
+        let mut est_a = BandwidthEstimator::new(0.5);
+        let adaptive = plan_fetch(
+            0.0, 100_000, raw, &profile,
+            &FetchConfig { adaptive: true, default_bw_gbps: 6.0, ..Default::default() },
+            &mut link_a, &mut pool_a, &mut est_a,
+        );
+
+        let mut link_f = NetLink::new(trace);
+        let mut pool_f = DecodePool::new(7, h20_table());
+        let mut est_f = BandwidthEstimator::new(0.5);
+        let fixed = plan_fetch(
+            0.0, 100_000, raw, &profile,
+            &FetchConfig { adaptive: false, fixed_res: 3, ..Default::default() },
+            &mut link_f, &mut pool_f, &mut est_f,
+        );
+        assert!(
+            adaptive.done_at <= fixed.done_at * 1.02,
+            "adaptive {:.2}s vs fixed {:.2}s",
+            adaptive.done_at,
+            fixed.done_at
+        );
+    }
+
+    #[test]
+    fn cachegen_decodes_slower_than_nvdec_path_end_to_end() {
+        let dev = DeviceSpec::h20();
+        let raw = 500_000 * 10_000usize;
+        let cfg = FetchConfig::default();
+
+        let (mut l1, mut p1, mut e1) = setup(16.0);
+        let ours = plan_fetch(0.0, 100_000, raw, &SystemProfile::kvfetcher(), &cfg, &mut l1, &mut p1, &mut e1);
+        let (mut l2, mut p2, mut e2) = setup(16.0);
+        let cg = plan_fetch(0.0, 100_000, raw, &SystemProfile::cachegen(&dev), &cfg, &mut l2, &mut p2, &mut e2);
+        assert!(ours.done_at < cg.done_at, "ours {} vs cachegen {}", ours.done_at, cg.done_at);
+    }
+
+    #[test]
+    fn framewise_restore_memory_far_below_chunkwise() {
+        let profile = SystemProfile::kvfetcher();
+        let fw = restore_memory(&profile, &FetchConfig::default(), 5_000_000_000);
+        let cw = restore_memory(
+            &profile,
+            &FetchConfig { framewise_restore: false, ..Default::default() },
+            5_000_000_000,
+        );
+        assert!(fw < 100 * 1024 * 1024, "frame-wise {} must stay <100MB", fw);
+        assert!(cw > 10 * fw, "chunk-wise {} vs frame-wise {}", cw, fw);
+        // CacheGen's bloat: 2.7x the raw chunk
+        let cg = restore_memory(
+            &SystemProfile::cachegen(&DeviceSpec::h20()),
+            &FetchConfig::default(),
+            2_000_000_000,
+        );
+        assert_eq!(cg, (2_000_000_000f64 * 2.7) as usize);
+    }
+
+    #[test]
+    fn layerwise_admission_bounds() {
+        // infinitely fast compute: must wait until fetch fully done
+        let a = layerwise_admission(0.0, 10.0, 32, 0.0, 0);
+        assert!((a - 10.0).abs() < 1e-9);
+        // very slow compute: can start immediately after first layer
+        let b = layerwise_admission(0.0, 10.0, 32, 100.0, 0);
+        assert!(b <= 10.0 / 32.0 + 1e-9);
+        // monotone in compute speed
+        let c1 = layerwise_admission(0.0, 10.0, 32, 0.1, 0);
+        let c2 = layerwise_admission(0.0, 10.0, 32, 0.3, 0);
+        assert!(c2 <= c1);
+        // buffered layers relax the condition
+        let d = layerwise_admission(0.0, 10.0, 32, 0.1, 16);
+        assert!(d <= c1);
+    }
+}

@@ -1,0 +1,195 @@
+//! Remote KV storage node: encoded-chunk registry + token-prefix index.
+//!
+//! Chunks are registered offline ("KV caches are chunked and encoded
+//! offline, stored at remote storage nodes", §3.1) in multiple
+//! resolution variants; the runtime looks up the longest reusable token
+//! prefix, then fetches chunk-by-chunk at the resolution the adapter
+//! picks.
+//!
+//! Prefix matching uses vLLM-style chained block hashes: block i's key
+//! is hash(key_{i-1}, tokens of block i), so a prefix matches iff every
+//! earlier block matches.
+
+use std::collections::HashMap;
+
+/// Chain hash of token blocks (FNV-1a over the previous key + tokens).
+pub fn block_hash(prev: u64, tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325 ^ prev;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Compute the chained hashes of every complete `block_tokens`-sized
+/// block of `tokens`.
+pub fn prefix_hashes(tokens: &[u32], block_tokens: usize) -> Vec<u64> {
+    assert!(block_tokens > 0);
+    let mut out = Vec::new();
+    let mut prev = 0u64;
+    for chunk in tokens.chunks_exact(block_tokens) {
+        prev = block_hash(prev, chunk);
+        out.push(prev);
+    }
+    out
+}
+
+/// One stored resolution variant of an encoded chunk group set.
+#[derive(Debug, Clone)]
+pub struct StoredVariant {
+    pub resolution: &'static str,
+    /// Encoded bytes per 3-plane group video.
+    pub group_bytes: Vec<Vec<u8>>,
+    pub total_bytes: usize,
+    pub n_frames: usize,
+}
+
+/// A stored chunk: all resolution variants + quantization scales.
+#[derive(Debug, Clone)]
+pub struct StoredChunk {
+    pub hash: u64,
+    pub tokens: usize,
+    pub scales: Vec<f32>,
+    pub variants: Vec<StoredVariant>,
+}
+
+impl StoredChunk {
+    pub fn variant(&self, resolution: &str) -> Option<&StoredVariant> {
+        self.variants.iter().find(|v| v.resolution == resolution)
+    }
+
+    /// Wire bytes of one variant including the scale sideband.
+    pub fn wire_bytes(&self, resolution: &str) -> Option<usize> {
+        self.variant(resolution).map(|v| v.total_bytes + self.scales.len() * 4)
+    }
+}
+
+/// A remote storage node.
+#[derive(Debug, Default)]
+pub struct StorageNode {
+    chunks: HashMap<u64, StoredChunk>,
+    pub block_tokens: usize,
+}
+
+impl StorageNode {
+    pub fn new(block_tokens: usize) -> Self {
+        StorageNode { chunks: HashMap::new(), block_tokens }
+    }
+
+    pub fn register(&mut self, chunk: StoredChunk) {
+        self.chunks.insert(chunk.hash, chunk);
+    }
+
+    pub fn get(&self, hash: u64) -> Option<&StoredChunk> {
+        self.chunks.get(&hash)
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty()
+    }
+
+    /// Longest stored prefix of `tokens`: returns the hashes of the
+    /// matched chunk chain (possibly empty).
+    pub fn match_prefix(&self, tokens: &[u32]) -> Vec<u64> {
+        let mut matched = Vec::new();
+        for h in prefix_hashes(tokens, self.block_tokens) {
+            if self.chunks.contains_key(&h) {
+                matched.push(h);
+            } else {
+                break;
+            }
+        }
+        matched
+    }
+
+    /// Total stored bytes (all variants) — the storage-cost metric.
+    pub fn stored_bytes(&self) -> usize {
+        self.chunks
+            .values()
+            .map(|c| {
+                c.variants.iter().map(|v| v.total_bytes).sum::<usize>() + c.scales.len() * 4
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(n: usize, seed: u32) -> Vec<u32> {
+        (0..n as u32).map(|i| i.wrapping_mul(2654435761).wrapping_add(seed)).collect()
+    }
+
+    fn dummy_chunk(hash: u64, tokens: usize) -> StoredChunk {
+        StoredChunk {
+            hash,
+            tokens,
+            scales: vec![1.0; 8],
+            variants: vec![StoredVariant {
+                resolution: "240p",
+                group_bytes: vec![vec![0u8; 100]],
+                total_bytes: 100,
+                n_frames: 4,
+            }],
+        }
+    }
+
+    #[test]
+    fn chained_hash_prefix_property() {
+        let a = toks(64, 1);
+        let mut b = a.clone();
+        b[40] ^= 7; // diverge inside block 2 (block=16)
+        let ha = prefix_hashes(&a, 16);
+        let hb = prefix_hashes(&b, 16);
+        assert_eq!(ha[0], hb[0]);
+        assert_eq!(ha[1], hb[1]);
+        assert_ne!(ha[2], hb[2]);
+        // chaining: divergence propagates to all later blocks
+        assert_ne!(ha[3], hb[3]);
+    }
+
+    #[test]
+    fn match_prefix_stops_at_first_gap() {
+        let t = toks(64, 2);
+        let hashes = prefix_hashes(&t, 16);
+        let mut node = StorageNode::new(16);
+        node.register(dummy_chunk(hashes[0], 16));
+        node.register(dummy_chunk(hashes[1], 16));
+        // hashes[2] missing; hashes[3] present but unreachable
+        node.register(dummy_chunk(hashes[3], 16));
+        let m = node.match_prefix(&t);
+        assert_eq!(m, vec![hashes[0], hashes[1]]);
+    }
+
+    #[test]
+    fn partial_trailing_block_ignored() {
+        let t = toks(20, 3); // 16-token block + 4 stragglers
+        assert_eq!(prefix_hashes(&t, 16).len(), 1);
+    }
+
+    #[test]
+    fn wire_bytes_includes_scales() {
+        let c = dummy_chunk(1, 16);
+        assert_eq!(c.wire_bytes("240p"), Some(100 + 8 * 4));
+        assert_eq!(c.wire_bytes("999p"), None);
+    }
+
+    #[test]
+    fn stored_bytes_accumulates() {
+        let t = toks(32, 4);
+        let hashes = prefix_hashes(&t, 16);
+        let mut node = StorageNode::new(16);
+        node.register(dummy_chunk(hashes[0], 16));
+        node.register(dummy_chunk(hashes[1], 16));
+        assert_eq!(node.stored_bytes(), 2 * (100 + 32));
+        assert_eq!(node.len(), 2);
+    }
+}

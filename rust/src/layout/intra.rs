@@ -1,0 +1,228 @@
+//! Intra-frame layout search (§3.2.2).
+//!
+//! The search space of mapping the `[head_num, head_dim]` axes onto a 2D
+//! pixel tile is O(log N · N!) in general; the paper's three rules
+//! collapse it to O(log H · log D):
+//!   (i)  never exchange elements across attention heads,
+//!   (ii) keep element order within a head,
+//!   (iii) keep head order as-is — search only the geometric tiling.
+//!
+//! A tiling is `(hr, hc, dr, dc)` with `hr*hc = heads`, `dr*dc =
+//! head_dim`; head (i,j) occupies the (dr x dc) sub-tile at tile
+//! position (i*dr, j*dc), elements in row-major order. The tile is
+//! `(hr*dr) x (hc*dc)` pixels.
+
+use crate::codec::{encode_video, CodecConfig, Frame};
+use crate::quant::QuantKv;
+
+/// One geometric tiling of a (heads x head_dim) token tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntraLayout {
+    pub hr: usize,
+    pub hc: usize,
+    pub dr: usize,
+    pub dc: usize,
+}
+
+impl IntraLayout {
+    pub fn tile_h(&self) -> usize {
+        self.hr * self.dr
+    }
+
+    pub fn tile_w(&self) -> usize {
+        self.hc * self.dc
+    }
+
+    /// Pixel coordinates (row, col) of element (head, dim) in the tile.
+    /// Respects rules (i)-(iii): heads tile geometrically, inner-head
+    /// order is row-major and unpermuted.
+    #[inline]
+    pub fn pixel_of(&self, head: usize, dim: usize) -> (usize, usize) {
+        let hi = head / self.hc;
+        let hj = head % self.hc;
+        let di = dim / self.dc;
+        let dj = dim % self.dc;
+        (hi * self.dr + di, hj * self.dc + dj)
+    }
+
+    /// Inverse of [`pixel_of`].
+    #[inline]
+    pub fn element_of(&self, row: usize, col: usize) -> (usize, usize) {
+        let hi = row / self.dr;
+        let di = row % self.dr;
+        let hj = col / self.dc;
+        let dj = col % self.dc;
+        (hi * self.hc + hj, di * self.dc + dj)
+    }
+}
+
+fn divisor_pairs(n: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    for a in 1..=n {
+        if n % a == 0 {
+            out.push((a, n / a));
+        }
+    }
+    out
+}
+
+/// Enumerate the full rule-reduced search space: all (hr,hc) x (dr,dc)
+/// factorizations — O(d(H) * d(D)) ≈ O(log H * log D) candidates.
+pub fn candidates(heads: usize, head_dim: usize) -> Vec<IntraLayout> {
+    let mut out = Vec::new();
+    for (hr, hc) in divisor_pairs(heads) {
+        for (dr, dc) in divisor_pairs(head_dim) {
+            out.push(IntraLayout { hr, hc, dr, dc });
+        }
+    }
+    out
+}
+
+/// Candidates whose tile fits a WxH frame and is 8x8-block alignable.
+pub fn feasible(heads: usize, head_dim: usize, w: usize, h: usize) -> Vec<IntraLayout> {
+    candidates(heads, head_dim)
+        .into_iter()
+        .filter(|l| l.tile_w() <= w && l.tile_h() <= h)
+        .collect()
+}
+
+/// Result row of the offline layout search (Fig. 14).
+#[derive(Debug, Clone)]
+pub struct SearchRow {
+    pub layout: IntraLayout,
+    pub encoded_bytes: usize,
+    pub ratio: f64,
+}
+
+/// Offline search: encode a *sample* of the chunk under each candidate
+/// tiling and return rows sorted best-first. Input-agnostic per the
+/// paper (§3.2.2: "all these principles depend solely on the model
+/// architecture and video encoding"), so calling this once per model
+/// offline is sound.
+pub fn search(
+    q: &QuantKv,
+    sample_tokens: usize,
+    frame_w: usize,
+    frame_h: usize,
+) -> Vec<SearchRow> {
+    let tokens = q.tokens.min(sample_tokens);
+    let raw = tokens * 3 * q.per_plane_channels();
+    let mut rows: Vec<SearchRow> = feasible(q.heads, q.head_dim, frame_w, frame_h)
+        .into_iter()
+        .map(|layout| {
+            let frames = layout_sample_frames(q, tokens, frame_w, frame_h, &layout);
+            let (bytes, _) = encode_video(&frames, &CodecConfig::lossless(), &[]);
+            SearchRow {
+                layout,
+                encoded_bytes: bytes.len(),
+                ratio: raw as f64 / bytes.len() as f64,
+            }
+        })
+        .collect();
+    rows.sort_by(|a, b| a.encoded_bytes.cmp(&b.encoded_bytes));
+    rows
+}
+
+/// Build sample frames for the first `tokens` tokens of plane group 0
+/// under `layout` (used only by the search; the full mapping lives in
+/// `layout::inter`).
+fn layout_sample_frames(
+    q: &QuantKv,
+    tokens: usize,
+    frame_w: usize,
+    frame_h: usize,
+    layout: &IntraLayout,
+) -> Vec<Frame> {
+    let tw = layout.tile_w();
+    let th = layout.tile_h();
+    let slots = (frame_w / tw) * (frame_h / th);
+    assert!(slots > 0);
+    let n_frames = tokens.div_ceil(slots.min(tokens)); // group tokens over frames
+    let slots_used = tokens.div_ceil(n_frames);
+    let cols = frame_w / tw;
+    // round frame dims down to used area, 8-aligned, to avoid charging
+    // the search for empty frame area
+    let used_rows = slots_used.div_ceil(cols).min(frame_h / th);
+    let fw = frame_w.max(8);
+    let fh = (used_rows * th).div_ceil(8) * 8;
+    let mut frames = vec![Frame::new(fw, fh.max(8)); n_frames];
+    for t in 0..tokens {
+        let slot = t / n_frames;
+        let fi = t % n_frames;
+        let (srow, scol) = (slot / cols, slot % cols);
+        let (y0, x0) = (srow * th, scol * tw);
+        for plane in 0..3.min(q.planes) {
+            for head in 0..q.heads {
+                for dim in 0..q.head_dim {
+                    let (r, c) = layout.pixel_of(head, dim);
+                    let idx = ((t * q.planes + plane) * q.heads + head) * q.head_dim + dim;
+                    frames[fi].set(plane, x0 + c, y0 + r, q.data[idx]);
+                }
+            }
+        }
+    }
+    frames
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize;
+    use crate::tensor::KvCache;
+    use crate::util::Prng;
+
+    #[test]
+    fn pixel_element_inverse() {
+        for layout in candidates(8, 32) {
+            for head in 0..8 {
+                for dim in 0..32 {
+                    let (r, c) = layout.pixel_of(head, dim);
+                    assert!(r < layout.tile_h() && c < layout.tile_w());
+                    assert_eq!(layout.element_of(r, c), (head, dim));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn candidate_count_is_rule_reduced() {
+        // d(32) * d(128) = 6 * 8 = 48 — the "few dozen options" of §3.2.2
+        let c = candidates(32, 128);
+        assert_eq!(c.len(), 6 * 8);
+        // and for the paper's Fig.14 example the count is small
+        assert!(c.len() < 100);
+    }
+
+    #[test]
+    fn pixel_mapping_is_bijective() {
+        for layout in candidates(4, 16) {
+            let mut seen = vec![false; layout.tile_h() * layout.tile_w()];
+            for head in 0..4 {
+                for dim in 0..16 {
+                    let (r, c) = layout.pixel_of(head, dim);
+                    let i = r * layout.tile_w() + c;
+                    assert!(!seen[i], "collision at {layout:?}");
+                    seen[i] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        }
+    }
+
+    #[test]
+    fn search_ranks_layouts() {
+        let mut rng = Prng::new(9);
+        let kv = KvCache::synthetic(&mut rng, 64, 3, 8, 32, 0.92);
+        let q = quantize(&kv);
+        let rows = search(&q, 64, 256, 144);
+        assert!(!rows.is_empty());
+        // best-first ordering
+        for w in rows.windows(2) {
+            assert!(w[0].encoded_bytes <= w[1].encoded_bytes);
+        }
+        // the spread between best and worst tiling should be measurable
+        let best = rows.first().unwrap().encoded_bytes as f64;
+        let worst = rows.last().unwrap().encoded_bytes as f64;
+        assert!(worst / best > 1.01, "search found no spread: {best} vs {worst}");
+    }
+}

@@ -1,0 +1,12 @@
+//! Codec-friendly tensor layout (§3.2): inter-frame placement,
+//! intra-frame tiling search, and the baseline mappings.
+
+pub mod baseline;
+pub mod inter;
+pub mod intra;
+
+pub use inter::{
+    chunk_wire_bytes, decode_chunk, encode_chunk, resolution_by_name, EncodedGroup, InterLayout,
+    Resolution, RESOLUTIONS,
+};
+pub use intra::{candidates, feasible, search, IntraLayout, SearchRow};

@@ -1,0 +1,32 @@
+//! # KVFetcher
+//!
+//! Reproduction of *"Efficient Remote Prefix Fetching with GPU-native
+//! Media ASICs"* (KVFetcher): remote KV-cache prefix reuse for LLM
+//! serving where KV tensors travel as losslessly-coded video over
+//! bandwidth-limited networks and are decoded by (simulated) GPU media
+//! ASICs, off the critical compute path.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): coordinator — scheduler, fetcher, codec, caches,
+//!   network/ASIC/cluster simulation, metrics, PJRT runtime.
+//! * L2/L1 (python/, build-time only): tiny transformer + Pallas
+//!   kernels, AOT-lowered into `artifacts/*.hlo.txt`.
+
+pub mod asic;
+pub mod cache;
+pub mod cluster;
+pub mod baselines;
+pub mod codec;
+pub mod config;
+pub mod engine;
+pub mod fetcher;
+pub mod kvstore;
+pub mod metrics;
+pub mod net;
+pub mod runtime;
+pub mod scheduler;
+pub mod layout;
+pub mod quant;
+pub mod tensor;
+pub mod trace;
+pub mod util;

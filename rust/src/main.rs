@@ -1,0 +1,211 @@
+//! KVFetcher CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve     — run a serving-trace simulation and report TTFT/TPOT
+//!   fetch     — single-request TTFT breakdown across all systems
+//!   calibrate — measure real-codec compression ratios per system
+//!   layout    — run the intra-frame layout search and print the table
+//!   real      — smoke-test the PJRT runtime on the AOT artifacts
+//!
+//! `--config configs/foo.toml` applies to serve/fetch; individual flags
+//! override config values.
+
+use kvfetcher::baselines::{calibrate_ratios, SystemProfile};
+use kvfetcher::config::Experiment;
+use kvfetcher::engine::{single_request_ttft, EngineSim};
+use kvfetcher::layout;
+use kvfetcher::quant::quantize;
+use kvfetcher::tensor::KvCache;
+use kvfetcher::trace::generate;
+use kvfetcher::util::table::{fmt_secs, markdown};
+use kvfetcher::util::Prng;
+
+fn parse_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn load_experiment(args: &[String]) -> Experiment {
+    let mut exp = match parse_flag(args, "--config") {
+        Some(path) => Experiment::load(&path).unwrap_or_else(|e| {
+            eprintln!("config error: {e}");
+            std::process::exit(2);
+        }),
+        None => Experiment::default(),
+    };
+    if let Some(bw) = parse_flag(args, "--bandwidth") {
+        exp.bandwidth_gbps = bw.parse().expect("--bandwidth takes Gbps");
+    }
+    if let Some(d) = parse_flag(args, "--device") {
+        exp.device = kvfetcher::cluster::DeviceSpec::by_name(&d).expect("unknown device");
+    }
+    if let Some(m) = parse_flag(args, "--model") {
+        exp.model = kvfetcher::cluster::ModelSpec::by_name(&m).expect("unknown model");
+    }
+    if let Some(n) = parse_flag(args, "--requests") {
+        exp.trace.n_requests = n.parse().expect("--requests takes a count");
+    }
+    exp
+}
+
+fn cmd_serve(args: &[String]) {
+    let exp = load_experiment(args);
+    let perf = kvfetcher::cluster::PerfModel::new(exp.device.clone(), exp.model.clone());
+    let trace = generate(&exp.trace);
+    println!(
+        "# serve: {} x{} | {} | {} Gbps{} | {} requests",
+        exp.device.name,
+        perf.n_gpus,
+        exp.model.name,
+        exp.bandwidth_gbps,
+        if exp.jitter { " (jitter)" } else { "" },
+        trace.len()
+    );
+    let mut rows = Vec::new();
+    for profile in SystemProfile::all(&exp.device) {
+        let mut cfg = exp.engine.clone();
+        cfg.sched.fetching_aware = profile.fetching_aware;
+        cfg.layerwise_pipeline = profile.fetching_aware;
+        let mut eng = EngineSim::new(perf.clone(), profile.clone(), cfg, exp.bandwidth_trace());
+        let rec = eng.run(&trace);
+        let f = rec.ttft_summary(Some(true));
+        let n = rec.ttft_summary(Some(false));
+        let tp = rec.tpot_summary(None);
+        rows.push(vec![
+            profile.name.to_string(),
+            if f.n > 0 { fmt_secs(f.mean) } else { "-".into() },
+            if f.n > 0 { fmt_secs(f.p90) } else { "-".into() },
+            fmt_secs(n.mean),
+            fmt_secs(tp.mean),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(&["system", "fetch TTFT", "fetch p90", "non-reuse TTFT", "TPOT"], &rows)
+    );
+}
+
+fn cmd_fetch(args: &[String]) {
+    let exp = load_experiment(args);
+    let context: usize = parse_flag(args, "--context")
+        .map(|c| c.parse().expect("--context takes tokens"))
+        .unwrap_or(100_000);
+    let reusable = (context as f64 * 0.95) as usize;
+    let perf = kvfetcher::cluster::PerfModel::new(exp.device.clone(), exp.model.clone());
+    let bw = exp.bandwidth_trace();
+    println!(
+        "# fetch: {} tokens ({} reusable) | {} x{} | {} | {} Gbps",
+        context, reusable, exp.device.name, perf.n_gpus, exp.model.name, exp.bandwidth_gbps
+    );
+    let mut rows = Vec::new();
+    for profile in SystemProfile::all(&exp.device) {
+        let bd = single_request_ttft(
+            &perf,
+            &profile,
+            &exp.engine.fetch,
+            &bw,
+            context,
+            if profile.kind == kvfetcher::baselines::SystemKind::FullPrefill { 0 } else { reusable },
+        );
+        rows.push(vec![
+            profile.name.to_string(),
+            fmt_secs(bd.transmission),
+            fmt_secs(bd.decode),
+            fmt_secs(bd.restore),
+            fmt_secs(bd.prefill),
+            fmt_secs(bd.total()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown(&["system", "trans", "decode", "restore", "prefill", "TTFT"], &rows)
+    );
+}
+
+fn cmd_calibrate(args: &[String]) {
+    let tokens: usize =
+        parse_flag(args, "--tokens").map(|t| t.parse().unwrap()).unwrap_or(256);
+    println!("# calibrating real-codec ratios on synthetic token-correlated KV ({tokens} tokens)");
+    let m = calibrate_ratios(7, tokens, 8, 8, 32, 0.98);
+    let rows = vec![
+        vec!["quantization only".to_string(), format!("{:.2}x", m.quant_only)],
+        vec!["CacheGen (entropy)".to_string(), format!("{:.2}x", m.cachegen_entropy)],
+        vec!["llm.265 (layer-sliced video)".to_string(), format!("{:.2}x", m.llm265_video)],
+        vec!["KVFetcher inter-frame only".to_string(), format!("{:.2}x", m.kvfetcher_inter_only)],
+        vec!["KVFetcher full layout".to_string(), format!("{:.2}x", m.kvfetcher_full)],
+    ];
+    println!("{}", markdown(&["pipeline", "ratio vs fp16"], &rows));
+}
+
+fn cmd_layout(args: &[String]) {
+    let heads: usize = parse_flag(args, "--heads").map(|h| h.parse().unwrap()).unwrap_or(8);
+    let dim: usize = parse_flag(args, "--dim").map(|d| d.parse().unwrap()).unwrap_or(32);
+    let mut rng = Prng::new(11);
+    let kv = KvCache::synthetic(&mut rng, 192, 6, heads, dim, 0.93);
+    let q = quantize(&kv);
+    let rows_raw = layout::search(&q, 192, 256, 144);
+    println!(
+        "# intra-frame layout search (heads={heads}, dim={dim}): {} candidates",
+        rows_raw.len()
+    );
+    let rows: Vec<Vec<String>> = rows_raw
+        .iter()
+        .take(12)
+        .map(|r| {
+            vec![
+                format!("({},{})x({},{})", r.layout.hr, r.layout.hc, r.layout.dr, r.layout.dc),
+                format!("{}x{}", r.layout.tile_h(), r.layout.tile_w()),
+                r.encoded_bytes.to_string(),
+                format!("{:.2}x", r.ratio),
+            ]
+        })
+        .collect();
+    println!("{}", markdown(&["tiling", "tile", "bytes", "ratio"], &rows));
+}
+
+fn cmd_real(args: &[String]) {
+    let dir = parse_flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
+    let rt = match kvfetcher::runtime::Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("failed to load artifacts from {dir}: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("platform = {}", rt.platform());
+    println!("model    = {:?}", rt.cfg);
+    let mut rng = Prng::new(1);
+    let tokens: Vec<i32> =
+        (0..rt.cfg.full_len).map(|_| rng.below(rt.cfg.vocab as u64) as i32).collect();
+    let (logits, kv) = rt.prefill_full(&tokens).expect("prefill");
+    println!(
+        "prefill_full ok: logits {} elems, kv {} elems, next token {}",
+        logits.len(),
+        kv.len(),
+        kvfetcher::runtime::argmax(&logits[(rt.cfg.full_len - 1) * rt.cfg.vocab..])
+    );
+}
+
+const USAGE: &str = "kvfetcher <serve|fetch|calibrate|layout|real> [flags]
+  serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
+  fetch     --config <toml> [--context tokens] [--bandwidth G]
+  calibrate [--tokens n]
+  layout    [--heads h] [--dim d]
+  real      [--artifacts dir]";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("fetch") => cmd_fetch(&args[1..]),
+        Some("calibrate") => cmd_calibrate(&args[1..]),
+        Some("layout") => cmd_layout(&args[1..]),
+        Some("real") => cmd_real(&args[1..]),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

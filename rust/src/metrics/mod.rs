@@ -1,0 +1,157 @@
+//! Serving metrics: TTFT / TPOT recorders and experiment-report emitters.
+
+use crate::util::stats::{percentile, Summary};
+
+/// Per-request record produced by the engine / analytic drivers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRecord {
+    pub id: usize,
+    pub arrival: f64,
+    /// time the first output token was produced (absolute)
+    pub first_token_at: f64,
+    /// time the request finished (absolute)
+    pub finished_at: f64,
+    pub context_tokens: usize,
+    pub output_tokens: usize,
+    /// tokens served from a remotely fetched prefix
+    pub reused_tokens: usize,
+}
+
+impl RequestRecord {
+    pub fn ttft(&self) -> f64 {
+        self.first_token_at - self.arrival
+    }
+
+    /// Time-per-output-token over the decode phase.
+    pub fn tpot(&self) -> f64 {
+        if self.output_tokens <= 1 {
+            return 0.0;
+        }
+        (self.finished_at - self.first_token_at) / (self.output_tokens - 1) as f64
+    }
+
+    pub fn is_fetch(&self) -> bool {
+        self.reused_tokens > 0
+    }
+}
+
+/// Collects request records and summarizes per class.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    pub records: Vec<RequestRecord>,
+}
+
+impl Recorder {
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn ttfts(&self, fetch_only: Option<bool>) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| fetch_only.map_or(true, |f| r.is_fetch() == f))
+            .map(RequestRecord::ttft)
+            .collect()
+    }
+
+    pub fn tpots(&self, fetch_only: Option<bool>) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| fetch_only.map_or(true, |f| r.is_fetch() == f))
+            .filter(|r| r.output_tokens > 1)
+            .map(RequestRecord::tpot)
+            .collect()
+    }
+
+    pub fn ttft_summary(&self, fetch_only: Option<bool>) -> Summary {
+        Summary::of(&self.ttfts(fetch_only))
+    }
+
+    pub fn tpot_summary(&self, fetch_only: Option<bool>) -> Summary {
+        Summary::of(&self.tpots(fetch_only))
+    }
+
+    pub fn p90_ttft(&self) -> f64 {
+        percentile(&self.ttfts(None), 90.0)
+    }
+}
+
+/// TTFT breakdown of one fetch (Fig. 2 / Fig. 23 style).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TtftBreakdown {
+    /// queueing before the fetch/compute starts
+    pub wait: f64,
+    /// network transmission on the critical path (non-overlapped)
+    pub transmission: f64,
+    /// decompression on the critical path (non-overlapped)
+    pub decode: f64,
+    /// tensor restoration on the critical path
+    pub restore: f64,
+    /// prefill compute (suffix + cross attention, or full prefill)
+    pub prefill: f64,
+}
+
+impl TtftBreakdown {
+    pub fn total(&self) -> f64 {
+        self.wait + self.transmission + self.decode + self.restore + self.prefill
+    }
+}
+
+/// Peak-memory accounting for the decompression path (Fig. 6 / Fig. 24).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MemoryFootprint {
+    /// bitstream staging buffer (host)
+    pub bitstream_bytes: usize,
+    /// decoder working set (reference frames etc.)
+    pub decoder_bytes: usize,
+    /// restoration buffer (frames or chunks being dequantized)
+    pub restore_bytes: usize,
+}
+
+impl MemoryFootprint {
+    pub fn device_total(&self) -> usize {
+        self.decoder_bytes + self.restore_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: usize, arrival: f64, ft: f64, fin: f64, out: usize, reused: usize) -> RequestRecord {
+        RequestRecord {
+            id,
+            arrival,
+            first_token_at: ft,
+            finished_at: fin,
+            context_tokens: 100,
+            output_tokens: out,
+            reused_tokens: reused,
+        }
+    }
+
+    #[test]
+    fn ttft_tpot_math() {
+        let r = rec(0, 1.0, 3.0, 7.0, 5, 0);
+        assert!((r.ttft() - 2.0).abs() < 1e-12);
+        assert!((r.tpot() - 1.0).abs() < 1e-12);
+        assert_eq!(rec(0, 0.0, 1.0, 1.0, 1, 0).tpot(), 0.0);
+    }
+
+    #[test]
+    fn recorder_filters_by_class() {
+        let mut rc = Recorder::default();
+        rc.push(rec(0, 0.0, 1.0, 2.0, 4, 0));
+        rc.push(rec(1, 0.0, 5.0, 9.0, 4, 50));
+        assert_eq!(rc.ttfts(Some(false)), vec![1.0]);
+        assert_eq!(rc.ttfts(Some(true)), vec![5.0]);
+        assert_eq!(rc.ttfts(None).len(), 2);
+        assert!(rc.ttft_summary(Some(true)).mean > rc.ttft_summary(Some(false)).mean);
+    }
+
+    #[test]
+    fn breakdown_total() {
+        let b = TtftBreakdown { wait: 1.0, transmission: 2.0, decode: 0.5, restore: 0.1, prefill: 0.4 };
+        assert!((b.total() - 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,224 @@
+//! Network simulator: bandwidth traces, a FIFO link model, and the
+//! fetcher's bandwidth estimator.
+//!
+//! The paper's regime is "mid-range GPUs paired with tens of Gbps or
+//! less" (1–40 Gbps TCP; 100/200 Gbps RDMA as the upper contrast), with
+//! real-world jitter that the adaptive-resolution mechanism must absorb
+//! (Fig. 17).
+
+use crate::util::Prng;
+
+/// Piecewise-constant bandwidth over time, in Gbps.
+#[derive(Debug, Clone)]
+pub struct BandwidthTrace {
+    /// (start_time_s, gbps); sorted by time, first entry at t=0.
+    segments: Vec<(f64, f64)>,
+}
+
+impl BandwidthTrace {
+    pub fn constant(gbps: f64) -> Self {
+        assert!(gbps > 0.0);
+        BandwidthTrace { segments: vec![(0.0, gbps)] }
+    }
+
+    /// Explicit segments; must start at t=0 and be time-sorted.
+    pub fn piecewise(segments: Vec<(f64, f64)>) -> Self {
+        assert!(!segments.is_empty() && segments[0].0 == 0.0);
+        assert!(segments.windows(2).all(|w| w[0].0 < w[1].0));
+        assert!(segments.iter().all(|&(_, b)| b > 0.0));
+        BandwidthTrace { segments }
+    }
+
+    /// The paper's Fig. 17 example: 6 Gbps, dropping to 3, recovering
+    /// to 4 — a bursty step trace.
+    pub fn fig17() -> Self {
+        BandwidthTrace::piecewise(vec![(0.0, 6.0), (1.0, 3.0), (3.5, 4.0)])
+    }
+
+    /// Random-walk jitter trace: segment every `period` seconds, each a
+    /// multiplicative step within [1/step_max, step_max], clamped to
+    /// [lo, hi]. Deterministic from the seed.
+    pub fn jitter(seed: u64, base_gbps: f64, lo: f64, hi: f64, period: f64, dur: f64) -> Self {
+        assert!(lo > 0.0 && hi >= lo && period > 0.0);
+        let mut rng = Prng::new(seed);
+        let mut segments = Vec::new();
+        let mut bw = base_gbps.clamp(lo, hi);
+        let mut t = 0.0;
+        while t < dur {
+            segments.push((t, bw));
+            let step = 1.0 + rng.f64_range(-0.35, 0.35);
+            bw = (bw * step).clamp(lo, hi);
+            t += period;
+        }
+        BandwidthTrace { segments }
+    }
+
+    /// Bandwidth at time t (Gbps).
+    pub fn at(&self, t: f64) -> f64 {
+        match self.segments.iter().rev().find(|&&(s, _)| s <= t) {
+            Some(&(_, b)) => b,
+            None => self.segments[0].1,
+        }
+    }
+
+    /// Time to transfer `bytes` starting at `t0`, integrating the trace.
+    pub fn transfer_time(&self, bytes: usize, t0: f64) -> f64 {
+        let mut remaining = bytes as f64 * 8.0; // bits
+        let mut t = t0;
+        loop {
+            let bw_bps = self.at(t) * 1e9;
+            // next segment boundary after t
+            let next = self
+                .segments
+                .iter()
+                .map(|&(s, _)| s)
+                .find(|&s| s > t);
+            match next {
+                Some(s) => {
+                    let span = s - t;
+                    let can = bw_bps * span;
+                    if can >= remaining {
+                        return t + remaining / bw_bps - t0;
+                    }
+                    remaining -= can;
+                    t = s;
+                }
+                None => return t + remaining / bw_bps - t0,
+            }
+        }
+    }
+}
+
+/// A FIFO link: transfers are serialized (one flow at a time), matching
+/// the paper's FCFS bandwidth policy for single large fetches.
+#[derive(Debug, Clone)]
+pub struct NetLink {
+    pub trace: BandwidthTrace,
+    busy_until: f64,
+    pub bytes_sent: usize,
+}
+
+impl NetLink {
+    pub fn new(trace: BandwidthTrace) -> Self {
+        NetLink { trace, busy_until: 0.0, bytes_sent: 0 }
+    }
+
+    /// Schedule a transfer requested at `now`; returns (start, end).
+    pub fn transmit(&mut self, now: f64, bytes: usize) -> (f64, f64) {
+        let start = now.max(self.busy_until);
+        let end = start + self.trace.transfer_time(bytes, start);
+        self.busy_until = end;
+        self.bytes_sent += bytes;
+        (start, end)
+    }
+
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
+    }
+}
+
+/// Bandwidth estimator: the paper predicts the next chunk's bandwidth
+/// "from the last chunk's transmission delay"; we keep a light EWMA so
+/// a single outlier chunk doesn't whipsaw the resolution choice.
+#[derive(Debug, Clone)]
+pub struct BandwidthEstimator {
+    ewma_gbps: Option<f64>,
+    alpha: f64,
+}
+
+impl BandwidthEstimator {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        BandwidthEstimator { ewma_gbps: None, alpha }
+    }
+
+    /// Record an observed transfer (bytes over seconds).
+    pub fn observe(&mut self, bytes: usize, seconds: f64) {
+        if seconds <= 0.0 {
+            return;
+        }
+        let gbps = bytes as f64 * 8.0 / seconds / 1e9;
+        self.ewma_gbps = Some(match self.ewma_gbps {
+            None => gbps,
+            Some(prev) => self.alpha * gbps + (1.0 - self.alpha) * prev,
+        });
+    }
+
+    /// Current estimate; `default` until the first observation.
+    pub fn estimate(&self, default: f64) -> f64 {
+        self.ewma_gbps.unwrap_or(default)
+    }
+}
+
+/// Gbps -> seconds for a payload (helper used by analytic benches).
+pub fn transfer_secs(bytes: usize, gbps: f64) -> f64 {
+    bytes as f64 * 8.0 / (gbps * 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_trace_transfer() {
+        let tr = BandwidthTrace::constant(8.0); // 1 GB/s
+        let dt = tr.transfer_time(1_000_000_000, 0.0);
+        assert!((dt - 1.0).abs() < 1e-9);
+        assert_eq!(tr.at(123.0), 8.0);
+    }
+
+    #[test]
+    fn piecewise_integration_across_boundary() {
+        // 1 Gbps for 1s, then 9 Gbps: 1.25 Gbit payload
+        let tr = BandwidthTrace::piecewise(vec![(0.0, 1.0), (1.0, 9.0)]);
+        // first second moves 1 Gbit; remaining 0.25 Gbit at 9 Gbps
+        let dt = tr.transfer_time(1_250_000_000 / 8, 0.0);
+        assert!((dt - (1.0 + 0.25 / 9.0)).abs() < 1e-9, "dt={dt}");
+    }
+
+    #[test]
+    fn transfer_monotone_in_bytes() {
+        let tr = BandwidthTrace::jitter(3, 16.0, 2.0, 40.0, 0.5, 100.0);
+        let a = tr.transfer_time(10_000_000, 0.3);
+        let b = tr.transfer_time(20_000_000, 0.3);
+        assert!(b > a);
+    }
+
+    #[test]
+    fn link_serializes_fifo() {
+        let mut link = NetLink::new(BandwidthTrace::constant(8.0));
+        let (s1, e1) = link.transmit(0.0, 500_000_000);
+        let (s2, e2) = link.transmit(0.0, 500_000_000);
+        assert_eq!(s1, 0.0);
+        assert!((e1 - 0.5).abs() < 1e-9);
+        assert_eq!(s2, e1);
+        assert!((e2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimator_converges() {
+        let mut est = BandwidthEstimator::new(0.5);
+        assert_eq!(est.estimate(10.0), 10.0);
+        for _ in 0..20 {
+            est.observe(1_000_000_000, 2.0); // 4 Gbps
+        }
+        assert!((est.estimate(10.0) - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn fig17_trace_shape() {
+        let tr = BandwidthTrace::fig17();
+        assert_eq!(tr.at(0.5), 6.0);
+        assert_eq!(tr.at(2.0), 3.0);
+        assert_eq!(tr.at(10.0), 4.0);
+    }
+
+    #[test]
+    fn jitter_stays_in_bounds() {
+        let tr = BandwidthTrace::jitter(9, 10.0, 4.0, 20.0, 1.0, 60.0);
+        for i in 0..60 {
+            let b = tr.at(i as f64);
+            assert!((4.0..=20.0).contains(&b), "bw {b} at {i}");
+        }
+    }
+}

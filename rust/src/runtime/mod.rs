@@ -1,0 +1,272 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `weights.bin` + `manifest.json`) and execute the tiny model from the
+//! Rust request path. Python never runs here.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: HLO *text* ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `PjRtClient::compile` -> `execute`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model hyperparameters parsed from the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TinyModelCfg {
+    pub vocab: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub prefix_len: usize,
+    pub suffix_len: usize,
+    pub full_len: usize,
+    pub decode_cap: usize,
+}
+
+impl TinyModelCfg {
+    /// f32 element count of a KV tensor for `tokens` tokens
+    /// (`[L, 2, T, H, Dh]`).
+    pub fn kv_elems(&self, tokens: usize) -> usize {
+        self.layers * 2 * tokens * self.heads * self.head_dim
+    }
+}
+
+/// Loaded runtime: compiled executables + host-resident weights.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    weights: Vec<xla::Literal>,
+    pub cfg: TinyModelCfg,
+    pub dir: PathBuf,
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest missing {key}"))
+}
+
+impl Runtime {
+    /// Load all entry points from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json")).with_context(
+            || format!("reading {}/manifest.json (run `make artifacts`)", dir.display()),
+        )?;
+        let manifest = Json::parse(&manifest_text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let m = manifest.get("model").ok_or_else(|| anyhow!("manifest missing model"))?;
+        let cfg = TinyModelCfg {
+            vocab: get_usize(m, "vocab")?,
+            layers: get_usize(m, "layers")?,
+            heads: get_usize(m, "heads")?,
+            head_dim: get_usize(m, "head_dim")?,
+            prefix_len: get_usize(m, "prefix_len")?,
+            suffix_len: get_usize(m, "suffix_len")?,
+            full_len: get_usize(m, "full_len")?,
+            decode_cap: get_usize(m, "decode_cap")?,
+        };
+
+        let client = xla::PjRtClient::cpu()?;
+
+        // weights.bin -> Literals in canonical order
+        let blob = std::fs::read(dir.join("weights.bin"))?;
+        let mut weights = Vec::new();
+        for w in manifest
+            .get("weights")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing weights"))?
+        {
+            let off = get_usize(w, "byte_offset")?;
+            let len = get_usize(w, "byte_len")?;
+            let shape: Vec<i64> = w
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("weight missing shape"))?
+                .iter()
+                .map(|s| s.as_f64().unwrap_or(0.0) as i64)
+                .collect();
+            let floats: Vec<f32> = blob[off..off + len]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            weights.push(xla::Literal::vec1(&floats).reshape(&shape)?);
+        }
+
+        // compile every entry
+        let mut exes = HashMap::new();
+        for (name, entry) in manifest
+            .get("entries")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name} missing file"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                dir.join(file).to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            exes.insert(name.clone(), client.compile(&comp)?);
+        }
+        Ok(Runtime { client, exes, weights, cfg, dir })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run2(&self, entry: &str, extra: Vec<xla::Literal>) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self
+            .exes
+            .get(entry)
+            .ok_or_else(|| anyhow!("unknown entry point {entry}"))?;
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.extend(extra.iter());
+        let result = exe.execute(&args)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 2 {
+            bail!("{entry}: expected 2 outputs, got {}", outs.len());
+        }
+        Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+
+    /// Full prefill over `full_len` tokens: (per-token logits, kv).
+    pub fn prefill_full(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        if tokens.len() != self.cfg.full_len {
+            bail!("prefill_full wants {} tokens, got {}", self.cfg.full_len, tokens.len());
+        }
+        let t = xla::Literal::vec1(tokens).reshape(&[1, tokens.len() as i64])?;
+        self.run2("tiny_prefill_full", vec![t])
+    }
+
+    /// Prefill of a `prefix_len`-token prefix (to produce the KV that
+    /// gets compressed and stored remotely).
+    pub fn prefill_prefix(&self, tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        if tokens.len() != self.cfg.prefix_len {
+            bail!("prefill_prefix wants {} tokens, got {}", self.cfg.prefix_len, tokens.len());
+        }
+        let t = xla::Literal::vec1(tokens).reshape(&[1, tokens.len() as i64])?;
+        self.run2("tiny_prefill_prefix", vec![t])
+    }
+
+    /// Prefix-reuse prefill: fetched KV + suffix tokens.
+    pub fn suffix(&self, kv_prefix: &[f32], tokens: &[i32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let c = &self.cfg;
+        if kv_prefix.len() != c.kv_elems(c.prefix_len) {
+            bail!("kv_prefix has {} elems, want {}", kv_prefix.len(), c.kv_elems(c.prefix_len));
+        }
+        if tokens.len() != c.suffix_len {
+            bail!("suffix wants {} tokens, got {}", c.suffix_len, tokens.len());
+        }
+        let kv = xla::Literal::vec1(kv_prefix).reshape(&[
+            c.layers as i64,
+            2,
+            c.prefix_len as i64,
+            c.heads as i64,
+            c.head_dim as i64,
+        ])?;
+        let t = xla::Literal::vec1(tokens).reshape(&[1, tokens.len() as i64])?;
+        self.run2("tiny_suffix", vec![kv, t])
+    }
+
+    /// One decode step over the fixed-capacity KV window.
+    pub fn decode(&self, kv: &[f32], cur_len: usize, token: i32) -> Result<(Vec<f32>, Vec<f32>)> {
+        let c = &self.cfg;
+        if kv.len() != c.kv_elems(c.decode_cap) {
+            bail!("kv has {} elems, want {}", kv.len(), c.kv_elems(c.decode_cap));
+        }
+        let kv_lit = xla::Literal::vec1(kv).reshape(&[
+            c.layers as i64,
+            2,
+            c.decode_cap as i64,
+            c.heads as i64,
+            c.head_dim as i64,
+        ])?;
+        let len_lit = xla::Literal::scalar(cur_len as i32);
+        let tok_lit = xla::Literal::vec1(&[token]);
+        self.run2("tiny_decode", vec![kv_lit, len_lit, tok_lit])
+    }
+}
+
+/// argmax over a logits row.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut val = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > val {
+            val = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Convert the runtime's flat `[L, 2, T, H, Dh]` KV into a
+/// [`crate::tensor::KvCache`] (`[token, plane, head, dim]` with planes
+/// ordered k0, v0, k1, v1, ...).
+pub fn kv_to_cache(cfg: &TinyModelCfg, tokens: usize, kv: &[f32]) -> crate::tensor::KvCache {
+    let mut out = crate::tensor::KvCache::zeros(tokens, 2 * cfg.layers, cfg.heads, cfg.head_dim);
+    let (l, h, d) = (cfg.layers, cfg.heads, cfg.head_dim);
+    for li in 0..l {
+        for kvi in 0..2 {
+            for t in 0..tokens {
+                for hi in 0..h {
+                    for di in 0..d {
+                        let src = ((((li * 2) + kvi) * tokens + t) * h + hi) * d + di;
+                        out.set(t, li * 2 + kvi, hi, di, kv[src]);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`kv_to_cache`].
+pub fn cache_to_kv(cfg: &TinyModelCfg, cache: &crate::tensor::KvCache) -> Vec<f32> {
+    let tokens = cache.tokens;
+    let (l, h, d) = (cfg.layers, cfg.heads, cfg.head_dim);
+    let mut kv = vec![0f32; cfg.kv_elems(tokens)];
+    for li in 0..l {
+        for kvi in 0..2 {
+            for t in 0..tokens {
+                for hi in 0..h {
+                    for di in 0..d {
+                        let dst = ((((li * 2) + kvi) * tokens + t) * h + hi) * d + di;
+                        kv[dst] = cache.get(t, li * 2 + kvi, hi, di);
+                    }
+                }
+            }
+        }
+    }
+    kv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn kv_roundtrip_conversion() {
+        let cfg = TinyModelCfg {
+            vocab: 16, layers: 2, heads: 2, head_dim: 4,
+            prefix_len: 8, suffix_len: 4, full_len: 12, decode_cap: 16,
+        };
+        let tokens = 8;
+        let kv: Vec<f32> = (0..cfg.kv_elems(tokens)).map(|i| i as f32).collect();
+        let cache = kv_to_cache(&cfg, tokens, &kv);
+        assert_eq!(cache.planes, 4);
+        let back = cache_to_kv(&cfg, &cache);
+        assert_eq!(back, kv);
+    }
+}

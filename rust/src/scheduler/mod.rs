@@ -1,0 +1,215 @@
+//! Fetching-aware scheduler (§3.3.1).
+//!
+//! Three queues: `waiting` (FCFS admission), `waiting_for_kv` (requests
+//! whose remote KV is being fetched in the background), and `running`
+//! (continuous-batching active set). A fetching-aware scheduler moves
+//! fetch requests aside so they never head-of-line-block non-reuse
+//! requests; a fetching-agnostic scheduler (LMCache/Mooncake baseline
+//! behaviour in Fig. 9) keeps them in `waiting` and stalls FCFS
+//! admission behind them.
+
+use std::collections::VecDeque;
+
+/// Lifecycle of a request inside the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReqState {
+    /// not yet admitted
+    Waiting,
+    /// fetch in flight, parked off the critical path
+    WaitingForKv,
+    /// in the continuous batch (prefilling or decoding)
+    Running,
+    Finished,
+}
+
+/// Scheduler bookkeeping for one request.
+#[derive(Debug, Clone)]
+pub struct SchedEntry {
+    pub id: usize,
+    pub state: ReqState,
+    /// absolute time the fetch completes (fetch requests only)
+    pub fetch_ready_at: Option<f64>,
+    /// earliest admission under the layer-wise pipeline (<= fetch_ready_at)
+    pub admit_at: Option<f64>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SchedulerConfig {
+    /// dedicated waiting_for_KV queue (KVFetcher) vs FCFS blocking
+    pub fetching_aware: bool,
+    /// max concurrent running requests
+    pub max_batch: usize,
+    /// chunked-prefill token budget per iteration
+    pub prefill_budget: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { fetching_aware: true, max_batch: 16, prefill_budget: 8192 }
+    }
+}
+
+/// The queue structure. Indices refer to the engine's request table.
+#[derive(Debug)]
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    pub waiting: VecDeque<usize>,
+    pub waiting_for_kv: Vec<usize>,
+    pub running: Vec<usize>,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Scheduler { cfg, waiting: VecDeque::new(), waiting_for_kv: Vec::new(), running: Vec::new() }
+    }
+
+    /// A request arrives. Fetch requests go to waiting_for_kv under the
+    /// fetching-aware policy, else into the FCFS waiting queue.
+    pub fn on_arrival(&mut self, idx: usize, is_fetch: bool) {
+        if is_fetch && self.cfg.fetching_aware {
+            self.waiting_for_kv.push(idx);
+        } else {
+            self.waiting.push_back(idx);
+        }
+    }
+
+    /// Admission step at time `now`. `entries` supplies per-request
+    /// state; `can_admit(idx)` checks memory. Returns newly admitted ids.
+    ///
+    /// Fetching-aware: waiting_for_kv entries whose `admit_at` has
+    /// passed join `running` (ahead of cold FCFS admissions — their
+    /// memory is preallocated); non-reuse requests admit FCFS.
+    ///
+    /// Fetching-agnostic: strict FCFS over `waiting`; a fetch request at
+    /// the head whose KV isn't ready **blocks** everything behind it
+    /// (the Fig. 9 pathology).
+    pub fn admit<F>(
+        &mut self,
+        now: f64,
+        entries: &[SchedEntry],
+        mut can_admit: F,
+    ) -> Vec<usize>
+    where
+        F: FnMut(usize) -> bool,
+    {
+        let mut admitted = Vec::new();
+        if self.cfg.fetching_aware {
+            // ready fetch requests first
+            let mut i = 0;
+            while i < self.waiting_for_kv.len() {
+                let idx = self.waiting_for_kv[i];
+                let ready = entries[idx].admit_at.map_or(false, |t| t <= now);
+                if ready && self.running.len() < self.cfg.max_batch && can_admit(idx) {
+                    self.waiting_for_kv.swap_remove(i);
+                    self.running.push(idx);
+                    admitted.push(idx);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // FCFS over waiting
+        while self.running.len() < self.cfg.max_batch {
+            let Some(&idx) = self.waiting.front() else { break };
+            let entry = &entries[idx];
+            let fetch_pending = entry.fetch_ready_at.map_or(false, |t| {
+                entry.admit_at.map_or(t > now, |a| a > now)
+            });
+            if fetch_pending {
+                // fetching-agnostic: HOL block — nothing behind may pass
+                break;
+            }
+            if !can_admit(idx) {
+                break;
+            }
+            self.waiting.pop_front();
+            self.running.push(idx);
+            admitted.push(idx);
+        }
+        admitted
+    }
+
+    pub fn finish(&mut self, idx: usize) {
+        self.running.retain(|&r| r != idx);
+    }
+
+    pub fn has_pending(&self) -> bool {
+        !self.waiting.is_empty() || !self.waiting_for_kv.is_empty() || !self.running.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: usize, fetch_ready: Option<f64>) -> SchedEntry {
+        SchedEntry { id, state: ReqState::Waiting, fetch_ready_at: fetch_ready, admit_at: fetch_ready }
+    }
+
+    #[test]
+    fn fetching_aware_isolates_fetch_requests() {
+        let mut s = Scheduler::new(SchedulerConfig { fetching_aware: true, ..Default::default() });
+        let entries = vec![entry(0, Some(100.0)), entry(1, None), entry(2, None)];
+        s.on_arrival(0, true); // fetch, not ready until t=100
+        s.on_arrival(1, false);
+        s.on_arrival(2, false);
+        let admitted = s.admit(0.0, &entries, |_| true);
+        // non-reuse requests are NOT blocked by the fetch
+        assert_eq!(admitted, vec![1, 2]);
+        assert_eq!(s.waiting_for_kv, vec![0]);
+        // at t=100 the fetch request joins
+        let admitted = s.admit(100.0, &entries, |_| true);
+        assert_eq!(admitted, vec![0]);
+    }
+
+    #[test]
+    fn fetching_agnostic_hol_blocks() {
+        let mut s = Scheduler::new(SchedulerConfig { fetching_aware: false, ..Default::default() });
+        let entries = vec![entry(0, Some(100.0)), entry(1, None)];
+        s.on_arrival(0, true);
+        s.on_arrival(1, false);
+        let admitted = s.admit(0.0, &entries, |_| true);
+        assert!(admitted.is_empty(), "HOL blocking: nothing admits while fetch pending");
+        let admitted = s.admit(100.0, &entries, |_| true);
+        assert_eq!(admitted, vec![0, 1]);
+    }
+
+    #[test]
+    fn batch_limit_respected() {
+        let cfg = SchedulerConfig { fetching_aware: true, max_batch: 2, prefill_budget: 1024 };
+        let mut s = Scheduler::new(cfg);
+        let entries: Vec<_> = (0..4).map(|i| entry(i, None)).collect();
+        for i in 0..4 {
+            s.on_arrival(i, false);
+        }
+        let admitted = s.admit(0.0, &entries, |_| true);
+        assert_eq!(admitted.len(), 2);
+        s.finish(admitted[0]);
+        let admitted2 = s.admit(1.0, &entries, |_| true);
+        assert_eq!(admitted2.len(), 1);
+    }
+
+    #[test]
+    fn memory_gate_blocks_admission() {
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let entries = vec![entry(0, None), entry(1, None)];
+        s.on_arrival(0, false);
+        s.on_arrival(1, false);
+        let admitted = s.admit(0.0, &entries, |idx| idx != 0);
+        // FCFS: request 0 can't admit (memory), request 1 must wait
+        assert!(admitted.is_empty());
+        assert_eq!(s.waiting.len(), 2);
+    }
+
+    #[test]
+    fn layerwise_admit_at_beats_fetch_ready() {
+        // admit_at earlier than fetch_ready_at: request joins running early
+        let mut s = Scheduler::new(SchedulerConfig::default());
+        let mut e = entry(0, Some(100.0));
+        e.admit_at = Some(50.0);
+        let entries = vec![e];
+        s.on_arrival(0, true);
+        assert!(s.admit(49.0, &entries, |_| true).is_empty());
+        assert_eq!(s.admit(50.0, &entries, |_| true), vec![0]);
+    }
+}

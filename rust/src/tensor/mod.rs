@@ -1,0 +1,278 @@
+//! KV-cache tensor types and image-similarity metrics (SSIM / PSNR).
+//!
+//! The central object is [`KvCache`]: an f32 tensor shaped
+//! `[token, plane, head, head_dim]` where `plane` enumerates K and V of
+//! every transformer layer (`planes = 2 * layers`, ordered
+//! k0, v0, k1, v1, …). This is the tensor the paper slices, lays out as
+//! video frames, and streams.
+
+pub mod similarity;
+
+pub use similarity::{psnr, ssim};
+
+use crate::util::Prng;
+
+/// An f32 KV cache for a contiguous token range of one request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvCache {
+    pub tokens: usize,
+    /// K/V planes: `2 * model_layers`, ordered k0, v0, k1, v1, ...
+    pub planes: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// Row-major `[token][plane][head][dim]`.
+    pub data: Vec<f32>,
+}
+
+impl KvCache {
+    pub fn zeros(tokens: usize, planes: usize, heads: usize, head_dim: usize) -> Self {
+        KvCache {
+            tokens,
+            planes,
+            heads,
+            head_dim,
+            data: vec![0.0; tokens * planes * heads * head_dim],
+        }
+    }
+
+    /// Number of f32 elements per token (all planes).
+    pub fn token_stride(&self) -> usize {
+        self.planes * self.heads * self.head_dim
+    }
+
+    /// Elements per (token, plane) slice.
+    pub fn channels(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    #[inline]
+    pub fn index(&self, t: usize, p: usize, h: usize, d: usize) -> usize {
+        ((t * self.planes + p) * self.heads + h) * self.head_dim + d
+    }
+
+    #[inline]
+    pub fn get(&self, t: usize, p: usize, h: usize, d: usize) -> f32 {
+        self.data[self.index(t, p, h, d)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, t: usize, p: usize, h: usize, d: usize, v: f32) {
+        let i = self.index(t, p, h, d);
+        self.data[i] = v;
+    }
+
+    /// Raw bytes of the f32 payload (what "raw KV reuse" transmits).
+    pub fn byte_len_f32(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    /// fp16-equivalent wire size (vLLM stores KV in fp16; raw-reuse
+    /// baselines transmit this).
+    pub fn byte_len_f16(&self) -> usize {
+        self.data.len() * 2
+    }
+
+    /// Synthetic KV cache with LLM-like structure, for benches that
+    /// don't run the real model:
+    ///   * strong AR(1) correlation along tokens (the paper's obs. (i):
+    ///     causal attention + positional encoding make neighbouring
+    ///     tokens' KV similar),
+    ///   * per-channel mean/scale diversity across heads,
+    ///   * a few high-magnitude outlier channels (attention sinks).
+    ///
+    /// `token_corr` in [0,1) is the AR(1) coefficient.
+    pub fn synthetic(
+        rng: &mut Prng,
+        tokens: usize,
+        planes: usize,
+        heads: usize,
+        head_dim: usize,
+        token_corr: f64,
+    ) -> Self {
+        let mut kv = KvCache::zeros(tokens, planes, heads, head_dim);
+        let chans = planes * heads * head_dim;
+        // Per-channel statistics.
+        let mut mean = vec![0.0f64; chans];
+        let mut scale = vec![0.0f64; chans];
+        for c in 0..chans {
+            let head = (c / head_dim) % heads;
+            // heads differ in magnitude; planes differ mildly
+            let base = 0.3 + 0.15 * head as f64;
+            mean[c] = rng.normal() * 0.2;
+            scale[c] = base * (0.5 + rng.f64());
+            // ~1% outlier channels with 8x magnitude (attention sinks /
+            // salient features per LLM.int8 observations)
+            if rng.f64() < 0.01 {
+                scale[c] *= 8.0;
+            }
+        }
+        let innov = (1.0 - token_corr * token_corr).sqrt();
+        let mut prev = vec![0.0f64; chans];
+        for t in 0..tokens {
+            let mut dim_state = 0.0f64;
+            for c in 0..chans {
+                // Laplacian innovations: real KV activations are heavy-
+                // tailed (most values tiny, few salient), which is what
+                // makes entropy coding effective after quantization.
+                let u = rng.f64() - 0.5;
+                let lap = -u.signum() * (1.0 - 2.0 * u.abs()).max(1e-12).ln() / std::f64::consts::SQRT_2;
+                // innovations are smooth *along the head_dim axis* too
+                // (features within a head co-vary), which is what the
+                // intra-frame layout search exploits; reset per head.
+                dim_state = if c % head_dim == 0 { lap } else { 0.75 * dim_state + 0.66 * lap };
+                let x = if t == 0 {
+                    rng.normal() * 0.3 + dim_state
+                } else {
+                    token_corr * prev[c] + innov * dim_state
+                };
+                prev[c] = x;
+                // transient outlier tokens (attention sinks / salient
+                // tokens): they set the channel's quantization range,
+                // squeezing typical values into few u8 levels — the
+                // property that gives real KV its high compressibility.
+                let spike = if rng.f64() < 0.02 { 16.0 } else { 1.0 };
+                kv.data[t * chans + c] = (mean[c] + scale[c] * x * spike) as f32;
+            }
+        }
+        kv
+    }
+
+    /// Extract the sequence of 2D u8 images obtained by slicing along
+    /// `dim` (0 = token, 1 = plane("layer"), 2 = head), after global
+    /// min-max 8-bit quantization. Used by the Fig. 11 / Fig. 26
+    /// similarity analysis.
+    pub fn slice_images(&self, dim: usize) -> Vec<(usize, usize, Vec<u8>)> {
+        let (lo, hi) = self.min_max();
+        let to_u8 = |x: f32| -> u8 {
+            if hi <= lo {
+                return 0;
+            }
+            (((x - lo) / (hi - lo)) * 255.0).round().clamp(0.0, 255.0) as u8
+        };
+        let mut out = Vec::new();
+        match dim {
+            0 => {
+                // each token -> image [planes, heads*dim]
+                let (w, h) = (self.channels(), self.planes);
+                for t in 0..self.tokens {
+                    let mut img = Vec::with_capacity(w * h);
+                    for p in 0..self.planes {
+                        for hh in 0..self.heads {
+                            for d in 0..self.head_dim {
+                                img.push(to_u8(self.get(t, p, hh, d)));
+                            }
+                        }
+                    }
+                    out.push((w, h, img));
+                }
+            }
+            1 => {
+                // each plane ("layer") -> image [tokens, heads*dim]
+                let (w, h) = (self.channels(), self.tokens);
+                for p in 0..self.planes {
+                    let mut img = Vec::with_capacity(w * h);
+                    for t in 0..self.tokens {
+                        for hh in 0..self.heads {
+                            for d in 0..self.head_dim {
+                                img.push(to_u8(self.get(t, p, hh, d)));
+                            }
+                        }
+                    }
+                    out.push((w, h, img));
+                }
+            }
+            2 => {
+                // each head -> image [tokens, planes*dim]
+                let (w, h) = (self.planes * self.head_dim, self.tokens);
+                for hh in 0..self.heads {
+                    let mut img = Vec::with_capacity(w * h);
+                    for t in 0..self.tokens {
+                        for p in 0..self.planes {
+                            for d in 0..self.head_dim {
+                                img.push(to_u8(self.get(t, p, hh, d)));
+                            }
+                        }
+                    }
+                    out.push((w, h, img));
+                }
+            }
+            _ => panic!("dim must be 0 (token), 1 (plane), or 2 (head)"),
+        }
+        out
+    }
+
+    pub fn min_max(&self) -> (f32, f32) {
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &x in &self.data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        (lo, hi)
+    }
+
+    /// Max absolute element-wise difference vs another cache.
+    pub fn max_abs_diff(&self, other: &KvCache) -> f32 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_roundtrip() {
+        let mut kv = KvCache::zeros(3, 4, 2, 5);
+        kv.set(2, 3, 1, 4, 7.5);
+        assert_eq!(kv.get(2, 3, 1, 4), 7.5);
+        assert_eq!(kv.data.len(), 3 * 4 * 2 * 5);
+    }
+
+    #[test]
+    fn synthetic_token_similarity_exceeds_layer_similarity() {
+        // The property the whole paper rests on: adjacent token slices
+        // are more similar than adjacent layer slices.
+        let mut rng = Prng::new(5);
+        let kv = KvCache::synthetic(&mut rng, 64, 8, 4, 16, 0.9);
+        let tok = kv.slice_images(0);
+        let lay = kv.slice_images(1);
+        let sim = |imgs: &[(usize, usize, Vec<u8>)]| {
+            let mut acc = 0.0;
+            let mut n = 0;
+            for w in imgs.windows(2) {
+                acc += ssim(&w[0].2, &w[1].2, w[0].0, w[0].1);
+                n += 1;
+            }
+            acc / n as f64
+        };
+        let st = sim(&tok);
+        let sl = sim(&lay);
+        assert!(st > sl, "token SSIM {st} should exceed layer SSIM {sl}");
+    }
+
+    #[test]
+    fn slice_images_shapes() {
+        let mut rng = Prng::new(1);
+        let kv = KvCache::synthetic(&mut rng, 10, 6, 4, 8, 0.5);
+        let tok = kv.slice_images(0);
+        assert_eq!(tok.len(), 10);
+        assert_eq!(tok[0].0, 4 * 8);
+        assert_eq!(tok[0].1, 6);
+        let heads = kv.slice_images(2);
+        assert_eq!(heads.len(), 4);
+        assert_eq!(heads[0].0, 6 * 8);
+    }
+
+    #[test]
+    fn max_abs_diff_zero_for_identical() {
+        let mut rng = Prng::new(2);
+        let kv = KvCache::synthetic(&mut rng, 4, 2, 2, 4, 0.5);
+        assert_eq!(kv.max_abs_diff(&kv.clone()), 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! SSIM and PSNR between 8-bit grayscale images — the metrics behind the
+//! paper's Fig. 11 / Fig. 26 slicing analysis.
+
+/// Peak Signal-to-Noise Ratio in dB between two u8 images.
+/// Returns +inf for identical images.
+pub fn psnr(a: &[u8], b: &[u8]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let mse: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (255.0f64 * 255.0 / mse).log10()
+    }
+}
+
+/// Mean SSIM over 8x8 windows (stride 8), standard constants
+/// (K1=0.01, K2=0.03, L=255). Images are `w` x `h` row-major u8.
+pub fn ssim(a: &[u8], b: &[u8], w: usize, h: usize) -> f64 {
+    assert_eq!(a.len(), w * h);
+    assert_eq!(b.len(), w * h);
+    const C1: f64 = (0.01 * 255.0) * (0.01 * 255.0);
+    const C2: f64 = (0.03 * 255.0) * (0.03 * 255.0);
+    const WIN: usize = 8;
+    let mut total = 0.0;
+    let mut count = 0usize;
+    let mut y = 0;
+    while y < h {
+        let bh = WIN.min(h - y);
+        let mut x = 0;
+        while x < w {
+            let bw = WIN.min(w - x);
+            let n = (bw * bh) as f64;
+            let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0.0, 0.0, 0.0, 0.0, 0.0);
+            for dy in 0..bh {
+                let row = (y + dy) * w + x;
+                for dx in 0..bw {
+                    let va = a[row + dx] as f64;
+                    let vb = b[row + dx] as f64;
+                    sa += va;
+                    sb += vb;
+                    saa += va * va;
+                    sbb += vb * vb;
+                    sab += va * vb;
+                }
+            }
+            let mu_a = sa / n;
+            let mu_b = sb / n;
+            let var_a = (saa / n - mu_a * mu_a).max(0.0);
+            let var_b = (sbb / n - mu_b * mu_b).max(0.0);
+            let cov = sab / n - mu_a * mu_b;
+            let s = ((2.0 * mu_a * mu_b + C1) * (2.0 * cov + C2))
+                / ((mu_a * mu_a + mu_b * mu_b + C1) * (var_a + var_b + C2));
+            total += s;
+            count += 1;
+            x += WIN;
+        }
+        y += WIN;
+    }
+    total / count as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Prng;
+
+    #[test]
+    fn identical_images_are_perfect() {
+        let img: Vec<u8> = (0..64 * 64).map(|i| (i % 251) as u8).collect();
+        assert_eq!(psnr(&img, &img), f64::INFINITY);
+        let s = ssim(&img, &img, 64, 64);
+        assert!((s - 1.0).abs() < 1e-9, "ssim={s}");
+    }
+
+    #[test]
+    fn noise_reduces_both_metrics() {
+        let mut rng = Prng::new(1);
+        let img: Vec<u8> = (0..64 * 64).map(|i| ((i / 64) * 4 % 256) as u8).collect();
+        let light: Vec<u8> = img
+            .iter()
+            .map(|&x| x.wrapping_add((rng.below(5) as u8).wrapping_sub(2)))
+            .collect();
+        let heavy: Vec<u8> = img.iter().map(|_| rng.next_u64() as u8).collect();
+        let s_light = ssim(&img, &light, 64, 64);
+        let s_heavy = ssim(&img, &heavy, 64, 64);
+        assert!(s_light > s_heavy, "{s_light} vs {s_heavy}");
+        assert!(psnr(&img, &light) > psnr(&img, &heavy));
+    }
+
+    #[test]
+    fn ssim_symmetric() {
+        let mut rng = Prng::new(2);
+        let a: Vec<u8> = (0..32 * 16).map(|_| rng.next_u64() as u8).collect();
+        let b: Vec<u8> = (0..32 * 16).map(|_| rng.next_u64() as u8).collect();
+        let s1 = ssim(&a, &b, 32, 16);
+        let s2 = ssim(&b, &a, 32, 16);
+        assert!((s1 - s2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn handles_non_multiple_of_window() {
+        let a = vec![100u8; 19 * 13];
+        let b = vec![110u8; 19 * 13];
+        let s = ssim(&a, &b, 19, 13);
+        assert!(s > 0.0 && s < 1.0);
+        assert!(psnr(&a, &b) > 20.0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Request-trace generation modelled on the real-world KV-cache trace
+//! characteristics the paper evaluates with ([64]: Poisson-ish arrivals,
+//! heavy-tailed context lengths, ~50% prefix reusability per Mooncake).
+
+use crate::util::Prng;
+
+/// One serving request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    pub arrival: f64,
+    /// total context (prompt) tokens
+    pub context_tokens: usize,
+    /// tokens of the context whose KV exists on remote storage
+    pub reusable_tokens: usize,
+    /// output tokens to decode
+    pub output_tokens: usize,
+}
+
+impl Request {
+    /// Suffix that must be prefilled even with full reuse.
+    pub fn suffix_tokens(&self) -> usize {
+        self.context_tokens - self.reusable_tokens
+    }
+
+    pub fn is_fetch(&self) -> bool {
+        self.reusable_tokens > 0
+    }
+}
+
+/// Trace-generation parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    pub n_requests: usize,
+    /// mean arrival rate (req/s), Poisson process
+    pub rate: f64,
+    /// context length range (log-uniform)
+    pub ctx_min: usize,
+    pub ctx_max: usize,
+    /// fraction of requests with a reusable remote prefix
+    pub reuse_frac: f64,
+    /// reusable share of context for reuse requests (e.g. 0.9)
+    pub reuse_share: f64,
+    /// requests below this context length are never fetched remotely
+    /// (the paper's 40K-token reuse threshold in §5.2)
+    pub reuse_threshold: usize,
+    pub out_min: usize,
+    pub out_max: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 0,
+            n_requests: 64,
+            rate: 0.2,
+            ctx_min: 2_000,
+            ctx_max: 200_000,
+            reuse_frac: 0.5,
+            reuse_share: 0.95,
+            reuse_threshold: 40_000,
+            out_min: 16,
+            out_max: 256,
+        }
+    }
+}
+
+/// Generate a deterministic trace.
+pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
+    let mut rng = Prng::new(cfg.seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(cfg.n_requests);
+    let ln_min = (cfg.ctx_min as f64).ln();
+    let ln_max = (cfg.ctx_max as f64).ln();
+    for id in 0..cfg.n_requests {
+        t += rng.exp(cfg.rate);
+        let ctx = (ln_min + rng.f64() * (ln_max - ln_min)).exp() as usize;
+        let ctx = ctx.clamp(cfg.ctx_min, cfg.ctx_max);
+        let wants_reuse = rng.f64() < cfg.reuse_frac;
+        let reusable = if wants_reuse && ctx >= cfg.reuse_threshold {
+            ((ctx as f64 * cfg.reuse_share) as usize).min(ctx)
+        } else {
+            0
+        };
+        let output = cfg.out_min + rng.below((cfg.out_max - cfg.out_min).max(1) as u64) as usize;
+        out.push(Request { id, arrival: t, context_tokens: ctx, reusable_tokens: reusable, output_tokens: output });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_deterministic_and_sorted() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        assert_eq!(a.len(), cfg.n_requests);
+    }
+
+    #[test]
+    fn reuse_threshold_respected() {
+        let cfg = TraceConfig { n_requests: 500, ..Default::default() };
+        for r in generate(&cfg) {
+            if r.is_fetch() {
+                assert!(r.context_tokens >= cfg.reuse_threshold);
+                assert!(r.reusable_tokens <= r.context_tokens);
+                assert!(r.suffix_tokens() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn arrival_rate_approximate() {
+        let cfg = TraceConfig { n_requests: 2000, rate: 2.0, ..Default::default() };
+        let tr = generate(&cfg);
+        let span = tr.last().unwrap().arrival;
+        let rate = tr.len() as f64 / span;
+        assert!((rate - 2.0).abs() < 0.2, "rate={rate}");
+    }
+
+    #[test]
+    fn context_lengths_within_bounds() {
+        let cfg = TraceConfig { n_requests: 300, ..Default::default() };
+        for r in generate(&cfg) {
+            assert!(r.context_tokens >= cfg.ctx_min && r.context_tokens <= cfg.ctx_max);
+            assert!(r.output_tokens >= cfg.out_min && r.output_tokens < cfg.out_max);
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared utilities: PRNG, statistics, JSON, TOML-subset config, table
+//! printing, and a mini property-test harness. These stand in for the
+//! `rand`/`serde`/`proptest` crates that are unavailable offline.
+
+pub mod config;
+pub mod json;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod table;
+
+pub use prng::Prng;

@@ -1,0 +1,122 @@
+//! Mini property-testing harness (no proptest crate offline).
+//!
+//! `check(seed, cases, f)` runs `f` against `cases` generated inputs.
+//! On failure it retries with a simple input-size shrink loop when the
+//! generator supports it, and always reports the failing case seed so a
+//! failure reproduces with `case_seed`.
+
+use super::prng::Prng;
+
+/// Run a property `cases` times. `f` receives a fresh PRNG per case and
+/// returns `Err(msg)` on violation. Panics with the case seed on failure.
+pub fn check<F>(seed: u64, cases: usize, name: &str, f: F)
+where
+    F: Fn(&mut Prng) -> Result<(), String>,
+{
+    let mut meta = Prng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Prng::new(case_seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Property over a generated value: generator + predicate, with size
+/// shrinking. `gen` must produce a value of the requested `size`; on
+/// failure the harness retries at smaller sizes with the same seed to
+/// report a minimal-ish example.
+pub fn check_sized<T, G, F>(seed: u64, cases: usize, max_size: usize, name: &str, gen: G, f: F)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Prng, usize) -> T,
+    F: Fn(&T) -> Result<(), String>,
+{
+    let mut meta = Prng::new(seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let size = (Prng::new(case_seed).below(max_size as u64 + 1)) as usize;
+        let value = gen(&mut Prng::new(case_seed ^ 0xABCD), size);
+        if let Err(msg) = f(&value) {
+            // shrink: halve the size until the property passes again
+            let mut failing_size = size;
+            let mut failing_msg = msg;
+            let mut s = size / 2;
+            while s > 0 {
+                let v = gen(&mut Prng::new(case_seed ^ 0xABCD), s);
+                match f(&v) {
+                    Err(m) => {
+                        failing_size = s;
+                        failing_msg = m;
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, case_seed={case_seed:#x}, \
+                 size {failing_size}): {failing_msg}"
+            );
+        }
+    }
+}
+
+/// Generate a byte vector with the given distribution shape — useful for
+/// codec properties (uniform bytes vs peaked residual-like bytes).
+pub fn gen_bytes(rng: &mut Prng, len: usize, peaked: bool) -> Vec<u8> {
+    (0..len)
+        .map(|_| {
+            if peaked {
+                // Laplacian-ish around 0 mod 256, like prediction residuals
+                let x = (rng.normal() * 6.0) as i32;
+                (x & 0xff) as u8
+            } else {
+                rng.next_u64() as u8
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 50, "trivial", |rng| {
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn reports_failures() {
+        check(2, 10, "always-fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sized_generates_within_bound() {
+        check_sized(
+            3,
+            30,
+            64,
+            "size-bound",
+            |rng, size| gen_bytes(rng, size, false),
+            |v| {
+                if v.len() <= 64 {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", v.len()))
+                }
+            },
+        );
+    }
+}

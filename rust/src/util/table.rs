@@ -1,0 +1,87 @@
+//! Markdown table printer for bench harnesses — every figure/table bench
+//! prints the paper-style rows through this.
+
+/// Render a markdown table. `align_right` applies to all value columns.
+pub fn markdown(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncol) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    out.push('|');
+    for (h, w) in headers.iter().zip(&widths) {
+        out.push_str(&format!(" {:<w$} |", h, w = w));
+    }
+    out.push('\n');
+    out.push('|');
+    for w in &widths {
+        out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+    }
+    out.push('\n');
+    for row in rows {
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            let cell = row.get(i).map(String::as_str).unwrap_or("");
+            out.push_str(&format!(" {:>w$} |", cell, w = w));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Format seconds with sensible units.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{:.0}s", s)
+    } else if s >= 1.0 {
+        format!("{:.2}s", s)
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+/// Format bytes with binary units.
+pub fn fmt_bytes(b: usize) -> String {
+    let bf = b as f64;
+    if bf >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2}GiB", bf / (1024.0 * 1024.0 * 1024.0))
+    } else if bf >= 1024.0 * 1024.0 {
+        format!("{:.1}MiB", bf / (1024.0 * 1024.0))
+    } else if bf >= 1024.0 {
+        format!("{:.1}KiB", bf / 1024.0)
+    } else {
+        format!("{}B", b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_table() {
+        let t = markdown(
+            &["system", "ttft"],
+            &[
+                vec!["ours".into(), "1.2s".into()],
+                vec!["cachegen".into(), "3.4s".into()],
+            ],
+        );
+        assert!(t.contains("| system"));
+        assert!(t.lines().count() == 4);
+        assert!(t.contains("cachegen"));
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_secs(2.5), "2.50s");
+        assert_eq!(fmt_secs(0.0042), "4.2ms");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0MiB");
+    }
+}

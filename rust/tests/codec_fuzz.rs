@@ -1,0 +1,72 @@
+//! Decoder robustness: the video decoder and entropy decoder parse
+//! bytes that arrive over the network — they must *never* panic,
+//! whatever the input. Random inputs, truncations, and single-byte
+//! corruptions of valid streams must all return Ok or Err.
+
+use kvfetcher::codec::{decode_video, encode_video, rans, CodecConfig, Frame};
+use kvfetcher::util::proptest::gen_bytes;
+use kvfetcher::util::Prng;
+
+fn valid_stream(seed: u64) -> Vec<u8> {
+    let mut rng = Prng::new(seed);
+    let mut frames = Vec::new();
+    for _ in 0..3 {
+        let mut f = Frame::new(16, 16);
+        for p in 0..3 {
+            for v in f.planes[p].iter_mut() {
+                *v = rng.next_u64() as u8;
+            }
+        }
+        frames.push(f);
+    }
+    let cfg = if seed % 2 == 0 { CodecConfig::lossless() } else { CodecConfig::lossy(12) };
+    encode_video(&frames, &cfg, b"meta").0
+}
+
+#[test]
+fn decode_never_panics_on_random_bytes() {
+    let mut rng = Prng::new(1000);
+    for case in 0..500 {
+        let len = rng.below(4096) as usize;
+        let data = gen_bytes(&mut rng, len, false);
+        let _ = std::hint::black_box(decode_video(&data));
+        let _ = std::hint::black_box(rans::decode(&data));
+        let _ = case;
+    }
+}
+
+#[test]
+fn decode_never_panics_on_corrupted_streams() {
+    let mut rng = Prng::new(2000);
+    for seed in 0..20u64 {
+        let valid = valid_stream(seed);
+        // sanity: the unmodified stream decodes
+        decode_video(&valid).expect("valid stream must decode");
+        // single-byte corruptions
+        for _ in 0..60 {
+            let mut bad = valid.clone();
+            let i = rng.below(bad.len() as u64) as usize;
+            bad[i] ^= 1 << rng.below(8);
+            let _ = std::hint::black_box(decode_video(&bad));
+        }
+        // truncations
+        for _ in 0..20 {
+            let cut = rng.below(valid.len() as u64) as usize;
+            let _ = std::hint::black_box(decode_video(&valid[..cut]));
+        }
+        // extensions with junk
+        let mut ext = valid.clone();
+        ext.extend(gen_bytes(&mut rng, 64, false));
+        let _ = std::hint::black_box(decode_video(&ext));
+    }
+}
+
+#[test]
+fn layout_meta_never_panics() {
+    let mut rng = Prng::new(3000);
+    for _ in 0..300 {
+        let len = rng.below(128) as usize;
+        let data = gen_bytes(&mut rng, len, false);
+        let _ = std::hint::black_box(kvfetcher::layout::InterLayout::from_meta(&data));
+    }
+}

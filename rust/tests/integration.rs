@@ -1,0 +1,238 @@
+//! Cross-module integration tests: full data path (quantize -> layout ->
+//! codec -> store -> fetch -> restore), engine x scheduler x fetcher
+//! composition, and system-level invariants.
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::{SystemKind, SystemProfile};
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::codec::CodecConfig;
+use kvfetcher::engine::{single_request_ttft, EngineConfig, EngineSim};
+use kvfetcher::fetcher::{plan_fetch, FetchConfig};
+use kvfetcher::kvstore::{prefix_hashes, StorageNode, StoredChunk, StoredVariant};
+use kvfetcher::layout::{self, Resolution};
+use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+use kvfetcher::quant::{dequantize, quantize};
+use kvfetcher::scheduler::SchedulerConfig;
+use kvfetcher::tensor::KvCache;
+use kvfetcher::trace::{generate, TraceConfig};
+use kvfetcher::util::{proptest, Prng};
+
+/// The full offline-compress -> store -> fetch -> restore path, via the
+/// storage node, is bit-exact at every stored resolution.
+#[test]
+fn store_fetch_restore_roundtrip() {
+    let mut rng = Prng::new(77);
+    let kv = KvCache::synthetic(&mut rng, 128, 8, 8, 32, 0.95);
+    let q = quantize(&kv);
+    let resolutions = [
+        Resolution { name: "240p", w: 64, h: 32 },
+        Resolution { name: "1080p", w: 128, h: 64 },
+    ];
+    // pick the tiling on the smaller resolution so it fits both
+    let intra = kvfetcher::engine::real::best_intra(&q, resolutions[0]);
+
+    // offline: encode and register
+    let mut node = StorageNode::new(128);
+    let tokens: Vec<u32> = (0..128).map(|i| i * 31 + 7).collect();
+    let hash = prefix_hashes(&tokens, 128)[0];
+    let mut variants = Vec::new();
+    for res in resolutions {
+        let groups = layout::encode_chunk(&q, res, intra, &CodecConfig::lossless()).unwrap();
+        variants.push(StoredVariant {
+            resolution: res.name,
+            n_frames: groups[0].layout.n_frames,
+            total_bytes: groups.iter().map(|g| g.bytes.len()).sum(),
+            group_bytes: groups.into_iter().map(|g| g.bytes).collect(),
+        });
+    }
+    node.register(StoredChunk { hash, tokens: 128, scales: q.scales.clone(), variants });
+
+    // online: prefix match then decode each variant
+    assert_eq!(node.match_prefix(&tokens), vec![hash]);
+    let chunk = node.get(hash).unwrap();
+    for res in resolutions {
+        let v = chunk.variant(res.name).unwrap();
+        // rebuild EncodedGroups from stored bytes (meta is in-band)
+        let mut restored = vec![0u8; q.data.len()];
+        for gb in &v.group_bytes {
+            let hdr = kvfetcher::codec::parse_header(gb).unwrap();
+            let lay = layout::InterLayout::from_meta(&hdr.meta).unwrap();
+            let mut fi = 0;
+            kvfetcher::codec::decode_video_with(gb, |frame| {
+                lay.restore_frame(frame, fi, &mut restored);
+                fi += 1;
+            })
+            .unwrap();
+        }
+        assert_eq!(restored, q.data, "bit-exact restore at {}", res.name);
+    }
+    // and dequantization error stays within quantization bounds
+    let back = dequantize(&q);
+    let bound = q.scales.iter().cloned().fold(0.0f32, f32::max) * 0.5 + 1e-6;
+    assert!(back.max_abs_diff(&kv) <= bound);
+}
+
+/// Every system completes every request; fetch requests reuse, and the
+/// TTFT ordering of the paper holds on the default workload.
+#[test]
+fn engine_system_ordering() {
+    let dev = DeviceSpec::h20();
+    let perf = PerfModel::new(dev.clone(), ModelSpec::yi_34b());
+    let trace = generate(&TraceConfig {
+        seed: 5,
+        n_requests: 20,
+        rate: 0.1,
+        ctx_min: 50_000,
+        ctx_max: 150_000,
+        reuse_frac: 1.0,
+        reuse_threshold: 40_000,
+        ..Default::default()
+    });
+    let mut means = std::collections::BTreeMap::new();
+    for profile in SystemProfile::all(&dev) {
+        let cfg = EngineConfig {
+            sched: SchedulerConfig { fetching_aware: profile.fetching_aware, ..Default::default() },
+            layerwise_pipeline: profile.fetching_aware,
+            ..Default::default()
+        };
+        let mut eng = EngineSim::new(perf.clone(), profile.clone(), cfg, BandwidthTrace::constant(8.0));
+        let rec = eng.run(&trace);
+        assert_eq!(rec.records.len(), trace.len(), "{} must finish all", profile.name);
+        let class = profile.kind != SystemKind::FullPrefill;
+        means.insert(profile.name, rec.ttft_summary(Some(class)).mean);
+    }
+    assert!(means["KVFetcher"] < means["CacheGen"], "{means:?}");
+    assert!(means["CacheGen"] < means["RawReuse"], "{means:?}");
+    assert!(means["RawReuse"] < means["FullPrefill"], "{means:?}");
+}
+
+/// Property: across random bandwidths/contexts, KVFetcher's single-
+/// request TTFT never loses to raw reuse and never loses badly to
+/// CacheGen (within 5% numerical slack).
+#[test]
+fn prop_ttft_dominance() {
+    let dev = DeviceSpec::h20();
+    let perf = PerfModel::new(dev.clone(), ModelSpec::lwm_7b());
+    let cfg = FetchConfig::default();
+    proptest::check(91, 40, "ttft-dominance", |rng| {
+        let bw = rng.f64_range(1.0, 40.0);
+        let ctx = 20_000 + rng.below(180_000) as usize;
+        let reusable = (ctx as f64 * 0.95) as usize;
+        let trace = BandwidthTrace::constant(bw);
+        let ours = single_request_ttft(&perf, &SystemProfile::kvfetcher(), &cfg, &trace, ctx, reusable).total();
+        let raw = single_request_ttft(&perf, &SystemProfile::raw_reuse(), &cfg, &trace, ctx, reusable).total();
+        let cg = single_request_ttft(&perf, &SystemProfile::cachegen(&dev), &cfg, &trace, ctx, reusable).total();
+        if ours > raw * 1.05 {
+            return Err(format!("ours {ours} vs raw {raw} at bw={bw} ctx={ctx}"));
+        }
+        if ours > cg * 1.05 {
+            return Err(format!("ours {ours} vs cachegen {cg} at bw={bw} ctx={ctx}"));
+        }
+        Ok(())
+    });
+}
+
+/// Property: fetch plans are well-formed under any bandwidth trace —
+/// chunk stages ordered, monotone, and done_at >= every stage.
+#[test]
+fn prop_fetch_plan_wellformed() {
+    proptest::check(93, 40, "fetch-plan-wellformed", |rng| {
+        let profile = match rng.below(3) {
+            0 => SystemProfile::kvfetcher(),
+            1 => SystemProfile::cachegen(&DeviceSpec::a100()),
+            _ => SystemProfile::raw_reuse(),
+        };
+        let trace = BandwidthTrace::jitter(rng.next_u64(), 8.0, 1.0, 40.0, 0.5, 1000.0);
+        let mut link = NetLink::new(trace);
+        let mut pool = DecodePool::new(1 + rng.below(14) as usize, h20_table());
+        let mut est = BandwidthEstimator::new(0.5);
+        let tokens = 1_000 + rng.below(150_000) as usize;
+        let raw = tokens * 245_760;
+        let cfg = FetchConfig { adaptive: rng.f64() < 0.5, ..Default::default() };
+        let now = rng.f64_range(0.0, 100.0);
+        let plan = plan_fetch(now, tokens, raw, &profile, &cfg, &mut link, &mut pool, &mut est);
+        if plan.chunks.is_empty() {
+            return Err("empty plan".into());
+        }
+        let mut prev_ts = now;
+        for c in &plan.chunks {
+            if c.trans_start + 1e-9 < prev_ts {
+                return Err("transmissions must serialize".into());
+            }
+            if c.trans_end < c.trans_start || c.dec_start + 1e-9 < c.trans_end || c.dec_end < c.dec_start {
+                return Err(format!("stage ordering violated: {c:?}"));
+            }
+            prev_ts = c.trans_start;
+        }
+        if plan.done_at + 1e-9 < plan.chunks.last().unwrap().dec_end {
+            return Err("done_at before last decode".into());
+        }
+        Ok(())
+    });
+}
+
+/// The engine respects memory: peak allocated KV never exceeds capacity.
+#[test]
+fn engine_memory_bounded() {
+    let perf = PerfModel::new(DeviceSpec::l20(), ModelSpec::lwm_7b());
+    let cfg = EngineConfig {
+        kv_capacity_tokens: Some(300_000), // tight: forces admission waits
+        ..Default::default()
+    };
+    let trace = generate(&TraceConfig {
+        seed: 8,
+        n_requests: 24,
+        rate: 1.0, // burst
+        ctx_min: 40_000,
+        ctx_max: 120_000,
+        reuse_frac: 0.5,
+        ..Default::default()
+    });
+    let mut eng = EngineSim::new(perf, SystemProfile::kvfetcher(), cfg, BandwidthTrace::constant(16.0));
+    let rec = eng.run(&trace);
+    assert_eq!(rec.records.len(), trace.len(), "tight memory must not deadlock");
+}
+
+/// Fetching-aware scheduling is a strict improvement for non-reuse
+/// requests across random traces (property over seeds).
+#[test]
+fn prop_fetching_aware_no_worse() {
+    let perf = PerfModel::new(DeviceSpec::h20(), ModelSpec::yi_34b());
+    proptest::check(95, 6, "fetching-aware-no-worse", |rng| {
+        let trace = generate(&TraceConfig {
+            seed: rng.next_u64(),
+            n_requests: 16,
+            rate: 0.1,
+            ctx_min: 4_000,
+            ctx_max: 100_000,
+            reuse_frac: 1.0,
+            reuse_threshold: 40_000,
+            ..Default::default()
+        });
+        if !trace.iter().any(|r| r.is_fetch()) {
+            return Ok(()); // nothing to compare
+        }
+        let run = |aware: bool| {
+            let mut p = SystemProfile::kvfetcher();
+            p.fetching_aware = aware;
+            let cfg = EngineConfig {
+                sched: SchedulerConfig { fetching_aware: aware, ..Default::default() },
+                layerwise_pipeline: aware,
+                ..Default::default()
+            };
+            EngineSim::new(perf.clone(), p, cfg, BandwidthTrace::constant(2.0)).run(&trace)
+        };
+        let aware = run(true).ttft_summary(Some(false));
+        let blocked = run(false).ttft_summary(Some(false));
+        if aware.n == 0 {
+            return Ok(());
+        }
+        if aware.mean > blocked.mean * 1.10 {
+            return Err(format!(
+                "aware {:.2}s should not exceed blocking {:.2}s",
+                aware.mean, blocked.mean
+            ));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,220 @@
+//! Additional cross-cutting invariants and edge cases, complementing the
+//! per-module unit tests.
+
+use kvfetcher::asic::{encode_pool, h20_table, l20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::engine::{single_request_ttft, EngineConfig, EngineSim};
+use kvfetcher::fetcher::{restore_memory, select_resolution, FetchConfig, RES_SIZE_FACTOR};
+use kvfetcher::layout::{resolution_by_name, RESOLUTIONS};
+use kvfetcher::metrics::Recorder;
+use kvfetcher::net::{BandwidthEstimator, BandwidthTrace};
+use kvfetcher::quant::quantize;
+use kvfetcher::tensor::KvCache;
+use kvfetcher::trace::{generate, TraceConfig};
+use kvfetcher::util::{proptest, Prng};
+
+// ------------------------------------------------------------------ layout
+#[test]
+fn resolution_ladder_is_8_aligned_and_named() {
+    for r in RESOLUTIONS {
+        assert_eq!(r.w % 8, 0, "{}", r.name);
+        assert_eq!(r.h % 8, 0, "{}", r.name);
+        assert_eq!(resolution_by_name(r.name).unwrap(), r);
+    }
+    assert!(resolution_by_name("4k").is_none());
+    // ladder is strictly increasing in area
+    for w in RESOLUTIONS.windows(2) {
+        assert!(w[1].w * w[1].h > w[0].w * w[0].h);
+    }
+}
+
+// --------------------------------------------------------------------- net
+#[test]
+fn prop_transfer_time_consistent_with_trace_integral() {
+    // transferring A then B back-to-back equals transferring A+B
+    proptest::check(71, 30, "transfer-additivity", |rng| {
+        let tr = BandwidthTrace::jitter(rng.next_u64(), 8.0, 1.0, 30.0, 0.7, 2000.0);
+        let t0 = rng.f64_range(0.0, 50.0);
+        let a = 1 + rng.below(200_000_000) as usize;
+        let b = 1 + rng.below(200_000_000) as usize;
+        let ta = tr.transfer_time(a, t0);
+        let tb = tr.transfer_time(b, t0 + ta);
+        let tab = tr.transfer_time(a + b, t0);
+        if (ta + tb - tab).abs() > 1e-6 * tab.max(1.0) {
+            return Err(format!("additivity violated: {ta}+{tb} != {tab}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn estimator_ignores_degenerate_observations() {
+    let mut est = BandwidthEstimator::new(0.3);
+    est.observe(1_000_000, 0.0); // zero-duration: must be ignored
+    assert_eq!(est.estimate(5.0), 5.0);
+    est.observe(125_000_000, 1.0); // 1 Gbps
+    assert!((est.estimate(5.0) - 1.0).abs() < 1e-9);
+}
+
+// -------------------------------------------------------------------- asic
+#[test]
+fn encode_pool_is_slower_than_decode_pool() {
+    let mut dec = DecodePool::new(2, h20_table());
+    let mut enc = encode_pool(2, h20_table());
+    let d = dec.decode(0.0, 3, 1.0);
+    let e = enc.decode(0.0, 3, 1.0);
+    assert!((e.end - e.start) > (d.end - d.start) * 1.5, "NVENC ~2x NVDEC latency");
+}
+
+#[test]
+fn pool_units_chosen_round_robin_by_availability() {
+    let mut pool = DecodePool::new(3, l20_table());
+    let j1 = pool.decode(0.0, 3, 1.0);
+    let j2 = pool.decode(0.0, 3, 1.0);
+    let j3 = pool.decode(0.0, 3, 1.0);
+    let units: std::collections::BTreeSet<_> = [j1.unit, j2.unit, j3.unit].into();
+    assert_eq!(units.len(), 3, "three concurrent jobs must use three units");
+}
+
+// ------------------------------------------------------------------ fetcher
+#[test]
+fn res_size_factors_match_paper_table_ratios() {
+    assert!((RES_SIZE_FACTOR[0] - 180.0 / 256.0).abs() < 1e-12);
+    assert_eq!(RES_SIZE_FACTOR[3], 1.0);
+    for w in RES_SIZE_FACTOR.windows(2) {
+        assert!(w[1] > w[0], "sizes grow with resolution");
+    }
+}
+
+#[test]
+fn resolution_choice_monotone_in_bandwidth() {
+    // more bandwidth must never select a *smaller* resolution
+    let pool = DecodePool::new(7, h20_table());
+    let mut last = 0usize;
+    for bw in [1.0, 2.0, 4.0, 6.0, 10.0, 20.0, 50.0] {
+        let r = select_resolution(bw, 256_000_000, &pool, 0.0, 1.0);
+        assert!(r >= last, "bw {bw}: res {r} < previous {last}");
+        last = r;
+    }
+    assert_eq!(last, 3, "high bandwidth ends at 1080p");
+}
+
+#[test]
+fn smartnic_restore_is_off_device() {
+    let cfg = FetchConfig::default();
+    assert_eq!(restore_memory(&SystemProfile::shadowserve(), &cfg, 1 << 30), 0);
+    assert_eq!(restore_memory(&SystemProfile::raw_reuse(), &cfg, 1 << 30), 0);
+}
+
+// ------------------------------------------------------------------ engine
+#[test]
+fn full_prefill_engine_never_fetches() {
+    let perf = PerfModel::new(DeviceSpec::h20(), ModelSpec::yi_34b());
+    let trace = generate(&TraceConfig {
+        seed: 4,
+        n_requests: 8,
+        reuse_frac: 1.0,
+        ctx_min: 50_000,
+        ctx_max: 100_000,
+        ..Default::default()
+    });
+    let mut eng = EngineSim::new(
+        perf,
+        SystemProfile::full_prefill(),
+        EngineConfig { layerwise_pipeline: false, ..Default::default() },
+        BandwidthTrace::constant(16.0),
+    );
+    let rec = eng.run(&trace);
+    assert!(rec.records.iter().all(|r| r.reused_tokens == 0));
+    assert_eq!(eng.link.bytes_sent, 0, "full prefill must move zero bytes");
+    assert_eq!(eng.pool.jobs_done, 0);
+}
+
+#[test]
+fn records_are_causally_ordered() {
+    let perf = PerfModel::new(DeviceSpec::a100(), ModelSpec::lwm_7b());
+    let trace = generate(&TraceConfig { seed: 10, n_requests: 16, ..Default::default() });
+    let mut eng = EngineSim::new(
+        perf,
+        SystemProfile::kvfetcher(),
+        EngineConfig::default(),
+        BandwidthTrace::constant(16.0),
+    );
+    for r in &eng.run(&trace).records {
+        assert!(r.first_token_at > r.arrival, "req {}", r.id);
+        assert!(r.finished_at >= r.first_token_at, "req {}", r.id);
+    }
+}
+
+#[test]
+fn zero_reusable_context_takes_full_prefill_path() {
+    // a request below the reuse threshold must cost the same under
+    // KVFetcher as under FullPrefill when served alone
+    let perf = PerfModel::new(DeviceSpec::h20(), ModelSpec::yi_34b());
+    let bw = BandwidthTrace::constant(16.0);
+    let a = single_request_ttft(
+        &perf,
+        &SystemProfile::full_prefill(),
+        &FetchConfig::default(),
+        &bw,
+        30_000,
+        0,
+    );
+    assert!(a.transmission == 0.0 && a.decode == 0.0);
+    assert!(a.prefill > 0.0);
+}
+
+// ----------------------------------------------------------------- metrics
+#[test]
+fn recorder_empty_summaries_are_safe() {
+    let rec = Recorder::default();
+    let s = rec.ttft_summary(None);
+    assert_eq!(s.n, 0);
+    assert_eq!(s.mean, 0.0);
+    assert_eq!(rec.p90_ttft(), 0.0);
+}
+
+// ------------------------------------------------------------------- quant
+#[test]
+fn quantize_handles_extreme_values() {
+    let mut kv = KvCache::zeros(4, 2, 2, 2);
+    kv.data[0] = 1e30;
+    kv.data[1] = -1e30;
+    kv.data[2] = f32::MIN_POSITIVE;
+    let q = quantize(&kv);
+    assert!(q.data.iter().all(|&b| b <= 255));
+    assert!(q.scales.iter().all(|s| s.is_finite() && *s > 0.0));
+}
+
+// ------------------------------------------------------------------- trace
+#[test]
+fn prop_trace_generation_total_function() {
+    proptest::check(73, 25, "trace-total", |rng: &mut Prng| {
+        let cfg = TraceConfig {
+            seed: rng.next_u64(),
+            n_requests: 1 + rng.below(50) as usize,
+            rate: rng.f64_range(0.01, 5.0),
+            ctx_min: 100 + rng.below(1000) as usize,
+            ctx_max: 2_000 + rng.below(100_000) as usize,
+            reuse_frac: rng.f64(),
+            reuse_share: rng.f64_range(0.5, 1.0),
+            reuse_threshold: rng.below(50_000) as usize,
+            out_min: 1,
+            out_max: 2 + rng.below(100) as usize,
+        };
+        let tr = generate(&cfg);
+        if tr.len() != cfg.n_requests {
+            return Err("wrong count".into());
+        }
+        for r in &tr {
+            if r.reusable_tokens > r.context_tokens {
+                return Err(format!("reusable > ctx for req {}", r.id));
+            }
+            if r.is_fetch() && r.suffix_tokens() == 0 {
+                return Err("fetch request with empty suffix".into());
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,136 @@
+//! Runtime integration tests: real PJRT execution of the AOT artifacts.
+//! Skipped (cleanly) when `make artifacts` hasn't been run.
+
+use kvfetcher::engine::real::{accuracy_eval, code_prefix, RealEngine, WireCoding};
+use kvfetcher::runtime::{argmax, cache_to_kv, kv_to_cache, Runtime};
+use kvfetcher::util::Prng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT test (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn rand_tokens(rng: &mut Prng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab as u64) as i32).collect()
+}
+
+/// The KV-reuse contract holds through PJRT: suffix-with-prefix-KV
+/// logits equal the suffix rows of the full prefill.
+#[test]
+fn pjrt_kv_reuse_contract() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.cfg;
+    let mut rng = Prng::new(1);
+    let tokens = rand_tokens(&mut rng, cfg.full_len, cfg.vocab);
+    let (logits_full, _) = rt.prefill_full(&tokens).unwrap();
+    let (_, kv_p) = rt.prefill_prefix(&tokens[..cfg.prefix_len]).unwrap();
+    let (logits_sfx, _) = rt.suffix(&kv_p, &tokens[cfg.prefix_len..]).unwrap();
+    let v = cfg.vocab;
+    for i in 0..cfg.suffix_len {
+        let full_row = &logits_full[(cfg.prefix_len + i) * v..(cfg.prefix_len + i + 1) * v];
+        let sfx_row = &logits_sfx[i * v..(i + 1) * v];
+        let max_diff = full_row
+            .iter()
+            .zip(sfx_row)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 2e-3, "row {i}: logits diverge by {max_diff}");
+        assert_eq!(argmax(full_row), argmax(sfx_row), "row {i}");
+    }
+}
+
+/// Decode steps continue consistently from a prefilled KV window.
+#[test]
+fn pjrt_decode_consistency() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.cfg;
+    let mut rng = Prng::new(2);
+    let tokens = rand_tokens(&mut rng, cfg.full_len, cfg.vocab);
+    let (logits_full, kv_full) = rt.prefill_full(&tokens).unwrap();
+
+    // place prefill KV into the decode window
+    let per_tok = cfg.heads * cfg.head_dim;
+    let mut kv = vec![0f32; cfg.kv_elems(cfg.decode_cap)];
+    for l in 0..cfg.layers {
+        for k in 0..2 {
+            for t in 0..cfg.full_len {
+                let src = (((l * 2 + k) * cfg.full_len) + t) * per_tok;
+                let dst = (((l * 2 + k) * cfg.decode_cap) + t) * per_tok;
+                kv[dst..dst + per_tok].copy_from_slice(&kv_full[src..src + per_tok]);
+            }
+        }
+    }
+    // decoding the *last prompt token again* at position full_len-1 is
+    // not meaningful; instead feed the argmax continuation and check the
+    // decode path runs and the KV row gets written.
+    let next = argmax(&logits_full[(cfg.full_len - 1) * cfg.vocab..]) as i32;
+    let (logits1, kv1) = rt.decode(&kv, cfg.full_len, next).unwrap();
+    assert_eq!(logits1.len(), cfg.vocab);
+    // the new token's K/V row must be non-zero
+    let row_start = (0 * cfg.decode_cap + cfg.full_len) * per_tok;
+    let wrote = kv1[row_start..row_start + per_tok].iter().any(|&x| x != 0.0);
+    assert!(wrote, "decode must write KV at cur_len");
+    // rows beyond cur_len+1 stay zero
+    let beyond = (0 * cfg.decode_cap + cfg.full_len + 1) * per_tok;
+    assert!(kv1[beyond..beyond + per_tok].iter().all(|&x| x == 0.0));
+}
+
+/// The full real serving path (register -> fetch -> serve) matches the
+/// quantized-baseline tokens at every stored resolution.
+#[test]
+fn pjrt_real_engine_serves_losslessly() {
+    let Some(rt) = runtime() else { return };
+    let cfg = rt.cfg;
+    let mut engine = RealEngine::new(rt);
+    let mut rng = Prng::new(3);
+    let ptoks = rand_tokens(&mut rng, cfg.prefix_len, cfg.vocab);
+    let hash = engine.register_prefix(&ptoks).unwrap();
+    let suffix = rand_tokens(&mut rng, cfg.suffix_len, cfg.vocab);
+
+    // quantized-baseline reference
+    let (_, kvp) = engine.rt.prefill_prefix(&ptoks).unwrap();
+    let cache = kv_to_cache(&cfg, cfg.prefix_len, &kvp);
+    let coded = code_prefix(&cache, WireCoding::Entropy).unwrap();
+    let kv_ref = cache_to_kv(&cfg, &coded.restored);
+    let (logits_ref, _) = engine.rt.suffix(&kv_ref, &suffix).unwrap();
+    let v = cfg.vocab;
+    let ref_tokens: Vec<usize> =
+        (0..suffix.len()).map(|i| argmax(&logits_ref[i * v..(i + 1) * v])).collect();
+
+    for res in ["240p", "1080p"] {
+        let out = engine.serve_with_reuse(hash, &suffix, res).unwrap();
+        assert_eq!(out.next_tokens, ref_tokens, "resolution {res}");
+        assert!(out.wire_bytes > 0 && out.wire_bytes < cache.byte_len_f16());
+    }
+}
+
+/// Accuracy ordering through the real model: lossless codings agree
+/// with each other; heavy lossy coding agrees less with the fp32 ref.
+#[test]
+fn pjrt_accuracy_ordering() {
+    let Some(rt) = runtime() else { return };
+    let lossless = accuracy_eval(&rt, WireCoding::LosslessVideo, "ours", 3, 42).unwrap();
+    let entropy = accuracy_eval(&rt, WireCoding::Entropy, "entropy", 3, 42).unwrap();
+    let heavy = accuracy_eval(&rt, WireCoding::LossyVideo { qp: 34 }, "qp34", 3, 42).unwrap();
+    // identical u8 payload -> identical agreement
+    assert!((lossless.agreement - entropy.agreement).abs() < 1e-9);
+    // strong quantization must cost accuracy on the tiny model
+    assert!(heavy.agreement <= lossless.agreement + 1e-9);
+    // On the *untrained* tiny model with random-token prompts, the KV
+    // carries much weaker token-correlation than a real LLM on real
+    // text (measured SSIM ~0.5 vs the paper's 0.87), so the video
+    // path's mode/table overhead isn't always repaid — require parity
+    // here; the clear video win on correlated KV is asserted in
+    // engine::real::tests::lossless_video_matches_quantized_baseline.
+    assert!(
+        lossless.compression_ratio > entropy.compression_ratio * 0.95,
+        "video {} vs entropy {}",
+        lossless.compression_ratio,
+        entropy.compression_ratio
+    );
+}
