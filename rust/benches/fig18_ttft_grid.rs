@@ -4,7 +4,7 @@
 
 use kvfetcher::baselines::{SystemKind, SystemProfile};
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::engine::single_request_ttft;
+use kvfetcher::engine::{single_request_ttft, single_request_ttft_exec, ExecMode};
 use kvfetcher::fetcher::FetchConfig;
 use kvfetcher::net::BandwidthTrace;
 use kvfetcher::util::table::{fmt_secs, markdown};
@@ -65,4 +65,41 @@ fn main() {
     assert!(avg(&speedups_vs_full) > 3.0);
     assert!(avg(&speedups_vs_raw) > 1.3);
     assert!(avg(&speedups_vs_cg) > 1.05);
+
+    // ExecMode cross-check: the threaded pipelined executor must
+    // reproduce the analytic model's TTFT within 5% on every grid cell.
+    println!("\n## ExecMode cross-check (pipelined executor vs analytic model)");
+    let ours = SystemProfile::kvfetcher();
+    let mut worst = 0.0f64;
+    for dev in &devices {
+        for model in &models {
+            let perf = PerfModel::new(dev.clone(), model.clone());
+            let max_ctx = match model.name {
+                "LWM-7B" => 200_000,
+                "Yi-34B" => 160_000,
+                _ => 120_000,
+            };
+            for ctx in [max_ctx / 4, max_ctx] {
+                let reusable = (ctx as f64 * 0.95) as usize;
+                let a = single_request_ttft(&perf, &ours, &cfg, &bw, ctx, reusable).total();
+                let p = single_request_ttft_exec(
+                    &perf, &ours, &cfg, &bw, ctx, reusable, ExecMode::Pipelined,
+                )
+                .total();
+                let rel = (p - a).abs() / a;
+                worst = worst.max(rel);
+                assert!(
+                    rel <= 0.05,
+                    "{} {} ctx={}: pipelined {:.4}s deviates {:.2}% from analytic {:.4}s",
+                    dev.name,
+                    model.name,
+                    ctx,
+                    p,
+                    rel * 100.0,
+                    a
+                );
+            }
+        }
+    }
+    println!("pipelined executor matches analytic TTFT within 5% (worst {:.4}%)", worst * 100.0);
 }

@@ -4,7 +4,7 @@
 
 use kvfetcher::baselines::SystemProfile;
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::engine::{EngineConfig, EngineSim};
+use kvfetcher::engine::{EngineConfig, EngineSim, ExecMode};
 use kvfetcher::net::BandwidthTrace;
 use kvfetcher::scheduler::SchedulerConfig;
 use kvfetcher::trace::{generate, TraceConfig};
@@ -83,4 +83,26 @@ fn main() {
     );
     assert!(kvf_ttft < cg_ttft, "KVFetcher must protect non-reuse TTFT");
     assert!(kvf_ttft < fp_ttft);
+
+    // ExecMode cross-check: replaying the same trace through the
+    // threaded pipelined executor must reproduce the analytic engine's
+    // non-reuse TTFT within 5%.
+    let profile = SystemProfile::kvfetcher();
+    let cfg = EngineConfig {
+        sched: SchedulerConfig { fetching_aware: profile.fetching_aware, ..Default::default() },
+        layerwise_pipeline: profile.fetching_aware,
+        exec: ExecMode::Pipelined,
+        ..Default::default()
+    };
+    let mut eng = EngineSim::new(perf.clone(), profile, cfg, bw.clone());
+    let pipelined = eng.run(&trace).ttft_summary(Some(false)).mean;
+    println!(
+        "pipelined-executor replay: non-reuse TTFT {} (analytic {})",
+        fmt_secs(pipelined),
+        fmt_secs(kvf_ttft)
+    );
+    assert!(
+        (pipelined - kvf_ttft).abs() <= 0.05 * kvf_ttft,
+        "pipelined {pipelined:.4}s deviates >5% from analytic {kvf_ttft:.4}s"
+    );
 }

@@ -7,7 +7,9 @@
 use kvfetcher::asic::{h20_table, DecodePool};
 use kvfetcher::baselines::SystemProfile;
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::fetcher::{plan_fetch, FetchConfig};
+use kvfetcher::fetcher::{
+    execute_fetch, plan_fetch, CancelToken, FetchConfig, FetchParams, PipelineConfig,
+};
 use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
 use kvfetcher::util::table::{fmt_secs, markdown};
 
@@ -67,4 +69,37 @@ fn main() {
         "adaptive must not lose to fixed"
     );
     assert!(totals["KVFetcher (adaptive)"] < totals["CacheGen"]);
+
+    // ExecMode cross-check under the dynamic-bandwidth pattern: the
+    // threaded executor picks the same per-chunk resolutions and lands
+    // within 5% of the analytic TTFT.
+    let mut link = NetLink::new(BandwidthTrace::fig17());
+    let mut pool = DecodePool::new(dev.nvdecs * perf.n_gpus, h20_table());
+    let mut est = BandwidthEstimator::new(0.5);
+    let params = FetchParams {
+        now: 0.0,
+        reusable_tokens: tokens,
+        raw_bytes_total: raw,
+        profile: SystemProfile::kvfetcher(),
+        cfg: FetchConfig { adaptive: true, default_bw_gbps: 6.0, ..Default::default() },
+    };
+    let out = execute_fetch(
+        &params,
+        &PipelineConfig::default(),
+        &CancelToken::new(),
+        &mut link,
+        &mut pool,
+        &mut est,
+    );
+    let pipelined_total = out.plan.done_at + suffix_prefill;
+    let analytic_total = totals["KVFetcher (adaptive)"];
+    println!(
+        "pipelined executor under Fig. 17 bandwidth: TTFT {} (analytic {})",
+        fmt_secs(pipelined_total),
+        fmt_secs(analytic_total)
+    );
+    assert!(
+        (pipelined_total - analytic_total).abs() <= 0.05 * analytic_total,
+        "pipelined {pipelined_total:.4}s deviates >5% from analytic {analytic_total:.4}s"
+    );
 }

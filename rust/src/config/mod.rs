@@ -3,7 +3,7 @@
 //! (and the CLI can override individual keys).
 
 use crate::cluster::{DeviceSpec, ModelSpec};
-use crate::engine::EngineConfig;
+use crate::engine::{EngineConfig, ExecMode};
 use crate::fetcher::FetchConfig;
 use crate::net::BandwidthTrace;
 use crate::scheduler::SchedulerConfig;
@@ -68,6 +68,13 @@ impl Experiment {
             kv_capacity_tokens: match c.get_i64("engine", "kv_capacity_tokens", 0) {
                 0 => None,
                 n => Some(n as usize),
+            },
+            exec: {
+                let name = c.get_str("engine", "exec", "analytic");
+                ExecMode::by_name(name).unwrap_or_else(|| {
+                    eprintln!("config: unknown [engine] exec = {name:?}; using analytic");
+                    ExecMode::Analytic
+                })
             },
         };
         let trace = TraceConfig {
@@ -136,6 +143,8 @@ fetching_aware = false
 [fetch]
 adaptive = false
 chunk_tokens = 5000
+[engine]
+exec = "pipelined"
 [trace]
 n_requests = 10
 "#;
@@ -147,6 +156,7 @@ n_requests = 10
         assert!(!e.engine.sched.fetching_aware);
         assert!(!e.engine.fetch.adaptive);
         assert_eq!(e.engine.fetch.chunk_tokens, 5000);
+        assert_eq!(e.engine.exec, ExecMode::Pipelined);
         assert_eq!(e.trace.n_requests, 10);
         assert!(e.jitter);
         // jitter trace stays within its clamp bounds

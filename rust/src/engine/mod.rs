@@ -9,11 +9,38 @@ pub mod real;
 use crate::baselines::{Decompress, SystemProfile};
 use crate::cache::BlockAllocator;
 use crate::cluster::PerfModel;
+use crate::fetcher::executor::{execute_fetch, FetchParams};
+use crate::fetcher::pipeline::{CancelToken, PipelineConfig};
 use crate::fetcher::{layerwise_admission, plan_fetch, FetchConfig, FetchPlan};
 use crate::metrics::{Recorder, RequestRecord};
 use crate::net::{BandwidthEstimator, BandwidthTrace, NetLink};
 use crate::scheduler::{ReqState, SchedEntry, Scheduler, SchedulerConfig};
 use crate::trace::Request;
+
+/// How fetches execute inside the engine.
+///
+/// Both modes run the same stage model (`fetcher::pipeline`) and yield
+/// the same timeline; `Analytic` computes it in one pass on the caller's
+/// thread, `Pipelined` drives the real three-stage threaded executor
+/// (bounded channels, backpressure, cancellation) so traces exercise the
+/// deployment-shaped code path and cross-check the analytic model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    #[default]
+    Analytic,
+    Pipelined,
+}
+
+impl ExecMode {
+    /// Parse a config/CLI name ("analytic" | "pipelined").
+    pub fn by_name(name: &str) -> Option<ExecMode> {
+        match name.to_ascii_lowercase().as_str() {
+            "analytic" => Some(ExecMode::Analytic),
+            "pipelined" | "pipeline" => Some(ExecMode::Pipelined),
+            _ => None,
+        }
+    }
+}
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -26,6 +53,8 @@ pub struct EngineConfig {
     pub block_tokens: usize,
     /// override total KV-capacity tokens (None = derive from device mem)
     pub kv_capacity_tokens: Option<usize>,
+    /// analytic fetch planning vs the threaded pipelined executor
+    pub exec: ExecMode,
 }
 
 impl Default for EngineConfig {
@@ -36,6 +65,7 @@ impl Default for EngineConfig {
             layerwise_pipeline: true,
             block_tokens: 256,
             kv_capacity_tokens: None,
+            exec: ExecMode::Analytic,
         }
     }
 }
@@ -95,6 +125,41 @@ impl EngineSim {
         }
     }
 
+    /// Run one fetch through the configured [`ExecMode`], mutating the
+    /// shared link / pool / estimator either way.
+    fn run_fetch(&mut self, now: f64, reusable_tokens: usize, raw_bytes: usize) -> FetchPlan {
+        match self.cfg.exec {
+            ExecMode::Analytic => plan_fetch(
+                now,
+                reusable_tokens,
+                raw_bytes,
+                &self.profile,
+                &self.cfg.fetch,
+                &mut self.link,
+                &mut self.pool,
+                &mut self.est,
+            ),
+            ExecMode::Pipelined => {
+                let params = FetchParams {
+                    now,
+                    reusable_tokens,
+                    raw_bytes_total: raw_bytes,
+                    profile: self.profile.clone(),
+                    cfg: self.cfg.fetch.clone(),
+                };
+                execute_fetch(
+                    &params,
+                    &PipelineConfig::default(),
+                    &CancelToken::new(),
+                    &mut self.link,
+                    &mut self.pool,
+                    &mut self.est,
+                )
+                .plan
+            }
+        }
+    }
+
     fn kv_capacity_tokens(&self) -> usize {
         if let Some(c) = self.cfg.kv_capacity_tokens {
             return c;
@@ -126,16 +191,7 @@ impl EngineSim {
                     && self.profile.kind != crate::baselines::SystemKind::FullPrefill;
                 let fetch = if is_fetch {
                     let raw = self.perf.kv_bytes(r.reusable_tokens);
-                    let plan = plan_fetch(
-                        r.arrival.max(self.clock),
-                        r.reusable_tokens,
-                        raw,
-                        &self.profile,
-                        &self.cfg.fetch,
-                        &mut self.link,
-                        &mut self.pool,
-                        &mut self.est,
-                    );
+                    let plan = self.run_fetch(r.arrival.max(self.clock), r.reusable_tokens, raw);
                     active_fetch_mem.push((plan.done_at, plan.restore_peak_bytes));
                     let concurrent: usize = active_fetch_mem
                         .iter()
@@ -270,7 +326,7 @@ impl EngineSim {
                 self.profile.decompress
             {
                 let busy = reqs.iter().any(|r| {
-                    r.fetch.as_ref().map_or(false, |p| {
+                    r.fetch.as_ref().is_some_and(|p| {
                         p.chunks.iter().any(|c| c.dec_start < self.clock + dt && c.dec_end > self.clock)
                     })
                 });
@@ -333,8 +389,9 @@ impl EngineSim {
     }
 }
 
-/// Analytic TTFT of a *single isolated* fetch request — the Fig. 18 /
-/// Fig. 21 / Fig. 3 primitive (no queueing, fresh link/pool).
+/// TTFT of a *single isolated* fetch request — the Fig. 18 / Fig. 21 /
+/// Fig. 3 primitive (no queueing, fresh link/pool) — under the default
+/// analytic execution mode.
 pub fn single_request_ttft(
     perf: &PerfModel,
     profile: &SystemProfile,
@@ -342,6 +399,20 @@ pub fn single_request_ttft(
     bw: &BandwidthTrace,
     context: usize,
     reusable: usize,
+) -> crate::metrics::TtftBreakdown {
+    single_request_ttft_exec(perf, profile, fetch_cfg, bw, context, reusable, ExecMode::Analytic)
+}
+
+/// [`single_request_ttft`] with an explicit [`ExecMode`], so benches can
+/// cross-check the threaded executor against the analytic model.
+pub fn single_request_ttft_exec(
+    perf: &PerfModel,
+    profile: &SystemProfile,
+    fetch_cfg: &FetchConfig,
+    bw: &BandwidthTrace,
+    context: usize,
+    reusable: usize,
+    exec: ExecMode,
 ) -> crate::metrics::TtftBreakdown {
     use crate::baselines::SystemKind;
     let mut bd = crate::metrics::TtftBreakdown::default();
@@ -355,9 +426,29 @@ pub fn single_request_ttft(
                 crate::asic::DecodePool::new(perf.dev.nvdecs * perf.n_gpus, perf.dev.decode_table());
             let mut est = BandwidthEstimator::new(0.5);
             let raw = perf.kv_bytes(reusable);
-            let plan = plan_fetch(
-                0.0, reusable, raw, profile, fetch_cfg, &mut link, &mut pool, &mut est,
-            );
+            let plan = match exec {
+                ExecMode::Analytic => plan_fetch(
+                    0.0, reusable, raw, profile, fetch_cfg, &mut link, &mut pool, &mut est,
+                ),
+                ExecMode::Pipelined => {
+                    let params = FetchParams {
+                        now: 0.0,
+                        reusable_tokens: reusable,
+                        raw_bytes_total: raw,
+                        profile: profile.clone(),
+                        cfg: fetch_cfg.clone(),
+                    };
+                    execute_fetch(
+                        &params,
+                        &PipelineConfig::default(),
+                        &CancelToken::new(),
+                        &mut link,
+                        &mut pool,
+                        &mut est,
+                    )
+                    .plan
+                }
+            };
             bd = plan.breakdown;
             let suffix = context - reusable;
             bd.prefill = perf.prefill_time(suffix.max(1), context);
@@ -505,6 +596,44 @@ mod tests {
         assert!(ours.total() < full.total());
         // at 16 Gbps raw reuse still beats recompute for 100K ctx
         assert!(raw.total() < full.total());
+    }
+
+    #[test]
+    fn pipelined_exec_mode_matches_analytic_engine() {
+        // the threaded executor and the analytic planner must drive the
+        // whole serving simulation to identical per-request timings
+        let trace = small_trace(16, 0.7);
+        let run = |exec: ExecMode| {
+            EngineSim::new(
+                perf(),
+                SystemProfile::kvfetcher(),
+                EngineConfig { exec, ..Default::default() },
+                BandwidthTrace::constant(8.0),
+            )
+            .run(&trace)
+        };
+        let analytic = run(ExecMode::Analytic);
+        let pipelined = run(ExecMode::Pipelined);
+        assert_eq!(analytic.records.len(), pipelined.records.len());
+        for (a, p) in analytic.records.iter().zip(pipelined.records.iter()) {
+            assert_eq!(a.id, p.id);
+            assert!(
+                (a.first_token_at - p.first_token_at).abs() < 1e-6,
+                "req {}: analytic TTFT {:.6} vs pipelined {:.6}",
+                a.id,
+                a.ttft(),
+                p.ttft()
+            );
+            assert!((a.finished_at - p.finished_at).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn exec_mode_parses_by_name() {
+        assert_eq!(ExecMode::by_name("analytic"), Some(ExecMode::Analytic));
+        assert_eq!(ExecMode::by_name("Pipelined"), Some(ExecMode::Pipelined));
+        assert_eq!(ExecMode::by_name("warp"), None);
+        assert_eq!(ExecMode::default(), ExecMode::Analytic);
     }
 
     #[test]

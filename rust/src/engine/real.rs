@@ -3,15 +3,24 @@
 //! quantization, real codec, real restoration — plus the simulated
 //! network/ASIC timing. This backs the `serve_trace` example and the
 //! accuracy benches (Fig. 8 / Fig. 20).
+//!
+//! The wire codings ([`code_prefix`], [`best_intra`]) are pure
+//! CPU-codec paths and always available; [`RealEngine`] and
+//! [`accuracy_eval`] execute the model via PJRT and are gated behind
+//! the non-default `pjrt` feature.
 
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, Result};
 
 use crate::codec::{CodecConfig, CodecMode};
+#[cfg(feature = "pjrt")]
 use crate::kvstore::{prefix_hashes, StorageNode, StoredChunk, StoredVariant};
 use crate::layout::{self, baseline::llm265_frames, baseline::llm265_restore, IntraLayout, Resolution};
 use crate::quant::{dequantize, quantize, QuantKv};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{argmax, cache_to_kv, kv_to_cache, Runtime};
 use crate::tensor::KvCache;
+#[cfg(feature = "pjrt")]
 use crate::util::Prng;
 
 /// Resolutions the real engine stores (small, matched to the tiny
@@ -52,8 +61,8 @@ impl CodedPrefix {
 }
 
 /// Encode + decode a KV prefix under `coding`, returning wire size and
-/// the (possibly lossy) restored tensor.
-pub fn code_prefix(kv: &KvCache, coding: WireCoding) -> Result<CodedPrefix> {
+/// the (possibly lossy) restored tensor. Pure CPU path (no PJRT).
+pub fn code_prefix(kv: &KvCache, coding: WireCoding) -> Result<CodedPrefix, String> {
     let raw_bytes_f16 = kv.byte_len_f16();
     match coding {
         WireCoding::Raw => Ok(CodedPrefix { wire_bytes: raw_bytes_f16, raw_bytes_f16, restored: kv.clone() }),
@@ -61,7 +70,7 @@ pub fn code_prefix(kv: &KvCache, coding: WireCoding) -> Result<CodedPrefix> {
             let q = quantize(kv);
             let enc = crate::codec::rans::encode(&q.data);
             let wire = enc.len() + q.scales.len() * 4;
-            let (dec, _) = crate::codec::rans::decode(&enc).map_err(|e| anyhow!(e))?;
+            let (dec, _) = crate::codec::rans::decode(&enc)?;
             let q2 = QuantKv { data: dec, ..q.clone() };
             Ok(CodedPrefix { wire_bytes: wire, raw_bytes_f16, restored: dequantize(&q2) })
         }
@@ -72,7 +81,7 @@ pub fn code_prefix(kv: &KvCache, coding: WireCoding) -> Result<CodedPrefix> {
             let frames = llm265_frames(&q);
             let cfg = CodecConfig { mode: CodecMode::Lossy { qp: 8 }, inter: false, gop: 0 };
             let (bytes, _) = crate::codec::encode_video(&frames, &cfg, &[]);
-            let (dec_frames, _) = crate::codec::decode_video(&bytes).map_err(|e| anyhow!(e))?;
+            let (dec_frames, _) = crate::codec::decode_video(&bytes)?;
             let mut q2 = q.clone();
             llm265_restore(&dec_frames, &mut q2);
             Ok(CodedPrefix {
@@ -84,7 +93,11 @@ pub fn code_prefix(kv: &KvCache, coding: WireCoding) -> Result<CodedPrefix> {
     }
 }
 
-fn video_roundtrip(kv: &KvCache, cfg: &CodecConfig, search_layout: bool) -> Result<CodedPrefix> {
+fn video_roundtrip(
+    kv: &KvCache,
+    cfg: &CodecConfig,
+    search_layout: bool,
+) -> Result<CodedPrefix, String> {
     let q = quantize(kv);
     let res = REAL_RESOLUTIONS[1];
     let intra = if search_layout {
@@ -93,9 +106,9 @@ fn video_roundtrip(kv: &KvCache, cfg: &CodecConfig, search_layout: bool) -> Resu
         IntraLayout { hr: q.heads, hc: 1, dr: 1, dc: q.head_dim }
     };
     let groups = layout::encode_chunk(&q, res, intra, cfg)
-        .ok_or_else(|| anyhow!("layout infeasible at {}", res.name))?;
+        .ok_or_else(|| format!("layout infeasible at {}", res.name))?;
     let wire = layout::chunk_wire_bytes(&groups, q.scales.len());
-    let q2 = layout::decode_chunk(&groups, q.scales.clone()).map_err(|e| anyhow!(e))?;
+    let q2 = layout::decode_chunk(&groups, q.scales.clone())?;
     Ok(CodedPrefix { wire_bytes: wire, raw_bytes_f16: kv.byte_len_f16(), restored: dequantize(&q2) })
 }
 
@@ -118,6 +131,7 @@ pub fn best_intra(q: &QuantKv, res: Resolution) -> IntraLayout {
 }
 
 /// The real serving engine: PJRT model + storage node of encoded KV.
+#[cfg(feature = "pjrt")]
 pub struct RealEngine {
     pub rt: Runtime,
     pub store: StorageNode,
@@ -125,6 +139,7 @@ pub struct RealEngine {
 }
 
 /// Outcome of serving one request through the real path.
+#[cfg(feature = "pjrt")]
 #[derive(Debug, Clone)]
 pub struct ServeOutcome {
     /// argmax next tokens over the suffix positions
@@ -137,6 +152,7 @@ pub struct ServeOutcome {
     pub codec_secs: f64,
 }
 
+#[cfg(feature = "pjrt")]
 impl RealEngine {
     pub fn new(rt: Runtime) -> Self {
         let block = rt.cfg.prefix_len;
@@ -251,6 +267,7 @@ pub struct AccuracyPoint {
 
 /// Evaluate accuracy/compression for one coding over `n_samples` random
 /// prompts (the Fig. 8 / Fig. 20 measurement, on the tiny model).
+#[cfg(feature = "pjrt")]
 pub fn accuracy_eval(
     rt: &Runtime,
     coding: WireCoding,
@@ -269,7 +286,7 @@ pub fn accuracy_eval(
         let (logits_full, _) = rt.prefill_full(&tokens)?;
         let (_, kv_prefix) = rt.prefill_prefix(&tokens[..cfg.prefix_len])?;
         let cache = kv_to_cache(&cfg, cfg.prefix_len, &kv_prefix);
-        let coded = code_prefix(&cache, coding)?;
+        let coded = code_prefix(&cache, coding).map_err(|e| anyhow!(e))?;
         ratio_acc += coded.ratio();
         let kv_flat = cache_to_kv(&cfg, &coded.restored);
         let (logits_sfx, _) = rt.suffix(&kv_flat, &tokens[cfg.prefix_len..])?;
@@ -291,6 +308,7 @@ pub fn accuracy_eval(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Prng;
 
     fn synthetic_cache(seed: u64) -> KvCache {
         let mut rng = Prng::new(seed);

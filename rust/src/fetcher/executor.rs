@@ -1,0 +1,282 @@
+//! Threaded pipelined fetch executor (§3.3, Alg. 1).
+//!
+//! Runs transmit -> decode -> restore as three concurrent stages over
+//! bounded channels:
+//!
+//! * **transmit** owns the link and the bandwidth estimator, picks each
+//!   chunk's resolution (Alg. 1) against a *predictor* replica of the
+//!   decode pool — exactly the lookup-table prediction the paper's
+//!   fetcher performs, since the real pool state lives a stage away —
+//!   and blocks when the decoder falls behind (backpressure: at most
+//!   `queue_depth` chunks of bitstream are ever staged);
+//! * **decode** owns the decode pool, timestamps every chunk's decode
+//!   interval, and hands frames onward;
+//! * **restore** performs the frame-wise restoration hand-off: each
+//!   chunk's dequant+scatter overlaps its decode, leaving only the last
+//!   frame on the critical path (chunk-wise systems instead buffer all
+//!   decoded chunks and restore after the final decode).
+//!
+//! All three stages honor a [`CancelToken`], the abort path used by the
+//! layer-wise admission rule and by request teardown: cancelling stops
+//! transmission of further chunks and drains the channels without
+//! deadlock.
+//!
+//! The executor consumes the same stage helpers as the analytic
+//! planner ([`super::plan_fetch`]) in the same order, so for an
+//! uncancelled fetch its timeline is *identical* — `ExecMode` switches
+//! the engine between the two without changing results, and the benches
+//! cross-check that equivalence (Fig. 18/19/23).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+use crate::asic::DecodePool;
+use crate::baselines::{Decompress, SystemProfile};
+use crate::net::{BandwidthEstimator, NetLink};
+
+use super::pipeline::{
+    assemble_plan, chunk_geometry, decode_stage_times, pick_resolution, restore_tail_secs,
+    wire_bytes_at, CancelToken, PipelineConfig, TransmittedChunk,
+};
+use super::{ChunkFetch, FetchConfig, FetchPlan};
+
+/// Everything that describes one fetch, owned so a fetch can also run
+/// detached on its own thread (see [`spawn_fetch`]).
+#[derive(Debug, Clone)]
+pub struct FetchParams {
+    /// simulation time the fetch is issued
+    pub now: f64,
+    pub reusable_tokens: usize,
+    /// raw fp16 bytes of the whole reusable prefix
+    pub raw_bytes_total: usize,
+    pub profile: SystemProfile,
+    pub cfg: FetchConfig,
+}
+
+/// Result of running the pipelined executor.
+#[derive(Debug, Clone)]
+pub struct FetchOutcome {
+    pub plan: FetchPlan,
+    /// true if a [`CancelToken`] stopped the fetch early
+    pub aborted: bool,
+    /// chunks that made it through all three stages
+    pub chunks_completed: usize,
+    /// peak bytes of transmitted-but-not-yet-decoded bitstream — the
+    /// quantity the bounded channel caps at ~(queue_depth + 2) chunks
+    pub peak_inflight_wire_bytes: usize,
+}
+
+/// Execute one fetch through the three-stage threaded pipeline,
+/// mutating the shared link / pool / estimator exactly like
+/// [`super::plan_fetch`] does (so concurrent fetches contend
+/// identically under either `ExecMode`).
+pub fn execute_fetch(
+    params: &FetchParams,
+    pipe: &PipelineConfig,
+    cancel: &CancelToken,
+    link: &mut NetLink,
+    pool: &mut DecodePool,
+    est: &mut BandwidthEstimator,
+) -> FetchOutcome {
+    let geo = chunk_geometry(params.reusable_tokens, params.raw_bytes_total, &params.cfg);
+    let now = params.now;
+    let reusable_tokens = params.reusable_tokens;
+    let profile = &params.profile;
+    let cfg = &params.cfg;
+    let depth = pipe.queue_depth.max(1);
+    let throttle = pipe.decode_throttle;
+
+    let (to_decode, from_transmit) = mpsc::sync_channel::<TransmittedChunk>(depth);
+    let (to_restore, from_decode) = mpsc::sync_channel::<ChunkFetch>(depth);
+    let inflight = AtomicUsize::new(0);
+    let peak_inflight = AtomicUsize::new(0);
+
+    // Alg. 1 predicts the decode latency of a prospective chunk from the
+    // lookup table at the pool's expected occupancy; the transmit stage
+    // keeps its own replica for that prediction (the authoritative pool
+    // is owned by the decode stage).
+    let predictor_seed = pool.clone();
+
+    let (aborted, chunks, restored_through) = thread::scope(|s| {
+        let inflight_ref = &inflight;
+        let peak_ref = &peak_inflight;
+
+        let transmit = s.spawn(move || {
+            let mut predictor = predictor_seed;
+            let mut aborted = false;
+            for idx in 0..geo.n_chunks {
+                if cancel.is_cancelled() {
+                    aborted = true;
+                    break;
+                }
+                let wire_1080p = profile.wire_bytes(geo.raw_per_chunk);
+                let res_idx = pick_resolution(
+                    profile,
+                    cfg,
+                    est,
+                    wire_1080p,
+                    &predictor,
+                    link.busy_until().max(now),
+                    geo.scale,
+                );
+                let wire = wire_bytes_at(profile, wire_1080p, res_idx);
+                let (ts, te) = link.transmit(now, wire);
+                est.observe(wire, te - ts);
+                if matches!(profile.decompress, Decompress::NvdecPool) {
+                    // mirror the decode the pool will perform for this
+                    // chunk, keeping the predictor's occupancy honest
+                    predictor.decode(te, res_idx, geo.scale);
+                }
+                let staged = inflight_ref.fetch_add(wire, Ordering::SeqCst) + wire;
+                peak_ref.fetch_max(staged, Ordering::SeqCst);
+                let msg = TransmittedChunk {
+                    idx,
+                    res_idx,
+                    wire_bytes: wire,
+                    trans_start: ts,
+                    trans_end: te,
+                };
+                // blocks while `queue_depth` chunks are already staged
+                if to_decode.send(msg).is_err() {
+                    aborted = true; // decoder hung up (cancelled)
+                    break;
+                }
+            }
+            aborted
+        });
+
+        let decode = s.spawn(move || {
+            let mut prev_dec_end = now;
+            let mut aborted = false;
+            while let Ok(msg) = from_transmit.recv() {
+                if cancel.is_cancelled() {
+                    aborted = true;
+                    break;
+                }
+                if let Some(d) = throttle {
+                    thread::sleep(d);
+                }
+                let (ds, de) = decode_stage_times(
+                    profile,
+                    cfg,
+                    reusable_tokens,
+                    msg.wire_bytes,
+                    msg.trans_end,
+                    prev_dec_end,
+                    pool,
+                    msg.res_idx,
+                    geo.scale,
+                );
+                prev_dec_end = de;
+                inflight_ref.fetch_sub(msg.wire_bytes, Ordering::SeqCst);
+                let chunk = ChunkFetch {
+                    res_idx: msg.res_idx,
+                    wire_bytes: msg.wire_bytes,
+                    trans_start: msg.trans_start,
+                    trans_end: msg.trans_end,
+                    dec_start: ds,
+                    dec_end: de,
+                    bubble: (ds - msg.trans_end).max(0.0),
+                };
+                if to_restore.send(chunk).is_err() {
+                    aborted = true;
+                    break;
+                }
+            }
+            aborted
+        });
+
+        let restore = s.spawn(move || {
+            let mut chunks: Vec<ChunkFetch> = Vec::new();
+            let mut restored_through = now;
+            let mut aborted = false;
+            while let Ok(chunk) = from_decode.recv() {
+                if cfg.framewise_restore && profile.framewise_restore {
+                    // frame-wise hand-off: restoration of this chunk ran
+                    // alongside its decode; only the final frame trails
+                    restored_through =
+                        chunk.dec_end + restore_tail_secs(profile, cfg, geo.raw_per_chunk, 1);
+                }
+                chunks.push(chunk);
+                if cancel.is_cancelled() {
+                    aborted = true;
+                    break;
+                }
+            }
+            (chunks, restored_through, aborted)
+        });
+
+        let t_aborted = transmit.join().expect("transmit stage panicked");
+        let d_aborted = decode.join().expect("decode stage panicked");
+        let (chunks, restored_through, r_aborted) =
+            restore.join().expect("restore stage panicked");
+        (t_aborted || d_aborted || r_aborted, chunks, restored_through)
+    });
+
+    let chunks_completed = chunks.len();
+    let framewise = cfg.framewise_restore && profile.framewise_restore;
+    let plan = assemble_plan(now, profile, cfg, geo.raw_per_chunk, chunks);
+    // the stage's frame-wise hand-off must land exactly where the shared
+    // epilogue puts the restore tail (they share restore_tail_secs)
+    debug_assert!(
+        aborted || chunks_completed == 0 || !framewise
+            || (restored_through - plan.done_at).abs() < 1e-9,
+        "restore hand-off {restored_through} disagrees with plan.done_at {}",
+        plan.done_at
+    );
+    FetchOutcome {
+        plan,
+        aborted,
+        chunks_completed,
+        peak_inflight_wire_bytes: peak_inflight.load(Ordering::SeqCst),
+    }
+}
+
+/// Handle to a fetch running detached on its own thread: cancel it (the
+/// admission rule's abort path) and/or join for the outcome plus the
+/// mutated link / pool / estimator.
+pub struct FetchJob {
+    cancel: CancelToken,
+    handle: thread::JoinHandle<(FetchOutcome, NetLink, DecodePool, BandwidthEstimator)>,
+}
+
+impl FetchJob {
+    /// Request cooperative abort; stages stop at the next chunk border.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Wait for the pipeline to drain.
+    pub fn join(self) -> (FetchOutcome, NetLink, DecodePool, BandwidthEstimator) {
+        self.handle.join().expect("fetch job panicked")
+    }
+}
+
+/// Run a fetch on a background thread, taking ownership of the link /
+/// pool / estimator (returned by [`FetchJob::join`]).
+pub fn spawn_fetch(
+    params: FetchParams,
+    pipe: PipelineConfig,
+    mut link: NetLink,
+    mut pool: DecodePool,
+    mut est: BandwidthEstimator,
+) -> FetchJob {
+    let cancel = CancelToken::new();
+    let token = cancel.clone();
+    let handle = thread::spawn(move || {
+        let outcome = execute_fetch(&params, &pipe, &token, &mut link, &mut pool, &mut est);
+        (outcome, link, pool, est)
+    });
+    FetchJob { cancel, handle }
+}
+
+// The executor's behavioral contracts (analytic equivalence across
+// profiles/bandwidths, pipelined-beats-serialized, backpressure bound,
+// cancellation) are covered by the integration suite in
+// `tests/pipeline_exec.rs` — kept there, once, because they involve
+// wall-clock throttles and whole-plan comparisons.

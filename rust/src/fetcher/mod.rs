@@ -8,6 +8,12 @@
 //! of chunk i; Alg. 1 picks the resolution that minimizes the bubble
 //! between the two stages under the predicted bandwidth.
 
+pub mod executor;
+pub mod pipeline;
+
+pub use executor::{execute_fetch, spawn_fetch, FetchJob, FetchOutcome, FetchParams};
+pub use pipeline::{serialized_fetch, CancelToken, PipelineConfig};
+
 use crate::asic::DecodePool;
 use crate::baselines::{Decompress, SystemProfile};
 use crate::metrics::TtftBreakdown;
@@ -101,7 +107,10 @@ pub struct FetchPlan {
 /// Plan the fetch of `reusable_tokens` of KV whose raw fp16 size is
 /// `raw_bytes_total`, under `profile`, mutating the shared link / pool /
 /// estimator state (so concurrent fetches contend realistically).
-#[allow(clippy::too_many_arguments)]
+///
+/// This is the analytic single-pass driver of the stage model in
+/// [`pipeline`]; the threaded [`executor`] runs the identical stages
+/// concurrently and produces the same timeline (see `ExecMode`).
 pub fn plan_fetch(
     now: f64,
     reusable_tokens: usize,
@@ -112,58 +121,38 @@ pub fn plan_fetch(
     pool: &mut DecodePool,
     est: &mut BandwidthEstimator,
 ) -> FetchPlan {
-    assert!(reusable_tokens > 0);
-    let n_chunks = reusable_tokens.div_ceil(cfg.chunk_tokens);
-    let raw_per_chunk = raw_bytes_total / n_chunks;
-    let scale = (cfg.chunk_tokens.min(reusable_tokens)) as f64 / 10_000.0;
-    let mut chunks = Vec::with_capacity(n_chunks);
+    let geo = pipeline::chunk_geometry(reusable_tokens, raw_bytes_total, cfg);
+    let mut chunks = Vec::with_capacity(geo.n_chunks);
     let mut prev_dec_end = now;
-    let mut decode_busy = 0.0;
 
-    for _ in 0..n_chunks {
-        let wire_1080p = profile.wire_bytes(raw_per_chunk);
+    for _ in 0..geo.n_chunks {
+        let wire_1080p = profile.wire_bytes(geo.raw_per_chunk);
         // resolution choice (only meaningful for video systems)
-        let res_idx = if matches!(profile.decompress, Decompress::NvdecPool) {
-            if cfg.adaptive && profile.adaptive_resolution {
-                select_resolution(
-                    est.estimate(cfg.default_bw_gbps),
-                    wire_1080p,
-                    pool,
-                    link.busy_until().max(now),
-                    scale,
-                )
-            } else {
-                cfg.fixed_res
-            }
-        } else {
-            3
-        };
-        let wire = if matches!(profile.decompress, Decompress::NvdecPool) {
-            (wire_1080p as f64 * RES_SIZE_FACTOR[res_idx]) as usize
-        } else {
-            wire_1080p
-        };
+        let res_idx = pipeline::pick_resolution(
+            profile,
+            cfg,
+            est,
+            wire_1080p,
+            pool,
+            link.busy_until().max(now),
+            geo.scale,
+        );
+        let wire = pipeline::wire_bytes_at(profile, wire_1080p, res_idx);
         let (ts, te) = link.transmit(now, wire);
         est.observe(wire, te - ts);
 
         // decompression stage
-        let (ds, de) = match profile.decompress {
-            Decompress::None => (te, te),
-            Decompress::NvdecPool => {
-                let job = pool.decode(te, res_idx, scale);
-                (job.start, job.end)
-            }
-            Decompress::CudaKernel { tokens_per_sec, .. } => {
-                let start = te.max(prev_dec_end);
-                let dt = cfg.chunk_tokens.min(reusable_tokens) as f64 / tokens_per_sec;
-                (start, start + dt)
-            }
-            Decompress::SmartNic { gbps, .. } => {
-                let start = te.max(prev_dec_end);
-                (start, start + wire as f64 * 8.0 / (gbps * 1e9))
-            }
-        };
-        decode_busy += de - ds;
+        let (ds, de) = pipeline::decode_stage_times(
+            profile,
+            cfg,
+            reusable_tokens,
+            wire,
+            te,
+            prev_dec_end,
+            pool,
+            res_idx,
+            geo.scale,
+        );
         let bubble = (ds - te).max(0.0);
         prev_dec_end = de;
         chunks.push(ChunkFetch {
@@ -177,33 +166,7 @@ pub fn plan_fetch(
         });
     }
 
-    // restoration: frame-wise overlaps decoding (tail of one frame);
-    // chunk-wise serializes a full-chunk dequant+scatter after decode.
-    let restore_tail = if cfg.framewise_restore && profile.framewise_restore {
-        // one frame's worth of restore after the last decode
-        (raw_per_chunk as f64 / 16.0) / cfg.restore_bps
-    } else {
-        raw_per_chunk as f64 / cfg.restore_bps * n_chunks as f64
-    };
-
-    let last_trans_end = chunks.last().map(|c| c.trans_end).unwrap_or(now);
-    let done_at = prev_dec_end + restore_tail;
-    let breakdown = TtftBreakdown {
-        wait: chunks.first().map(|c| c.trans_start - now).unwrap_or(0.0),
-        transmission: last_trans_end - chunks.first().map(|c| c.trans_start).unwrap_or(now),
-        decode: (prev_dec_end - last_trans_end).max(0.0),
-        restore: restore_tail,
-        prefill: 0.0,
-    };
-    let _ = decode_busy;
-
-    FetchPlan {
-        restore_peak_bytes: restore_memory(profile, cfg, raw_per_chunk),
-        chunks,
-        started_at: now,
-        done_at,
-        breakdown,
-    }
+    pipeline::assemble_plan(now, profile, cfg, geo.raw_per_chunk, chunks)
 }
 
 /// Peak device-memory footprint of decode + restore for one in-flight

@@ -1,0 +1,353 @@
+//! Shared stage model of the fetch pipeline (§3.3, Alg. 1).
+//!
+//! A fetch moves every chunk through three stages:
+//!
+//! ```text
+//!   transmit (FIFO link)  ->  decode (NVDEC pool / kernel / NIC)  ->  restore
+//! ```
+//!
+//! Two drivers execute this model and must agree on every timestamp:
+//!
+//! * [`super::plan_fetch`] — the analytic planner: one pass over the
+//!   chunks on the caller's thread (fast, used by the large-scale
+//!   simulations);
+//! * [`super::executor::execute_fetch`] — the threaded executor: one OS
+//!   thread per stage, connected by bounded channels with backpressure
+//!   and a cancellation path (the shape a real deployment runs).
+//!
+//! To keep the two bit-identical, the per-stage arithmetic lives here
+//! as small pure helpers; both drivers call exactly these functions in
+//! exactly the same order. [`serialized_fetch`] additionally provides
+//! the no-overlap reference schedule the paper's pipelining is measured
+//! against.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::asic::DecodePool;
+use crate::baselines::{Decompress, SystemProfile};
+use crate::metrics::TtftBreakdown;
+use crate::net::{BandwidthEstimator, NetLink};
+
+use super::{restore_memory, select_resolution, ChunkFetch, FetchConfig, FetchPlan, RES_SIZE_FACTOR};
+
+/// How a fetch splits into chunks.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkGeometry {
+    pub n_chunks: usize,
+    pub raw_per_chunk: usize,
+    /// converts nominal 10K-token table latency to this chunk size
+    pub scale: f64,
+}
+
+/// Split `reusable_tokens` (raw size `raw_bytes_total`) into chunks.
+pub fn chunk_geometry(
+    reusable_tokens: usize,
+    raw_bytes_total: usize,
+    cfg: &FetchConfig,
+) -> ChunkGeometry {
+    assert!(reusable_tokens > 0, "cannot fetch an empty prefix");
+    let n_chunks = reusable_tokens.div_ceil(cfg.chunk_tokens);
+    ChunkGeometry {
+        n_chunks,
+        raw_per_chunk: raw_bytes_total / n_chunks,
+        scale: (cfg.chunk_tokens.min(reusable_tokens)) as f64 / 10_000.0,
+    }
+}
+
+/// Stage 1 policy: the resolution this chunk is fetched at. Only video
+/// systems (NVDEC decode) have a resolution ladder; everything else is
+/// pinned to index 3 (1080p nominal).
+pub(crate) fn pick_resolution(
+    profile: &SystemProfile,
+    cfg: &FetchConfig,
+    est: &BandwidthEstimator,
+    wire_1080p: usize,
+    pool: &DecodePool,
+    at: f64,
+    scale: f64,
+) -> usize {
+    if matches!(profile.decompress, Decompress::NvdecPool) {
+        if cfg.adaptive && profile.adaptive_resolution {
+            select_resolution(est.estimate(cfg.default_bw_gbps), wire_1080p, pool, at, scale)
+        } else {
+            cfg.fixed_res
+        }
+    } else {
+        3
+    }
+}
+
+/// Wire bytes of a chunk at `res_idx` (video systems scale by the
+/// per-resolution size factors; others ship the profile's fixed size).
+pub(crate) fn wire_bytes_at(profile: &SystemProfile, wire_1080p: usize, res_idx: usize) -> usize {
+    if matches!(profile.decompress, Decompress::NvdecPool) {
+        (wire_1080p as f64 * RES_SIZE_FACTOR[res_idx]) as usize
+    } else {
+        wire_1080p
+    }
+}
+
+/// Stage 2: decode interval (start, end) of a chunk whose transmission
+/// ends at `trans_end`. `prev_dec_end` serializes the software paths
+/// (CUDA kernel, SmartNIC); the NVDEC pool serializes internally.
+pub(crate) fn decode_stage_times(
+    profile: &SystemProfile,
+    cfg: &FetchConfig,
+    reusable_tokens: usize,
+    wire_bytes: usize,
+    trans_end: f64,
+    prev_dec_end: f64,
+    pool: &mut DecodePool,
+    res_idx: usize,
+    scale: f64,
+) -> (f64, f64) {
+    match profile.decompress {
+        Decompress::None => (trans_end, trans_end),
+        Decompress::NvdecPool => {
+            let job = pool.decode(trans_end, res_idx, scale);
+            (job.start, job.end)
+        }
+        Decompress::CudaKernel { tokens_per_sec, .. } => {
+            let start = trans_end.max(prev_dec_end);
+            let dt = cfg.chunk_tokens.min(reusable_tokens) as f64 / tokens_per_sec;
+            (start, start + dt)
+        }
+        Decompress::SmartNic { gbps, .. } => {
+            let start = trans_end.max(prev_dec_end);
+            (start, start + wire_bytes as f64 * 8.0 / (gbps * 1e9))
+        }
+    }
+}
+
+/// Stage 3: restoration time remaining after the last decode finishes.
+///
+/// Frame-wise restoration (§3.3.2) overlaps decoding — only the final
+/// frame's dequant+scatter is left on the critical path. Chunk-wise
+/// designs buffer whole decoded chunks and dequantize after decoding,
+/// serializing `n_chunks` full restores.
+pub(crate) fn restore_tail_secs(
+    profile: &SystemProfile,
+    cfg: &FetchConfig,
+    raw_per_chunk: usize,
+    n_chunks: usize,
+) -> f64 {
+    if cfg.framewise_restore && profile.framewise_restore {
+        (raw_per_chunk as f64 / 16.0) / cfg.restore_bps
+    } else {
+        raw_per_chunk as f64 / cfg.restore_bps * n_chunks as f64
+    }
+}
+
+/// Assemble the plan from per-chunk timelines; shared epilogue of the
+/// analytic planner and the threaded executor (identical arithmetic).
+pub(crate) fn assemble_plan(
+    now: f64,
+    profile: &SystemProfile,
+    cfg: &FetchConfig,
+    raw_per_chunk: usize,
+    chunks: Vec<ChunkFetch>,
+) -> FetchPlan {
+    let prev_dec_end = chunks.last().map(|c| c.dec_end).unwrap_or(now);
+    let last_trans_end = chunks.last().map(|c| c.trans_end).unwrap_or(now);
+    let restore_tail = if chunks.is_empty() {
+        0.0
+    } else {
+        restore_tail_secs(profile, cfg, raw_per_chunk, chunks.len())
+    };
+    let breakdown = TtftBreakdown {
+        wait: chunks.first().map(|c| c.trans_start - now).unwrap_or(0.0),
+        transmission: last_trans_end - chunks.first().map(|c| c.trans_start).unwrap_or(now),
+        decode: (prev_dec_end - last_trans_end).max(0.0),
+        restore: restore_tail,
+        prefill: 0.0,
+    };
+    FetchPlan {
+        restore_peak_bytes: restore_memory(profile, cfg, raw_per_chunk),
+        chunks,
+        started_at: now,
+        done_at: prev_dec_end + restore_tail,
+        breakdown,
+    }
+}
+
+/// A chunk leaving the transmit stage, headed for the decoder.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct TransmittedChunk {
+    pub idx: usize,
+    pub res_idx: usize,
+    pub wire_bytes: usize,
+    pub trans_start: f64,
+    pub trans_end: f64,
+}
+
+/// Executor tuning knobs.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// Bounded-channel depth between stages: at most `queue_depth`
+    /// chunks sit between transmit and decode (and between decode and
+    /// restore), so a slow consumer backpressures the producer instead
+    /// of letting the staging buffer grow with the prefix length.
+    pub queue_depth: usize,
+    /// Fault-injection knob (tests/benches): wall-clock delay added to
+    /// the decode stage per chunk, to force backpressure observably.
+    /// `None` in production paths.
+    pub decode_throttle: Option<Duration>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { queue_depth: 4, decode_throttle: None }
+    }
+}
+
+/// Cooperative cancellation for an in-flight fetch: the layer-wise
+/// admission rule (Appx. A.3) may abort a fetch whose remaining layers
+/// can no longer beat recomputation, and request teardown (client
+/// disconnect) must stop all three stages promptly. Cloneable; all
+/// clones observe the same flag.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// The no-overlap reference schedule: transmit a chunk, decode it,
+/// restore it, and only then start the next chunk's transmission. This
+/// is the serialized baseline Fig. 17's pipelining is measured against;
+/// the pipelined executor must beat it whenever decoding is not free.
+pub fn serialized_fetch(
+    now: f64,
+    reusable_tokens: usize,
+    raw_bytes_total: usize,
+    profile: &SystemProfile,
+    cfg: &FetchConfig,
+    link: &mut NetLink,
+    pool: &mut DecodePool,
+    est: &mut BandwidthEstimator,
+) -> FetchPlan {
+    let geo = chunk_geometry(reusable_tokens, raw_bytes_total, cfg);
+    // serialized = chunk-wise by construction: every chunk is fully
+    // restored before the next transmission begins
+    let per_chunk_restore = geo.raw_per_chunk as f64 / cfg.restore_bps;
+    let mut chunks = Vec::with_capacity(geo.n_chunks);
+    let mut cursor = now;
+    for _ in 0..geo.n_chunks {
+        let wire_1080p = profile.wire_bytes(geo.raw_per_chunk);
+        let res_idx = pick_resolution(
+            profile,
+            cfg,
+            est,
+            wire_1080p,
+            pool,
+            link.busy_until().max(cursor),
+            geo.scale,
+        );
+        let wire = wire_bytes_at(profile, wire_1080p, res_idx);
+        let (ts, te) = link.transmit(cursor, wire);
+        est.observe(wire, te - ts);
+        let (ds, de) = decode_stage_times(
+            profile,
+            cfg,
+            reusable_tokens,
+            wire,
+            te,
+            te,
+            pool,
+            res_idx,
+            geo.scale,
+        );
+        cursor = de + per_chunk_restore;
+        chunks.push(ChunkFetch {
+            res_idx,
+            wire_bytes: wire,
+            trans_start: ts,
+            trans_end: te,
+            dec_start: ds,
+            dec_end: de,
+            bubble: (ds - te).max(0.0),
+        });
+    }
+    let first_ts = chunks.first().map(|c| c.trans_start).unwrap_or(now);
+    let last_te = chunks.last().map(|c| c.trans_end).unwrap_or(now);
+    let last_de = chunks.last().map(|c| c.dec_end).unwrap_or(now);
+    FetchPlan {
+        restore_peak_bytes: restore_memory(profile, cfg, geo.raw_per_chunk),
+        started_at: now,
+        done_at: cursor,
+        breakdown: TtftBreakdown {
+            wait: first_ts - now,
+            transmission: last_te - first_ts,
+            decode: (last_de - last_te).max(0.0),
+            restore: cursor - last_de,
+            prefill: 0.0,
+        },
+        chunks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::asic::h20_table;
+    use crate::net::BandwidthTrace;
+
+    fn setup(gbps: f64) -> (NetLink, DecodePool, BandwidthEstimator) {
+        (
+            NetLink::new(BandwidthTrace::constant(gbps)),
+            DecodePool::new(7, h20_table()),
+            BandwidthEstimator::new(0.5),
+        )
+    }
+
+    #[test]
+    fn geometry_covers_all_tokens() {
+        let cfg = FetchConfig::default();
+        let g = chunk_geometry(100_000, 1_000_000, &cfg);
+        assert_eq!(g.n_chunks, 10);
+        assert_eq!(g.raw_per_chunk, 100_000);
+        assert!((g.scale - 1.0).abs() < 1e-12);
+        let g2 = chunk_geometry(3_000, 900, &cfg);
+        assert_eq!(g2.n_chunks, 1);
+        assert!((g2.scale - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serialized_schedule_idles_the_link_while_decoding() {
+        // no-overlap by construction; the pipelined-vs-serialized TTFT
+        // comparison lives in tests/pipeline_exec.rs
+        let profile = SystemProfile::kvfetcher();
+        let cfg = FetchConfig::default();
+        let raw = 500_000 * 10_000usize;
+        let (mut link, mut pool, mut est) = setup(4.0);
+        let serial = serialized_fetch(0.0, 100_000, raw, &profile, &cfg, &mut link, &mut pool, &mut est);
+        assert_eq!(serial.chunks.len(), 10);
+        for w in serial.chunks.windows(2) {
+            assert!(w[1].trans_start >= w[0].dec_end - 1e-9);
+        }
+        assert!(serial.done_at > serial.chunks.last().unwrap().dec_end);
+    }
+
+    #[test]
+    fn cancel_token_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t2.is_cancelled());
+        t.cancel();
+        assert!(t2.is_cancelled());
+    }
+}

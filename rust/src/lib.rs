@@ -7,10 +7,17 @@
 //! ASICs, off the critical compute path.
 //!
 //! Layer map (see DESIGN.md):
-//! * L3 (this crate): coordinator — scheduler, fetcher, codec, caches,
-//!   network/ASIC/cluster simulation, metrics, PJRT runtime.
+//! * L3 (this crate): coordinator — scheduler, fetcher (analytic
+//!   planner + threaded pipelined executor, see `engine::ExecMode`),
+//!   codec, caches, network/ASIC/cluster simulation, metrics, PJRT
+//!   runtime.
 //! * L2/L1 (python/, build-time only): tiny transformer + Pallas
 //!   kernels, AOT-lowered into `artifacts/*.hlo.txt`.
+//!
+//! Features: the default build is dependency-free and fully hermetic.
+//! `--features pjrt` enables the real-model path (`runtime::Runtime`,
+//! `engine::real::RealEngine`); it links offline stubs for `xla` /
+//! `anyhow` from `vendor/` unless swapped for the real crates.
 
 pub mod asic;
 pub mod cache;

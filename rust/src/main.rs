@@ -47,6 +47,10 @@ fn load_experiment(args: &[String]) -> Experiment {
     if let Some(n) = parse_flag(args, "--requests") {
         exp.trace.n_requests = n.parse().expect("--requests takes a count");
     }
+    if let Some(x) = parse_flag(args, "--exec") {
+        exp.engine.exec = kvfetcher::engine::ExecMode::by_name(&x)
+            .expect("--exec takes `analytic` or `pipelined`");
+    }
     exp
 }
 
@@ -55,13 +59,14 @@ fn cmd_serve(args: &[String]) {
     let perf = kvfetcher::cluster::PerfModel::new(exp.device.clone(), exp.model.clone());
     let trace = generate(&exp.trace);
     println!(
-        "# serve: {} x{} | {} | {} Gbps{} | {} requests",
+        "# serve: {} x{} | {} | {} Gbps{} | {} requests | {:?} fetch exec",
         exp.device.name,
         perf.n_gpus,
         exp.model.name,
         exp.bandwidth_gbps,
         if exp.jitter { " (jitter)" } else { "" },
-        trace.len()
+        trace.len(),
+        exp.engine.exec,
     );
     let mut rows = Vec::new();
     for profile in SystemProfile::all(&exp.device) {
@@ -165,6 +170,7 @@ fn cmd_layout(args: &[String]) {
     println!("{}", markdown(&["tiling", "tile", "bytes", "ratio"], &rows));
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_real(args: &[String]) {
     let dir = parse_flag(args, "--artifacts").unwrap_or_else(|| "artifacts".into());
     let rt = match kvfetcher::runtime::Runtime::load(&dir) {
@@ -188,12 +194,22 @@ fn cmd_real(args: &[String]) {
     );
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_real(_args: &[String]) {
+    eprintln!(
+        "the `real` subcommand executes the AOT model via PJRT; \
+         rebuild with `--features pjrt` (see DESIGN.md)"
+    );
+    std::process::exit(2);
+}
+
 const USAGE: &str = "kvfetcher <serve|fetch|calibrate|layout|real> [flags]
   serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
+            [--exec analytic|pipelined]
   fetch     --config <toml> [--context tokens] [--bandwidth G]
   calibrate [--tokens n]
   layout    [--heads h] [--dim d]
-  real      [--artifacts dir]";
+  real      [--artifacts dir]   (requires --features pjrt)";
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();

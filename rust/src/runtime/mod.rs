@@ -5,12 +5,21 @@
 //! Wiring follows /opt/xla-example/load_hlo: HLO *text* ->
 //! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
 //! `PjRtClient::compile` -> `execute`.
+//!
+//! The [`Runtime`] itself (everything touching the `xla` crate) is
+//! gated behind the non-default `pjrt` feature so the default build has
+//! zero external-system dependencies; the model-shape config and the
+//! KV layout converters below are pure and always available.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
+#[cfg(feature = "pjrt")]
 use anyhow::{anyhow, bail, Context, Result};
 
+#[cfg(feature = "pjrt")]
 use crate::util::json::Json;
 
 /// Model hyperparameters parsed from the manifest.
@@ -35,6 +44,7 @@ impl TinyModelCfg {
 }
 
 /// Loaded runtime: compiled executables + host-resident weights.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     exes: HashMap<String, xla::PjRtLoadedExecutable>,
@@ -43,12 +53,14 @@ pub struct Runtime {
     pub dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 fn get_usize(j: &Json, key: &str) -> Result<usize> {
     j.get(key)
         .and_then(Json::as_usize)
         .ok_or_else(|| anyhow!("manifest missing {key}"))
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load all entry points from an artifacts directory.
     pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {

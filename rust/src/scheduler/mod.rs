@@ -98,7 +98,7 @@ impl Scheduler {
             let mut i = 0;
             while i < self.waiting_for_kv.len() {
                 let idx = self.waiting_for_kv[i];
-                let ready = entries[idx].admit_at.map_or(false, |t| t <= now);
+                let ready = entries[idx].admit_at.is_some_and(|t| t <= now);
                 if ready && self.running.len() < self.cfg.max_batch && can_admit(idx) {
                     self.waiting_for_kv.swap_remove(i);
                     self.running.push(idx);
@@ -112,9 +112,9 @@ impl Scheduler {
         while self.running.len() < self.cfg.max_batch {
             let Some(&idx) = self.waiting.front() else { break };
             let entry = &entries[idx];
-            let fetch_pending = entry.fetch_ready_at.map_or(false, |t| {
-                entry.admit_at.map_or(t > now, |a| a > now)
-            });
+            let fetch_pending = entry
+                .fetch_ready_at
+                .is_some_and(|t| entry.admit_at.map_or(t > now, |a| a > now));
             if fetch_pending {
                 // fetching-agnostic: HOL block — nothing behind may pass
                 break;

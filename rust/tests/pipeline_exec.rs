@@ -1,0 +1,238 @@
+//! Integration tests of the threaded pipelined fetch executor
+//! (`fetcher::executor`) against the analytic stage model, the
+//! no-overlap serialized baseline, and its backpressure / cancellation
+//! contracts. All timings here are *virtual* (simulation seconds), so
+//! every assertion is deterministic regardless of host scheduling.
+
+use std::time::Duration;
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::engine::{single_request_ttft, single_request_ttft_exec, ExecMode};
+use kvfetcher::fetcher::{
+    execute_fetch, plan_fetch, serialized_fetch, spawn_fetch, CancelToken, FetchConfig,
+    FetchParams, PipelineConfig,
+};
+use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+
+fn setup(trace: BandwidthTrace) -> (NetLink, DecodePool, BandwidthEstimator) {
+    (NetLink::new(trace), DecodePool::new(7, h20_table()), BandwidthEstimator::new(0.5))
+}
+
+fn params(profile: SystemProfile, tokens: usize, raw: usize) -> FetchParams {
+    FetchParams {
+        now: 0.0,
+        reusable_tokens: tokens,
+        raw_bytes_total: raw,
+        profile,
+        cfg: FetchConfig::default(),
+    }
+}
+
+/// The tentpole determinism contract: for every system profile and
+/// bandwidth regime, the threaded executor's timeline equals the
+/// analytic planner's (same stage model, same order of operations).
+#[test]
+fn executor_equals_analytic_across_profiles_and_bandwidths() {
+    let raw = 100_000 * 245_760usize;
+    let dev = DeviceSpec::h20();
+    let profiles = [
+        SystemProfile::kvfetcher(),
+        SystemProfile::cachegen(&dev),
+        SystemProfile::shadowserve(),
+        SystemProfile::raw_reuse(),
+        SystemProfile::llm265(),
+    ];
+    let traces = [
+        BandwidthTrace::constant(2.0),
+        BandwidthTrace::constant(16.0),
+        BandwidthTrace::fig17(),
+        BandwidthTrace::jitter(11, 8.0, 2.0, 30.0, 0.5, 500.0),
+    ];
+    for profile in &profiles {
+        for trace in &traces {
+            let (mut l1, mut p1, mut e1) = setup(trace.clone());
+            let analytic = plan_fetch(
+                0.0,
+                100_000,
+                raw,
+                profile,
+                &FetchConfig::default(),
+                &mut l1,
+                &mut p1,
+                &mut e1,
+            );
+            let (mut l2, mut p2, mut e2) = setup(trace.clone());
+            let out = execute_fetch(
+                &params(profile.clone(), 100_000, raw),
+                &PipelineConfig::default(),
+                &CancelToken::new(),
+                &mut l2,
+                &mut p2,
+                &mut e2,
+            );
+            assert!(!out.aborted);
+            assert_eq!(out.plan.chunks.len(), analytic.chunks.len(), "{}", profile.name);
+            for (a, b) in analytic.chunks.iter().zip(out.plan.chunks.iter()) {
+                assert_eq!(a.res_idx, b.res_idx, "{}", profile.name);
+                assert_eq!(a.wire_bytes, b.wire_bytes, "{}", profile.name);
+                assert!((a.trans_end - b.trans_end).abs() < 1e-9, "{}", profile.name);
+                assert!((a.dec_start - b.dec_start).abs() < 1e-9, "{}", profile.name);
+                assert!((a.dec_end - b.dec_end).abs() < 1e-9, "{}", profile.name);
+            }
+            assert!(
+                (analytic.done_at - out.plan.done_at).abs() < 1e-9,
+                "{}: analytic {:.6} vs pipelined {:.6}",
+                profile.name,
+                analytic.done_at,
+                out.plan.done_at
+            );
+            assert!((l1.busy_until() - l2.busy_until()).abs() < 1e-9);
+        }
+    }
+}
+
+/// Satellite acceptance: on a fixed bandwidth trace, the pipelined
+/// executor's TTFT is <= (and on bandwidth-limited traces strictly
+/// below) a no-overlap serial schedule of the same chunks.
+#[test]
+fn pipelined_ttft_beats_serialized_schedule() {
+    let profile = SystemProfile::kvfetcher();
+    let cfg = FetchConfig::default();
+    let raw = 100_000 * 524_288usize; // LWM-7B-sized prefix
+    for gbps in [1.0, 4.0, 8.0] {
+        let (mut l1, mut p1, mut e1) = setup(BandwidthTrace::constant(gbps));
+        let pipelined = execute_fetch(
+            &params(profile.clone(), 100_000, raw),
+            &PipelineConfig::default(),
+            &CancelToken::new(),
+            &mut l1,
+            &mut p1,
+            &mut e1,
+        )
+        .plan;
+        let (mut l2, mut p2, mut e2) = setup(BandwidthTrace::constant(gbps));
+        let serial = serialized_fetch(0.0, 100_000, raw, &profile, &cfg, &mut l2, &mut p2, &mut e2);
+        assert!(
+            pipelined.done_at < serial.done_at,
+            "{gbps} Gbps: pipelined {:.3}s must strictly beat serialized {:.3}s",
+            pipelined.done_at,
+            serial.done_at
+        );
+        // overlap really happened: decode of chunk i overlaps transmit i+1
+        for w in pipelined.chunks.windows(2) {
+            assert!(w[1].trans_start <= w[0].dec_end + 1e-9);
+        }
+    }
+}
+
+/// Satellite acceptance: a slow decode stage backpressures the transmit
+/// stage through the bounded channel, so staged-bitstream memory stays
+/// O(queue_depth) chunks no matter how long the prefix is — and the
+/// wall-clock stall never changes the virtual timeline.
+#[test]
+fn slow_decode_stage_bounds_transmit_queue_memory() {
+    let profile = SystemProfile::kvfetcher();
+    let tokens = 160_000usize; // 16 chunks
+    let raw = tokens * 245_760;
+    let depth = 2usize;
+    let pipe = PipelineConfig {
+        queue_depth: depth,
+        decode_throttle: Some(Duration::from_millis(5)),
+    };
+    let (mut l1, mut p1, mut e1) = setup(BandwidthTrace::constant(8.0));
+    let out = execute_fetch(
+        &params(profile.clone(), tokens, raw),
+        &pipe,
+        &CancelToken::new(),
+        &mut l1,
+        &mut p1,
+        &mut e1,
+    );
+    assert!(!out.aborted);
+    assert_eq!(out.chunks_completed, 16);
+
+    // at most queue_depth buffered + 1 in the decoder's hand + 1 being
+    // produced can be staged at once
+    let geo_raw_per_chunk = raw / 16;
+    let max_chunk_wire = profile.wire_bytes(geo_raw_per_chunk); // 1080p upper bound
+    let bound = (depth + 2) * max_chunk_wire;
+    assert!(
+        out.peak_inflight_wire_bytes <= bound,
+        "peak staged bitstream {} exceeds bound {} ({} chunks deep)",
+        out.peak_inflight_wire_bytes,
+        bound,
+        depth + 2
+    );
+    assert!(out.peak_inflight_wire_bytes > 0);
+
+    // the throttle slows the wall clock, never the simulated clock
+    let (mut l2, mut p2, mut e2) = setup(BandwidthTrace::constant(8.0));
+    let unthrottled = execute_fetch(
+        &params(profile, tokens, raw),
+        &PipelineConfig::default(),
+        &CancelToken::new(),
+        &mut l2,
+        &mut p2,
+        &mut e2,
+    );
+    assert!((out.plan.done_at - unthrottled.plan.done_at).abs() < 1e-9);
+}
+
+/// The abort path: cancelling a spawned fetch stops the stages at a
+/// chunk boundary, drains the channels, and reports a partial plan.
+#[test]
+fn cancel_aborts_spawned_fetch_cleanly() {
+    let profile = SystemProfile::kvfetcher();
+    let raw = 100_000 * 245_760usize; // 10 chunks
+    let pipe = PipelineConfig {
+        queue_depth: 1,
+        decode_throttle: Some(Duration::from_millis(100)),
+    };
+    let (link, pool, est) = setup(BandwidthTrace::constant(8.0));
+    let job = spawn_fetch(params(profile, 100_000, raw), pipe, link, pool, est);
+    std::thread::sleep(Duration::from_millis(150));
+    job.cancel();
+    let (out, link_back, _pool_back, _est_back) = job.join();
+    assert!(out.aborted);
+    assert!(out.chunks_completed < 10, "{} chunks got through", out.chunks_completed);
+    assert_eq!(out.plan.chunks.len(), out.chunks_completed);
+    // the link reflects only what was actually transmitted
+    let sent: usize = link_back.bytes_sent;
+    assert!(sent > 0);
+}
+
+/// End-to-end: the engine-facing single-request TTFT primitive agrees
+/// between modes across the Fig. 18 grid's device/model pairs.
+#[test]
+fn single_request_ttft_agrees_between_exec_modes() {
+    let cfg = FetchConfig::default();
+    let bw = BandwidthTrace::constant(16.0);
+    for dev in [DeviceSpec::a100(), DeviceSpec::h20(), DeviceSpec::l20()] {
+        for model in [ModelSpec::lwm_7b(), ModelSpec::yi_34b()] {
+            let perf = PerfModel::new(dev.clone(), model);
+            let ctx = 100_000;
+            let reusable = 95_000;
+            let a = single_request_ttft(&perf, &SystemProfile::kvfetcher(), &cfg, &bw, ctx, reusable);
+            let p = single_request_ttft_exec(
+                &perf,
+                &SystemProfile::kvfetcher(),
+                &cfg,
+                &bw,
+                ctx,
+                reusable,
+                ExecMode::Pipelined,
+            );
+            let (at, pt) = (a.total(), p.total());
+            assert!(
+                (at - pt).abs() <= 0.05 * at,
+                "{} {}: analytic {:.4}s vs pipelined {:.4}s",
+                dev.name,
+                perf.model.name,
+                at,
+                pt
+            );
+        }
+    }
+}

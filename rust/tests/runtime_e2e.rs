@@ -1,5 +1,7 @@
 //! Runtime integration tests: real PJRT execution of the AOT artifacts.
-//! Skipped (cleanly) when `make artifacts` hasn't been run.
+//! Compiled only with `--features pjrt`; skipped (cleanly) when
+//! `make artifacts` hasn't been run or the `xla` stub is linked.
+#![cfg(feature = "pjrt")]
 
 use kvfetcher::engine::real::{accuracy_eval, code_prefix, RealEngine, WireCoding};
 use kvfetcher::runtime::{argmax, cache_to_kv, kv_to_cache, Runtime};

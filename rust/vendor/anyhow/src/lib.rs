@@ -1,0 +1,139 @@
+//! Minimal offline stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate, providing exactly the surface the `pjrt` feature of
+//! `kvfetcher` uses: an opaque [`Error`] carrying a message chain, the
+//! [`Result`] alias, the [`Context`] extension trait, and the
+//! [`anyhow!`] / [`bail!`] macros.
+//!
+//! The real crate adds backtraces, downcasting, and source-chain
+//! preservation; none of that is needed here, and vendoring this shim
+//! keeps the whole workspace buildable with zero network access. To use
+//! the real crate, replace the `path` dependency in `rust/Cargo.toml`
+//! with a registry version — the call sites are source-compatible.
+
+use std::fmt;
+
+/// An opaque error: a human-readable message with optional context
+/// prefixes accumulated via [`Context`].
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix this error with additional context.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that is what makes this blanket conversion
+// coherent alongside the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, a format string, or any
+/// displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn conversion_and_context() {
+        let e: Error = io_err().into();
+        assert_eq!(e.to_string(), "missing");
+        let r: Result<()> = Err(io_err()).with_context(|| "reading manifest");
+        assert_eq!(r.unwrap_err().to_string(), "reading manifest: missing");
+        let o: Result<u32> = None.context("no value");
+        assert_eq!(o.unwrap_err().to_string(), "no value");
+    }
+
+    #[test]
+    fn macros() {
+        let key = "vocab";
+        let e = anyhow!("manifest missing {key}");
+        assert_eq!(e.to_string(), "manifest missing vocab");
+        let e2 = anyhow!("{}: expected {}, got {}", "entry", 2, 3);
+        assert_eq!(e2.to_string(), "entry: expected 2, got 3");
+        let e3 = anyhow!(String::from("plain"));
+        assert_eq!(e3.to_string(), "plain");
+        fn fails() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(fails().unwrap_err().to_string(), "boom 1");
+    }
+}
