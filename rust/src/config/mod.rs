@@ -4,7 +4,7 @@
 
 use crate::cluster::{DeviceSpec, ModelSpec};
 use crate::engine::{EngineConfig, ExecMode};
-use crate::fetcher::FetchConfig;
+use crate::fetcher::{FetchConfig, PipelineConfig};
 use crate::net::BandwidthTrace;
 use crate::scheduler::SchedulerConfig;
 use crate::trace::TraceConfig;
@@ -18,6 +18,9 @@ pub struct Experiment {
     pub model: ModelSpec,
     pub bandwidth_gbps: f64,
     pub jitter: bool,
+    /// Remote storage-node addresses (`[network] remote = "a:p,b:p"`);
+    /// empty = in-process fetch simulation only.
+    pub remote_addrs: Vec<String>,
     pub engine: EngineConfig,
     pub trace: TraceConfig,
 }
@@ -30,6 +33,7 @@ impl Default for Experiment {
             model: ModelSpec::yi_34b(),
             bandwidth_gbps: 16.0,
             jitter: false,
+            remote_addrs: Vec::new(),
             engine: EngineConfig::default(),
             trace: TraceConfig::default(),
         }
@@ -76,6 +80,10 @@ impl Experiment {
                     ExecMode::Analytic
                 })
             },
+            pipe: PipelineConfig {
+                queue_depth: c.get_i64("fetch", "queue_depth", 4).max(1) as usize,
+                ..Default::default()
+            },
         };
         let trace = TraceConfig {
             seed: c.get_i64("trace", "seed", 0) as u64,
@@ -95,9 +103,15 @@ impl Experiment {
             model,
             bandwidth_gbps: c.get_f64("network", "bandwidth_gbps", 16.0),
             jitter: c.get_bool("network", "jitter", false),
+            remote_addrs: parse_addr_list(c.get_str("network", "remote", "")),
             engine,
             trace,
         }
+    }
+
+    /// Split a comma-separated `host:port` list (whitespace tolerated).
+    pub fn parse_addrs(list: &str) -> Vec<String> {
+        parse_addr_list(list)
     }
 
     pub fn bandwidth_trace(&self) -> BandwidthTrace {
@@ -116,6 +130,10 @@ impl Experiment {
     }
 }
 
+fn parse_addr_list(list: &str) -> Vec<String> {
+    list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(str::to_string).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -126,6 +144,8 @@ mod tests {
         assert_eq!(e.device.name, "H20");
         assert_eq!(e.model.name, "Yi-34B");
         assert!(e.engine.sched.fetching_aware);
+        assert!(e.remote_addrs.is_empty());
+        assert_eq!(e.engine.pipe.queue_depth, 4);
     }
 
     #[test]
@@ -138,11 +158,13 @@ model = "llama3-70b"
 [network]
 bandwidth_gbps = 4.0
 jitter = true
+remote = "127.0.0.1:7301, 127.0.0.1:7302"
 [scheduler]
 fetching_aware = false
 [fetch]
 adaptive = false
 chunk_tokens = 5000
+queue_depth = 2
 [engine]
 exec = "pipelined"
 [trace]
@@ -157,8 +179,10 @@ n_requests = 10
         assert!(!e.engine.fetch.adaptive);
         assert_eq!(e.engine.fetch.chunk_tokens, 5000);
         assert_eq!(e.engine.exec, ExecMode::Pipelined);
+        assert_eq!(e.engine.pipe.queue_depth, 2);
         assert_eq!(e.trace.n_requests, 10);
         assert!(e.jitter);
+        assert_eq!(e.remote_addrs, vec!["127.0.0.1:7301", "127.0.0.1:7302"]);
         // jitter trace stays within its clamp bounds
         let tr = e.bandwidth_trace();
         for i in 0..100 {

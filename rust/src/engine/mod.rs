@@ -55,6 +55,8 @@ pub struct EngineConfig {
     pub kv_capacity_tokens: Option<usize>,
     /// analytic fetch planning vs the threaded pipelined executor
     pub exec: ExecMode,
+    /// executor tuning (bounded-channel depth) for `ExecMode::Pipelined`
+    pub pipe: PipelineConfig,
 }
 
 impl Default for EngineConfig {
@@ -66,6 +68,7 @@ impl Default for EngineConfig {
             block_tokens: 256,
             kv_capacity_tokens: None,
             exec: ExecMode::Analytic,
+            pipe: PipelineConfig::default(),
         }
     }
 }
@@ -149,7 +152,7 @@ impl EngineSim {
                 };
                 execute_fetch(
                     &params,
-                    &PipelineConfig::default(),
+                    &self.cfg.pipe,
                     &CancelToken::new(),
                     &mut self.link,
                     &mut self.pool,
@@ -176,8 +179,8 @@ impl EngineSim {
         let mut reqs: Vec<ReqSim> = Vec::with_capacity(trace.len());
         let mut entries: Vec<SchedEntry> = Vec::with_capacity(trace.len());
         let capacity = self.kv_capacity_tokens();
-        let mut alloc =
-            BlockAllocator::new(capacity.div_ceil(self.cfg.block_tokens).max(1), self.cfg.block_tokens);
+        let blocks = capacity.div_ceil(self.cfg.block_tokens).max(1);
+        let mut alloc = BlockAllocator::new(blocks, self.cfg.block_tokens);
         let mut recorder = Recorder::default();
         let mut next_arrival = 0usize;
         let mut active_fetch_mem: Vec<(f64, usize)> = Vec::new(); // (done_at, bytes)
@@ -327,13 +330,16 @@ impl EngineSim {
             {
                 let busy = reqs.iter().any(|r| {
                     r.fetch.as_ref().is_some_and(|p| {
-                        p.chunks.iter().any(|c| c.dec_start < self.clock + dt && c.dec_end > self.clock)
+                        p.chunks
+                            .iter()
+                            .any(|c| c.dec_start < self.clock + dt && c.dec_end > self.clock)
                     })
                 });
                 if busy {
                     // iteration mixes prefill and decode; apply the mean
                     // of the two measured slowdowns, weighted by presence
-                    let factor = match (prefill_budget < self.cfg.sched.prefill_budget, !decode_ctxs.is_empty()) {
+                    let prefilled_any = prefill_budget < self.cfg.sched.prefill_budget;
+                    let factor = match (prefilled_any, !decode_ctxs.is_empty()) {
                         (true, true) => (prefill_slowdown + decode_slowdown) / 2.0,
                         (true, false) => prefill_slowdown,
                         (false, true) => decode_slowdown,
@@ -422,8 +428,8 @@ pub fn single_request_ttft_exec(
         }
         _ => {
             let mut link = NetLink::new(bw.clone());
-            let mut pool =
-                crate::asic::DecodePool::new(perf.dev.nvdecs * perf.n_gpus, perf.dev.decode_table());
+            let units = perf.dev.nvdecs * perf.n_gpus;
+            let mut pool = crate::asic::DecodePool::new(units, perf.dev.decode_table());
             let mut est = BandwidthEstimator::new(0.5);
             let raw = perf.kv_bytes(reusable);
             let plan = match exec {

@@ -8,13 +8,16 @@
 //!   decode pool — exactly the lookup-table prediction the paper's
 //!   fetcher performs, since the real pool state lives a stage away —
 //!   and blocks when the decoder falls behind (backpressure: at most
-//!   `queue_depth` chunks of bitstream are ever staged);
+//!   `queue_depth` chunks of bitstream are ever staged); with a
+//!   [`TransportSource`] attached it additionally streams each chunk's
+//!   real encoded bytes (in-process store or remote shard servers);
 //! * **decode** owns the decode pool, timestamps every chunk's decode
 //!   interval, and hands frames onward;
 //! * **restore** performs the frame-wise restoration hand-off: each
 //!   chunk's dequant+scatter overlaps its decode, leaving only the last
 //!   frame on the critical path (chunk-wise systems instead buffer all
-//!   decoded chunks and restore after the final decode).
+//!   decoded chunks and restore after the final decode). When payloads
+//!   flow, this stage decodes them back to quantized KV for real.
 //!
 //! All three stages honor a [`CancelToken`], the abort path used by the
 //! layer-wise admission rule and by request teardown: cancelling stops
@@ -25,7 +28,9 @@
 //! planner ([`super::plan_fetch`]) in the same order, so for an
 //! uncancelled fetch its timeline is *identical* — `ExecMode` switches
 //! the engine between the two without changing results, and the benches
-//! cross-check that equivalence (Fig. 18/19/23).
+//! cross-check that equivalence (Fig. 18/19/23). Attaching a transport
+//! source streams real bytes through the same pipeline without moving a
+//! single virtual timestamp (asserted by `tests/remote_fetch.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -39,6 +44,7 @@ use super::pipeline::{
     assemble_plan, chunk_geometry, decode_stage_times, pick_resolution, restore_tail_secs,
     wire_bytes_at, CancelToken, PipelineConfig, TransmittedChunk,
 };
+use super::transport::{decode_payload, ChunkPayload, DecodedChunk, TransportSource};
 use super::{ChunkFetch, FetchConfig, FetchPlan};
 
 /// Everything that describes one fetch, owned so a fetch can also run
@@ -65,6 +71,9 @@ pub struct FetchOutcome {
     /// peak bytes of transmitted-but-not-yet-decoded bitstream — the
     /// quantity the bounded channel caps at ~(queue_depth + 2) chunks
     pub peak_inflight_wire_bytes: usize,
+    /// chunks the restore stage decoded from real payload bytes; empty
+    /// unless a [`TransportSource`] was attached
+    pub restored: Vec<DecodedChunk>,
 }
 
 /// Execute one fetch through the three-stage threaded pipeline,
@@ -79,6 +88,22 @@ pub fn execute_fetch(
     pool: &mut DecodePool,
     est: &mut BandwidthEstimator,
 ) -> FetchOutcome {
+    execute_fetch_with_source(params, pipe, cancel, link, pool, est, None)
+}
+
+/// [`execute_fetch`] with an optional [`TransportSource`]: the transmit
+/// stage streams each chunk's encoded bytes from the source (blocking on
+/// its I/O), and the restore stage decodes them into
+/// [`FetchOutcome::restored`]. The virtual timeline is unaffected.
+pub fn execute_fetch_with_source(
+    params: &FetchParams,
+    pipe: &PipelineConfig,
+    cancel: &CancelToken,
+    link: &mut NetLink,
+    pool: &mut DecodePool,
+    est: &mut BandwidthEstimator,
+    source: Option<&mut dyn TransportSource>,
+) -> FetchOutcome {
     let geo = chunk_geometry(params.reusable_tokens, params.raw_bytes_total, &params.cfg);
     let now = params.now;
     let reusable_tokens = params.reusable_tokens;
@@ -87,8 +112,10 @@ pub fn execute_fetch(
     let depth = pipe.queue_depth.max(1);
     let throttle = pipe.decode_throttle;
 
-    let (to_decode, from_transmit) = mpsc::sync_channel::<TransmittedChunk>(depth);
-    let (to_restore, from_decode) = mpsc::sync_channel::<ChunkFetch>(depth);
+    let (to_decode, from_transmit) =
+        mpsc::sync_channel::<(TransmittedChunk, Option<ChunkPayload>)>(depth);
+    let (to_restore, from_decode) =
+        mpsc::sync_channel::<(usize, ChunkFetch, Option<ChunkPayload>)>(depth);
     let inflight = AtomicUsize::new(0);
     let peak_inflight = AtomicUsize::new(0);
 
@@ -98,11 +125,12 @@ pub fn execute_fetch(
     // is owned by the decode stage).
     let predictor_seed = pool.clone();
 
-    let (aborted, chunks, restored_through) = thread::scope(|s| {
+    let (aborted, chunks, restored_through, restored) = thread::scope(|s| {
         let inflight_ref = &inflight;
         let peak_ref = &peak_inflight;
 
         let transmit = s.spawn(move || {
+            let mut source = source;
             let mut predictor = predictor_seed;
             let mut aborted = false;
             for idx in 0..geo.n_chunks {
@@ -120,6 +148,20 @@ pub fn execute_fetch(
                     link.busy_until().max(now),
                     geo.scale,
                 );
+                // with a source attached, the transmit stage really pulls
+                // the chunk's bitstream (blocking socket/store I/O) — its
+                // wall latency rides this thread, never the virtual clock
+                let payload = match source.as_deref_mut() {
+                    Some(src) => match src.fetch_chunk(idx, res_idx) {
+                        Ok(p) => Some(p),
+                        Err(_) => {
+                            aborted = true;
+                            cancel.cancel();
+                            break;
+                        }
+                    },
+                    None => None,
+                };
                 let wire = wire_bytes_at(profile, wire_1080p, res_idx);
                 let (ts, te) = link.transmit(now, wire);
                 est.observe(wire, te - ts);
@@ -138,7 +180,7 @@ pub fn execute_fetch(
                     trans_end: te,
                 };
                 // blocks while `queue_depth` chunks are already staged
-                if to_decode.send(msg).is_err() {
+                if to_decode.send((msg, payload)).is_err() {
                     aborted = true; // decoder hung up (cancelled)
                     break;
                 }
@@ -149,7 +191,7 @@ pub fn execute_fetch(
         let decode = s.spawn(move || {
             let mut prev_dec_end = now;
             let mut aborted = false;
-            while let Ok(msg) = from_transmit.recv() {
+            while let Ok((msg, payload)) = from_transmit.recv() {
                 if cancel.is_cancelled() {
                     aborted = true;
                     break;
@@ -179,7 +221,7 @@ pub fn execute_fetch(
                     dec_end: de,
                     bubble: (ds - msg.trans_end).max(0.0),
                 };
-                if to_restore.send(chunk).is_err() {
+                if to_restore.send((msg.idx, chunk, payload)).is_err() {
                     aborted = true;
                     break;
                 }
@@ -189,9 +231,22 @@ pub fn execute_fetch(
 
         let restore = s.spawn(move || {
             let mut chunks: Vec<ChunkFetch> = Vec::new();
+            let mut restored: Vec<DecodedChunk> = Vec::new();
             let mut restored_through = now;
             let mut aborted = false;
-            while let Ok(chunk) = from_decode.recv() {
+            while let Ok((idx, chunk, payload)) = from_decode.recv() {
+                if let Some(p) = payload {
+                    // real restoration: decode the bitstream back into
+                    // the quantized chunk, overlapping later transmits
+                    match decode_payload(&p) {
+                        Ok(quant) => restored.push(DecodedChunk { idx, quant }),
+                        Err(_) => {
+                            aborted = true;
+                            cancel.cancel();
+                            break;
+                        }
+                    }
+                }
                 if cfg.framewise_restore && profile.framewise_restore {
                     // frame-wise hand-off: restoration of this chunk ran
                     // alongside its decode; only the final frame trails
@@ -204,14 +259,14 @@ pub fn execute_fetch(
                     break;
                 }
             }
-            (chunks, restored_through, aborted)
+            (chunks, restored_through, restored, aborted)
         });
 
         let t_aborted = transmit.join().expect("transmit stage panicked");
         let d_aborted = decode.join().expect("decode stage panicked");
-        let (chunks, restored_through, r_aborted) =
+        let (chunks, restored_through, restored, r_aborted) =
             restore.join().expect("restore stage panicked");
-        (t_aborted || d_aborted || r_aborted, chunks, restored_through)
+        (t_aborted || d_aborted || r_aborted, chunks, restored_through, restored)
     });
 
     let chunks_completed = chunks.len();
@@ -230,6 +285,7 @@ pub fn execute_fetch(
         aborted,
         chunks_completed,
         peak_inflight_wire_bytes: peak_inflight.load(Ordering::SeqCst),
+        restored,
     }
 }
 
@@ -278,5 +334,6 @@ pub fn spawn_fetch(
 // The executor's behavioral contracts (analytic equivalence across
 // profiles/bandwidths, pipelined-beats-serialized, backpressure bound,
 // cancellation) are covered by the integration suite in
-// `tests/pipeline_exec.rs` — kept there, once, because they involve
-// wall-clock throttles and whole-plan comparisons.
+// `tests/pipeline_exec.rs`; the transport-source path (real bytes over
+// loopback shards, bit-exact restore, timeline invariance) lives in
+// `tests/remote_fetch.rs`.

@@ -10,9 +10,13 @@
 
 pub mod executor;
 pub mod pipeline;
+pub mod transport;
 
-pub use executor::{execute_fetch, spawn_fetch, FetchJob, FetchOutcome, FetchParams};
+pub use executor::{
+    execute_fetch, execute_fetch_with_source, spawn_fetch, FetchJob, FetchOutcome, FetchParams,
+};
 pub use pipeline::{serialized_fetch, CancelToken, PipelineConfig};
+pub use transport::{ChunkPayload, DecodedChunk, TransportSource};
 
 use crate::asic::DecodePool;
 use crate::baselines::{Decompress, SystemProfile};
@@ -308,9 +312,11 @@ mod tests {
         let cfg = FetchConfig::default();
 
         let (mut l1, mut p1, mut e1) = setup(16.0);
-        let ours = plan_fetch(0.0, 100_000, raw, &SystemProfile::kvfetcher(), &cfg, &mut l1, &mut p1, &mut e1);
+        let us = SystemProfile::kvfetcher();
+        let ours = plan_fetch(0.0, 100_000, raw, &us, &cfg, &mut l1, &mut p1, &mut e1);
         let (mut l2, mut p2, mut e2) = setup(16.0);
-        let cg = plan_fetch(0.0, 100_000, raw, &SystemProfile::cachegen(&dev), &cfg, &mut l2, &mut p2, &mut e2);
+        let them = SystemProfile::cachegen(&dev);
+        let cg = plan_fetch(0.0, 100_000, raw, &them, &cfg, &mut l2, &mut p2, &mut e2);
         assert!(ours.done_at < cg.done_at, "ours {} vs cachegen {}", ours.done_at, cg.done_at);
     }
 

@@ -334,7 +334,8 @@ mod tests {
         let cfg = FetchConfig::default();
         let raw = 500_000 * 10_000usize;
         let (mut link, mut pool, mut est) = setup(4.0);
-        let serial = serialized_fetch(0.0, 100_000, raw, &profile, &cfg, &mut link, &mut pool, &mut est);
+        let serial =
+            serialized_fetch(0.0, 100_000, raw, &profile, &cfg, &mut link, &mut pool, &mut est);
         assert_eq!(serial.chunks.len(), 10);
         for w in serial.chunks.windows(2) {
             assert!(w[1].trans_start >= w[0].dec_end - 1e-9);

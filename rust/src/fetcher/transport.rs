@@ -1,0 +1,136 @@
+//! Transport abstraction for the pipelined executor.
+//!
+//! `ExecMode::Pipelined` always drives the three-stage virtual-time
+//! model; a [`TransportSource`] additionally lets the transmit stage
+//! stream *real encoded chunk bytes* — from an in-process storage node
+//! or from remote shard servers over TCP (see `service::source`) —
+//! which the restore stage then decodes back into quantized KV. The
+//! virtual timeline is computed from the analytic stage model either
+//! way, so attaching a source never changes a fetch's timestamps; it
+//! changes what flows through the bounded channels from stage markers
+//! to actual bitstream.
+
+use crate::codec;
+use crate::layout::{self, InterLayout};
+use crate::quant::QuantKv;
+
+/// The encoded bytes of one fetched chunk, as they arrive off the wire:
+/// one lossless video bitstream per 3-plane group (layout meta in-band)
+/// plus the dequantization scale sideband.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkPayload {
+    pub hash: u64,
+    pub tokens: usize,
+    pub resolution: String,
+    pub scales: Vec<f32>,
+    pub group_bytes: Vec<Vec<u8>>,
+}
+
+impl ChunkPayload {
+    /// Actual bytes that crossed the wire (bitstreams + scale sideband).
+    pub fn wire_bytes(&self) -> usize {
+        self.group_bytes.iter().map(|g| g.len()).sum::<usize>() + self.scales.len() * 4
+    }
+}
+
+/// A chunk the restore stage fully decoded back to quantized KV.
+#[derive(Debug, Clone)]
+pub struct DecodedChunk {
+    /// Position of the chunk within the fetched prefix (0-based).
+    pub idx: usize,
+    pub quant: QuantKv,
+}
+
+/// Where the transmit stage streams chunk bytes from.
+///
+/// `fetch_chunk(idx, res_idx)` must return the encoded payload of the
+/// `idx`-th chunk of the prefix at the ladder resolution `res_idx`
+/// (0..4, 240p..1080p nominal — sources map indices onto the variants
+/// they actually store). Blocking I/O is expected: the call runs on the
+/// executor's transmit thread, so a slow source backpressures exactly
+/// like a slow link.
+pub trait TransportSource: Send {
+    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, String>;
+}
+
+/// Decode a payload back into the quantized chunk — the restore stage's
+/// real work: parse each group's in-band layout meta, decode the video,
+/// and scatter frames into the chunk buffer (shared group decoder:
+/// [`layout::decode_group_into`]).
+pub fn decode_payload(p: &ChunkPayload) -> Result<QuantKv, String> {
+    let first = p.group_bytes.first().ok_or_else(|| "payload has no groups".to_string())?;
+    let hdr0 = codec::parse_header(first)?;
+    let l0 = InterLayout::from_meta(&hdr0.meta)?;
+    let mut q = QuantKv {
+        tokens: l0.tokens,
+        planes: l0.planes_total,
+        heads: l0.heads,
+        head_dim: l0.head_dim,
+        data: vec![0; l0.tokens * l0.planes_total * l0.heads * l0.head_dim],
+        scales: p.scales.clone(),
+    };
+    for gb in &p.group_bytes {
+        let lay = layout::decode_group_into(gb, &mut q.data)?;
+        if lay.tokens != q.tokens || lay.planes_total != q.planes {
+            return Err("group layouts disagree on chunk shape".into());
+        }
+    }
+    Ok(q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::CodecConfig;
+    use crate::layout::{self, IntraLayout, Resolution};
+    use crate::quant::quantize;
+    use crate::tensor::KvCache;
+    use crate::util::Prng;
+
+    fn payload_of(q: &crate::quant::QuantKv) -> ChunkPayload {
+        let res = Resolution { name: "tiny", w: 64, h: 32 };
+        let intra = IntraLayout { hr: 2, hc: 4, dr: 8, dc: 4 };
+        let groups = layout::encode_chunk(q, res, intra, &CodecConfig::lossless()).unwrap();
+        ChunkPayload {
+            hash: 7,
+            tokens: q.tokens,
+            resolution: "tiny".into(),
+            scales: q.scales.clone(),
+            group_bytes: groups.into_iter().map(|g| g.bytes).collect(),
+        }
+    }
+
+    #[test]
+    fn decode_payload_roundtrips_bit_exact() {
+        let mut rng = Prng::new(21);
+        let kv = KvCache::synthetic(&mut rng, 48, 6, 8, 32, 0.9);
+        let q = quantize(&kv);
+        let p = payload_of(&q);
+        let groups: usize = p.group_bytes.iter().map(|g| g.len()).sum();
+        assert_eq!(p.wire_bytes(), groups + q.scales.len() * 4);
+        let back = decode_payload(&p).unwrap();
+        assert_eq!(back.data, q.data, "payload decode must be bit-exact");
+        assert_eq!(back.scales, q.scales);
+        assert_eq!(back.tokens, q.tokens);
+    }
+
+    #[test]
+    fn decode_payload_rejects_garbage() {
+        assert!(decode_payload(&ChunkPayload {
+            hash: 0,
+            tokens: 0,
+            resolution: "x".into(),
+            scales: vec![],
+            group_bytes: vec![],
+        })
+        .is_err());
+        assert!(decode_payload(&ChunkPayload {
+            hash: 0,
+            tokens: 0,
+            resolution: "x".into(),
+            scales: vec![],
+            group_bytes: vec![vec![1, 2, 3]],
+        })
+        .is_err());
+    }
+}

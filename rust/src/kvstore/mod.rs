@@ -1,4 +1,5 @@
-//! Remote KV storage node: encoded-chunk registry + token-prefix index.
+//! Remote KV storage node: encoded-chunk registry + token-prefix index,
+//! with capacity accounting and LRU eviction.
 //!
 //! Chunks are registered offline ("KV caches are chunked and encoded
 //! offline, stored at remote storage nodes", §3.1) in multiple
@@ -9,6 +10,12 @@
 //! Prefix matching uses vLLM-style chained block hashes: block i's key
 //! is hash(key_{i-1}, tokens of block i), so a prefix matches iff every
 //! earlier block matches.
+//!
+//! A node may be capacity-bounded (`with_capacity`): registering past
+//! the limit evicts least-recently-*fetched* chunks first. Chunks that
+//! are currently being served over the wire are **pinned** and never
+//! evicted — evicting mid-stream would free space the connection is
+//! still accounting against (see `service::server`).
 
 use std::collections::HashMap;
 
@@ -38,7 +45,7 @@ pub fn prefix_hashes(tokens: &[u32], block_tokens: usize) -> Vec<u64> {
 }
 
 /// One stored resolution variant of an encoded chunk group set.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StoredVariant {
     pub resolution: &'static str,
     /// Encoded bytes per 3-plane group video.
@@ -48,7 +55,7 @@ pub struct StoredVariant {
 }
 
 /// A stored chunk: all resolution variants + quantization scales.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct StoredChunk {
     pub hash: u64,
     pub tokens: usize,
@@ -65,26 +72,159 @@ impl StoredChunk {
     pub fn wire_bytes(&self, resolution: &str) -> Option<usize> {
         self.variant(resolution).map(|v| v.total_bytes + self.scales.len() * 4)
     }
+
+    /// Storage-cost bytes of this chunk (all variants + scales).
+    pub fn stored_bytes(&self) -> usize {
+        self.variants.iter().map(|v| v.total_bytes).sum::<usize>() + self.scales.len() * 4
+    }
+}
+
+#[derive(Debug)]
+struct Entry {
+    chunk: StoredChunk,
+    /// LRU stamp: the node's `tick` at the last register/fetch.
+    last_used: u64,
+    /// Pin count: > 0 while the chunk is being streamed to a client.
+    pins: u32,
+}
+
+/// What `register` did: whether the chunk was stored, and which chunks
+/// were evicted to make room (empty when unbounded or space sufficed).
+#[derive(Debug, Clone, Default)]
+pub struct RegisterOutcome {
+    pub stored: bool,
+    pub evicted: Vec<u64>,
 }
 
 /// A remote storage node.
 #[derive(Debug, Default)]
 pub struct StorageNode {
-    chunks: HashMap<u64, StoredChunk>,
+    chunks: HashMap<u64, Entry>,
     pub block_tokens: usize,
+    capacity_bytes: Option<usize>,
+    used_bytes: usize,
+    tick: u64,
+    evictions: u64,
 }
 
 impl StorageNode {
     pub fn new(block_tokens: usize) -> Self {
-        StorageNode { chunks: HashMap::new(), block_tokens }
+        StorageNode { block_tokens, ..Default::default() }
     }
 
-    pub fn register(&mut self, chunk: StoredChunk) {
-        self.chunks.insert(chunk.hash, chunk);
+    /// A node that evicts least-recently-fetched chunks past `capacity`.
+    pub fn with_capacity(block_tokens: usize, capacity_bytes: usize) -> Self {
+        StorageNode { block_tokens, capacity_bytes: Some(capacity_bytes), ..Default::default() }
     }
 
+    pub fn capacity_bytes(&self) -> Option<usize> {
+        self.capacity_bytes
+    }
+
+    /// Bytes currently stored (all chunks, all variants, + scales).
+    pub fn used_bytes(&self) -> usize {
+        self.used_bytes
+    }
+
+    /// Chunks evicted over the node's lifetime.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Register a chunk, evicting LRU unpinned chunks if the node is
+    /// capacity-bounded. If the chunk cannot fit even after evicting
+    /// everything unpinned, nothing is evicted and `stored` is false.
+    /// Re-registering a hash that is currently pinned (mid-stream) is
+    /// refused: replacing it would free accounting space the in-flight
+    /// send still occupies — the same hole eviction-pinning closes.
+    pub fn register(&mut self, chunk: StoredChunk) -> RegisterOutcome {
+        if self.chunks.get(&chunk.hash).is_some_and(|e| e.pins > 0) {
+            return RegisterOutcome { stored: false, evicted: Vec::new() };
+        }
+        let new_bytes = chunk.stored_bytes();
+        let replaced_bytes = self.chunks.get(&chunk.hash).map(|e| e.chunk.stored_bytes());
+        let after_replace = self.used_bytes - replaced_bytes.unwrap_or(0);
+
+        let mut evicted = Vec::new();
+        if let Some(cap) = self.capacity_bytes {
+            if after_replace + new_bytes > cap {
+                // plan the eviction set (LRU-first among unpinned) before
+                // touching anything, so an unsatisfiable register is a no-op
+                let mut victims: Vec<(u64, u64, usize)> = self
+                    .chunks
+                    .values()
+                    .filter(|e| e.pins == 0 && e.chunk.hash != chunk.hash)
+                    .map(|e| (e.last_used, e.chunk.hash, e.chunk.stored_bytes()))
+                    .collect();
+                victims.sort_unstable();
+                let mut freeable = after_replace + new_bytes - cap;
+                for (_, h, b) in victims {
+                    if freeable == 0 {
+                        break;
+                    }
+                    evicted.push(h);
+                    freeable = freeable.saturating_sub(b);
+                }
+                if freeable > 0 {
+                    return RegisterOutcome { stored: false, evicted: Vec::new() };
+                }
+                for h in &evicted {
+                    let e = self.chunks.remove(h).expect("victim exists");
+                    self.used_bytes -= e.chunk.stored_bytes();
+                    self.evictions += 1;
+                }
+            }
+        }
+
+        if let Some(old) = replaced_bytes {
+            self.used_bytes -= old;
+        }
+        self.used_bytes += new_bytes;
+        self.tick += 1;
+        // any replaced entry was unpinned (pinned replaces are refused)
+        self.chunks.insert(chunk.hash, Entry { chunk, last_used: self.tick, pins: 0 });
+        RegisterOutcome { stored: true, evicted }
+    }
+
+    /// Peek at a chunk without touching its LRU recency.
     pub fn get(&self, hash: u64) -> Option<&StoredChunk> {
-        self.chunks.get(&hash)
+        self.chunks.get(&hash).map(|e| &e.chunk)
+    }
+
+    /// Look up a chunk for serving: touches its LRU recency.
+    pub fn fetch(&mut self, hash: u64) -> Option<&StoredChunk> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.chunks.get_mut(&hash) {
+            Some(e) => {
+                e.last_used = tick;
+                Some(&e.chunk)
+            }
+            None => None,
+        }
+    }
+
+    pub fn contains(&self, hash: u64) -> bool {
+        self.chunks.contains_key(&hash)
+    }
+
+    /// Pin a chunk while it is streamed to a client; pinned chunks are
+    /// never evicted. Returns false if the chunk is absent.
+    pub fn pin(&mut self, hash: u64) -> bool {
+        match self.chunks.get_mut(&hash) {
+            Some(e) => {
+                e.pins += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one pin (no-op if absent or already unpinned).
+    pub fn unpin(&mut self, hash: u64) {
+        if let Some(e) = self.chunks.get_mut(&hash) {
+            e.pins = e.pins.saturating_sub(1);
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -111,32 +251,32 @@ impl StorageNode {
 
     /// Total stored bytes (all variants) — the storage-cost metric.
     pub fn stored_bytes(&self) -> usize {
-        self.chunks
-            .values()
-            .map(|c| {
-                c.variants.iter().map(|v| v.total_bytes).sum::<usize>() + c.scales.len() * 4
-            })
-            .sum()
+        self.chunks.values().map(|e| e.chunk.stored_bytes()).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest;
 
     fn toks(n: usize, seed: u32) -> Vec<u32> {
         (0..n as u32).map(|i| i.wrapping_mul(2654435761).wrapping_add(seed)).collect()
     }
 
     fn dummy_chunk(hash: u64, tokens: usize) -> StoredChunk {
+        sized_chunk(hash, tokens, 100)
+    }
+
+    fn sized_chunk(hash: u64, tokens: usize, bytes: usize) -> StoredChunk {
         StoredChunk {
             hash,
             tokens,
             scales: vec![1.0; 8],
             variants: vec![StoredVariant {
                 resolution: "240p",
-                group_bytes: vec![vec![0u8; 100]],
-                total_bytes: 100,
+                group_bytes: vec![vec![0u8; bytes]],
+                total_bytes: bytes,
                 n_frames: 4,
             }],
         }
@@ -154,6 +294,37 @@ mod tests {
         assert_ne!(ha[2], hb[2]);
         // chaining: divergence propagates to all later blocks
         assert_ne!(ha[3], hb[3]);
+    }
+
+    #[test]
+    fn prop_mutating_any_block_changes_all_later_hashes() {
+        // Prefix-match soundness: flipping any token changes the hash of
+        // its block and, through chaining, of *every* later block, while
+        // all earlier blocks are untouched.
+        proptest::check(61, 60, "chained-hash-soundness", |rng| {
+            let block = 1 + rng.below(24) as usize;
+            let blocks = 2 + rng.below(8) as usize;
+            let n = block * blocks;
+            let a = toks(n, rng.next_u64() as u32);
+            let pos = rng.below(n as u64) as usize;
+            let mut b = a.clone();
+            b[pos] ^= 1 + rng.below(u32::MAX as u64 - 1) as u32;
+            let ha = prefix_hashes(&a, block);
+            let hb = prefix_hashes(&b, block);
+            if ha.len() != blocks || hb.len() != blocks {
+                return Err(format!("expected {blocks} hashes, got {}/{}", ha.len(), hb.len()));
+            }
+            let mutated = pos / block;
+            for i in 0..blocks {
+                if i < mutated && ha[i] != hb[i] {
+                    return Err(format!("block {i} before mutation at {mutated} changed"));
+                }
+                if i >= mutated && ha[i] == hb[i] {
+                    return Err(format!("block {i} at/after mutation at {mutated} unchanged"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]
@@ -190,6 +361,109 @@ mod tests {
         node.register(dummy_chunk(hashes[0], 16));
         node.register(dummy_chunk(hashes[1], 16));
         assert_eq!(node.stored_bytes(), 2 * (100 + 32));
+        assert_eq!(node.used_bytes(), node.stored_bytes());
         assert_eq!(node.len(), 2);
+    }
+
+    #[test]
+    fn unbounded_node_never_evicts() {
+        let mut node = StorageNode::new(16);
+        for h in 0..100u64 {
+            let out = node.register(sized_chunk(h + 1, 16, 1000));
+            assert!(out.stored && out.evicted.is_empty());
+        }
+        assert_eq!(node.len(), 100);
+        assert_eq!(node.evictions(), 0);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_fetched_first() {
+        // each chunk is 132 bytes (100 payload + 8 scales * 4)
+        let mut node = StorageNode::with_capacity(16, 3 * 132);
+        node.register(sized_chunk(1, 16, 100));
+        node.register(sized_chunk(2, 16, 100));
+        node.register(sized_chunk(3, 16, 100));
+        // touch 1 so 2 becomes the LRU victim
+        assert!(node.fetch(1).is_some());
+        let out = node.register(sized_chunk(4, 16, 100));
+        assert!(out.stored);
+        assert_eq!(out.evicted, vec![2]);
+        assert!(node.contains(1) && node.contains(3) && node.contains(4));
+        assert!(!node.contains(2));
+        assert_eq!(node.evictions(), 1);
+        assert!(node.used_bytes() <= 3 * 132);
+    }
+
+    #[test]
+    fn pinned_chunk_never_evicted() {
+        // the never-evict-the-chunk-currently-being-fetched edge case:
+        // chunk 1 is LRU-oldest but mid-stream (pinned) — eviction must
+        // skip it and take the next-oldest instead.
+        let mut node = StorageNode::with_capacity(16, 2 * 132);
+        node.register(sized_chunk(1, 16, 100));
+        node.register(sized_chunk(2, 16, 100));
+        assert!(node.pin(1));
+        let out = node.register(sized_chunk(3, 16, 100));
+        assert!(out.stored);
+        assert_eq!(out.evicted, vec![2], "pinned LRU chunk must be skipped");
+        assert!(node.contains(1));
+        // with everything pinned, a register that needs space must fail
+        // without evicting anything
+        assert!(node.pin(3));
+        let out = node.register(sized_chunk(4, 16, 100));
+        assert!(!out.stored && out.evicted.is_empty());
+        assert_eq!(node.len(), 2);
+        // unpin releases it for eviction again
+        node.unpin(1);
+        let out = node.register(sized_chunk(4, 16, 100));
+        assert!(out.stored);
+        assert_eq!(out.evicted, vec![1]);
+    }
+
+    #[test]
+    fn oversized_chunk_rejected_without_collateral_eviction() {
+        let mut node = StorageNode::with_capacity(16, 300);
+        node.register(sized_chunk(1, 16, 100));
+        let out = node.register(sized_chunk(2, 16, 10_000));
+        assert!(!out.stored && out.evicted.is_empty());
+        assert!(node.contains(1), "failed register must not evict");
+        assert_eq!(node.used_bytes(), 132);
+    }
+
+    #[test]
+    fn reregister_same_hash_replaces_in_place() {
+        let mut node = StorageNode::with_capacity(16, 400);
+        node.register(sized_chunk(1, 16, 100));
+        node.register(sized_chunk(2, 16, 100));
+        // replacing 1 with a bigger body must account the delta, not
+        // double-count, and must not evict 2
+        let out = node.register(sized_chunk(1, 16, 200));
+        assert!(out.stored && out.evicted.is_empty());
+        assert_eq!(node.len(), 2);
+        assert_eq!(node.used_bytes(), (200 + 32) + (100 + 32));
+        assert_eq!(node.used_bytes(), node.stored_bytes());
+    }
+
+    #[test]
+    fn pinned_chunk_cannot_be_replaced_in_place() {
+        // replacing a mid-stream chunk would free accounting space the
+        // in-flight send still occupies — refused like an eviction
+        let mut node = StorageNode::with_capacity(16, 1000);
+        node.register(sized_chunk(1, 16, 500));
+        assert!(node.pin(1));
+        let out = node.register(sized_chunk(1, 16, 10));
+        assert!(!out.stored && out.evicted.is_empty());
+        assert_eq!(node.used_bytes(), 500 + 32, "pinned chunk must keep its accounting");
+        node.unpin(1);
+        let out = node.register(sized_chunk(1, 16, 10));
+        assert!(out.stored);
+        assert_eq!(node.used_bytes(), 10 + 32);
+    }
+
+    #[test]
+    fn unpin_of_missing_hash_is_noop() {
+        let mut node = StorageNode::new(16);
+        node.unpin(42);
+        assert!(!node.pin(42));
     }
 }

@@ -256,10 +256,27 @@ pub fn chunk_wire_bytes(groups: &[EncodedGroup], n_scales: usize) -> usize {
     groups.iter().map(|g| g.bytes.len()).sum::<usize>() + n_scales * 4
 }
 
+/// Decode one group's bitstream into the chunk payload buffer, driving
+/// the frame-wise restore path from the *in-band* layout metadata.
+/// Returns the parsed layout. Shared by the offline decode path
+/// ([`decode_chunk`]) and the wire path (`fetcher::transport`).
+pub fn decode_group_into(bytes: &[u8], out: &mut [u8]) -> Result<InterLayout, String> {
+    let hdr = crate::codec::parse_header(bytes)?;
+    let lay = InterLayout::from_meta(&hdr.meta)?;
+    let mut fi = 0usize;
+    crate::codec::decode_video_with(bytes, |frame| {
+        lay.restore_frame(frame, fi, out);
+        fi += 1;
+    })?;
+    if fi != lay.n_frames {
+        return Err(format!("group decoded {fi} frames, layout expects {}", lay.n_frames));
+    }
+    Ok(lay)
+}
+
 /// Decode an encoded chunk back to a QuantKv (scales supplied by the
 /// out-of-band chunk metadata the storage node keeps).
 pub fn decode_chunk(groups: &[EncodedGroup], scales: Vec<f32>) -> Result<QuantKv, String> {
-    use crate::codec::decode_video_with;
     let l0 = &groups[0].layout;
     let mut q = QuantKv {
         tokens: l0.tokens,
@@ -270,14 +287,9 @@ pub fn decode_chunk(groups: &[EncodedGroup], scales: Vec<f32>) -> Result<QuantKv
         scales,
     };
     for g in groups {
-        let mut fi = 0usize;
-        let layout = &g.layout;
-        decode_video_with(&g.bytes, |frame| {
-            layout.restore_frame(frame, fi, &mut q.data);
-            fi += 1;
-        })?;
-        if fi != g.layout.n_frames {
-            return Err("frame count mismatch".into());
+        let lay = decode_group_into(&g.bytes, &mut q.data)?;
+        if lay != g.layout {
+            return Err("in-band layout disagrees with stored layout".into());
         }
     }
     Ok(q)

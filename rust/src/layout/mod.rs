@@ -6,7 +6,7 @@ pub mod inter;
 pub mod intra;
 
 pub use inter::{
-    chunk_wire_bytes, decode_chunk, encode_chunk, resolution_by_name, EncodedGroup, InterLayout,
-    Resolution, RESOLUTIONS,
+    chunk_wire_bytes, decode_chunk, decode_group_into, encode_chunk, resolution_by_name,
+    EncodedGroup, InterLayout, Resolution, RESOLUTIONS,
 };
 pub use intra::{candidates, feasible, search, IntraLayout, SearchRow};

@@ -32,6 +32,7 @@ pub mod metrics;
 pub mod net;
 pub mod runtime;
 pub mod scheduler;
+pub mod service;
 pub mod layout;
 pub mod quant;
 pub mod tensor;

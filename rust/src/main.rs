@@ -1,8 +1,10 @@
 //! KVFetcher CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
-//!   serve     — run a serving-trace simulation and report TTFT/TPOT
-//!   fetch     — single-request TTFT breakdown across all systems
+//!   serve     — run a serving-trace simulation and report TTFT/TPOT;
+//!               with --listen, host storage shard servers instead
+//!   fetch     — single-request TTFT breakdown across all systems;
+//!               with --remote, stream a prefix from storage shards
 //!   calibrate — measure real-codec compression ratios per system
 //!   layout    — run the intra-frame layout search and print the table
 //!   real      — smoke-test the PJRT runtime on the AOT artifacts
@@ -19,6 +21,26 @@ use kvfetcher::tensor::KvCache;
 use kvfetcher::trace::generate;
 use kvfetcher::util::table::{fmt_secs, markdown};
 use kvfetcher::util::Prng;
+
+/// Shared defaults of the `--listen` / `--remote` demo dataset: both
+/// ends rebuild the same prefix from these, so the fetch side can check
+/// bit-exactness without any out-of-band ground truth.
+const DEMO_SEED: u64 = 42;
+const DEMO_CHUNKS: usize = 8;
+const DEMO_CHUNK_TOKENS: usize = 64;
+
+fn demo_params(args: &[String]) -> (u64, usize, usize) {
+    let seed = parse_flag(args, "--seed")
+        .map(|s| s.parse().expect("--seed takes a u64"))
+        .unwrap_or(DEMO_SEED);
+    let n_chunks = parse_flag(args, "--chunks")
+        .map(|s| s.parse().expect("--chunks takes a count"))
+        .unwrap_or(DEMO_CHUNKS);
+    let chunk_tokens = parse_flag(args, "--chunk-tokens")
+        .map(|s| s.parse().expect("--chunk-tokens takes a count"))
+        .unwrap_or(DEMO_CHUNK_TOKENS);
+    (seed, n_chunks, chunk_tokens)
+}
 
 fn parse_flag(args: &[String], name: &str) -> Option<String> {
     args.iter()
@@ -54,7 +76,174 @@ fn load_experiment(args: &[String]) -> Experiment {
     exp
 }
 
+/// `serve --listen a:p,b:p` — host one storage shard server per
+/// address, populated with the deterministic demo prefix (round-robin
+/// chunk placement), and block until killed.
+fn cmd_serve_store(listen: &str, args: &[String]) {
+    use kvfetcher::kvstore::StorageNode;
+    use kvfetcher::net::BandwidthTrace;
+    use kvfetcher::service::{
+        demo_prefix, Placement, ServerConfig, ShardMap, StorageServer, ThrottleSpec,
+    };
+
+    let addrs = Experiment::parse_addrs(listen);
+    if addrs.is_empty() {
+        eprintln!("--listen takes a comma-separated address list");
+        std::process::exit(2);
+    }
+    let (seed, n_chunks, chunk_tokens) = demo_params(args);
+    let capacity: Option<usize> =
+        parse_flag(args, "--capacity").map(|s| s.parse().expect("--capacity takes bytes"));
+    let throttle = parse_flag(args, "--throttle-gbps").map(|s| {
+        let gbps: f64 = s.parse().expect("--throttle-gbps takes Gbps");
+        ThrottleSpec::new(BandwidthTrace::constant(gbps), 1.0)
+    });
+
+    let demo = demo_prefix(seed, n_chunks, chunk_tokens);
+    let map = ShardMap::new(addrs.len(), Placement::RoundRobin);
+    let mut nodes: Vec<StorageNode> = (0..addrs.len())
+        .map(|_| match capacity {
+            Some(c) => StorageNode::with_capacity(chunk_tokens, c),
+            None => StorageNode::new(chunk_tokens),
+        })
+        .collect();
+    for (i, chunk) in demo.chunks.iter().enumerate() {
+        let out = nodes[map.shard_of(i, chunk.hash)].register(chunk.clone());
+        if !out.stored {
+            eprintln!("chunk {i} does not fit shard capacity {capacity:?}");
+            std::process::exit(1);
+        }
+    }
+
+    let mut servers = Vec::new();
+    for (i, (addr, node)) in addrs.iter().zip(nodes).enumerate() {
+        let chunks = node.len();
+        let bytes = node.used_bytes();
+        let cfg = ServerConfig { throttle: throttle.clone() };
+        match StorageServer::spawn(addr, node, cfg) {
+            Ok(server) => {
+                println!(
+                    "# shard {i}: listening on {} ({chunks} chunks, {bytes} bytes)",
+                    server.local_addr()
+                );
+                servers.push(server);
+            }
+            Err(e) => {
+                eprintln!("failed to bind shard {i} at {addr}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!(
+        "# serving demo prefix: seed={seed} chunks={n_chunks} chunk_tokens={chunk_tokens}; \
+         fetch with `kvfetcher fetch --remote {}`",
+        addrs.join(",")
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// `fetch --remote a:p,b:p` (or `[network] remote` in the config) —
+/// stream the demo prefix from storage shards through the pipelined
+/// executor and verify bit-exact restore.
+fn cmd_fetch_remote(exp: Experiment, addrs: Vec<String>, args: &[String]) {
+    use kvfetcher::asic::DecodePool;
+    use kvfetcher::fetcher::{
+        execute_fetch_with_source, CancelToken, FetchConfig, FetchParams,
+    };
+    use kvfetcher::net::{BandwidthEstimator, NetLink};
+    use kvfetcher::service::{demo_prefix, Placement, RemoteSource, ShardRouter, DEMO_LADDER};
+
+    let (seed, n_chunks, chunk_tokens) = demo_params(args);
+    let demo = demo_prefix(seed, n_chunks, chunk_tokens);
+
+    let router = match ShardRouter::connect(&addrs, Placement::RoundRobin) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cannot connect to {addrs:?}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let matched = router.match_prefix(&demo.tokens, chunk_tokens).unwrap_or_else(|e| {
+        eprintln!("prefix lookup failed: {e}");
+        std::process::exit(1);
+    });
+    if matched.len() != n_chunks {
+        let found = matched.len();
+        eprintln!("only {found}/{n_chunks} chunks stored remotely; wrong --seed or shards?");
+        std::process::exit(1);
+    }
+
+    println!(
+        "# remote fetch: {} shards | {} chunks x {} tokens | virtual link {} Gbps",
+        router.n_shards(),
+        n_chunks,
+        chunk_tokens,
+        exp.bandwidth_gbps,
+    );
+    let total_tokens = n_chunks * chunk_tokens;
+    let raw_bytes_total = total_tokens
+        * kvfetcher::service::DEMO_PLANES
+        * kvfetcher::service::DEMO_HEADS
+        * kvfetcher::service::DEMO_HEAD_DIM
+        * 2;
+    let params = FetchParams {
+        now: 0.0,
+        reusable_tokens: total_tokens,
+        raw_bytes_total,
+        profile: SystemProfile::kvfetcher(),
+        cfg: FetchConfig { chunk_tokens, adaptive: false, fixed_res: 3, ..Default::default() },
+    };
+    let mut source = RemoteSource::new(router, matched, DEMO_LADDER);
+    let mut link = NetLink::new(exp.bandwidth_trace());
+    let mut pool = DecodePool::new(exp.device.nvdecs, exp.device.decode_table());
+    let mut est = BandwidthEstimator::new(0.5);
+    let out = execute_fetch_with_source(
+        &params,
+        &exp.engine.pipe,
+        &CancelToken::new(),
+        &mut link,
+        &mut pool,
+        &mut est,
+        Some(&mut source),
+    );
+    if out.aborted || out.restored.len() != n_chunks {
+        eprintln!("remote fetch aborted: {}/{} chunks restored", out.restored.len(), n_chunks);
+        std::process::exit(1);
+    }
+
+    let mut rows = Vec::new();
+    for (d, t) in out.restored.iter().zip(&source.timings) {
+        let truth = &demo.quants[d.idx];
+        let ok = d.quant.data == truth.data && d.quant.scales == truth.scales;
+        rows.push(vec![
+            d.idx.to_string(),
+            t.wire_bytes.to_string(),
+            format!("{:.1}", t.wall_secs * 1e3),
+            if ok { "yes".into() } else { "NO".into() },
+        ]);
+        if !ok {
+            println!("{}", markdown(&["chunk", "wire bytes", "wall ms", "bit-exact"], &rows));
+            eprintln!("chunk {} restored with differences", d.idx);
+            std::process::exit(1);
+        }
+    }
+    println!("{}", markdown(&["chunk", "wire bytes", "wall ms", "bit-exact"], &rows));
+    println!(
+        "# restored {} chunks bit-exact; virtual TTFT {} (transmit {}, decode {}, restore {})",
+        out.restored.len(),
+        fmt_secs(out.plan.done_at),
+        fmt_secs(out.plan.breakdown.transmission),
+        fmt_secs(out.plan.breakdown.decode),
+        fmt_secs(out.plan.breakdown.restore),
+    );
+}
+
 fn cmd_serve(args: &[String]) {
+    if let Some(listen) = parse_flag(args, "--listen") {
+        return cmd_serve_store(&listen, args);
+    }
     let exp = load_experiment(args);
     let perf = kvfetcher::cluster::PerfModel::new(exp.device.clone(), exp.model.clone());
     let trace = generate(&exp.trace);
@@ -94,6 +283,13 @@ fn cmd_serve(args: &[String]) {
 
 fn cmd_fetch(args: &[String]) {
     let exp = load_experiment(args);
+    // --remote wins; otherwise `[network] remote` in the config
+    let remote = parse_flag(args, "--remote")
+        .map(|list| Experiment::parse_addrs(&list))
+        .unwrap_or_else(|| exp.remote_addrs.clone());
+    if !remote.is_empty() {
+        return cmd_fetch_remote(exp, remote, args);
+    }
     let context: usize = parse_flag(args, "--context")
         .map(|c| c.parse().expect("--context takes tokens"))
         .unwrap_or(100_000);
@@ -112,7 +308,11 @@ fn cmd_fetch(args: &[String]) {
             &exp.engine.fetch,
             &bw,
             context,
-            if profile.kind == kvfetcher::baselines::SystemKind::FullPrefill { 0 } else { reusable },
+            if profile.kind == kvfetcher::baselines::SystemKind::FullPrefill {
+                0
+            } else {
+                reusable
+            },
         );
         rows.push(vec![
             profile.name.to_string(),
@@ -206,7 +406,11 @@ fn cmd_real(_args: &[String]) {
 const USAGE: &str = "kvfetcher <serve|fetch|calibrate|layout|real> [flags]
   serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
             [--exec analytic|pipelined]
+  serve     --listen a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
+            [--capacity bytes] [--throttle-gbps G]     (storage shard servers)
   fetch     --config <toml> [--context tokens] [--bandwidth G]
+  fetch     --remote a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
+            (stream the demo prefix from shards; verifies bit-exact restore)
   calibrate [--tokens n]
   layout    [--heads h] [--dim d]
   real      [--artifacts dir]   (requires --features pjrt)";

@@ -22,11 +22,42 @@ impl BandwidthTrace {
     }
 
     /// Explicit segments; must start at t=0 and be time-sorted.
+    /// Panics on invalid input — use [`BandwidthTrace::try_piecewise`]
+    /// to validate untrusted segments (config files, wire input).
     pub fn piecewise(segments: Vec<(f64, f64)>) -> Self {
-        assert!(!segments.is_empty() && segments[0].0 == 0.0);
-        assert!(segments.windows(2).all(|w| w[0].0 < w[1].0));
-        assert!(segments.iter().all(|&(_, b)| b > 0.0));
-        BandwidthTrace { segments }
+        Self::try_piecewise(segments).expect("invalid bandwidth trace")
+    }
+
+    /// Validated constructor: segments must be non-empty, start at t=0,
+    /// be strictly time-sorted, and carry finite positive bandwidths.
+    pub fn try_piecewise(segments: Vec<(f64, f64)>) -> Result<Self, String> {
+        if segments.is_empty() {
+            return Err("bandwidth trace needs at least one segment".into());
+        }
+        if segments[0].0 != 0.0 {
+            return Err(format!("first segment must start at t=0, got t={}", segments[0].0));
+        }
+        if let Some(w) = segments.windows(2).find(|w| w[1].0 <= w[0].0 || w[1].0.is_nan()) {
+            return Err(format!(
+                "segments must be strictly time-sorted: t={} then t={}",
+                w[0].0, w[1].0
+            ));
+        }
+        let bad = |&&(t, b): &&(f64, f64)| b <= 0.0 || !b.is_finite() || !t.is_finite();
+        if let Some(&(t, b)) = segments.iter().find(bad) {
+            return Err(format!("segment at t={t} has non-positive or non-finite bandwidth {b}"));
+        }
+        Ok(BandwidthTrace { segments })
+    }
+
+    /// The same trace shape with every bandwidth multiplied by `factor`.
+    /// Used to replay a Gbps-scale trace over a real loopback socket at
+    /// a measurable rate (see `service::throttle::TokenBucket`).
+    pub fn scaled(&self, factor: f64) -> Self {
+        assert!(factor > 0.0 && factor.is_finite());
+        BandwidthTrace {
+            segments: self.segments.iter().map(|&(t, b)| (t, b * factor)).collect(),
+        }
     }
 
     /// The paper's Fig. 17 example: 6 Gbps, dropping to 3, recovering
@@ -211,6 +242,44 @@ mod tests {
         assert_eq!(tr.at(0.5), 6.0);
         assert_eq!(tr.at(2.0), 3.0);
         assert_eq!(tr.at(10.0), 4.0);
+    }
+
+    #[test]
+    fn try_piecewise_rejects_malformed_segments() {
+        // empty
+        assert!(BandwidthTrace::try_piecewise(vec![]).is_err());
+        // must start at t=0
+        assert!(BandwidthTrace::try_piecewise(vec![(1.0, 4.0)]).is_err());
+        // unsorted / duplicate timestamps
+        assert!(BandwidthTrace::try_piecewise(vec![(0.0, 4.0), (2.0, 5.0), (1.0, 6.0)]).is_err());
+        assert!(BandwidthTrace::try_piecewise(vec![(0.0, 4.0), (0.0, 5.0)]).is_err());
+        // negative / zero / non-finite bandwidth
+        assert!(BandwidthTrace::try_piecewise(vec![(0.0, -4.0)]).is_err());
+        assert!(BandwidthTrace::try_piecewise(vec![(0.0, 4.0), (1.0, 0.0)]).is_err());
+        assert!(BandwidthTrace::try_piecewise(vec![(0.0, f64::NAN)]).is_err());
+        assert!(BandwidthTrace::try_piecewise(vec![(0.0, f64::INFINITY)]).is_err());
+        // and a well-formed trace passes
+        assert!(BandwidthTrace::try_piecewise(vec![(0.0, 6.0), (1.0, 3.0), (3.5, 4.0)]).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid bandwidth trace")]
+    fn piecewise_panics_on_unsorted_segments() {
+        BandwidthTrace::piecewise(vec![(0.0, 4.0), (2.0, 5.0), (1.0, 6.0)]);
+    }
+
+    #[test]
+    fn scaled_preserves_shape_and_scales_rates() {
+        let tr = BandwidthTrace::fig17().scaled(1e-3);
+        assert_eq!(tr.at(0.5), 6.0e-3);
+        assert_eq!(tr.at(2.0), 3.0e-3);
+        assert_eq!(tr.at(10.0), 4.0e-3);
+        // transfer times scale inversely with the rate factor
+        let base = BandwidthTrace::constant(8.0);
+        let slow = base.scaled(0.5);
+        let b = base.transfer_time(1_000_000, 0.0);
+        let s = slow.transfer_time(1_000_000, 0.0);
+        assert!((s - 2.0 * b).abs() < 1e-12, "s={s} b={b}");
     }
 
     #[test]

@@ -1,0 +1,165 @@
+//! Storage-service client: typed calls over pooled TCP connections.
+//!
+//! One [`StoreClient`] per storage node. Connections are checked out of
+//! a small idle pool per request and returned on success (dropped on
+//! any I/O error, so a poisoned stream never serves a second request).
+//! The pool makes the client cheaply shareable across the fetcher's
+//! chunk loop — repeated `FetchChunk` calls reuse one warm connection
+//! instead of paying a TCP handshake per chunk.
+
+use std::io;
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+use crate::fetcher::ChunkPayload;
+use crate::kvstore::StoredChunk;
+
+use super::protocol::{self, FrameRead, NodeStats, Request, Response};
+
+/// Idle connections retained per node.
+const MAX_IDLE: usize = 4;
+
+/// Client for one storage node, with a per-node connection pool.
+#[derive(Debug)]
+pub struct StoreClient {
+    addr: String,
+    idle: Mutex<Vec<TcpStream>>,
+}
+
+impl StoreClient {
+    /// Connect to a node. Fails fast: one connection is established
+    /// eagerly so a bad address errors here, not mid-fetch.
+    pub fn connect(addr: &str) -> io::Result<StoreClient> {
+        let first = Self::dial(addr)?;
+        Ok(StoreClient { addr: addr.to_string(), idle: Mutex::new(vec![first]) })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Idle connections currently pooled (test observability).
+    pub fn pooled(&self) -> usize {
+        self.idle.lock().expect("pool lock").len()
+    }
+
+    fn dial(addr: &str) -> io::Result<TcpStream> {
+        let s = TcpStream::connect(addr)?;
+        s.set_nodelay(true)?;
+        Ok(s)
+    }
+
+    fn checkout(&self) -> io::Result<TcpStream> {
+        if let Some(s) = self.idle.lock().expect("pool lock").pop() {
+            return Ok(s);
+        }
+        Self::dial(&self.addr)
+    }
+
+    fn checkin(&self, s: TcpStream) {
+        let mut pool = self.idle.lock().expect("pool lock");
+        if pool.len() < MAX_IDLE {
+            pool.push(s);
+        }
+    }
+
+    /// One request/response exchange on a pooled connection.
+    fn call(&self, req: &Request) -> io::Result<Response> {
+        let mut stream = self.checkout()?;
+        let (tag, body) = protocol::encode_request(req);
+        protocol::write_frame(&mut stream, tag, &body)?;
+        match protocol::read_frame(&mut stream)? {
+            FrameRead::Frame(tag, payload) => {
+                let resp = protocol::decode_response(tag, &payload)
+                    .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+                self.checkin(stream);
+                if let Response::Err { msg } = resp {
+                    return Err(io::Error::other(format!("{}: {msg}", self.addr)));
+                }
+                Ok(resp)
+            }
+            FrameRead::Eof | FrameRead::Idle => Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                format!("{}: connection closed mid-call", self.addr),
+            )),
+        }
+    }
+
+    fn unexpected(&self, what: &str, resp: &Response) -> io::Error {
+        io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("{}: unexpected response to {what}: {resp:?}", self.addr),
+        )
+    }
+
+    /// Longest stored chunk chain for `tokens` on this node.
+    pub fn lookup_prefix(&self, tokens: &[u32]) -> io::Result<Vec<u64>> {
+        match self.call(&Request::LookupPrefix { tokens: tokens.to_vec() })? {
+            Response::PrefixMatch { hashes } => Ok(hashes),
+            r => Err(self.unexpected("LookupPrefix", &r)),
+        }
+    }
+
+    /// Which of `hashes` this node stores (order-aligned with input).
+    pub fn has_chunks(&self, hashes: &[u64]) -> io::Result<Vec<bool>> {
+        match self.call(&Request::HasChunks { hashes: hashes.to_vec() })? {
+            Response::Has { present } if present.len() == hashes.len() => Ok(present),
+            r => Err(self.unexpected("HasChunks", &r)),
+        }
+    }
+
+    /// Stream one chunk variant; `None` if the node doesn't store it
+    /// (e.g. evicted since lookup).
+    pub fn fetch_chunk(&self, hash: u64, resolution: &str) -> io::Result<Option<ChunkPayload>> {
+        let req = Request::FetchChunk { hash, resolution: resolution.to_string() };
+        match self.call(&req)? {
+            Response::Chunk(p) => Ok(Some(p)),
+            Response::NotFound { .. } => Ok(None),
+            r => Err(self.unexpected("FetchChunk", &r)),
+        }
+    }
+
+    /// Register a chunk; returns (stored, chunks evicted to make room).
+    pub fn put_chunk(&self, chunk: &StoredChunk) -> io::Result<(bool, u32)> {
+        match self.call(&Request::PutChunk { chunk: chunk.clone() })? {
+            Response::Stored { stored, evicted } => Ok((stored, evicted)),
+            r => Err(self.unexpected("PutChunk", &r)),
+        }
+    }
+
+    /// Capacity counters of the node.
+    pub fn stats(&self) -> io::Result<NodeStats> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(s) => Ok(s),
+            r => Err(self.unexpected("Stats", &r)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::StorageNode;
+    use crate::service::server::{ServerConfig, StorageServer};
+
+    #[test]
+    fn connect_fails_fast_on_dead_address() {
+        // port 1 on loopback: nothing listens there
+        assert!(StoreClient::connect("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn pool_reuses_one_connection_for_sequential_calls() {
+        let server =
+            StorageServer::spawn("127.0.0.1:0", StorageNode::new(4), ServerConfig::default())
+                .expect("bind");
+        let client = StoreClient::connect(&server.local_addr().to_string()).expect("connect");
+        assert_eq!(client.pooled(), 1);
+        for _ in 0..5 {
+            let _ = client.stats().expect("stats");
+        }
+        // sequential calls cycle through the same pooled connection
+        assert_eq!(client.pooled(), 1);
+        server.shutdown();
+    }
+}

@@ -1,0 +1,728 @@
+//! Length-prefixed binary wire protocol of the KV store service.
+//!
+//! Every message is one frame: `[u32 LE length][u8 tag][payload]`,
+//! where `length` counts the tag byte plus the payload. Integers are
+//! little-endian; strings are `u8 length + UTF-8 bytes`; repeated
+//! fields are `u32 count + elements`. Frames above [`MAX_FRAME_BYTES`]
+//! are rejected before allocation so a garbage length prefix cannot
+//! OOM the peer.
+//!
+//! Requests (client -> server): [`Request::LookupPrefix`] walks the
+//! node's chained-hash prefix index, [`Request::HasChunks`] is the
+//! batched membership probe the shard router uses, [`Request::FetchChunk`]
+//! streams one chunk variant's bitstreams, [`Request::PutChunk`]
+//! registers a chunk (subject to the node's capacity / LRU policy),
+//! and [`Request::Stats`] reads the node's capacity counters.
+//!
+//! The protocol is deliberately std-only and version-tagged per chunk
+//! (the codec bitstreams carry their own in-band layout meta), so any
+//! future backend only has to speak frames.
+
+use std::io::{self, Read, Write};
+use std::sync::{Mutex, OnceLock};
+
+use crate::fetcher::ChunkPayload;
+use crate::kvstore::{StoredChunk, StoredVariant};
+
+/// Upper bound on one frame (tag + payload). Generous: the largest
+/// legitimate frame is a [`Response::Chunk`] carrying one encoded chunk.
+pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
+
+const TAG_LOOKUP_PREFIX: u8 = 1;
+const TAG_HAS_CHUNKS: u8 = 2;
+const TAG_FETCH_CHUNK: u8 = 3;
+const TAG_PUT_CHUNK: u8 = 4;
+const TAG_STATS: u8 = 5;
+
+const TAG_PREFIX_MATCH: u8 = 128;
+const TAG_HAS: u8 = 129;
+const TAG_CHUNK: u8 = 130;
+const TAG_NOT_FOUND: u8 = 131;
+const TAG_STORED: u8 = 132;
+const TAG_STATS_REPLY: u8 = 133;
+const TAG_ERR: u8 = 134;
+
+/// A client -> server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Longest stored chunk chain for these tokens (single-node mode).
+    LookupPrefix { tokens: Vec<u32> },
+    /// Batched membership probe: which of these chunk hashes are stored?
+    HasChunks { hashes: Vec<u64> },
+    /// Stream one chunk's bitstreams at one resolution variant.
+    FetchChunk { hash: u64, resolution: String },
+    /// Register a chunk (the offline encode path, done over the wire).
+    PutChunk { chunk: StoredChunk },
+    /// Capacity counters.
+    Stats,
+}
+
+/// Capacity counters of one storage node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeStats {
+    pub chunks: u64,
+    pub used_bytes: u64,
+    /// `None` = unbounded.
+    pub capacity_bytes: Option<u64>,
+    pub evictions: u64,
+}
+
+/// A server -> client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    PrefixMatch { hashes: Vec<u64> },
+    Has { present: Vec<bool> },
+    Chunk(ChunkPayload),
+    NotFound { hash: u64 },
+    Stored { stored: bool, evicted: u32 },
+    Stats(NodeStats),
+    Err { msg: String },
+}
+
+// ---------------------------------------------------------------- framing
+
+/// One `read_frame` outcome. `Idle` is only returned on a socket with a
+/// read timeout and no bytes pending — the server's shutdown-poll path.
+#[derive(Debug)]
+pub enum FrameRead {
+    Frame(u8, Vec<u8>),
+    /// Peer closed the connection before the next frame.
+    Eof,
+    /// Read timeout expired with no frame started.
+    Idle,
+}
+
+/// Serialize a full frame (header + tag + payload) into one buffer.
+pub fn frame_bytes(tag: u8, payload: &[u8]) -> Vec<u8> {
+    assert!(payload.len() < MAX_FRAME_BYTES, "frame over MAX_FRAME_BYTES");
+    let mut out = Vec::with_capacity(4 + 1 + payload.len());
+    out.extend_from_slice(&((payload.len() + 1) as u32).to_le_bytes());
+    out.push(tag);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Write one frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&frame_bytes(tag, payload))?;
+    w.flush()
+}
+
+/// Read one frame. A timeout or EOF *before the first byte* is reported
+/// as `Idle` / `Eof`; mid-frame they are errors (a stalled peer retries
+/// via the timeout loop, a truncated frame poisons the connection).
+pub fn read_frame<R: Read>(r: &mut R) -> io::Result<FrameRead> {
+    let mut len_buf = [0u8; 4];
+    match read_exact_or_idle(r, &mut len_buf)? {
+        ReadState::Idle => return Ok(FrameRead::Idle),
+        ReadState::Eof => return Ok(FrameRead::Eof),
+        ReadState::Done => {}
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} out of range"),
+        ));
+    }
+    let mut tag = [0u8; 1];
+    read_exact_blocking(r, &mut tag)?;
+    let mut payload = vec![0u8; len - 1];
+    read_exact_blocking(r, &mut payload)?;
+    Ok(FrameRead::Frame(tag[0], payload))
+}
+
+enum ReadState {
+    Done,
+    Eof,
+    Idle,
+}
+
+/// On sockets with a read timeout, how many consecutive empty timeouts
+/// a *started* frame may ride out before the peer is declared stalled.
+/// Bounds how long a misbehaving client (partial frame, then silence)
+/// can pin a handler thread — and therefore server shutdown.
+const MAX_MID_FRAME_STALLS: usize = 50;
+
+/// Fill `buf`, but report a clean EOF / timeout only if it strikes
+/// before the first byte.
+fn read_exact_or_idle<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<ReadState> {
+    let mut got = 0usize;
+    let mut stalls = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(ReadState::Eof)
+                } else {
+                    Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated frame header"))
+                };
+            }
+            Ok(n) => {
+                got += n;
+                stalls = 0;
+            }
+            Err(e) if is_timeout(&e) => {
+                if got == 0 {
+                    return Ok(ReadState::Idle);
+                }
+                // mid-header timeout: tolerate a slow peer, briefly
+                stalls += 1;
+                if stalls > MAX_MID_FRAME_STALLS {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "peer stalled mid frame header",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadState::Done)
+}
+
+/// Fill `buf` completely, riding out a bounded number of timeouts (we
+/// are mid-frame).
+fn read_exact_blocking<R: Read>(r: &mut R, buf: &mut [u8]) -> io::Result<()> {
+    let mut got = 0usize;
+    let mut stalls = 0usize;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated frame body"))
+            }
+            Ok(n) => {
+                got += n;
+                stalls = 0;
+            }
+            Err(e) if is_timeout(&e) => {
+                stalls += 1;
+                if stalls > MAX_MID_FRAME_STALLS {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "peer stalled mid frame body",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+// ----------------------------------------------------- payload primitives
+
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, off: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.off + n > self.b.len() {
+            return Err(format!(
+                "payload truncated: need {n} bytes at offset {}, have {}",
+                self.off,
+                self.b.len() - self.off
+            ));
+        }
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// A u32 count, bounds-checked so a corrupt count cannot force a
+    /// huge allocation (each element is at least `elem_bytes` bytes).
+    fn count(&mut self, elem_bytes: usize) -> Result<usize, String> {
+        let n = self.u32()? as usize;
+        let remaining = self.b.len() - self.off;
+        if n.saturating_mul(elem_bytes.max(1)) > remaining {
+            return Err(format!("count {n} exceeds remaining payload {remaining}"));
+        }
+        Ok(n)
+    }
+
+    fn str_(&mut self) -> Result<String, String> {
+        let n = self.u8()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| "invalid UTF-8 string".to_string())
+    }
+
+    fn finish(self) -> Result<(), String> {
+        if self.off == self.b.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after message", self.b.len() - self.off))
+        }
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    assert!(s.len() <= u8::MAX as usize, "string field over 255 bytes");
+    out.push(s.len() as u8);
+    out.extend_from_slice(s.as_bytes());
+}
+
+// ------------------------------------------------------- chunk marshaling
+
+/// Off-ladder resolution names the process will intern before refusing
+/// further ones. Wire input controls these strings, and interning leaks
+/// each unique name once — the cap keeps a hostile peer from growing
+/// server memory without bound through fabricated names.
+const MAX_INTERNED_RESOLUTIONS: usize = 64;
+
+/// Map a wire resolution name onto a `&'static str`. Names on the
+/// standard ladder resolve to the canonical constants; unknown names
+/// are interned once per process, up to [`MAX_INTERNED_RESOLUTIONS`].
+pub fn try_intern_resolution(name: &str) -> Result<&'static str, String> {
+    if let Some(r) = crate::layout::resolution_by_name(name) {
+        return Ok(r.name);
+    }
+    static EXTRA: OnceLock<Mutex<Vec<&'static str>>> = OnceLock::new();
+    let extra = EXTRA.get_or_init(|| Mutex::new(Vec::new()));
+    let mut g = extra.lock().expect("interner poisoned");
+    if let Some(&s) = g.iter().find(|&&s| s == name) {
+        return Ok(s);
+    }
+    if g.len() >= MAX_INTERNED_RESOLUTIONS {
+        return Err(format!("too many distinct resolution names; rejecting {name:?}"));
+    }
+    let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
+    g.push(leaked);
+    Ok(leaked)
+}
+
+/// Infallible [`try_intern_resolution`] for trusted in-process names.
+pub fn intern_resolution(name: &str) -> &'static str {
+    try_intern_resolution(name).expect("resolution interner full")
+}
+
+fn put_chunk(out: &mut Vec<u8>, c: &StoredChunk) {
+    put_u64(out, c.hash);
+    put_u32(out, c.tokens as u32);
+    put_u32(out, c.scales.len() as u32);
+    for &s in &c.scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    put_u32(out, c.variants.len() as u32);
+    for v in &c.variants {
+        put_str(out, v.resolution);
+        put_u32(out, v.n_frames as u32);
+        put_u32(out, v.group_bytes.len() as u32);
+        for g in &v.group_bytes {
+            put_u32(out, g.len() as u32);
+            out.extend_from_slice(g);
+        }
+    }
+}
+
+fn get_chunk(rd: &mut Rd) -> Result<StoredChunk, String> {
+    let hash = rd.u64()?;
+    let tokens = rd.u32()? as usize;
+    let n_scales = rd.count(4)?;
+    let mut scales = Vec::with_capacity(n_scales);
+    for _ in 0..n_scales {
+        scales.push(rd.f32()?);
+    }
+    let n_variants = rd.count(1)?;
+    let mut variants = Vec::with_capacity(n_variants);
+    for _ in 0..n_variants {
+        let resolution = try_intern_resolution(&rd.str_()?)?;
+        let n_frames = rd.u32()? as usize;
+        let n_groups = rd.count(4)?;
+        let mut group_bytes = Vec::with_capacity(n_groups);
+        let mut total_bytes = 0usize;
+        for _ in 0..n_groups {
+            let len = rd.count(1)?;
+            let g = rd.take(len)?.to_vec();
+            total_bytes += g.len();
+            group_bytes.push(g);
+        }
+        variants.push(StoredVariant { resolution, group_bytes, total_bytes, n_frames });
+    }
+    Ok(StoredChunk { hash, tokens, scales, variants })
+}
+
+fn put_payload(out: &mut Vec<u8>, p: &ChunkPayload) {
+    put_u64(out, p.hash);
+    put_u32(out, p.tokens as u32);
+    put_str(out, &p.resolution);
+    put_u32(out, p.scales.len() as u32);
+    for &s in &p.scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    put_u32(out, p.group_bytes.len() as u32);
+    for g in &p.group_bytes {
+        put_u32(out, g.len() as u32);
+        out.extend_from_slice(g);
+    }
+}
+
+fn get_payload(rd: &mut Rd) -> Result<ChunkPayload, String> {
+    let hash = rd.u64()?;
+    let tokens = rd.u32()? as usize;
+    let resolution = rd.str_()?;
+    let n_scales = rd.count(4)?;
+    let mut scales = Vec::with_capacity(n_scales);
+    for _ in 0..n_scales {
+        scales.push(rd.f32()?);
+    }
+    let n_groups = rd.count(4)?;
+    let mut group_bytes = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        let len = rd.count(1)?;
+        group_bytes.push(rd.take(len)?.to_vec());
+    }
+    Ok(ChunkPayload { hash, tokens, resolution, scales, group_bytes })
+}
+
+// ------------------------------------------------------ message marshaling
+
+/// Serialize a request to (tag, payload).
+pub fn encode_request(r: &Request) -> (u8, Vec<u8>) {
+    let mut out = Vec::new();
+    match r {
+        Request::LookupPrefix { tokens } => {
+            put_u32(&mut out, tokens.len() as u32);
+            for &t in tokens {
+                put_u32(&mut out, t);
+            }
+            (TAG_LOOKUP_PREFIX, out)
+        }
+        Request::HasChunks { hashes } => {
+            put_u32(&mut out, hashes.len() as u32);
+            for &h in hashes {
+                put_u64(&mut out, h);
+            }
+            (TAG_HAS_CHUNKS, out)
+        }
+        Request::FetchChunk { hash, resolution } => {
+            put_u64(&mut out, *hash);
+            put_str(&mut out, resolution);
+            (TAG_FETCH_CHUNK, out)
+        }
+        Request::PutChunk { chunk } => {
+            put_chunk(&mut out, chunk);
+            (TAG_PUT_CHUNK, out)
+        }
+        Request::Stats => (TAG_STATS, out),
+    }
+}
+
+/// Parse a request frame.
+pub fn decode_request(tag: u8, payload: &[u8]) -> Result<Request, String> {
+    let mut rd = Rd::new(payload);
+    let req = match tag {
+        TAG_LOOKUP_PREFIX => {
+            let n = rd.count(4)?;
+            let mut tokens = Vec::with_capacity(n);
+            for _ in 0..n {
+                tokens.push(rd.u32()?);
+            }
+            Request::LookupPrefix { tokens }
+        }
+        TAG_HAS_CHUNKS => {
+            let n = rd.count(8)?;
+            let mut hashes = Vec::with_capacity(n);
+            for _ in 0..n {
+                hashes.push(rd.u64()?);
+            }
+            Request::HasChunks { hashes }
+        }
+        TAG_FETCH_CHUNK => {
+            let hash = rd.u64()?;
+            let resolution = rd.str_()?;
+            Request::FetchChunk { hash, resolution }
+        }
+        TAG_PUT_CHUNK => Request::PutChunk { chunk: get_chunk(&mut rd)? },
+        TAG_STATS => Request::Stats,
+        t => return Err(format!("unknown request tag {t}")),
+    };
+    rd.finish()?;
+    Ok(req)
+}
+
+/// Serialize a response to (tag, payload).
+pub fn encode_response(r: &Response) -> (u8, Vec<u8>) {
+    let mut out = Vec::new();
+    match r {
+        Response::PrefixMatch { hashes } => {
+            put_u32(&mut out, hashes.len() as u32);
+            for &h in hashes {
+                put_u64(&mut out, h);
+            }
+            (TAG_PREFIX_MATCH, out)
+        }
+        Response::Has { present } => {
+            put_u32(&mut out, present.len() as u32);
+            out.extend(present.iter().map(|&p| p as u8));
+            (TAG_HAS, out)
+        }
+        Response::Chunk(p) => {
+            put_payload(&mut out, p);
+            (TAG_CHUNK, out)
+        }
+        Response::NotFound { hash } => {
+            put_u64(&mut out, *hash);
+            (TAG_NOT_FOUND, out)
+        }
+        Response::Stored { stored, evicted } => {
+            out.push(*stored as u8);
+            put_u32(&mut out, *evicted);
+            (TAG_STORED, out)
+        }
+        Response::Stats(s) => {
+            put_u64(&mut out, s.chunks);
+            put_u64(&mut out, s.used_bytes);
+            put_u64(&mut out, s.capacity_bytes.unwrap_or(u64::MAX));
+            put_u64(&mut out, s.evictions);
+            (TAG_STATS_REPLY, out)
+        }
+        Response::Err { msg } => {
+            let mut end = msg.len().min(255);
+            while !msg.is_char_boundary(end) {
+                end -= 1;
+            }
+            put_str(&mut out, &msg[..end]);
+            (TAG_ERR, out)
+        }
+    }
+}
+
+/// Parse a response frame.
+pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, String> {
+    let mut rd = Rd::new(payload);
+    let resp = match tag {
+        TAG_PREFIX_MATCH => {
+            let n = rd.count(8)?;
+            let mut hashes = Vec::with_capacity(n);
+            for _ in 0..n {
+                hashes.push(rd.u64()?);
+            }
+            Response::PrefixMatch { hashes }
+        }
+        TAG_HAS => {
+            let n = rd.count(1)?;
+            let mut present = Vec::with_capacity(n);
+            for _ in 0..n {
+                present.push(rd.u8()? != 0);
+            }
+            Response::Has { present }
+        }
+        TAG_CHUNK => Response::Chunk(get_payload(&mut rd)?),
+        TAG_NOT_FOUND => Response::NotFound { hash: rd.u64()? },
+        TAG_STORED => {
+            let stored = rd.u8()? != 0;
+            let evicted = rd.u32()?;
+            Response::Stored { stored, evicted }
+        }
+        TAG_STATS_REPLY => {
+            let chunks = rd.u64()?;
+            let used_bytes = rd.u64()?;
+            let cap = rd.u64()?;
+            let evictions = rd.u64()?;
+            Response::Stats(NodeStats {
+                chunks,
+                used_bytes,
+                capacity_bytes: if cap == u64::MAX { None } else { Some(cap) },
+                evictions,
+            })
+        }
+        TAG_ERR => Response::Err { msg: rd.str_()? },
+        t => return Err(format!("unknown response tag {t}")),
+    };
+    rd.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn sample_chunk() -> StoredChunk {
+        StoredChunk {
+            hash: 0xDEAD_BEEF_CAFE,
+            tokens: 64,
+            scales: vec![0.5, 1.25, 3.0],
+            variants: vec![
+                StoredVariant {
+                    resolution: "144p",
+                    group_bytes: vec![vec![1, 2, 3], vec![4, 5]],
+                    total_bytes: 5,
+                    n_frames: 2,
+                },
+                StoredVariant {
+                    resolution: "240p",
+                    group_bytes: vec![vec![9; 10]],
+                    total_bytes: 10,
+                    n_frames: 1,
+                },
+            ],
+        }
+    }
+
+    fn roundtrip_request(r: Request) -> Request {
+        let (tag, body) = encode_request(&r);
+        decode_request(tag, &body).unwrap()
+    }
+
+    fn roundtrip_response(r: Response) -> Response {
+        let (tag, body) = encode_response(&r);
+        decode_response(tag, &body).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let reqs = vec![
+            Request::LookupPrefix { tokens: vec![1, 2, 0xFFFF_FFFF] },
+            Request::LookupPrefix { tokens: vec![] },
+            Request::HasChunks { hashes: vec![7, u64::MAX] },
+            Request::FetchChunk { hash: 99, resolution: "1080p".into() },
+            Request::Stats,
+        ];
+        for r in reqs {
+            assert_eq!(roundtrip_request(r.clone()), r);
+        }
+    }
+
+    #[test]
+    fn put_chunk_roundtrips_with_interned_resolution() {
+        let c = sample_chunk();
+        let rt = roundtrip_request(Request::PutChunk { chunk: c.clone() });
+        let Request::PutChunk { chunk } = rt else { panic!("wrong variant") };
+        assert_eq!(chunk.hash, c.hash);
+        assert_eq!(chunk.tokens, c.tokens);
+        assert_eq!(chunk.scales, c.scales);
+        assert_eq!(chunk.variants.len(), 2);
+        for (a, b) in chunk.variants.iter().zip(&c.variants) {
+            assert_eq!(a.resolution, b.resolution);
+            assert_eq!(a.group_bytes, b.group_bytes);
+            assert_eq!(a.total_bytes, b.total_bytes);
+            assert_eq!(a.n_frames, b.n_frames);
+        }
+        // ladder names intern to the canonical constants
+        assert_eq!(intern_resolution("144p"), "144p");
+        // unknown names intern stably
+        let a = intern_resolution("weird-res");
+        let b = intern_resolution("weird-res");
+        assert!(std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let resps = vec![
+            Response::PrefixMatch { hashes: vec![1, 2, 3] },
+            Response::Has { present: vec![true, false, true] },
+            Response::NotFound { hash: 5 },
+            Response::Stored { stored: true, evicted: 3 },
+            Response::Stats(NodeStats {
+                chunks: 4,
+                used_bytes: 1000,
+                capacity_bytes: Some(2000),
+                evictions: 1,
+            }),
+            Response::Stats(NodeStats {
+                chunks: 0,
+                used_bytes: 0,
+                capacity_bytes: None,
+                evictions: 0,
+            }),
+            Response::Err { msg: "nope".into() },
+            Response::Chunk(ChunkPayload {
+                hash: 8,
+                tokens: 32,
+                resolution: "240p".into(),
+                scales: vec![1.0, 2.0],
+                group_bytes: vec![vec![0xAB; 7]],
+            }),
+        ];
+        for r in resps {
+            assert_eq!(roundtrip_response(r.clone()), r);
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip_over_a_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, TAG_STATS, &[]).unwrap();
+        let (tag, body) = encode_request(&Request::HasChunks { hashes: vec![1, 2] });
+        write_frame(&mut buf, tag, &body).unwrap();
+        let mut cur = Cursor::new(buf);
+        let FrameRead::Frame(t1, p1) = read_frame(&mut cur).unwrap() else { panic!("frame 1") };
+        assert_eq!((t1, p1.as_slice()), (TAG_STATS, &[][..]));
+        let FrameRead::Frame(t2, p2) = read_frame(&mut cur).unwrap() else { panic!("frame 2") };
+        assert_eq!(decode_request(t2, &p2).unwrap(), Request::HasChunks { hashes: vec![1, 2] });
+        assert!(matches!(read_frame(&mut cur).unwrap(), FrameRead::Eof));
+    }
+
+    #[test]
+    fn truncated_and_oversized_frames_rejected() {
+        // truncated header
+        let mut cur = Cursor::new(vec![3u8, 0]);
+        assert!(read_frame(&mut cur).is_err());
+        // truncated body
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.push(TAG_STATS);
+        let mut cur = Cursor::new(buf);
+        assert!(read_frame(&mut cur).is_err());
+        // zero / oversized length prefix
+        let mut cur = Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(read_frame(&mut cur).is_err());
+        let mut cur = Cursor::new((MAX_FRAME_BYTES as u32 + 1).to_le_bytes().to_vec());
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn corrupt_payloads_rejected_not_panicking() {
+        // counts that exceed the remaining payload must error cleanly
+        let (tag, mut body) = encode_request(&Request::HasChunks { hashes: vec![1] });
+        body[0] = 0xFF; // claim 255 hashes
+        assert!(decode_request(tag, &body).is_err());
+        // trailing garbage
+        let (tag, mut body) = encode_request(&Request::Stats);
+        body.push(1);
+        assert!(decode_request(tag, &body).is_err());
+        // unknown tags
+        assert!(decode_request(77, &[]).is_err());
+        assert!(decode_response(77, &[]).is_err());
+        // truncated chunk payload
+        let (tag, body) = encode_request(&Request::PutChunk { chunk: sample_chunk() });
+        assert!(decode_request(tag, &body[..body.len() - 3]).is_err());
+    }
+}

@@ -1,0 +1,300 @@
+//! Multi-threaded KV storage server: one [`crate::kvstore::StorageNode`]
+//! shard behind a `std::net::TcpListener`.
+//!
+//! One accept thread + one handler thread per connection; the shard is
+//! shared behind a mutex (requests copy chunk bytes *out* under the
+//! lock, so the lock is never held across socket I/O). While a chunk's
+//! bytes are in flight to a client, the chunk stays **pinned** in the
+//! node so a concurrent `PutChunk` cannot evict it and reuse space the
+//! connection is still accounting against.
+//!
+//! An optional [`ThrottleSpec`] paces every connection's writes through
+//! a [`TokenBucket`], replaying a `BandwidthTrace` over the wire — this
+//! keeps the Fig. 17/18 bandwidth scenarios reproducible end-to-end on
+//! loopback (`tests/remote_fetch.rs` holds the replay to 10% of the
+//! analytic link model).
+//!
+//! Shutdown is cooperative: handler sockets carry a short read timeout
+//! so every thread re-checks the stop flag between frames, and
+//! [`StorageServer::shutdown`] unblocks the accept loop with a dummy
+//! connection, then joins everything.
+
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::kvstore::StorageNode;
+
+use super::protocol::{self, FrameRead, NodeStats, Request, Response};
+use super::throttle::{ThrottleSpec, TokenBucket};
+
+/// Pacing granularity: bytes admitted per token-bucket charge, so a
+/// bandwidth drop mid-chunk takes effect mid-chunk.
+const PACE_SLICE: usize = 64 * 1024;
+
+/// How often idle handler threads re-check the stop flag.
+const POLL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Server tuning.
+#[derive(Debug, Clone, Default)]
+pub struct ServerConfig {
+    /// Pace every connection's writes through this trace replay.
+    pub throttle: Option<ThrottleSpec>,
+}
+
+/// A running storage shard server. Threads run until [`shutdown`].
+///
+/// [`shutdown`]: StorageServer::shutdown
+pub struct StorageServer {
+    addr: SocketAddr,
+    node: Arc<Mutex<StorageNode>>,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+    workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+}
+
+impl StorageServer {
+    /// Bind `listen` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// serve `node` until shutdown.
+    pub fn spawn(listen: &str, node: StorageNode, cfg: ServerConfig) -> io::Result<StorageServer> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let node = Arc::new(Mutex::new(node));
+        let stop = Arc::new(AtomicBool::new(false));
+        let workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let node = Arc::clone(&node);
+            let stop = Arc::clone(&stop);
+            let workers = Arc::clone(&workers);
+            thread::spawn(move || accept_loop(listener, node, stop, workers, cfg))
+        };
+        Ok(StorageServer { addr, node, stop, accept: Some(accept), workers })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared handle to the hosted shard (tests inspect LRU state).
+    pub fn node(&self) -> Arc<Mutex<StorageNode>> {
+        Arc::clone(&self.node)
+    }
+
+    /// Stop accepting, wake every thread, and join them all.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the accept loop; ignore failure (listener may be gone)
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().expect("workers lock"));
+        for h in workers {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    node: Arc<Mutex<StorageNode>>,
+    stop: Arc<AtomicBool>,
+    workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    cfg: ServerConfig,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => {
+                // persistent accept failure (e.g. fd exhaustion) must
+                // not busy-spin the accept thread
+                thread::sleep(POLL_INTERVAL);
+                continue;
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
+        let node = Arc::clone(&node);
+        let stop = Arc::clone(&stop);
+        let throttle = cfg.throttle.clone();
+        let handle = thread::spawn(move || handle_conn(stream, node, stop, throttle));
+        let mut live = workers.lock().expect("workers lock");
+        // reap handlers whose connections already closed, so a
+        // long-running server holds handles only for live connections
+        let mut i = 0;
+        while i < live.len() {
+            if live[i].is_finished() {
+                let _ = live.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        live.push(handle);
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    node: Arc<Mutex<StorageNode>>,
+    stop: Arc<AtomicBool>,
+    throttle: Option<ThrottleSpec>,
+) {
+    let mut bucket = throttle.as_ref().map(TokenBucket::from_spec);
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let (tag, payload) = match protocol::read_frame(&mut stream) {
+            Ok(FrameRead::Frame(tag, payload)) => (tag, payload),
+            Ok(FrameRead::Idle) => continue,
+            Ok(FrameRead::Eof) | Err(_) => break,
+        };
+        let (resp, pinned) = match protocol::decode_request(tag, &payload) {
+            Ok(req) => handle_request(req, &node),
+            Err(msg) => (Response::Err { msg }, None),
+        };
+        let (tag, body) = protocol::encode_response(&resp);
+        let frame = protocol::frame_bytes(tag, &body);
+        let sent = send_paced(&mut stream, &frame, bucket.as_mut());
+        if let Some(hash) = pinned {
+            node.lock().expect("node lock").unpin(hash);
+        }
+        if sent.is_err() {
+            break;
+        }
+    }
+}
+
+/// Serve one request against the shard. For chunk fetches, the chunk is
+/// pinned *before* the lock is released and stays pinned until its
+/// bytes are fully on the wire (the caller unpins after the send).
+fn handle_request(req: Request, node: &Arc<Mutex<StorageNode>>) -> (Response, Option<u64>) {
+    let mut node = node.lock().expect("node lock");
+    match req {
+        Request::LookupPrefix { tokens } => {
+            (Response::PrefixMatch { hashes: node.match_prefix(&tokens) }, None)
+        }
+        Request::HasChunks { hashes } => {
+            let present = hashes.iter().map(|&h| node.contains(h)).collect();
+            (Response::Has { present }, None)
+        }
+        Request::FetchChunk { hash, resolution } => {
+            let Some(chunk) = node.fetch(hash) else {
+                return (Response::NotFound { hash }, None);
+            };
+            let Some(v) = chunk.variant(&resolution) else {
+                let msg = format!("chunk {hash:#x} has no {resolution} variant");
+                return (Response::Err { msg }, None);
+            };
+            let payload = crate::fetcher::ChunkPayload {
+                hash,
+                tokens: chunk.tokens,
+                resolution,
+                scales: chunk.scales.clone(),
+                group_bytes: v.group_bytes.clone(),
+            };
+            node.pin(hash);
+            (Response::Chunk(payload), Some(hash))
+        }
+        Request::PutChunk { chunk } => {
+            let out = node.register(chunk);
+            (Response::Stored { stored: out.stored, evicted: out.evicted.len() as u32 }, None)
+        }
+        Request::Stats => {
+            let stats = NodeStats {
+                chunks: node.len() as u64,
+                used_bytes: node.used_bytes() as u64,
+                capacity_bytes: node.capacity_bytes().map(|c| c as u64),
+                evictions: node.evictions(),
+            };
+            (Response::Stats(stats), None)
+        }
+    }
+}
+
+/// Write `bytes`, charging each slice against the bucket first so the
+/// peer observes the trace's byte schedule.
+fn send_paced(
+    stream: &mut TcpStream,
+    bytes: &[u8],
+    mut bucket: Option<&mut TokenBucket>,
+) -> io::Result<()> {
+    for slice in bytes.chunks(PACE_SLICE) {
+        if let Some(b) = bucket.as_deref_mut() {
+            b.pace(slice.len());
+        }
+        stream.write_all(slice)?;
+    }
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::{StoredChunk, StoredVariant};
+    use crate::service::client::StoreClient;
+
+    fn chunk(hash: u64, bytes: usize) -> StoredChunk {
+        StoredChunk {
+            hash,
+            tokens: 16,
+            scales: vec![1.0; 4],
+            variants: vec![StoredVariant {
+                resolution: "144p",
+                group_bytes: vec![vec![0xCD; bytes]],
+                total_bytes: bytes,
+                n_frames: 1,
+            }],
+        }
+    }
+
+    #[test]
+    fn serves_lookup_fetch_put_stats_over_loopback() {
+        let mut node = StorageNode::new(4);
+        let tokens: Vec<u32> = (0..8).collect();
+        let hashes = crate::kvstore::prefix_hashes(&tokens, 4);
+        node.register(chunk(hashes[0], 100));
+        let server =
+            StorageServer::spawn("127.0.0.1:0", node, ServerConfig::default()).expect("bind");
+        let addr = server.local_addr().to_string();
+
+        let client = StoreClient::connect(&addr).expect("connect");
+        // prefix match stops where the chain leaves the node
+        assert_eq!(client.lookup_prefix(&tokens).unwrap(), vec![hashes[0]]);
+        assert_eq!(client.has_chunks(&[hashes[0], hashes[1]]).unwrap(), vec![true, false]);
+        // fetch returns the stored bytes; missing hashes are None
+        let p = client.fetch_chunk(hashes[0], "144p").unwrap().expect("present");
+        assert_eq!(p.group_bytes, vec![vec![0xCD; 100]]);
+        assert_eq!(p.tokens, 16);
+        assert!(client.fetch_chunk(hashes[1], "144p").unwrap().is_none());
+        // a missing variant is a protocol error, not a hang
+        assert!(client.fetch_chunk(hashes[0], "999p").is_err());
+        // put a second chunk over the wire, then stats reflect it
+        let (stored, evicted) = client.put_chunk(&chunk(hashes[1], 50)).unwrap();
+        assert!(stored && evicted == 0);
+        let stats = client.stats().unwrap();
+        assert_eq!(stats.chunks, 2);
+        assert_eq!(stats.capacity_bytes, None);
+        assert_eq!(client.lookup_prefix(&tokens).unwrap(), hashes);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_all_threads_with_live_connections() {
+        let server =
+            StorageServer::spawn("127.0.0.1:0", StorageNode::new(4), ServerConfig::default())
+                .expect("bind");
+        let addr = server.local_addr().to_string();
+        let client = StoreClient::connect(&addr).expect("connect");
+        assert_eq!(client.has_chunks(&[1]).unwrap(), vec![false]);
+        // connection still open; shutdown must not deadlock on it
+        server.shutdown();
+    }
+}

@@ -1,0 +1,174 @@
+//! Shard map + router: spread a chained prefix across N storage nodes.
+//!
+//! Chunk `i` of a prefix chain has hash `h_i = hash(h_{i-1}, block_i)`
+//! (see `kvstore::prefix_hashes`). The [`ShardMap`] assigns each
+//! `(chain position, hash)` to one node:
+//!
+//! * [`Placement::RoundRobin`] — position `i` lives on shard `i % N`.
+//!   Deterministic and perfectly balanced per prefix; consecutive
+//!   chunks stripe across nodes, so a pipelined fetch spreads its
+//!   transmissions over every node's NIC.
+//! * [`Placement::ByHash`] — shard is a mixed function of the chunk
+//!   hash alone. Placement survives renumbering (a chunk's home does
+//!   not depend on where its chain starts) at the cost of statistical
+//!   rather than exact balance.
+//!
+//! The [`ShardRouter`] owns one pooled [`StoreClient`] per node and
+//! implements chain-aware operations: `match_prefix` batches one
+//! membership probe per shard and walks the chain until the first gap,
+//! exactly like a single node's prefix index but across the fleet.
+
+use std::io;
+
+use crate::fetcher::ChunkPayload;
+use crate::kvstore::{prefix_hashes, StoredChunk};
+
+use super::client::StoreClient;
+use super::protocol::NodeStats;
+
+/// How chunks map onto shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// Chain position `i` -> shard `i % N`.
+    RoundRobin,
+    /// `mix(hash) % N`, independent of chain position.
+    ByHash,
+}
+
+/// The pure placement function (no I/O), shared by writers and readers.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardMap {
+    n: usize,
+    placement: Placement,
+}
+
+impl ShardMap {
+    pub fn new(n: usize, placement: Placement) -> ShardMap {
+        assert!(n > 0, "need at least one shard");
+        ShardMap { n, placement }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n
+    }
+
+    /// Shard owning chunk `chain_idx` with hash `hash`.
+    pub fn shard_of(&self, chain_idx: usize, hash: u64) -> usize {
+        match self.placement {
+            Placement::RoundRobin => chain_idx % self.n,
+            Placement::ByHash => (mix(hash) % self.n as u64) as usize,
+        }
+    }
+}
+
+/// SplitMix64 finalizer: decorrelates the chained FNV hashes (which
+/// share low-byte structure between neighbours) before the modulo.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Clients for every shard of one logical store.
+#[derive(Debug)]
+pub struct ShardRouter {
+    map: ShardMap,
+    clients: Vec<StoreClient>,
+}
+
+impl ShardRouter {
+    /// Connect to every node; fails fast if any address is dead.
+    pub fn connect(addrs: &[String], placement: Placement) -> io::Result<ShardRouter> {
+        let clients =
+            addrs.iter().map(|a| StoreClient::connect(a)).collect::<io::Result<Vec<_>>>()?;
+        Ok(ShardRouter { map: ShardMap::new(clients.len(), placement), clients })
+    }
+
+    pub fn map(&self) -> ShardMap {
+        self.map
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn client(&self, shard: usize) -> &StoreClient {
+        &self.clients[shard]
+    }
+
+    /// Longest stored chain for `tokens` across the fleet: one batched
+    /// membership probe per shard, then the chain walk.
+    pub fn match_prefix(&self, tokens: &[u32], block_tokens: usize) -> io::Result<Vec<u64>> {
+        let hashes = prefix_hashes(tokens, block_tokens);
+        // batch the probes per owning shard
+        let mut per_shard: Vec<Vec<(usize, u64)>> = vec![Vec::new(); self.clients.len()];
+        for (i, &h) in hashes.iter().enumerate() {
+            per_shard[self.map.shard_of(i, h)].push((i, h));
+        }
+        let mut present = vec![false; hashes.len()];
+        for (shard, items) in per_shard.iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            let probe: Vec<u64> = items.iter().map(|&(_, h)| h).collect();
+            let found = self.clients[shard].has_chunks(&probe)?;
+            for (&(i, _), ok) in items.iter().zip(found) {
+                present[i] = ok;
+            }
+        }
+        Ok(hashes.into_iter().zip(present).take_while(|&(_, ok)| ok).map(|(h, _)| h).collect())
+    }
+
+    /// Fetch chunk `chain_idx` (hash `hash`) from its owning shard.
+    pub fn fetch_chunk(
+        &self,
+        chain_idx: usize,
+        hash: u64,
+        resolution: &str,
+    ) -> io::Result<Option<ChunkPayload>> {
+        self.clients[self.map.shard_of(chain_idx, hash)].fetch_chunk(hash, resolution)
+    }
+
+    /// Register chunk `chain_idx` on its owning shard.
+    pub fn put_chunk(&self, chain_idx: usize, chunk: &StoredChunk) -> io::Result<(bool, u32)> {
+        self.clients[self.map.shard_of(chain_idx, chunk.hash)].put_chunk(chunk)
+    }
+
+    /// Per-node capacity counters (index-aligned with the address list).
+    pub fn stats(&self) -> io::Result<Vec<NodeStats>> {
+        self.clients.iter().map(|c| c.stats()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_stripes_the_chain() {
+        let m = ShardMap::new(3, Placement::RoundRobin);
+        let owners: Vec<usize> = (0..7).map(|i| m.shard_of(i, 0xABC + i as u64)).collect();
+        assert_eq!(owners, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn by_hash_is_position_independent_and_roughly_balanced() {
+        let m = ShardMap::new(4, Placement::ByHash);
+        let mut counts = [0usize; 4];
+        for i in 0..4000u64 {
+            let h = crate::kvstore::block_hash(i, &[i as u32, 7, 9]);
+            let s = m.shard_of(0, h);
+            assert_eq!(s, m.shard_of(usize::MAX, h), "position must not matter");
+            counts[s] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((700..=1300).contains(&c), "shard {i} got {c} of 4000");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected() {
+        ShardMap::new(0, Placement::RoundRobin);
+    }
+}

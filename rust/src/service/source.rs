@@ -1,0 +1,103 @@
+//! [`TransportSource`] implementations: where the pipelined executor's
+//! transmit stage gets real chunk bytes from.
+//!
+//! [`LocalSource`] reads an in-process [`StorageNode`] — the reference
+//! the remote path must restore bit-identically against. [`RemoteSource`]
+//! streams from shard servers through a [`ShardRouter`], recording each
+//! chunk's wall-clock wire time so throttle replays can be validated
+//! against the analytic link model.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::fetcher::{ChunkPayload, TransportSource};
+use crate::kvstore::StorageNode;
+
+use super::shard::ShardRouter;
+
+/// The resolution-ladder names a source serves for fetcher resolution
+/// indices 0..4 (240p..1080p nominal).
+pub type Ladder = [&'static str; 4];
+
+/// Stream chunks from an in-process storage node.
+pub struct LocalSource {
+    node: Arc<Mutex<StorageNode>>,
+    hashes: Vec<u64>,
+    ladder: Ladder,
+}
+
+impl LocalSource {
+    pub fn new(node: Arc<Mutex<StorageNode>>, hashes: Vec<u64>, ladder: Ladder) -> LocalSource {
+        LocalSource { node, hashes, ladder }
+    }
+}
+
+impl TransportSource for LocalSource {
+    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, String> {
+        let hash = *self.hashes.get(idx).ok_or_else(|| format!("no chunk at index {idx}"))?;
+        let name = self.ladder[res_idx.min(self.ladder.len() - 1)];
+        let mut node = self.node.lock().map_err(|_| "storage node lock poisoned".to_string())?;
+        let chunk =
+            node.fetch(hash).ok_or_else(|| format!("chunk {hash:#x} not in local store"))?;
+        let v = chunk
+            .variant(name)
+            .ok_or_else(|| format!("chunk {hash:#x} has no {name} variant"))?;
+        Ok(ChunkPayload {
+            hash,
+            tokens: chunk.tokens,
+            resolution: name.to_string(),
+            scales: chunk.scales.clone(),
+            group_bytes: v.group_bytes.clone(),
+        })
+    }
+}
+
+/// Wire measurements of one remotely fetched chunk.
+#[derive(Debug, Clone, Copy)]
+pub struct WireTiming {
+    pub idx: usize,
+    /// Bytes that crossed the socket (bitstreams + scale sideband).
+    pub wire_bytes: usize,
+    /// Wall-clock request-to-last-byte duration (seconds).
+    pub wall_secs: f64,
+}
+
+/// Stream chunks from remote shard servers.
+pub struct RemoteSource {
+    router: ShardRouter,
+    hashes: Vec<u64>,
+    ladder: Ladder,
+    /// Per-chunk wire timings, in fetch order.
+    pub timings: Vec<WireTiming>,
+}
+
+impl RemoteSource {
+    pub fn new(router: ShardRouter, hashes: Vec<u64>, ladder: Ladder) -> RemoteSource {
+        RemoteSource { router, hashes, ladder, timings: Vec::new() }
+    }
+
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+}
+
+impl TransportSource for RemoteSource {
+    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, String> {
+        let hash = *self.hashes.get(idx).ok_or_else(|| format!("no chunk at index {idx}"))?;
+        let name = self.ladder[res_idx.min(self.ladder.len() - 1)];
+        let t0 = Instant::now();
+        let fetched = self.router.fetch_chunk(idx, hash, name).map_err(|e| {
+            let msg = format!("remote fetch of chunk {idx} ({hash:#x}) failed: {e}");
+            eprintln!("{msg}");
+            msg
+        })?;
+        let payload =
+            fetched.ok_or_else(|| format!("chunk {hash:#x} not on its shard (evicted?)"))?;
+        self.timings.push(WireTiming {
+            idx,
+            wire_bytes: payload.wire_bytes(),
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+        Ok(payload)
+    }
+}
