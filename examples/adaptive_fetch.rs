@@ -61,8 +61,16 @@ fn main() {
     println!("{}", markdown(&["chunk", "res", "wire", "trans", "decode", "bubble"], &rows));
 
     let bubbles = |p: &FetchPlan| p.chunks.iter().map(|c| c.bubble).sum::<f64>();
-    println!("fixed 1080p : done at {} (total bubble {})", fmt_secs(fixed.done_at), fmt_secs(bubbles(&fixed)));
-    println!("adaptive    : done at {} (total bubble {})", fmt_secs(adaptive.done_at), fmt_secs(bubbles(&adaptive)));
+    println!(
+        "fixed 1080p : done at {} (total bubble {})",
+        fmt_secs(fixed.done_at),
+        fmt_secs(bubbles(&fixed))
+    );
+    println!(
+        "adaptive    : done at {} (total bubble {})",
+        fmt_secs(adaptive.done_at),
+        fmt_secs(bubbles(&adaptive))
+    );
     let saving = (fixed.done_at - adaptive.done_at) / fixed.done_at * 100.0;
     println!("saving      : {saving:.1}% (paper reports ~20-21% on this pattern)");
 }

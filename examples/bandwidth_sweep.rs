@@ -7,8 +7,8 @@
 
 use kvfetcher::baselines::SystemProfile;
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::engine::single_request_ttft;
-use kvfetcher::fetcher::FetchConfig;
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::Fetcher;
 use kvfetcher::net::BandwidthTrace;
 
 const BANDWIDTHS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 40.0, 100.0, 200.0];
@@ -24,7 +24,6 @@ fn main() {
         .unwrap_or_else(ModelSpec::yi_34b);
     let dev = DeviceSpec::h20();
     let perf = PerfModel::new(dev.clone(), model.clone());
-    let cfg = FetchConfig::default();
 
     println!("== winning areas (Fig. 3): {} on {} x{} ==", model.name, dev.name, perf.n_gpus);
     println!("cell = fastest of: F(ull prefill) R(aw reuse) C(acheGen) K(VFetcher)\n");
@@ -54,7 +53,13 @@ fn main() {
                 } else {
                     reusable
                 };
-                let t = single_request_ttft(&perf, p, &cfg, &trace, ctx, r).total();
+                let t = Fetcher::builder()
+                    .profile(p.clone())
+                    .bandwidth(trace.clone())
+                    .for_perf(&perf)
+                    .build()
+                    .ttft(&perf, ctx, r, ExecMode::Analytic)
+                    .total();
                 if t < best.1 {
                     best = (tag, t);
                 }

@@ -152,8 +152,18 @@ fn main() -> anyhow::Result<()> {
             fmt_secs(reuse.mean),
             fmt_secs(reuse.p90),
         ],
-        vec!["full prefill".to_string(), format!("{}", full.n), fmt_secs(full.mean), fmt_secs(full.p90)],
-        vec!["decode step".to_string(), format!("{}", dec.n), fmt_secs(dec.mean), fmt_secs(dec.p90)],
+        vec![
+            "full prefill".to_string(),
+            format!("{}", full.n),
+            fmt_secs(full.mean),
+            fmt_secs(full.p90),
+        ],
+        vec![
+            "decode step".to_string(),
+            format!("{}", dec.n),
+            fmt_secs(dec.mean),
+            fmt_secs(dec.p90),
+        ],
     ];
     println!("{}", markdown(&["path", "n", "mean", "p90"], &rows));
     println!(

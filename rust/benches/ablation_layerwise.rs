@@ -61,7 +61,10 @@ fn main() {
     }
     println!(
         "{}",
-        markdown(&["bandwidth", "fetch TTFT (no pipeline)", "fetch TTFT (layer-wise)", "saving"], &rows)
+        markdown(
+            &["bandwidth", "fetch TTFT (no pipeline)", "fetch TTFT (layer-wise)", "saving"],
+            &rows
+        )
     );
 
     // admission-rule micro-view: when compute per layer covers the
@@ -77,5 +80,8 @@ fn main() {
         ]);
     }
     println!("{}", markdown(&["compute speed", "admit at", "overlap won"], &rows));
-    println!("paper: the non-blocking condition hides the remaining layers' fetch\nbehind inference, eliminating the pipeline bubbles of the layer-wise design.");
+    println!(
+        "paper: the non-blocking condition hides the remaining layers' fetch\nbehind \
+         inference, eliminating the pipeline bubbles of the layer-wise design."
+    );
 }

@@ -5,16 +5,22 @@
 
 use kvfetcher::baselines::{SystemKind, SystemProfile};
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::engine::single_request_ttft;
-use kvfetcher::fetcher::FetchConfig;
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::Fetcher;
 use kvfetcher::net::BandwidthTrace;
 
 const BANDWIDTHS: [f64; 8] = [1.0, 2.0, 4.0, 8.0, 16.0, 40.0, 100.0, 200.0];
 const CONTEXTS: [usize; 6] = [5_000, 20_000, 50_000, 100_000, 150_000, 200_000];
 
 fn ttft(perf: &PerfModel, p: &SystemProfile, bw: f64, ctx: usize) -> f64 {
-    let reusable = if p.kind == SystemKind::FullPrefill { 0 } else { (ctx as f64 * 0.95) as usize };
-    single_request_ttft(perf, p, &FetchConfig::default(), &BandwidthTrace::constant(bw), ctx, reusable)
+    let reusable =
+        if p.kind == SystemKind::FullPrefill { 0 } else { (ctx as f64 * 0.95) as usize };
+    Fetcher::builder()
+        .profile(p.clone())
+        .bandwidth(BandwidthTrace::constant(bw))
+        .for_perf(perf)
+        .build()
+        .ttft(perf, ctx, reusable, ExecMode::Analytic)
         .total()
 }
 

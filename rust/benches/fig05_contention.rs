@@ -40,7 +40,10 @@ fn main() {
     ];
     println!(
         "{}",
-        markdown(&["iteration", "standalone", "w/ CacheGen decompress", "w/ KVFetcher (NVDEC)"], &rows)
+        markdown(
+            &["iteration", "standalone", "w/ CacheGen decompress", "w/ KVFetcher (NVDEC)"],
+            &rows
+        )
     );
 
     // Fig. 6: memory of decompressing one 4K-token chunk (Yi-34B)

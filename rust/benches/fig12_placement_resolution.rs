@@ -101,7 +101,13 @@ fn main() {
     println!(
         "{}",
         markdown(
-            &["resolution", "frames", "encoded bytes (real)", "decode @conc1 (table)", "paper size factor"],
+            &[
+                "resolution",
+                "frames",
+                "encoded bytes (real)",
+                "decode @conc1 (table)",
+                "paper size factor",
+            ],
             &rows
         )
     );

@@ -65,14 +65,16 @@ fn main() {
     }
     let best = rows_raw[0].layout;
     let enc = |qq: &kvfetcher::quant::QuantKv, l: IntraLayout| -> usize {
-        layout::encode_chunk(qq, kvfetcher::layout::Resolution { name: "s", w: 256, h: 144 }, l, &CodecConfig::lossless())
+        let res = kvfetcher::layout::Resolution { name: "s", w: 256, h: 144 };
+        layout::encode_chunk(qq, res, l, &CodecConfig::lossless())
             .map(|g| g.iter().map(|x| x.bytes.len()).sum())
             .unwrap_or(usize::MAX)
     };
     let ok = enc(&q, best);
     let broken = enc(&shuffled, best);
     println!(
-        "rule (i) check — cross-head element exchange: {} -> {} bytes ({:.2}x worse; paper: 2.4x ratio degradation)",
+        "rule (i) check — cross-head element exchange: {} -> {} bytes ({:.2}x worse; paper: \
+         2.4x ratio degradation)",
         ok,
         broken,
         broken as f64 / ok as f64
@@ -98,7 +100,8 @@ fn main() {
     let (b, _) = encode_video(&llm265_frames(&head_perm), &CodecConfig::lossless(), &[]);
     let delta = (a.len() as f64 - b.len() as f64).abs() / a.len() as f64 * 100.0;
     println!(
-        "rule (iii) check — reordering whole heads: {} vs {} bytes ({delta:.2}% change; paper: <0.3%)",
+        "rule (iii) check — reordering whole heads: {} vs {} bytes ({delta:.2}% change; \
+         paper: <0.3%)",
         a.len(),
         b.len()
     );

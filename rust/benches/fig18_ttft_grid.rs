@@ -4,17 +4,34 @@
 
 use kvfetcher::baselines::{SystemKind, SystemProfile};
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::engine::{single_request_ttft, single_request_ttft_exec, ExecMode};
-use kvfetcher::fetcher::FetchConfig;
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::Fetcher;
+use kvfetcher::metrics::TtftBreakdown;
 use kvfetcher::net::BandwidthTrace;
 use kvfetcher::util::table::{fmt_secs, markdown};
+
+/// One isolated-request TTFT through the `Fetcher` facade.
+fn ttft(
+    perf: &PerfModel,
+    profile: &SystemProfile,
+    bw: &BandwidthTrace,
+    ctx: usize,
+    reusable: usize,
+    exec: ExecMode,
+) -> TtftBreakdown {
+    Fetcher::builder()
+        .profile(profile.clone())
+        .bandwidth(bw.clone())
+        .for_perf(perf)
+        .build()
+        .ttft(perf, ctx, reusable, exec)
+}
 
 fn main() {
     println!("# Fig. 18 — fetch-request TTFT across devices, models, contexts (16 Gbps)\n");
     let devices = [DeviceSpec::a100(), DeviceSpec::h20(), DeviceSpec::l20()];
     let models = [ModelSpec::lwm_7b(), ModelSpec::yi_34b(), ModelSpec::llama3_70b()];
     let bw = BandwidthTrace::constant(16.0);
-    let cfg = FetchConfig::default();
 
     let mut speedups_vs_full = Vec::new();
     let mut speedups_vs_raw = Vec::new();
@@ -39,7 +56,7 @@ fn main() {
                 let mut ttfts = std::collections::BTreeMap::new();
                 for p in &systems {
                     let r = if p.kind == SystemKind::FullPrefill { 0 } else { reusable };
-                    let t = single_request_ttft(&perf, p, &cfg, &bw, ctx, r).total();
+                    let t = ttft(&perf, p, &bw, ctx, r, ExecMode::Analytic).total();
                     ttfts.insert(p.name, t);
                     cells.push(fmt_secs(t));
                 }
@@ -81,11 +98,8 @@ fn main() {
             };
             for ctx in [max_ctx / 4, max_ctx] {
                 let reusable = (ctx as f64 * 0.95) as usize;
-                let a = single_request_ttft(&perf, &ours, &cfg, &bw, ctx, reusable).total();
-                let p = single_request_ttft_exec(
-                    &perf, &ours, &cfg, &bw, ctx, reusable, ExecMode::Pipelined,
-                )
-                .total();
+                let a = ttft(&perf, &ours, &bw, ctx, reusable, ExecMode::Analytic).total();
+                let p = ttft(&perf, &ours, &bw, ctx, reusable, ExecMode::Pipelined).total();
                 let rel = (p - a).abs() / a;
                 worst = worst.max(rel);
                 assert!(

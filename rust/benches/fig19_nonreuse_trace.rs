@@ -72,7 +72,8 @@ fn main() {
     let (cg_ttft, cg_tpot) = results["CacheGen"];
     let (fp_ttft, fp_tpot) = results["FullPrefill"];
     println!(
-        "non-reuse TTFT reduction: {:.1}% vs CacheGen (paper 77.1%), {:.1}% vs FullPrefill (paper 98%)",
+        "non-reuse TTFT reduction: {:.1}% vs CacheGen (paper 77.1%), {:.1}% vs FullPrefill \
+         (paper 98%)",
         (1.0 - kvf_ttft / cg_ttft) * 100.0,
         (1.0 - kvf_ttft / fp_ttft) * 100.0
     );

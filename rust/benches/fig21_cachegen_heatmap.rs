@@ -4,8 +4,8 @@
 
 use kvfetcher::baselines::SystemProfile;
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::engine::single_request_ttft;
-use kvfetcher::fetcher::FetchConfig;
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::Fetcher;
 use kvfetcher::net::BandwidthTrace;
 
 const BANDWIDTHS: [f64; 7] = [1.0, 2.0, 4.0, 8.0, 16.0, 40.0, 100.0];
@@ -15,9 +15,17 @@ fn main() {
     println!("# Fig. 21 — CacheGen TTFT / KVFetcher TTFT (LWM-7B on 2x H20)\n");
     let dev = DeviceSpec::h20();
     let perf = PerfModel::new(dev.clone(), ModelSpec::lwm_7b());
-    let cfg = FetchConfig::default();
     let ours = SystemProfile::kvfetcher();
     let cg = SystemProfile::cachegen(&dev);
+    let ttft = |p: &SystemProfile, tr: &BandwidthTrace, ctx: usize, reusable: usize| {
+        Fetcher::builder()
+            .profile(p.clone())
+            .bandwidth(tr.clone())
+            .for_perf(&perf)
+            .build()
+            .ttft(&perf, ctx, reusable, ExecMode::Analytic)
+            .total()
+    };
 
     print!("{:>9} |", "ctx\\bw");
     for bw in BANDWIDTHS {
@@ -32,8 +40,8 @@ fn main() {
         let reusable = (ctx as f64 * 0.95) as usize;
         for bw in BANDWIDTHS {
             let tr = BandwidthTrace::constant(bw);
-            let t_ours = single_request_ttft(&perf, &ours, &cfg, &tr, ctx, reusable).total();
-            let t_cg = single_request_ttft(&perf, &cg, &cfg, &tr, ctx, reusable).total();
+            let t_ours = ttft(&ours, &tr, ctx, reusable);
+            let t_cg = ttft(&cg, &tr, ctx, reusable);
             let ratio = t_cg / t_ours;
             if bw <= 40.0 {
                 low_bw_ratios.push(ratio);

@@ -7,10 +7,9 @@
 use kvfetcher::asic::{h20_table, DecodePool};
 use kvfetcher::baselines::SystemProfile;
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::fetcher::{
-    execute_fetch, plan_fetch, CancelToken, FetchConfig, FetchParams, PipelineConfig,
-};
-use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::{FetchConfig, FetchRequest, Fetcher};
+use kvfetcher::net::BandwidthTrace;
 use kvfetcher::util::table::{fmt_secs, markdown};
 
 fn main() {
@@ -30,12 +29,13 @@ fn main() {
         ("RawReuse", SystemProfile::raw_reuse(), false),
     ];
     for (name, profile, adaptive) in variants {
-        let mut link = NetLink::new(BandwidthTrace::fig17());
-        let mut pool = DecodePool::new(dev.nvdecs * perf.n_gpus, h20_table());
-        let mut est = BandwidthEstimator::new(0.5);
-        let cfg = FetchConfig { adaptive, default_bw_gbps: 6.0, ..Default::default() };
-        let plan =
-            plan_fetch(0.0, tokens, raw, &profile, &cfg, &mut link, &mut pool, &mut est);
+        let mut fetcher = Fetcher::builder()
+            .profile(profile)
+            .fetch_config(FetchConfig { adaptive, default_bw_gbps: 6.0, ..Default::default() })
+            .bandwidth(BandwidthTrace::fig17())
+            .decode_pool(DecodePool::new(dev.nvdecs * perf.n_gpus, h20_table()))
+            .build();
+        let plan = fetcher.run(&FetchRequest::new(tokens, raw)).expect("analytic fetch").plan;
         let total = plan.done_at + suffix_prefill;
         totals.insert(name, total);
         let max_chunk_dec = plan
@@ -73,24 +73,14 @@ fn main() {
     // ExecMode cross-check under the dynamic-bandwidth pattern: the
     // threaded executor picks the same per-chunk resolutions and lands
     // within 5% of the analytic TTFT.
-    let mut link = NetLink::new(BandwidthTrace::fig17());
-    let mut pool = DecodePool::new(dev.nvdecs * perf.n_gpus, h20_table());
-    let mut est = BandwidthEstimator::new(0.5);
-    let params = FetchParams {
-        now: 0.0,
-        reusable_tokens: tokens,
-        raw_bytes_total: raw,
-        profile: SystemProfile::kvfetcher(),
-        cfg: FetchConfig { adaptive: true, default_bw_gbps: 6.0, ..Default::default() },
-    };
-    let out = execute_fetch(
-        &params,
-        &PipelineConfig::default(),
-        &CancelToken::new(),
-        &mut link,
-        &mut pool,
-        &mut est,
-    );
+    let mut fetcher = Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .fetch_config(FetchConfig { adaptive: true, default_bw_gbps: 6.0, ..Default::default() })
+        .bandwidth(BandwidthTrace::fig17())
+        .decode_pool(DecodePool::new(dev.nvdecs * perf.n_gpus, h20_table()))
+        .build();
+    let req = FetchRequest::new(tokens, raw).exec(ExecMode::Pipelined);
+    let out = fetcher.run(&req).expect("pipelined fetch");
     let pipelined_total = out.plan.done_at + suffix_prefill;
     let analytic_total = totals["KVFetcher (adaptive)"];
     println!(

@@ -32,7 +32,8 @@ fn main() {
             last_end = last_end.max(job.end);
         }
         let ours_tps = (n_chunks * chunk_tokens) as f64 / last_end;
-        let cg_tps = cachegen_tokens_per_sec(dev) * n_gpus as f64 / 2.0; // paper used 2-GPU cachegen numbers
+        // paper used 2-GPU cachegen numbers
+        let cg_tps = cachegen_tokens_per_sec(dev) * n_gpus as f64 / 2.0;
         rows.push(vec![
             format!("{}x {}", n_gpus, dev.name),
             format!("{units}"),
@@ -45,7 +46,14 @@ fn main() {
     println!(
         "{}",
         markdown(
-            &["platform", "NVDECs", "ours (sim, table-implied)", "ours (paper)", "CacheGen CUDA", "ratio"],
+            &[
+                "platform",
+                "NVDECs",
+                "ours (sim, table-implied)",
+                "ours (paper)",
+                "CacheGen CUDA",
+                "ratio",
+            ],
             &rows
         )
     );

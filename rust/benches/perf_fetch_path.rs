@@ -46,7 +46,11 @@ fn main() {
     let dt = t0.elapsed().as_secs_f64();
     rows.push(vec![
         "plan_fetch (10 chunks, fresh state)".into(),
-        format!("{:.0}K plans/s ({:.0}K chunk-events/s)", plans as f64 / dt / 1e3, plans as f64 * 10.0 / dt / 1e3),
+        format!(
+            "{:.0}K plans/s ({:.0}K chunk-events/s)",
+            plans as f64 / dt / 1e3,
+            plans as f64 * 10.0 / dt / 1e3
+        ),
     ]);
 
     // allocator churn

@@ -56,11 +56,18 @@ fn validate(name: &str, t: &LookupTable) {
 
 fn main() {
     println!("# Tables 1-3 — NVDEC decode-latency lookup tables\n");
-    let tables = [("Table 1: H20", h20_table(), 7), ("Table 2: L20", l20_table(), 3), ("Table 3: A100", a100_table(), 5)];
+    let tables = [
+        ("Table 1: H20", h20_table(), 7),
+        ("Table 2: L20", l20_table(), 3),
+        ("Table 3: A100", a100_table(), 5),
+    ];
     for (name, t, units) in &tables {
         print_table(name, t, *units);
         validate(name, t);
         assert_eq!(t.max_concurrency(), *units, "{name}: one row per concurrent chunk");
     }
-    println!("all structural properties hold: latency rises with pool load, falls with\nresolution; only sub-1080p switches pay a penalty; sizes grow with resolution.");
+    println!(
+        "all structural properties hold: latency rises with pool load, falls with\n\
+         resolution; only sub-1080p switches pay a penalty; sizes grow with resolution."
+    );
 }

@@ -5,7 +5,7 @@
 //! |-------------|----------------------|--------------------------|--------------|
 //! | FullPrefill | — (recompute)        | —                        | huge prefill |
 //! | RawReuse    | fp16 tensors         | —                        | max bytes    |
-//! | CacheGen    | quant + entropy code | CUDA kernel              | SM contention (+50% prefill, +20% decode), 2.7x memory bloat |
+//! | CacheGen    | quant + entropy code | CUDA kernel              | SM contention, 2.7x mem |
 //! | ShadowServe | quant + entropy code | SmartNIC offload         | $3000/NIC    |
 //! | llm.265     | lossy video (no inter-pred) | NVDEC             | accuracy drop, modest ratio |
 //! | KVFetcher   | lossless video, codec-friendly layout | NVDEC   | none         |
@@ -41,7 +41,12 @@ pub enum Decompress {
     /// CUDA kernel: throughput in tokens/s, plus inference slowdowns
     /// while active (the §2.2 contention measurements) and the memory
     /// bloat factor vs raw chunk KV (Fig. 6: 2.7x).
-    CudaKernel { tokens_per_sec: f64, prefill_slowdown: f64, decode_slowdown: f64, mem_factor: f64 },
+    CudaKernel {
+        tokens_per_sec: f64,
+        prefill_slowdown: f64,
+        decode_slowdown: f64,
+        mem_factor: f64,
+    },
     /// SmartNIC offload at line rate; interference-free but costly.
     SmartNic { gbps: f64, cost_usd: f64 },
 }

@@ -28,13 +28,37 @@ pub struct DeviceSpec {
 
 impl DeviceSpec {
     pub fn a100() -> Self {
-        DeviceSpec { name: "A100", tflops: 312.0, hbm_gbps: 2039.0, mem_gb: 80.0, nvdecs: 5, nvencs: 1, mfu: 0.45 }
+        DeviceSpec {
+            name: "A100",
+            tflops: 312.0,
+            hbm_gbps: 2039.0,
+            mem_gb: 80.0,
+            nvdecs: 5,
+            nvencs: 1,
+            mfu: 0.45,
+        }
     }
     pub fn h20() -> Self {
-        DeviceSpec { name: "H20", tflops: 148.0, hbm_gbps: 4000.0, mem_gb: 96.0, nvdecs: 7, nvencs: 3, mfu: 0.45 }
+        DeviceSpec {
+            name: "H20",
+            tflops: 148.0,
+            hbm_gbps: 4000.0,
+            mem_gb: 96.0,
+            nvdecs: 7,
+            nvencs: 3,
+            mfu: 0.45,
+        }
     }
     pub fn l20() -> Self {
-        DeviceSpec { name: "L20", tflops: 119.5, hbm_gbps: 864.0, mem_gb: 48.0, nvdecs: 3, nvencs: 2, mfu: 0.45 }
+        DeviceSpec {
+            name: "L20",
+            tflops: 119.5,
+            hbm_gbps: 864.0,
+            mem_gb: 48.0,
+            nvdecs: 3,
+            nvencs: 2,
+            mfu: 0.45,
+        }
     }
 
     pub fn by_name(name: &str) -> Option<DeviceSpec> {

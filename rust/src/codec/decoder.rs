@@ -6,6 +6,7 @@
 
 use super::dct;
 use super::encoder::{CodecMode, MAGIC};
+use super::error::CodecError;
 use super::frame::Frame;
 use super::predict::{self, PredMode};
 use super::rans;
@@ -24,9 +25,14 @@ pub struct VideoHeader {
     streams_at: usize,
 }
 
-pub fn parse_header(bytes: &[u8]) -> Result<VideoHeader, String> {
-    if bytes.len() < 18 || &bytes[0..4] != MAGIC {
-        return Err("codec: bad magic".into());
+pub fn parse_header(bytes: &[u8]) -> Result<VideoHeader, CodecError> {
+    // fixed header: magic 4 + w 2 + h 2 + frames 2 + mode 1 + qp 1
+    //             + inter 1 + gop 2 + meta_len 4 = 19 bytes
+    if bytes.len() < 19 {
+        return Err(CodecError::Truncated(format!("header needs 19 bytes, have {}", bytes.len())));
+    }
+    if &bytes[0..4] != MAGIC {
+        return Err(CodecError::Malformed("bad magic".into()));
     }
     let w = u16::from_le_bytes(bytes[4..6].try_into().unwrap()) as usize;
     let h = u16::from_le_bytes(bytes[6..8].try_into().unwrap()) as usize;
@@ -34,25 +40,25 @@ pub fn parse_header(bytes: &[u8]) -> Result<VideoHeader, String> {
     let mode = match bytes[10] {
         0 => CodecMode::Lossless,
         1 => CodecMode::Lossy { qp: bytes[11] },
-        m => return Err(format!("codec: bad mode byte {m}")),
+        m => return Err(CodecError::Malformed(format!("bad mode byte {m}"))),
     };
     let inter = bytes[12] != 0;
     let gop = u16::from_le_bytes(bytes[13..15].try_into().unwrap()) as usize;
     // a decoder that parses network bytes must reject malformed
     // geometry instead of panicking in Frame::new
     if w == 0 || h == 0 || w % 8 != 0 || h % 8 != 0 || n_frames == 0 {
-        return Err(format!("codec: bad geometry {w}x{h}x{n_frames}"));
+        return Err(CodecError::Malformed(format!("bad geometry {w}x{h}x{n_frames}")));
     }
     let meta_len = u32::from_le_bytes(bytes[15..19].try_into().unwrap()) as usize;
     let meta = bytes
         .get(19..19 + meta_len)
-        .ok_or("codec: truncated meta")?
+        .ok_or_else(|| CodecError::Truncated("meta shorter than declared".into()))?
         .to_vec();
     Ok(VideoHeader { w, h, n_frames, mode, inter, gop, meta, streams_at: 19 + meta_len })
 }
 
 /// Decode all frames at once.
-pub fn decode_video(bytes: &[u8]) -> Result<(Vec<Frame>, Vec<u8>), String> {
+pub fn decode_video(bytes: &[u8]) -> Result<(Vec<Frame>, Vec<u8>), CodecError> {
     let mut frames = Vec::new();
     let meta = decode_video_with(bytes, |f| frames.push(f.clone()))?;
     Ok((frames, meta))
@@ -65,10 +71,12 @@ pub fn decode_video(bytes: &[u8]) -> Result<(Vec<Frame>, Vec<u8>), String> {
 pub fn decode_video_with<F: FnMut(&Frame)>(
     bytes: &[u8],
     mut on_frame: F,
-) -> Result<Vec<u8>, String> {
+) -> Result<Vec<u8>, CodecError> {
     let hdr = parse_header(bytes)?;
-    let (modes, used) = rans::decode(&bytes[hdr.streams_at..])?;
-    let (resid, _) = rans::decode(&bytes[hdr.streams_at + used..])?;
+    let (modes, used) =
+        rans::decode(&bytes[hdr.streams_at..]).map_err(CodecError::Malformed)?;
+    let (resid, _) =
+        rans::decode(&bytes[hdr.streams_at + used..]).map_err(CodecError::Malformed)?;
 
     let order = dct::zigzag_order();
     let bx_count = hdr.w / 8;
@@ -83,13 +91,18 @@ pub fn decode_video_with<F: FnMut(&Frame)>(
             for by in 0..by_count {
                 for bx in 0..bx_count {
                     let mode = PredMode::from_u8(
-                        *modes.get(mode_pos).ok_or("codec: mode stream underrun")?,
-                    )?;
+                        *modes
+                            .get(mode_pos)
+                            .ok_or_else(|| CodecError::Truncated("mode stream underrun".into()))?,
+                    )
+                    .map_err(CodecError::Malformed)?;
                     mode_pos += 1;
                     if prev_recon.is_none()
                         && matches!(mode, PredMode::Inter | PredMode::Skip)
                     {
-                        return Err("codec: inter mode without reference frame".into());
+                        return Err(CodecError::Malformed(
+                            "inter mode without reference frame".into(),
+                        ));
                     }
                     let mut pred = [0u8; 64];
                     predict::predict(mode, &recon, prev_recon.as_ref(), plane, bx, by, &mut pred);
@@ -99,9 +112,9 @@ pub fn decode_video_with<F: FnMut(&Frame)>(
                             if mode == PredMode::Skip {
                                 rblock = pred;
                             } else {
-                                let r: &[u8] = resid
-                                    .get(res_pos..res_pos + 64)
-                                    .ok_or("codec: residual underrun")?;
+                                let r: &[u8] = resid.get(res_pos..res_pos + 64).ok_or_else(
+                                    || CodecError::Truncated("residual underrun".into()),
+                                )?;
                                 res_pos += 64;
                                 let mut rarr = [0u8; 64];
                                 rarr.copy_from_slice(r);
@@ -115,10 +128,13 @@ pub fn decode_video_with<F: FnMut(&Frame)>(
                                 let step = dct::qp_to_step(qp);
                                 let mut levels = [0i32; 64];
                                 res_pos += dct::bytes_to_levels(
-                                    resid.get(res_pos..).ok_or("codec: residual underrun")?,
+                                    resid.get(res_pos..).ok_or_else(|| {
+                                        CodecError::Truncated("residual underrun".into())
+                                    })?,
                                     &order,
                                     &mut levels,
-                                )?;
+                                )
+                                .map_err(CodecError::Truncated)?;
                                 let mut deq = [0f32; 64];
                                 dct::dequantize(&levels, step, &mut deq);
                                 let mut rec = [0f32; 64];

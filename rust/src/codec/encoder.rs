@@ -106,8 +106,15 @@ pub fn encode_video(frames: &[Frame], cfg: &CodecConfig, meta: &[u8]) -> (Vec<u8
                     let mut actual = [0u8; 64];
                     frame.read_block(plane, bx, by, &mut actual);
                     let allow_inter = cfg.inter && !iframe && prev_recon.is_some();
-                    let (mode, pred) =
-                        choose_mode(&actual, &recon, prev_recon.as_ref(), plane, bx, by, allow_inter);
+                    let (mode, pred) = choose_mode(
+                        &actual,
+                        &recon,
+                        prev_recon.as_ref(),
+                        plane,
+                        bx,
+                        by,
+                        allow_inter,
+                    );
                     stats.n_blocks += 1;
                     match mode {
                         PredMode::Skip => stats.n_skip += 1,

@@ -1,0 +1,75 @@
+//! Typed errors of the wire-decode path.
+//!
+//! Everything that parses *network-controlled* bytes — container
+//! headers, entropy streams, frame payloads — reports a [`CodecError`]
+//! instead of a bare `String`, so callers (the fetch facade, the KV
+//! store service) can map wire faults onto their own error taxonomy
+//! without string matching. The encoder side keeps plain `String`
+//! errors: it only ever consumes trusted in-process data.
+
+use std::error::Error;
+use std::fmt;
+
+/// Why a coded bitstream failed to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// The bytes end before the structure they declare (truncated
+    /// container meta, entropy-stream underrun, missing residuals).
+    Truncated(String),
+    /// Structurally invalid data: bad magic, unknown mode byte,
+    /// impossible geometry, inter prediction without a reference.
+    Malformed(String),
+    /// The streams decode, but disagree with the declared layout or
+    /// shape (e.g. group metas that describe different chunks).
+    Mismatch(String),
+}
+
+impl CodecError {
+    /// The human-readable detail line, without the kind prefix.
+    pub fn detail(&self) -> &str {
+        match self {
+            CodecError::Truncated(s) | CodecError::Malformed(s) | CodecError::Mismatch(s) => s,
+        }
+    }
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Truncated(s) => write!(f, "codec: truncated stream: {s}"),
+            CodecError::Malformed(s) => write!(f, "codec: malformed stream: {s}"),
+            CodecError::Mismatch(s) => write!(f, "codec: stream/shape mismatch: {s}"),
+        }
+    }
+}
+
+impl Error for CodecError {}
+
+/// Legacy interop: `?` from a `CodecError` inside the remaining
+/// `Result<_, String>` paths (layout decode, calibration helpers).
+impl From<CodecError> for String {
+    fn from(e: CodecError) -> String {
+        e.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_kind_and_detail() {
+        let e = CodecError::Truncated("need 4 bytes".into());
+        assert!(e.to_string().contains("truncated"));
+        assert!(e.to_string().contains("need 4 bytes"));
+        assert_eq!(e.detail(), "need 4 bytes");
+        let s: String = CodecError::Malformed("bad magic".into()).into();
+        assert!(s.contains("bad magic"));
+    }
+
+    #[test]
+    fn is_a_std_error() {
+        let e: Box<dyn Error> = Box::new(CodecError::Mismatch("shapes".into()));
+        assert!(e.to_string().contains("mismatch"));
+    }
+}

@@ -16,11 +16,13 @@
 pub mod dct;
 pub mod decoder;
 pub mod encoder;
+pub mod error;
 pub mod frame;
 pub mod predict;
 pub mod rans;
 
 pub use decoder::{decode_video, decode_video_with, parse_header, VideoHeader};
+pub use error::CodecError;
 pub use encoder::{encode_video, CodecConfig, CodecMode, CodecStats};
 pub use frame::{Frame, BLOCK};
 pub use predict::PredMode;

@@ -7,6 +7,7 @@ use crate::engine::{EngineConfig, ExecMode};
 use crate::fetcher::{FetchConfig, PipelineConfig};
 use crate::net::BandwidthTrace;
 use crate::scheduler::SchedulerConfig;
+use crate::service::{Backend, ObjStoreShape};
 use crate::trace::TraceConfig;
 use crate::util::config::Config;
 
@@ -18,9 +19,16 @@ pub struct Experiment {
     pub model: ModelSpec,
     pub bandwidth_gbps: f64,
     pub jitter: bool,
+    /// Transport backend of the demo-restore path (`[network] backend =
+    /// "tcp" | "local" | "objstore"`). `None` = not configured; the CLI
+    /// falls back to `tcp` when remote addresses are present.
+    pub backend: Option<Backend>,
     /// Remote storage-node addresses (`[network] remote = "a:p,b:p"`);
     /// empty = in-process fetch simulation only.
     pub remote_addrs: Vec<String>,
+    /// Wall-clock shape of the `objstore` backend (`[network]
+    /// objstore_latency_ms` / `objstore_gbps`).
+    pub objstore: ObjStoreShape,
     pub engine: EngineConfig,
     pub trace: TraceConfig,
 }
@@ -33,7 +41,9 @@ impl Default for Experiment {
             model: ModelSpec::yi_34b(),
             bandwidth_gbps: 16.0,
             jitter: false,
+            backend: None,
             remote_addrs: Vec::new(),
+            objstore: ObjStoreShape::default(),
             engine: EngineConfig::default(),
             trace: TraceConfig::default(),
         }
@@ -97,13 +107,29 @@ impl Experiment {
             out_min: c.get_i64("trace", "out_min", 16) as usize,
             out_max: c.get_i64("trace", "out_max", 256) as usize,
         };
+        let backend = match c.get_str("network", "backend", "") {
+            "" => None,
+            name => match Backend::by_name(name) {
+                Some(b) => Some(b),
+                None => {
+                    eprintln!("config: unknown [network] backend = {name:?}; ignoring");
+                    None
+                }
+            },
+        };
+        let objstore = ObjStoreShape {
+            latency_s: c.get_f64("network", "objstore_latency_ms", 10.0) / 1e3,
+            gbps: c.get_f64("network", "objstore_gbps", 8.0),
+        };
         Experiment {
             name: c.get_str("", "name", &d.name).to_string(),
             device,
             model,
             bandwidth_gbps: c.get_f64("network", "bandwidth_gbps", 16.0),
             jitter: c.get_bool("network", "jitter", false),
+            backend,
             remote_addrs: parse_addr_list(c.get_str("network", "remote", "")),
+            objstore,
             engine,
             trace,
         }
@@ -146,6 +172,9 @@ mod tests {
         assert!(e.engine.sched.fetching_aware);
         assert!(e.remote_addrs.is_empty());
         assert_eq!(e.engine.pipe.queue_depth, 4);
+        assert!(e.backend.is_none());
+        assert!((e.objstore.latency_s - 0.010).abs() < 1e-12);
+        assert!((e.objstore.gbps - 8.0).abs() < 1e-12);
     }
 
     #[test]
@@ -158,6 +187,9 @@ model = "llama3-70b"
 [network]
 bandwidth_gbps = 4.0
 jitter = true
+backend = "objstore"
+objstore_latency_ms = 2.5
+objstore_gbps = 12.0
 remote = "127.0.0.1:7301, 127.0.0.1:7302"
 [scheduler]
 fetching_aware = false
@@ -182,6 +214,9 @@ n_requests = 10
         assert_eq!(e.engine.pipe.queue_depth, 2);
         assert_eq!(e.trace.n_requests, 10);
         assert!(e.jitter);
+        assert_eq!(e.backend, Some(Backend::ObjStore));
+        assert!((e.objstore.latency_s - 0.0025).abs() < 1e-12);
+        assert!((e.objstore.gbps - 12.0).abs() < 1e-12);
         assert_eq!(e.remote_addrs, vec!["127.0.0.1:7301", "127.0.0.1:7302"]);
         // jitter trace stays within its clamp bounds
         let tr = e.bandwidth_trace();

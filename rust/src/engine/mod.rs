@@ -9,38 +9,16 @@ pub mod real;
 use crate::baselines::{Decompress, SystemProfile};
 use crate::cache::BlockAllocator;
 use crate::cluster::PerfModel;
-use crate::fetcher::executor::{execute_fetch, FetchParams};
-use crate::fetcher::pipeline::{CancelToken, PipelineConfig};
-use crate::fetcher::{layerwise_admission, plan_fetch, FetchConfig, FetchPlan};
+use crate::fetcher::pipeline::PipelineConfig;
+use crate::fetcher::{layerwise_admission, FetchConfig, FetchPlan, FetchRequest, Fetcher};
 use crate::metrics::{Recorder, RequestRecord};
-use crate::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+use crate::net::BandwidthTrace;
 use crate::scheduler::{ReqState, SchedEntry, Scheduler, SchedulerConfig};
 use crate::trace::Request;
 
-/// How fetches execute inside the engine.
-///
-/// Both modes run the same stage model (`fetcher::pipeline`) and yield
-/// the same timeline; `Analytic` computes it in one pass on the caller's
-/// thread, `Pipelined` drives the real three-stage threaded executor
-/// (bounded channels, backpressure, cancellation) so traces exercise the
-/// deployment-shaped code path and cross-check the analytic model.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub enum ExecMode {
-    #[default]
-    Analytic,
-    Pipelined,
-}
-
-impl ExecMode {
-    /// Parse a config/CLI name ("analytic" | "pipelined").
-    pub fn by_name(name: &str) -> Option<ExecMode> {
-        match name.to_ascii_lowercase().as_str() {
-            "analytic" => Some(ExecMode::Analytic),
-            "pipelined" | "pipeline" => Some(ExecMode::Pipelined),
-            _ => None,
-        }
-    }
-}
+/// Execution mode of the fetch pipeline; now defined with the fetch
+/// facade (`fetcher::api`) and re-exported here for existing imports.
+pub use crate::fetcher::ExecMode;
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -99,9 +77,9 @@ pub struct EngineSim {
     pub perf: PerfModel,
     pub profile: SystemProfile,
     pub cfg: EngineConfig,
-    pub link: NetLink,
-    pub pool: crate::asic::DecodePool,
-    pub est: BandwidthEstimator,
+    /// The fetch facade: owns the shared link / NVDEC pool / bandwidth
+    /// estimator, so consecutive fetches contend realistically.
+    pub fetcher: Fetcher,
     clock: f64,
     /// peak concurrent decompression memory observed (Fig. 24)
     pub peak_decompress_bytes: usize,
@@ -114,53 +92,27 @@ impl EngineSim {
         cfg: EngineConfig,
         bw: BandwidthTrace,
     ) -> Self {
-        let n_units = perf.dev.nvdecs * perf.n_gpus;
-        let table = perf.dev.decode_table();
-        EngineSim {
-            pool: crate::asic::DecodePool::new(n_units, table),
-            link: NetLink::new(bw),
-            est: BandwidthEstimator::new(0.5),
-            perf,
-            profile,
-            cfg,
-            clock: 0.0,
-            peak_decompress_bytes: 0,
-        }
+        let fetcher = Fetcher::builder()
+            .profile(profile.clone())
+            .fetch_config(cfg.fetch.clone())
+            .pipeline(cfg.pipe.clone())
+            .bandwidth(bw)
+            .for_perf(&perf)
+            .build();
+        EngineSim { fetcher, perf, profile, cfg, clock: 0.0, peak_decompress_bytes: 0 }
     }
 
     /// Run one fetch through the configured [`ExecMode`], mutating the
-    /// shared link / pool / estimator either way.
+    /// facade's shared link / pool / estimator either way. The public
+    /// `profile`, `cfg.fetch`, and `cfg.pipe` fields are re-synced into
+    /// the facade on every fetch, so mutating them between runs keeps
+    /// working exactly as it did before the facade.
     fn run_fetch(&mut self, now: f64, reusable_tokens: usize, raw_bytes: usize) -> FetchPlan {
-        match self.cfg.exec {
-            ExecMode::Analytic => plan_fetch(
-                now,
-                reusable_tokens,
-                raw_bytes,
-                &self.profile,
-                &self.cfg.fetch,
-                &mut self.link,
-                &mut self.pool,
-                &mut self.est,
-            ),
-            ExecMode::Pipelined => {
-                let params = FetchParams {
-                    now,
-                    reusable_tokens,
-                    raw_bytes_total: raw_bytes,
-                    profile: self.profile.clone(),
-                    cfg: self.cfg.fetch.clone(),
-                };
-                execute_fetch(
-                    &params,
-                    &self.cfg.pipe,
-                    &CancelToken::new(),
-                    &mut self.link,
-                    &mut self.pool,
-                    &mut self.est,
-                )
-                .plan
-            }
-        }
+        self.fetcher.set_profile(self.profile.clone());
+        self.fetcher.set_config(self.cfg.fetch.clone());
+        self.fetcher.set_pipeline_config(self.cfg.pipe.clone());
+        let req = FetchRequest::new(reusable_tokens, raw_bytes).at(now).exec(self.cfg.exec);
+        self.fetcher.run(&req).expect("source-less fetch cannot fail").plan
     }
 
     fn kv_capacity_tokens(&self) -> usize {
@@ -398,6 +350,10 @@ impl EngineSim {
 /// TTFT of a *single isolated* fetch request — the Fig. 18 / Fig. 21 /
 /// Fig. 3 primitive (no queueing, fresh link/pool) — under the default
 /// analytic execution mode.
+#[deprecated(
+    since = "0.4.0",
+    note = "build a `Fetcher` (`Fetcher::builder().profile(..).for_perf(..)`) and call `ttft`"
+)]
 pub fn single_request_ttft(
     perf: &PerfModel,
     profile: &SystemProfile,
@@ -406,11 +362,21 @@ pub fn single_request_ttft(
     context: usize,
     reusable: usize,
 ) -> crate::metrics::TtftBreakdown {
-    single_request_ttft_exec(perf, profile, fetch_cfg, bw, context, reusable, ExecMode::Analytic)
+    Fetcher::builder()
+        .profile(profile.clone())
+        .fetch_config(fetch_cfg.clone())
+        .bandwidth(bw.clone())
+        .for_perf(perf)
+        .build()
+        .ttft(perf, context, reusable, ExecMode::Analytic)
 }
 
 /// [`single_request_ttft`] with an explicit [`ExecMode`], so benches can
 /// cross-check the threaded executor against the analytic model.
+#[deprecated(
+    since = "0.4.0",
+    note = "build a `Fetcher` (`Fetcher::builder().profile(..).for_perf(..)`) and call `ttft`"
+)]
 pub fn single_request_ttft_exec(
     perf: &PerfModel,
     profile: &SystemProfile,
@@ -420,47 +386,13 @@ pub fn single_request_ttft_exec(
     reusable: usize,
     exec: ExecMode,
 ) -> crate::metrics::TtftBreakdown {
-    use crate::baselines::SystemKind;
-    let mut bd = crate::metrics::TtftBreakdown::default();
-    match profile.kind {
-        SystemKind::FullPrefill => {
-            bd.prefill = perf.full_prefill_time(context);
-        }
-        _ => {
-            let mut link = NetLink::new(bw.clone());
-            let units = perf.dev.nvdecs * perf.n_gpus;
-            let mut pool = crate::asic::DecodePool::new(units, perf.dev.decode_table());
-            let mut est = BandwidthEstimator::new(0.5);
-            let raw = perf.kv_bytes(reusable);
-            let plan = match exec {
-                ExecMode::Analytic => plan_fetch(
-                    0.0, reusable, raw, profile, fetch_cfg, &mut link, &mut pool, &mut est,
-                ),
-                ExecMode::Pipelined => {
-                    let params = FetchParams {
-                        now: 0.0,
-                        reusable_tokens: reusable,
-                        raw_bytes_total: raw,
-                        profile: profile.clone(),
-                        cfg: fetch_cfg.clone(),
-                    };
-                    execute_fetch(
-                        &params,
-                        &PipelineConfig::default(),
-                        &CancelToken::new(),
-                        &mut link,
-                        &mut pool,
-                        &mut est,
-                    )
-                    .plan
-                }
-            };
-            bd = plan.breakdown;
-            let suffix = context - reusable;
-            bd.prefill = perf.prefill_time(suffix.max(1), context);
-        }
-    }
-    bd
+    Fetcher::builder()
+        .profile(profile.clone())
+        .fetch_config(fetch_cfg.clone())
+        .bandwidth(bw.clone())
+        .for_perf(perf)
+        .build()
+        .ttft(perf, context, reusable, exec)
 }
 
 #[cfg(test)]
@@ -573,31 +505,17 @@ mod tests {
     #[test]
     fn single_request_breakdown_sane() {
         let p = perf();
-        let bw = BandwidthTrace::constant(16.0);
-        let ours = single_request_ttft(
-            &p,
-            &SystemProfile::kvfetcher(),
-            &FetchConfig::default(),
-            &bw,
-            100_000,
-            95_000,
-        );
-        let full = single_request_ttft(
-            &p,
-            &SystemProfile::full_prefill(),
-            &FetchConfig::default(),
-            &bw,
-            100_000,
-            0,
-        );
-        let raw = single_request_ttft(
-            &p,
-            &SystemProfile::raw_reuse(),
-            &FetchConfig::default(),
-            &bw,
-            100_000,
-            95_000,
-        );
+        let ttft = |profile: SystemProfile, reusable: usize| {
+            Fetcher::builder()
+                .profile(profile)
+                .bandwidth(BandwidthTrace::constant(16.0))
+                .for_perf(&p)
+                .build()
+                .ttft(&p, 100_000, reusable, ExecMode::Analytic)
+        };
+        let ours = ttft(SystemProfile::kvfetcher(), 95_000);
+        let full = ttft(SystemProfile::full_prefill(), 0);
+        let raw = ttft(SystemProfile::raw_reuse(), 95_000);
         assert!(ours.total() < raw.total(), "ours {} raw {}", ours.total(), raw.total());
         assert!(ours.total() < full.total());
         // at 16 Gbps raw reuse still beats recompute for 100K ctx

@@ -15,7 +15,9 @@ use anyhow::{anyhow, Result};
 use crate::codec::{CodecConfig, CodecMode};
 #[cfg(feature = "pjrt")]
 use crate::kvstore::{prefix_hashes, StorageNode, StoredChunk, StoredVariant};
-use crate::layout::{self, baseline::llm265_frames, baseline::llm265_restore, IntraLayout, Resolution};
+use crate::layout::{
+    self, baseline::llm265_frames, baseline::llm265_restore, IntraLayout, Resolution,
+};
 use crate::quant::{dequantize, quantize, QuantKv};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{argmax, cache_to_kv, kv_to_cache, Runtime};
@@ -65,7 +67,9 @@ impl CodedPrefix {
 pub fn code_prefix(kv: &KvCache, coding: WireCoding) -> Result<CodedPrefix, String> {
     let raw_bytes_f16 = kv.byte_len_f16();
     match coding {
-        WireCoding::Raw => Ok(CodedPrefix { wire_bytes: raw_bytes_f16, raw_bytes_f16, restored: kv.clone() }),
+        WireCoding::Raw => {
+            Ok(CodedPrefix { wire_bytes: raw_bytes_f16, raw_bytes_f16, restored: kv.clone() })
+        }
         WireCoding::Entropy => {
             let q = quantize(kv);
             let enc = crate::codec::rans::encode(&q.data);
@@ -109,7 +113,8 @@ fn video_roundtrip(
         .ok_or_else(|| format!("layout infeasible at {}", res.name))?;
     let wire = layout::chunk_wire_bytes(&groups, q.scales.len());
     let q2 = layout::decode_chunk(&groups, q.scales.clone())?;
-    Ok(CodedPrefix { wire_bytes: wire, raw_bytes_f16: kv.byte_len_f16(), restored: dequantize(&q2) })
+    let raw_bytes_f16 = kv.byte_len_f16();
+    Ok(CodedPrefix { wire_bytes: wire, raw_bytes_f16, restored: dequantize(&q2) })
 }
 
 /// Best intra layout by the rule-reduced search (cached per shape in
@@ -193,7 +198,12 @@ impl RealEngine {
 
     /// Serve a request whose prefix is stored remotely: fetch (decode +
     /// restore real bytes), run the suffix prefill, return next tokens.
-    pub fn serve_with_reuse(&self, prefix_hash: u64, suffix: &[i32], resolution: &str) -> Result<ServeOutcome> {
+    pub fn serve_with_reuse(
+        &self,
+        prefix_hash: u64,
+        suffix: &[i32],
+        resolution: &str,
+    ) -> Result<ServeOutcome> {
         let chunk = self
             .store
             .get(prefix_hash)
@@ -292,7 +302,8 @@ pub fn accuracy_eval(
         let (logits_sfx, _) = rt.suffix(&kv_flat, &tokens[cfg.prefix_len..])?;
         let v = cfg.vocab;
         for i in 0..cfg.suffix_len {
-            let full_next = argmax(&logits_full[(cfg.prefix_len + i) * v..(cfg.prefix_len + i + 1) * v]);
+            let full_next =
+                argmax(&logits_full[(cfg.prefix_len + i) * v..(cfg.prefix_len + i + 1) * v]);
             let got = argmax(&logits_sfx[i * v..(i + 1) * v]);
             agree += (full_next == got) as usize;
             total += 1;

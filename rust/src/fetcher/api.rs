@@ -1,0 +1,779 @@
+//! The unified fetch facade (PAPER.md §Efficient KV Fetcher: "one
+//! orchestrator, many transports").
+//!
+//! Everything a caller needs to fetch a remote prefix lives behind four
+//! types:
+//!
+//! * [`FetcherBuilder`] — owns the configuration that used to be
+//!   hand-threaded through every call site (system profile, fetch
+//!   config, pipeline tuning, bandwidth trace, decode pool, estimator);
+//! * [`Fetcher`] — the built facade. It owns the mutable link / pool /
+//!   estimator state, so consecutive fetches through one `Fetcher`
+//!   contend realistically (the engine holds exactly one);
+//! * [`FetchRequest`] — one fetch's description (prefix size and
+//!   hashes, resolution policy, [`ExecMode`], queue depth), built once
+//!   and reused across sessions;
+//! * [`FetchSession`] — a single fetch in flight: `run()` blocks,
+//!   `spawn()` detaches onto a thread as a [`FetchJob`], `cancel()`
+//!   aborts cooperatively, and `report()` yields the structured
+//!   [`FetchReport`] (plan + restore + wire timings) either way.
+//!
+//! Transports plug in through [`super::transport::TransportSource`];
+//! the service layer's backend registry (`service::source`) maps config
+//! strings (`[network] backend = "tcp" | "local" | "objstore"`) onto
+//! sources. Failures are typed [`FetchError`]s end to end — no more
+//! `Result<_, String>` anywhere on the fetch path.
+
+use std::error::Error;
+use std::fmt;
+use std::thread;
+
+use crate::asic::{h20_table, DecodePool};
+use crate::baselines::{SystemKind, SystemProfile};
+use crate::cluster::PerfModel;
+use crate::codec::CodecError;
+use crate::metrics::TtftBreakdown;
+use crate::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+
+use super::executor::{run_stages, FetchParams};
+use super::pipeline::{CancelToken, PipelineConfig};
+use super::transport::{DecodedChunk, TransportSource, WireTiming};
+use super::{plan_fetch, FetchConfig, FetchPlan};
+
+// ------------------------------------------------------------ exec mode
+
+/// How a fetch executes.
+///
+/// Both modes run the same stage model (`fetcher::pipeline`) and yield
+/// the same timeline; `Analytic` computes it in one pass on the
+/// caller's thread, `Pipelined` drives the real three-stage threaded
+/// executor (bounded channels, backpressure, cancellation) so traces
+/// exercise the deployment-shaped code path and cross-check the
+/// analytic model. Attaching a transport source implies `Pipelined`:
+/// real bytes only flow through the threaded stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    #[default]
+    Analytic,
+    Pipelined,
+}
+
+impl ExecMode {
+    /// Parse a config/CLI name ("analytic" | "pipelined").
+    pub fn by_name(name: &str) -> Option<ExecMode> {
+        match name.to_ascii_lowercase().as_str() {
+            "analytic" => Some(ExecMode::Analytic),
+            "pipelined" | "pipeline" => Some(ExecMode::Pipelined),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------- error type
+
+/// Why a fetch failed, typed so callers can react per cause instead of
+/// string-matching. Replaces the `Result<_, String>` plumbing that used
+/// to run through `fetcher/`, `service/`, and the codec's wire-decode
+/// path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FetchError {
+    /// A backend node could not be dialed. `shard` names which node of
+    /// the address list is down — the fleet diagnosis the old string
+    /// errors hid.
+    Connect { shard: usize, addr: String, detail: String },
+    /// Transport-level failure after connect: socket I/O mid-fetch, a
+    /// chunk missing from its owning shard, a store lookup miss.
+    Transport { chunk: Option<usize>, shard: Option<usize>, detail: String },
+    /// Wire bytes arrived but would not decode: truncated or malformed
+    /// frames, codec faults, shape mismatches between group streams.
+    Decode { chunk: Option<usize>, detail: String },
+    /// The fetch was cancelled cooperatively (admission-rule abort or
+    /// request teardown); `chunks_completed` made it through all stages.
+    Cancelled { chunks_completed: usize },
+    /// A capacity bound refused the work: oversized wire frame, a full
+    /// store, an exhausted interner.
+    Capacity { detail: String },
+}
+
+impl FetchError {
+    /// Shorthand for a chunk-less transport error.
+    pub fn transport(detail: impl Into<String>) -> FetchError {
+        FetchError::Transport { chunk: None, shard: None, detail: detail.into() }
+    }
+
+    /// Shorthand for a chunk-less decode error.
+    pub fn decode(detail: impl Into<String>) -> FetchError {
+        FetchError::Decode { chunk: None, detail: detail.into() }
+    }
+
+    /// Recover a typed error smuggled through an `io::Error` wrapper
+    /// (`io::Error::new(kind, FetchError)`), e.g. the oversized-frame
+    /// capacity refusal crossing `read_frame`'s `io::Result` boundary.
+    pub fn from_io(e: &std::io::Error) -> Option<FetchError> {
+        e.get_ref()?.downcast_ref::<FetchError>().cloned()
+    }
+
+    /// Attach the fetch-order chunk index to transport/decode errors
+    /// (the executor stamps this as errors cross its stages).
+    pub fn at_chunk(self, idx: usize) -> FetchError {
+        match self {
+            FetchError::Transport { shard, detail, .. } => {
+                FetchError::Transport { chunk: Some(idx), shard, detail }
+            }
+            FetchError::Decode { detail, .. } => FetchError::Decode { chunk: Some(idx), detail },
+            other => other,
+        }
+    }
+}
+
+impl fmt::Display for FetchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn chunk_tag(chunk: &Option<usize>) -> String {
+            chunk.map(|c| format!(" (chunk {c})")).unwrap_or_default()
+        }
+        match self {
+            FetchError::Connect { shard, addr, detail } => {
+                write!(f, "fetch: shard {shard} at {addr} unreachable: {detail}")
+            }
+            FetchError::Transport { chunk, shard, detail } => {
+                let s = shard.map(|s| format!(" [shard {s}]")).unwrap_or_default();
+                write!(f, "fetch: transport failure{}{s}: {detail}", chunk_tag(chunk))
+            }
+            FetchError::Decode { chunk, detail } => {
+                write!(f, "fetch: wire decode failure{}: {detail}", chunk_tag(chunk))
+            }
+            FetchError::Cancelled { chunks_completed } => {
+                write!(f, "fetch: cancelled after {chunks_completed} chunks")
+            }
+            FetchError::Capacity { detail } => write!(f, "fetch: capacity refused: {detail}"),
+        }
+    }
+}
+
+impl Error for FetchError {}
+
+/// Codec faults surfacing off the wire are decode errors; the kind
+/// (truncated/malformed/mismatch) rides in the detail line.
+impl From<CodecError> for FetchError {
+    fn from(e: CodecError) -> FetchError {
+        FetchError::Decode { chunk: None, detail: e.to_string() }
+    }
+}
+
+// ------------------------------------------------------------- request
+
+/// Resolution policy of one request, overriding the fetcher's
+/// [`FetchConfig`] without rebuilding it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResolutionPolicy {
+    /// Use the fetcher's configured adaptive/fixed behavior as-is.
+    #[default]
+    Inherit,
+    /// Force Alg. 1 adaptive selection.
+    Adaptive,
+    /// Pin every chunk to ladder index 0..4 (240p..1080p nominal).
+    Fixed(usize),
+}
+
+/// One fetch, described once and reusable across sessions: the prefix
+/// (token count, raw bytes, chunk-chain hashes for sourced fetches),
+/// the resolution policy, the [`ExecMode`], and an optional bounded-
+/// channel depth override.
+#[derive(Debug, Clone, Default)]
+pub struct FetchRequest {
+    /// Simulation time the fetch is issued.
+    pub now: f64,
+    pub reusable_tokens: usize,
+    /// Raw fp16 bytes of the whole reusable prefix.
+    pub raw_bytes_total: usize,
+    /// Chained chunk hashes of the prefix. When non-empty, the facade
+    /// rebinds the attached source to this chain at run start
+    /// ([`TransportSource::set_hashes`]), so a request built once fully
+    /// describes which chunks a sourced fetch pulls.
+    pub hashes: Vec<u64>,
+    pub resolution: ResolutionPolicy,
+    pub exec: ExecMode,
+    /// Override the pipeline's bounded-channel depth for this request.
+    pub queue_depth: Option<usize>,
+}
+
+impl FetchRequest {
+    pub fn new(reusable_tokens: usize, raw_bytes_total: usize) -> FetchRequest {
+        FetchRequest { reusable_tokens, raw_bytes_total, ..Default::default() }
+    }
+
+    /// Issue time on the virtual clock (default 0.0).
+    pub fn at(mut self, now: f64) -> FetchRequest {
+        self.now = now;
+        self
+    }
+
+    pub fn with_hashes(mut self, hashes: Vec<u64>) -> FetchRequest {
+        self.hashes = hashes;
+        self
+    }
+
+    pub fn resolution(mut self, policy: ResolutionPolicy) -> FetchRequest {
+        self.resolution = policy;
+        self
+    }
+
+    pub fn exec(mut self, mode: ExecMode) -> FetchRequest {
+        self.exec = mode;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> FetchRequest {
+        self.queue_depth = Some(depth.max(1));
+        self
+    }
+}
+
+// -------------------------------------------------------------- report
+
+/// Everything one fetch produced, whichever path ran it: the virtual
+/// timeline ([`FetchPlan`]), executor accounting, the chunks restored
+/// from real payload bytes, and the per-chunk wall-clock wire timings
+/// the attached source measured (subsumes the old `FetchOutcome` +
+/// `WireTiming` pair).
+#[derive(Debug, Clone)]
+pub struct FetchReport {
+    /// `TransportSource::kind()` of the attached backend, if any.
+    pub backend: Option<&'static str>,
+    pub plan: FetchPlan,
+    /// True if the fetch stopped early (cancellation or stage fault).
+    pub aborted: bool,
+    /// Chunks that made it through all three stages.
+    pub chunks_completed: usize,
+    /// Peak bytes of transmitted-but-undecoded bitstream (bounded at
+    /// ~(queue_depth + 2) chunks by the channels).
+    pub peak_inflight_wire_bytes: usize,
+    /// Chunks the restore stage decoded from real payload bytes; empty
+    /// without a transport source.
+    pub restored: Vec<DecodedChunk>,
+    /// Wall-clock wire measurements, in fetch order (sources that do
+    /// real I/O record one entry per chunk).
+    pub wire_timings: Vec<WireTiming>,
+}
+
+impl FetchReport {
+    /// Virtual completion time of the fetch.
+    pub fn done_at(&self) -> f64 {
+        self.plan.done_at
+    }
+
+    pub fn breakdown(&self) -> &TtftBreakdown {
+        &self.plan.breakdown
+    }
+}
+
+// ------------------------------------------------------------- builder
+
+/// Builder for [`Fetcher`]: collects the profile / ladder / link /
+/// pool / estimator state callers used to thread by hand.
+#[derive(Debug, Clone)]
+pub struct FetcherBuilder {
+    profile: SystemProfile,
+    cfg: FetchConfig,
+    pipe: PipelineConfig,
+    trace: BandwidthTrace,
+    pool: DecodePool,
+    est_alpha: f64,
+}
+
+impl Default for FetcherBuilder {
+    fn default() -> Self {
+        FetcherBuilder {
+            profile: SystemProfile::kvfetcher(),
+            cfg: FetchConfig::default(),
+            pipe: PipelineConfig::default(),
+            trace: BandwidthTrace::constant(16.0),
+            pool: DecodePool::new(7, h20_table()),
+            est_alpha: 0.5,
+        }
+    }
+}
+
+impl FetcherBuilder {
+    pub fn new() -> FetcherBuilder {
+        FetcherBuilder::default()
+    }
+
+    pub fn profile(mut self, profile: SystemProfile) -> FetcherBuilder {
+        self.profile = profile;
+        self
+    }
+
+    pub fn fetch_config(mut self, cfg: FetchConfig) -> FetcherBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn pipeline(mut self, pipe: PipelineConfig) -> FetcherBuilder {
+        self.pipe = pipe;
+        self
+    }
+
+    /// Bandwidth trace driving the virtual FIFO link.
+    pub fn bandwidth(mut self, trace: BandwidthTrace) -> FetcherBuilder {
+        self.trace = trace;
+        self
+    }
+
+    /// Convenience: a constant-bandwidth link.
+    pub fn bandwidth_gbps(self, gbps: f64) -> FetcherBuilder {
+        self.bandwidth(BandwidthTrace::constant(gbps))
+    }
+
+    /// Decode pool (unit count + device lookup table).
+    pub fn decode_pool(mut self, pool: DecodePool) -> FetcherBuilder {
+        self.pool = pool;
+        self
+    }
+
+    /// Convenience: size the decode pool from a perf model exactly the
+    /// way the engine does (nvdecs x n_gpus, device table).
+    pub fn for_perf(self, perf: &PerfModel) -> FetcherBuilder {
+        let units = perf.dev.nvdecs * perf.n_gpus;
+        self.decode_pool(DecodePool::new(units, perf.dev.decode_table()))
+    }
+
+    /// EWMA smoothing factor of the bandwidth estimator.
+    pub fn estimator_alpha(mut self, alpha: f64) -> FetcherBuilder {
+        self.est_alpha = alpha;
+        self
+    }
+
+    pub fn build(self) -> Fetcher {
+        Fetcher {
+            link: NetLink::new(self.trace.clone()),
+            pool: self.pool.clone(),
+            est: BandwidthEstimator::new(self.est_alpha),
+            profile: self.profile,
+            cfg: self.cfg,
+            pipe: self.pipe,
+            trace: self.trace,
+            pool_template: self.pool,
+            est_alpha: self.est_alpha,
+        }
+    }
+}
+
+// -------------------------------------------------------------- facade
+
+/// The fetch facade: configuration plus the live link / pool /
+/// estimator state every fetch mutates (so concurrent requests through
+/// one `Fetcher` contend exactly like the paper's shared NIC + NVDEC
+/// pool).
+#[derive(Debug, Clone)]
+pub struct Fetcher {
+    profile: SystemProfile,
+    cfg: FetchConfig,
+    pipe: PipelineConfig,
+    trace: BandwidthTrace,
+    pool_template: DecodePool,
+    est_alpha: f64,
+    link: NetLink,
+    pool: DecodePool,
+    est: BandwidthEstimator,
+}
+
+impl Fetcher {
+    pub fn builder() -> FetcherBuilder {
+        FetcherBuilder::default()
+    }
+
+    pub fn profile(&self) -> &SystemProfile {
+        &self.profile
+    }
+
+    /// Replace the system profile without rebuilding (takes effect on
+    /// the next run).
+    pub fn set_profile(&mut self, profile: SystemProfile) {
+        self.profile = profile;
+    }
+
+    pub fn config(&self) -> &FetchConfig {
+        &self.cfg
+    }
+
+    /// Replace the fetch config without rebuilding (takes effect on the
+    /// next run; link / pool / estimator state is untouched).
+    pub fn set_config(&mut self, cfg: FetchConfig) {
+        self.cfg = cfg;
+    }
+
+    pub fn pipeline_config(&self) -> &PipelineConfig {
+        &self.pipe
+    }
+
+    /// Replace the pipeline tuning without rebuilding.
+    pub fn set_pipeline_config(&mut self, pipe: PipelineConfig) {
+        self.pipe = pipe;
+    }
+
+    pub fn link(&self) -> &NetLink {
+        &self.link
+    }
+
+    pub fn pool(&self) -> &DecodePool {
+        &self.pool
+    }
+
+    pub fn estimator(&self) -> &BandwidthEstimator {
+        &self.est
+    }
+
+    /// Reset the link / pool / estimator to their just-built state.
+    pub fn reset(&mut self) {
+        self.link = NetLink::new(self.trace.clone());
+        self.pool = self.pool_template.clone();
+        self.est = BandwidthEstimator::new(self.est_alpha);
+    }
+
+    /// A fresh fetcher with identical configuration and pristine state.
+    pub fn fresh(&self) -> Fetcher {
+        let mut f = self.clone();
+        f.reset();
+        f
+    }
+
+    /// Run one fetch to completion on the caller's thread, mutating the
+    /// shared state. Source-less fetches cannot fail, so the engine's
+    /// hot loop stays branch-free; use a [`FetchSession`] for sourced or
+    /// cancellable fetches.
+    pub fn run(&mut self, req: &FetchRequest) -> Result<FetchReport, FetchError> {
+        let (report, err) = run_once(self, req, &CancelToken::new(), None);
+        match err {
+            Some(e) => Err(e),
+            None => Ok(report),
+        }
+    }
+
+    /// Open a session for `req`: attach a source, spawn, cancel, and
+    /// collect the [`FetchReport`]. Consumes the fetcher (sessions may
+    /// migrate across threads); get it back from
+    /// [`FetchSession::into_fetcher`] or [`FetchJob::join`].
+    pub fn session(self, req: FetchRequest) -> FetchSession {
+        FetchSession { fetcher: self, req, cancel: CancelToken::new(), source: None, report: None }
+    }
+
+    /// TTFT breakdown of a *single isolated* request — the Fig. 18 /
+    /// Fig. 21 / Fig. 3 primitive. Runs on a pristine copy of this
+    /// fetcher's state (no queueing carry-over), leaving `self` intact.
+    pub fn ttft(
+        &self,
+        perf: &PerfModel,
+        context: usize,
+        reusable: usize,
+        exec: ExecMode,
+    ) -> TtftBreakdown {
+        let mut bd = TtftBreakdown::default();
+        if self.profile.kind == SystemKind::FullPrefill {
+            bd.prefill = perf.full_prefill_time(context);
+            return bd;
+        }
+        let mut fresh = self.fresh();
+        let req = FetchRequest::new(reusable, perf.kv_bytes(reusable)).exec(exec);
+        let report = fresh.run(&req).expect("source-less fetch cannot fail");
+        bd = report.plan.breakdown;
+        let suffix = context - reusable;
+        bd.prefill = perf.prefill_time(suffix.max(1), context);
+        bd
+    }
+}
+
+/// The one execution path behind every facade entry point: resolve the
+/// request against the fetcher's config, drive the chosen exec mode,
+/// and assemble the [`FetchReport`] (kept even on abort, so partial
+/// progress is observable).
+fn run_once(
+    fetcher: &mut Fetcher,
+    req: &FetchRequest,
+    cancel: &CancelToken,
+    mut source: Option<&mut dyn TransportSource>,
+) -> (FetchReport, Option<FetchError>) {
+    let mut cfg = fetcher.cfg.clone();
+    match req.resolution {
+        ResolutionPolicy::Inherit => {}
+        ResolutionPolicy::Adaptive => cfg.adaptive = true,
+        ResolutionPolicy::Fixed(r) => {
+            cfg.adaptive = false;
+            cfg.fixed_res = r.min(3);
+        }
+    }
+    let mut pipe = fetcher.pipe.clone();
+    if let Some(d) = req.queue_depth {
+        pipe.queue_depth = d;
+    }
+    let backend = source.as_ref().map(|s| s.kind());
+    if !req.hashes.is_empty() {
+        if let Some(s) = source.as_mut() {
+            s.set_hashes(&req.hashes);
+        }
+    }
+
+    // real bytes only flow through the threaded stages
+    if req.exec == ExecMode::Analytic && source.is_none() {
+        let plan = plan_fetch(
+            req.now,
+            req.reusable_tokens,
+            req.raw_bytes_total,
+            &fetcher.profile,
+            &cfg,
+            &mut fetcher.link,
+            &mut fetcher.pool,
+            &mut fetcher.est,
+        );
+        let chunks_completed = plan.chunks.len();
+        let report = FetchReport {
+            backend,
+            plan,
+            aborted: false,
+            chunks_completed,
+            peak_inflight_wire_bytes: 0,
+            restored: Vec::new(),
+            wire_timings: Vec::new(),
+        };
+        return (report, None);
+    }
+
+    let params = FetchParams {
+        now: req.now,
+        reusable_tokens: req.reusable_tokens,
+        raw_bytes_total: req.raw_bytes_total,
+        profile: fetcher.profile.clone(),
+        cfg,
+    };
+    let (outcome, err) = run_stages(
+        &params,
+        &pipe,
+        cancel,
+        &mut fetcher.link,
+        &mut fetcher.pool,
+        &mut fetcher.est,
+        source.as_mut().map(|s| &mut **s),
+    );
+    let err = match err {
+        Some(e) => Some(e),
+        None if outcome.aborted => {
+            Some(FetchError::Cancelled { chunks_completed: outcome.chunks_completed })
+        }
+        None => None,
+    };
+    let report = FetchReport {
+        backend,
+        plan: outcome.plan,
+        aborted: outcome.aborted,
+        chunks_completed: outcome.chunks_completed,
+        peak_inflight_wire_bytes: outcome.peak_inflight_wire_bytes,
+        restored: outcome.restored,
+        wire_timings: source.as_mut().map(|s| s.take_timings()).unwrap_or_default(),
+    };
+    (report, err)
+}
+
+// ------------------------------------------------------------- session
+
+/// One fetch in flight. Obtained from [`Fetcher::session`]; run it
+/// blocking ([`run`]) or detached ([`spawn`]), cancel it any time, and
+/// read the [`FetchReport`] afterwards — including the partial report
+/// of an aborted fetch.
+///
+/// [`run`]: FetchSession::run
+/// [`spawn`]: FetchSession::spawn
+pub struct FetchSession {
+    fetcher: Fetcher,
+    req: FetchRequest,
+    cancel: CancelToken,
+    source: Option<Box<dyn TransportSource>>,
+    report: Option<FetchReport>,
+}
+
+impl FetchSession {
+    /// Attach the transport backend this session streams real chunk
+    /// bytes from (implies `ExecMode::Pipelined`).
+    pub fn with_source(mut self, source: Box<dyn TransportSource>) -> FetchSession {
+        self.source = Some(source);
+        self
+    }
+
+    pub fn request(&self) -> &FetchRequest {
+        &self.req
+    }
+
+    /// Clone of the session's cancel token (hand it to the admission
+    /// rule / teardown path).
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Request cooperative abort; stages stop at the next chunk border.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    /// Run the fetch to completion (or abort) on this thread. The
+    /// report is stored either way; errors carry the typed cause.
+    pub fn run(&mut self) -> Result<&FetchReport, FetchError> {
+        let (report, err) =
+            run_once(&mut self.fetcher, &self.req, &self.cancel, self.source.as_deref_mut());
+        self.report = Some(report);
+        match err {
+            Some(e) => Err(e),
+            None => Ok(self.report.as_ref().expect("just stored")),
+        }
+    }
+
+    /// The last run's report (partial if the fetch aborted).
+    pub fn report(&self) -> Option<&FetchReport> {
+        self.report.as_ref()
+    }
+
+    pub fn take_report(&mut self) -> Option<FetchReport> {
+        self.report.take()
+    }
+
+    /// Detach onto a background thread; the returned [`FetchJob`] can
+    /// cancel and joins back into this session.
+    pub fn spawn(self) -> FetchJob {
+        let cancel = self.cancel.clone();
+        let mut session = self;
+        let handle = thread::spawn(move || {
+            let result = session.run().map(|_| ());
+            (session, result)
+        });
+        FetchJob { cancel, handle }
+    }
+
+    /// Dissolve the session, returning the fetcher (its link / pool /
+    /// estimator advanced by whatever ran).
+    pub fn into_fetcher(self) -> Fetcher {
+        self.fetcher
+    }
+}
+
+/// Handle to a session running detached on its own thread — the abort
+/// path of the layer-wise admission rule and of request teardown.
+pub struct FetchJob {
+    cancel: CancelToken,
+    handle: thread::JoinHandle<(FetchSession, Result<(), FetchError>)>,
+}
+
+impl FetchJob {
+    /// Request cooperative abort; stages stop at the next chunk border.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
+    }
+
+    pub fn cancel_token(&self) -> CancelToken {
+        self.cancel.clone()
+    }
+
+    /// Wait for the pipeline to drain; the session carries the report
+    /// (partial on abort) and the fetcher.
+    pub fn join(self) -> (FetchSession, Result<(), FetchError>) {
+        self.handle.join().expect("fetch session panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_mode_parses_by_name() {
+        assert_eq!(ExecMode::by_name("analytic"), Some(ExecMode::Analytic));
+        assert_eq!(ExecMode::by_name("Pipelined"), Some(ExecMode::Pipelined));
+        assert_eq!(ExecMode::by_name("warp"), None);
+        assert_eq!(ExecMode::default(), ExecMode::Analytic);
+    }
+
+    #[test]
+    fn fetch_error_display_names_the_failing_part() {
+        let e = FetchError::Connect {
+            shard: 2,
+            addr: "10.0.0.7:9".into(),
+            detail: "refused".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("shard 2") && s.contains("10.0.0.7:9"), "{s}");
+        let e = FetchError::transport("boom").at_chunk(4);
+        assert!(e.to_string().contains("chunk 4"));
+        let e = FetchError::decode("bad frame").at_chunk(1);
+        assert_eq!(e, FetchError::Decode { chunk: Some(1), detail: "bad frame".into() });
+        // Cancelled/Capacity are untouched by at_chunk
+        let e = FetchError::Cancelled { chunks_completed: 3 }.at_chunk(9);
+        assert_eq!(e, FetchError::Cancelled { chunks_completed: 3 });
+    }
+
+    #[test]
+    fn typed_errors_survive_the_io_boundary() {
+        let inner = FetchError::Capacity { detail: "frame too big".into() };
+        let io_err = std::io::Error::new(std::io::ErrorKind::InvalidData, inner.clone());
+        assert_eq!(FetchError::from_io(&io_err), Some(inner));
+        // plain io errors carry no typed payload
+        let plain = std::io::Error::new(std::io::ErrorKind::ConnectionReset, "reset");
+        assert_eq!(FetchError::from_io(&plain), None);
+    }
+
+    #[test]
+    fn codec_errors_map_to_decode() {
+        let e: FetchError = CodecError::Truncated("residual underrun".into()).into();
+        match e {
+            FetchError::Decode { chunk: None, detail } => {
+                assert!(detail.contains("residual underrun"))
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+
+    #[test]
+    fn analytic_and_pipelined_runs_agree_through_the_facade() {
+        let req = FetchRequest::new(100_000, 100_000 * 245_760);
+        let mut a = Fetcher::builder().bandwidth_gbps(8.0).build();
+        let mut p = a.fresh();
+        let ra = a.run(&req).unwrap();
+        let rp = p.run(&req.clone().exec(ExecMode::Pipelined)).unwrap();
+        assert_eq!(ra.plan.chunks.len(), rp.plan.chunks.len());
+        assert!((ra.done_at() - rp.done_at()).abs() < 1e-9);
+        assert!(ra.wire_timings.is_empty() && rp.wire_timings.is_empty());
+        assert_eq!(ra.backend, None);
+    }
+
+    #[test]
+    fn request_overrides_resolution_and_depth() {
+        let raw = 100_000 * 245_760;
+        let mut fixed = Fetcher::builder().bandwidth_gbps(4.0).build();
+        let r = fixed
+            .run(&FetchRequest::new(100_000, raw).resolution(ResolutionPolicy::Fixed(0)))
+            .unwrap();
+        assert!(r.plan.chunks.iter().all(|c| c.res_idx == 0));
+        let r2 = fixed
+            .fresh()
+            .run(
+                &FetchRequest::new(100_000, raw)
+                    .resolution(ResolutionPolicy::Fixed(9))
+                    .exec(ExecMode::Pipelined)
+                    .queue_depth(1),
+            )
+            .unwrap();
+        assert!(r2.plan.chunks.iter().all(|c| c.res_idx == 3), "fixed_res clamps to the ladder");
+    }
+
+    #[test]
+    fn session_run_and_spawn_produce_reports() {
+        let req = FetchRequest::new(50_000, 50_000 * 245_760).exec(ExecMode::Pipelined);
+        let mut s = Fetcher::builder().bandwidth_gbps(8.0).build().session(req.clone());
+        s.run().unwrap();
+        let done = s.report().unwrap().done_at();
+        let fetcher = s.into_fetcher();
+        // same request spawned on a fresh fetcher lands identically
+        let job = fetcher.fresh().session(req).spawn();
+        let (mut session, result) = job.join();
+        result.unwrap();
+        let report = session.take_report().unwrap();
+        assert!((report.done_at() - done).abs() < 1e-9);
+        assert_eq!(report.chunks_completed, 5);
+    }
+}

@@ -40,6 +40,7 @@ use crate::asic::DecodePool;
 use crate::baselines::{Decompress, SystemProfile};
 use crate::net::{BandwidthEstimator, NetLink};
 
+use super::api::FetchError;
 use super::pipeline::{
     assemble_plan, chunk_geometry, decode_stage_times, pick_resolution, restore_tail_secs,
     wire_bytes_at, CancelToken, PipelineConfig, TransmittedChunk,
@@ -80,6 +81,7 @@ pub struct FetchOutcome {
 /// mutating the shared link / pool / estimator exactly like
 /// [`super::plan_fetch`] does (so concurrent fetches contend
 /// identically under either `ExecMode`).
+#[deprecated(since = "0.4.0", note = "use the `Fetcher` facade (`fetcher::api`) instead")]
 pub fn execute_fetch(
     params: &FetchParams,
     pipe: &PipelineConfig,
@@ -88,13 +90,17 @@ pub fn execute_fetch(
     pool: &mut DecodePool,
     est: &mut BandwidthEstimator,
 ) -> FetchOutcome {
-    execute_fetch_with_source(params, pipe, cancel, link, pool, est, None)
+    run_stages(params, pipe, cancel, link, pool, est, None).0
 }
 
 /// [`execute_fetch`] with an optional [`TransportSource`]: the transmit
 /// stage streams each chunk's encoded bytes from the source (blocking on
 /// its I/O), and the restore stage decodes them into
 /// [`FetchOutcome::restored`]. The virtual timeline is unaffected.
+#[deprecated(
+    since = "0.4.0",
+    note = "use `Fetcher::session(...).with_source(...)` (`fetcher::api`) instead"
+)]
 pub fn execute_fetch_with_source(
     params: &FetchParams,
     pipe: &PipelineConfig,
@@ -104,6 +110,22 @@ pub fn execute_fetch_with_source(
     est: &mut BandwidthEstimator,
     source: Option<&mut dyn TransportSource>,
 ) -> FetchOutcome {
+    run_stages(params, pipe, cancel, link, pool, est, source).0
+}
+
+/// The three-stage pipeline itself, shared by the deprecated free
+/// functions and the [`super::api::Fetcher`] facade: returns the
+/// outcome plus the first typed error any stage hit (`None` when the
+/// fetch completed or was cancelled without a fault).
+pub(crate) fn run_stages(
+    params: &FetchParams,
+    pipe: &PipelineConfig,
+    cancel: &CancelToken,
+    link: &mut NetLink,
+    pool: &mut DecodePool,
+    est: &mut BandwidthEstimator,
+    source: Option<&mut dyn TransportSource>,
+) -> (FetchOutcome, Option<FetchError>) {
     let geo = chunk_geometry(params.reusable_tokens, params.raw_bytes_total, &params.cfg);
     let now = params.now;
     let reusable_tokens = params.reusable_tokens;
@@ -125,7 +147,7 @@ pub fn execute_fetch_with_source(
     // is owned by the decode stage).
     let predictor_seed = pool.clone();
 
-    let (aborted, chunks, restored_through, restored) = thread::scope(|s| {
+    let (aborted, error, chunks, restored_through, restored) = thread::scope(|s| {
         let inflight_ref = &inflight;
         let peak_ref = &peak_inflight;
 
@@ -133,6 +155,7 @@ pub fn execute_fetch_with_source(
             let mut source = source;
             let mut predictor = predictor_seed;
             let mut aborted = false;
+            let mut error: Option<FetchError> = None;
             for idx in 0..geo.n_chunks {
                 if cancel.is_cancelled() {
                     aborted = true;
@@ -154,8 +177,9 @@ pub fn execute_fetch_with_source(
                 let payload = match source.as_deref_mut() {
                     Some(src) => match src.fetch_chunk(idx, res_idx) {
                         Ok(p) => Some(p),
-                        Err(_) => {
+                        Err(e) => {
                             aborted = true;
+                            error = Some(e.at_chunk(idx));
                             cancel.cancel();
                             break;
                         }
@@ -185,7 +209,7 @@ pub fn execute_fetch_with_source(
                     break;
                 }
             }
-            aborted
+            (aborted, error)
         });
 
         let decode = s.spawn(move || {
@@ -234,14 +258,16 @@ pub fn execute_fetch_with_source(
             let mut restored: Vec<DecodedChunk> = Vec::new();
             let mut restored_through = now;
             let mut aborted = false;
+            let mut error: Option<FetchError> = None;
             while let Ok((idx, chunk, payload)) = from_decode.recv() {
                 if let Some(p) = payload {
                     // real restoration: decode the bitstream back into
                     // the quantized chunk, overlapping later transmits
                     match decode_payload(&p) {
                         Ok(quant) => restored.push(DecodedChunk { idx, quant }),
-                        Err(_) => {
+                        Err(e) => {
                             aborted = true;
+                            error = Some(e.at_chunk(idx));
                             cancel.cancel();
                             break;
                         }
@@ -259,14 +285,20 @@ pub fn execute_fetch_with_source(
                     break;
                 }
             }
-            (chunks, restored_through, restored, aborted)
+            (chunks, restored_through, restored, aborted, error)
         });
 
-        let t_aborted = transmit.join().expect("transmit stage panicked");
+        let (t_aborted, t_error) = transmit.join().expect("transmit stage panicked");
         let d_aborted = decode.join().expect("decode stage panicked");
-        let (chunks, restored_through, restored, r_aborted) =
+        let (chunks, restored_through, restored, r_aborted, r_error) =
             restore.join().expect("restore stage panicked");
-        (t_aborted || d_aborted || r_aborted, chunks, restored_through, restored)
+        (
+            t_aborted || d_aborted || r_aborted,
+            t_error.or(r_error),
+            chunks,
+            restored_through,
+            restored,
+        )
     });
 
     let chunks_completed = chunks.len();
@@ -280,18 +312,23 @@ pub fn execute_fetch_with_source(
         "restore hand-off {restored_through} disagrees with plan.done_at {}",
         plan.done_at
     );
-    FetchOutcome {
+    let outcome = FetchOutcome {
         plan,
         aborted,
         chunks_completed,
         peak_inflight_wire_bytes: peak_inflight.load(Ordering::SeqCst),
         restored,
-    }
+    };
+    (outcome, error)
 }
 
 /// Handle to a fetch running detached on its own thread: cancel it (the
 /// admission rule's abort path) and/or join for the outcome plus the
 /// mutated link / pool / estimator.
+///
+/// Legacy companion of [`spawn_fetch`]; new code should spawn through
+/// [`super::api::FetchSession::spawn`], whose job unifies with the
+/// blocking path.
 pub struct FetchJob {
     cancel: CancelToken,
     handle: thread::JoinHandle<(FetchOutcome, NetLink, DecodePool, BandwidthEstimator)>,
@@ -315,6 +352,10 @@ impl FetchJob {
 
 /// Run a fetch on a background thread, taking ownership of the link /
 /// pool / estimator (returned by [`FetchJob::join`]).
+#[deprecated(
+    since = "0.4.0",
+    note = "use `Fetcher::session(...).spawn()` (`fetcher::api`) instead"
+)]
 pub fn spawn_fetch(
     params: FetchParams,
     pipe: PipelineConfig,
@@ -325,7 +366,8 @@ pub fn spawn_fetch(
     let cancel = CancelToken::new();
     let token = cancel.clone();
     let handle = thread::spawn(move || {
-        let outcome = execute_fetch(&params, &pipe, &token, &mut link, &mut pool, &mut est);
+        let (outcome, _) =
+            run_stages(&params, &pipe, &token, &mut link, &mut pool, &mut est, None);
         (outcome, link, pool, est)
     });
     FetchJob { cancel, handle }

@@ -7,16 +7,25 @@
 //! system), and restored. Transmission of chunk i+1 overlaps decoding
 //! of chunk i; Alg. 1 picks the resolution that minimizes the bubble
 //! between the two stages under the predicted bandwidth.
+//!
+//! The public entry point is the [`api`] facade ([`Fetcher`] /
+//! [`FetchRequest`] / [`FetchSession`]); the free functions in
+//! [`executor`] survive one release as `#[deprecated]` shims.
 
+pub mod api;
 pub mod executor;
 pub mod pipeline;
 pub mod transport;
 
-pub use executor::{
-    execute_fetch, execute_fetch_with_source, spawn_fetch, FetchJob, FetchOutcome, FetchParams,
+pub use api::{
+    ExecMode, FetchError, FetchJob, FetchReport, FetchRequest, FetchSession, Fetcher,
+    FetcherBuilder, ResolutionPolicy,
 };
+#[allow(deprecated)]
+pub use executor::{execute_fetch, execute_fetch_with_source, spawn_fetch};
+pub use executor::{FetchOutcome, FetchParams};
 pub use pipeline::{serialized_fetch, CancelToken, PipelineConfig};
-pub use transport::{ChunkPayload, DecodedChunk, TransportSource};
+pub use transport::{ChunkPayload, DecodedChunk, TransportSource, WireTiming};
 
 use crate::asic::DecodePool;
 use crate::baselines::{Decompress, SystemProfile};

@@ -14,6 +14,8 @@ use crate::codec;
 use crate::layout::{self, InterLayout};
 use crate::quant::QuantKv;
 
+use super::api::FetchError;
+
 /// The encoded bytes of one fetched chunk, as they arrive off the wire:
 /// one lossless video bitstream per 3-plane group (layout meta in-band)
 /// plus the dequantization scale sideband.
@@ -41,6 +43,17 @@ pub struct DecodedChunk {
     pub quant: QuantKv,
 }
 
+/// Wall-clock wire measurements of one chunk fetched through a source
+/// that does real I/O (remote shards, object stores).
+#[derive(Debug, Clone, Copy)]
+pub struct WireTiming {
+    pub idx: usize,
+    /// Bytes that crossed the socket (bitstreams + scale sideband).
+    pub wire_bytes: usize,
+    /// Wall-clock request-to-last-byte duration (seconds).
+    pub wall_secs: f64,
+}
+
 /// Where the transmit stage streams chunk bytes from.
 ///
 /// `fetch_chunk(idx, res_idx)` must return the encoded payload of the
@@ -48,19 +61,39 @@ pub struct DecodedChunk {
 /// (0..4, 240p..1080p nominal — sources map indices onto the variants
 /// they actually store). Blocking I/O is expected: the call runs on the
 /// executor's transmit thread, so a slow source backpressures exactly
-/// like a slow link.
+/// like a slow link. Failures are typed [`FetchError`]s, so the fetch
+/// facade can report which shard / chunk / stage failed.
 pub trait TransportSource: Send {
-    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, String>;
+    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, FetchError>;
+
+    /// Registry name of this backend ("local" | "tcp" | "objstore" |
+    /// "custom"), recorded in the [`super::api::FetchReport`].
+    fn kind(&self) -> &'static str {
+        "custom"
+    }
+
+    /// Rebind the source to a new chunk-chain. Called by the facade at
+    /// session start with [`super::api::FetchRequest::hashes`] (when
+    /// non-empty), so one source can serve successive requests for
+    /// different prefixes. Sources that do not fetch by hash ignore it.
+    fn set_hashes(&mut self, _hashes: &[u64]) {}
+
+    /// Drain the per-chunk wire timings recorded so far (sources with
+    /// no real I/O report none).
+    fn take_timings(&mut self) -> Vec<WireTiming> {
+        Vec::new()
+    }
 }
 
 /// Decode a payload back into the quantized chunk — the restore stage's
 /// real work: parse each group's in-band layout meta, decode the video,
 /// and scatter frames into the chunk buffer (shared group decoder:
 /// [`layout::decode_group_into`]).
-pub fn decode_payload(p: &ChunkPayload) -> Result<QuantKv, String> {
-    let first = p.group_bytes.first().ok_or_else(|| "payload has no groups".to_string())?;
+pub fn decode_payload(p: &ChunkPayload) -> Result<QuantKv, FetchError> {
+    let first =
+        p.group_bytes.first().ok_or_else(|| FetchError::decode("payload has no groups"))?;
     let hdr0 = codec::parse_header(first)?;
-    let l0 = InterLayout::from_meta(&hdr0.meta)?;
+    let l0 = InterLayout::from_meta(&hdr0.meta).map_err(FetchError::decode)?;
     let mut q = QuantKv {
         tokens: l0.tokens,
         planes: l0.planes_total,
@@ -70,9 +103,9 @@ pub fn decode_payload(p: &ChunkPayload) -> Result<QuantKv, String> {
         scales: p.scales.clone(),
     };
     for gb in &p.group_bytes {
-        let lay = layout::decode_group_into(gb, &mut q.data)?;
+        let lay = layout::decode_group_into(gb, &mut q.data).map_err(FetchError::decode)?;
         if lay.tokens != q.tokens || lay.planes_total != q.planes {
-            return Err("group layouts disagree on chunk shape".into());
+            return Err(FetchError::decode("group layouts disagree on chunk shape"));
         }
     }
     Ok(q)

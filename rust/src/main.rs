@@ -4,7 +4,9 @@
 //!   serve     — run a serving-trace simulation and report TTFT/TPOT;
 //!               with --listen, host storage shard servers instead
 //!   fetch     — single-request TTFT breakdown across all systems;
-//!               with --remote, stream a prefix from storage shards
+//!               with --backend/--remote, stream the demo prefix
+//!               through a transport backend (tcp shards, in-process
+//!               store, shaped object store) and verify restore
 //!   calibrate — measure real-codec compression ratios per system
 //!   layout    — run the intra-frame layout search and print the table
 //!   real      — smoke-test the PJRT runtime on the AOT artifacts
@@ -14,9 +16,11 @@
 
 use kvfetcher::baselines::{calibrate_ratios, SystemProfile};
 use kvfetcher::config::Experiment;
-use kvfetcher::engine::{single_request_ttft, EngineSim};
+use kvfetcher::engine::EngineSim;
+use kvfetcher::fetcher::{ExecMode, FetchRequest, Fetcher};
 use kvfetcher::layout;
 use kvfetcher::quant::quantize;
+use kvfetcher::service::Backend;
 use kvfetcher::tensor::KvCache;
 use kvfetcher::trace::generate;
 use kvfetcher::util::table::{fmt_secs, markdown};
@@ -144,43 +148,54 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
     }
 }
 
-/// `fetch --remote a:p,b:p` (or `[network] remote` in the config) —
-/// stream the demo prefix from storage shards through the pipelined
-/// executor and verify bit-exact restore.
-fn cmd_fetch_remote(exp: Experiment, addrs: Vec<String>, args: &[String]) {
+/// `fetch --backend local|tcp|objstore [--remote a:p,b:p]` (or
+/// `[network] backend` / `[network] remote` in the config) — stream the
+/// demo prefix through the selected transport backend via the `Fetcher`
+/// facade and verify bit-exact restore. Every backend must restore the
+/// same bytes; only the wall-clock wire timings differ.
+fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &[String]) {
+    use std::sync::{Arc, Mutex};
+
     use kvfetcher::asic::DecodePool;
-    use kvfetcher::fetcher::{
-        execute_fetch_with_source, CancelToken, FetchConfig, FetchParams,
-    };
-    use kvfetcher::net::{BandwidthEstimator, NetLink};
-    use kvfetcher::service::{demo_prefix, Placement, RemoteSource, ShardRouter, DEMO_LADDER};
+    use kvfetcher::fetcher::FetchConfig;
+    use kvfetcher::kvstore::StorageNode;
+    use kvfetcher::service::{demo_prefix, SourceRegistry, SourceSpec, DEMO_LADDER};
 
     let (seed, n_chunks, chunk_tokens) = demo_params(args);
     let demo = demo_prefix(seed, n_chunks, chunk_tokens);
 
-    let router = match ShardRouter::connect(&addrs, Placement::RoundRobin) {
-        Ok(r) => r,
+    let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+    spec.chunk_tokens = chunk_tokens;
+    match backend {
+        Backend::Tcp => {
+            if addrs.is_empty() {
+                eprintln!("backend tcp needs --remote a:p[,b:p...] (or [network] remote)");
+                std::process::exit(2);
+            }
+            spec.addrs = addrs;
+            // fleet-wide prefix match verifies the whole chain is stored
+            spec.tokens = demo.tokens.clone();
+        }
+        Backend::Local | Backend::ObjStore => {
+            let mut node = StorageNode::new(chunk_tokens);
+            for c in &demo.chunks {
+                node.register(c.clone());
+            }
+            spec.node = Some(Arc::new(Mutex::new(node)));
+            spec.objstore = exp.objstore;
+        }
+    }
+    let source = match SourceRegistry::with_defaults().create(backend, &spec) {
+        Ok(s) => s,
         Err(e) => {
-            eprintln!("cannot connect to {addrs:?}: {e}");
+            eprintln!("cannot build {backend} source: {e}");
             std::process::exit(1);
         }
     };
-    let matched = router.match_prefix(&demo.tokens, chunk_tokens).unwrap_or_else(|e| {
-        eprintln!("prefix lookup failed: {e}");
-        std::process::exit(1);
-    });
-    if matched.len() != n_chunks {
-        let found = matched.len();
-        eprintln!("only {found}/{n_chunks} chunks stored remotely; wrong --seed or shards?");
-        std::process::exit(1);
-    }
 
     println!(
-        "# remote fetch: {} shards | {} chunks x {} tokens | virtual link {} Gbps",
-        router.n_shards(),
-        n_chunks,
-        chunk_tokens,
-        exp.bandwidth_gbps,
+        "# demo fetch: backend {backend} | {} chunks x {} tokens | virtual link {} Gbps",
+        n_chunks, chunk_tokens, exp.bandwidth_gbps,
     );
     let total_tokens = n_chunks * chunk_tokens;
     let raw_bytes_total = total_tokens
@@ -188,55 +203,66 @@ fn cmd_fetch_remote(exp: Experiment, addrs: Vec<String>, args: &[String]) {
         * kvfetcher::service::DEMO_HEADS
         * kvfetcher::service::DEMO_HEAD_DIM
         * 2;
-    let params = FetchParams {
-        now: 0.0,
-        reusable_tokens: total_tokens,
-        raw_bytes_total,
-        profile: SystemProfile::kvfetcher(),
-        cfg: FetchConfig { chunk_tokens, adaptive: false, fixed_res: 3, ..Default::default() },
-    };
-    let mut source = RemoteSource::new(router, matched, DEMO_LADDER);
-    let mut link = NetLink::new(exp.bandwidth_trace());
-    let mut pool = DecodePool::new(exp.device.nvdecs, exp.device.decode_table());
-    let mut est = BandwidthEstimator::new(0.5);
-    let out = execute_fetch_with_source(
-        &params,
-        &exp.engine.pipe,
-        &CancelToken::new(),
-        &mut link,
-        &mut pool,
-        &mut est,
-        Some(&mut source),
-    );
-    if out.aborted || out.restored.len() != n_chunks {
-        eprintln!("remote fetch aborted: {}/{} chunks restored", out.restored.len(), n_chunks);
+    let fetcher = Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .fetch_config(FetchConfig {
+            chunk_tokens,
+            adaptive: false,
+            fixed_res: 3,
+            ..Default::default()
+        })
+        .pipeline(exp.engine.pipe.clone())
+        .bandwidth(exp.bandwidth_trace())
+        .decode_pool(DecodePool::new(exp.device.nvdecs, exp.device.decode_table()))
+        .build();
+    let req = FetchRequest::new(total_tokens, raw_bytes_total)
+        .with_hashes(demo.hashes.clone())
+        .exec(ExecMode::Pipelined);
+    let mut session = fetcher.session(req).with_source(source);
+    if let Err(e) = session.run() {
+        eprintln!("demo fetch failed: {e}");
+        std::process::exit(1);
+    }
+    let report = session.take_report().expect("run stores a report");
+    if report.restored.len() != n_chunks {
+        eprintln!("demo fetch incomplete: {}/{n_chunks} chunks restored", report.restored.len());
         std::process::exit(1);
     }
 
+    let wall_ms_of = |idx: usize| {
+        report
+            .wire_timings
+            .iter()
+            .find(|t| t.idx == idx)
+            .map(|t| format!("{:.1}", t.wall_secs * 1e3))
+            .unwrap_or_else(|| "-".into())
+    };
     let mut rows = Vec::new();
-    for (d, t) in out.restored.iter().zip(&source.timings) {
+    for d in &report.restored {
         let truth = &demo.quants[d.idx];
         let ok = d.quant.data == truth.data && d.quant.scales == truth.scales;
         rows.push(vec![
             d.idx.to_string(),
-            t.wire_bytes.to_string(),
-            format!("{:.1}", t.wall_secs * 1e3),
+            d.quant.data.len().to_string(),
+            wall_ms_of(d.idx),
             if ok { "yes".into() } else { "NO".into() },
         ]);
         if !ok {
-            println!("{}", markdown(&["chunk", "wire bytes", "wall ms", "bit-exact"], &rows));
+            println!("{}", markdown(&["chunk", "restored bytes", "wall ms", "bit-exact"], &rows));
             eprintln!("chunk {} restored with differences", d.idx);
             std::process::exit(1);
         }
     }
-    println!("{}", markdown(&["chunk", "wire bytes", "wall ms", "bit-exact"], &rows));
+    println!("{}", markdown(&["chunk", "restored bytes", "wall ms", "bit-exact"], &rows));
     println!(
-        "# restored {} chunks bit-exact; virtual TTFT {} (transmit {}, decode {}, restore {})",
-        out.restored.len(),
-        fmt_secs(out.plan.done_at),
-        fmt_secs(out.plan.breakdown.transmission),
-        fmt_secs(out.plan.breakdown.decode),
-        fmt_secs(out.plan.breakdown.restore),
+        "# restored {} chunks bit-exact via {}; virtual TTFT {} (transmit {}, decode {}, \
+         restore {})",
+        report.restored.len(),
+        report.backend.unwrap_or("?"),
+        fmt_secs(report.done_at()),
+        fmt_secs(report.breakdown().transmission),
+        fmt_secs(report.breakdown().decode),
+        fmt_secs(report.breakdown().restore),
     );
 }
 
@@ -283,12 +309,22 @@ fn cmd_serve(args: &[String]) {
 
 fn cmd_fetch(args: &[String]) {
     let exp = load_experiment(args);
-    // --remote wins; otherwise `[network] remote` in the config
+    // --remote / --backend win; otherwise `[network]` in the config.
+    // Any remote addresses without an explicit backend mean `tcp`.
     let remote = parse_flag(args, "--remote")
         .map(|list| Experiment::parse_addrs(&list))
         .unwrap_or_else(|| exp.remote_addrs.clone());
-    if !remote.is_empty() {
-        return cmd_fetch_remote(exp, remote, args);
+    let backend = parse_flag(args, "--backend")
+        .map(|b| {
+            Backend::by_name(&b).unwrap_or_else(|| {
+                eprintln!("--backend takes `local`, `tcp`, or `objstore` (got {b:?})");
+                std::process::exit(2);
+            })
+        })
+        .or(exp.backend)
+        .or(if remote.is_empty() { None } else { Some(Backend::Tcp) });
+    if let Some(backend) = backend {
+        return cmd_fetch_demo(exp, backend, remote, args);
     }
     let context: usize = parse_flag(args, "--context")
         .map(|c| c.parse().expect("--context takes tokens"))
@@ -302,18 +338,18 @@ fn cmd_fetch(args: &[String]) {
     );
     let mut rows = Vec::new();
     for profile in SystemProfile::all(&exp.device) {
-        let bd = single_request_ttft(
-            &perf,
-            &profile,
-            &exp.engine.fetch,
-            &bw,
-            context,
-            if profile.kind == kvfetcher::baselines::SystemKind::FullPrefill {
-                0
-            } else {
-                reusable
-            },
-        );
+        let r = if profile.kind == kvfetcher::baselines::SystemKind::FullPrefill {
+            0
+        } else {
+            reusable
+        };
+        let bd = Fetcher::builder()
+            .profile(profile.clone())
+            .fetch_config(exp.engine.fetch.clone())
+            .bandwidth(bw.clone())
+            .for_perf(&perf)
+            .build()
+            .ttft(&perf, context, r, exp.engine.exec);
         rows.push(vec![
             profile.name.to_string(),
             fmt_secs(bd.transmission),
@@ -409,8 +445,10 @@ const USAGE: &str = "kvfetcher <serve|fetch|calibrate|layout|real> [flags]
   serve     --listen a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
             [--capacity bytes] [--throttle-gbps G]     (storage shard servers)
   fetch     --config <toml> [--context tokens] [--bandwidth G]
-  fetch     --remote a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
-            (stream the demo prefix from shards; verifies bit-exact restore)
+  fetch     --backend local|tcp|objstore [--remote a:p[,b:p...]] [--seed s]
+            [--chunks n] [--chunk-tokens t]
+            (stream the demo prefix through a transport backend; verifies
+             bit-exact restore; --remote alone implies --backend tcp)
   calibrate [--tokens n]
   layout    [--heads h] [--dim d]
   real      [--artifacts dir]   (requires --features pjrt)";

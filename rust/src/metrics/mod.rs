@@ -151,7 +151,8 @@ mod tests {
 
     #[test]
     fn breakdown_total() {
-        let b = TtftBreakdown { wait: 1.0, transmission: 2.0, decode: 0.5, restore: 0.1, prefill: 0.4 };
+        let b =
+            TtftBreakdown { wait: 1.0, transmission: 2.0, decode: 0.5, restore: 0.1, prefill: 0.4 };
         assert!((b.total() - 4.0).abs() < 1e-12);
     }
 }

@@ -143,7 +143,12 @@ mod tests {
     use super::*;
 
     fn entry(id: usize, fetch_ready: Option<f64>) -> SchedEntry {
-        SchedEntry { id, state: ReqState::Waiting, fetch_ready_at: fetch_ready, admit_at: fetch_ready }
+        SchedEntry {
+            id,
+            state: ReqState::Waiting,
+            fetch_ready_at: fetch_ready,
+            admit_at: fetch_ready,
+        }
     }
 
     #[test]

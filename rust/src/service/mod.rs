@@ -14,10 +14,12 @@
 //! * [`client`] — typed calls over a per-node connection pool;
 //! * [`shard`] — the placement map + router spreading a chained prefix
 //!   across N nodes with per-node capacity stats;
-//! * [`source`] — [`crate::fetcher::TransportSource`] impls plugging
-//!   all of the above into the pipelined fetch executor, so
-//!   `ExecMode::Pipelined` streams and restores *real bytes* while its
-//!   virtual timeline stays bit-identical to the analytic planner.
+//! * [`source`] — the transport-backend registry: a [`Backend`] enum +
+//!   [`SourceFactory`] trait mapping config strings onto
+//!   [`crate::fetcher::TransportSource`] impls (in-process store, TCP
+//!   shards, object-store-shaped), so `ExecMode::Pipelined` streams and
+//!   restores *real bytes* while its virtual timeline stays
+//!   bit-identical to the analytic planner.
 //!
 //! Everything runs hermetically on loopback; `tests/remote_fetch.rs`
 //! asserts the end-to-end contracts (bit-exact restore across 2+
@@ -34,8 +36,15 @@ pub use client::StoreClient;
 pub use protocol::{NodeStats, Request, Response};
 pub use server::{ServerConfig, StorageServer};
 pub use shard::{Placement, ShardMap, ShardRouter};
-pub use source::{Ladder, LocalSource, RemoteSource, WireTiming};
+pub use source::{
+    Backend, Ladder, LocalSource, ObjStoreShape, ObjectStoreSource, RemoteSource, SourceFactory,
+    SourceRegistry, SourceSpec,
+};
 pub use throttle::{ThrottleSpec, TokenBucket};
+
+/// Re-export: wire timings now live with the transport abstraction and
+/// surface through `fetcher::api::FetchReport`.
+pub use crate::fetcher::transport::WireTiming;
 
 use crate::codec::CodecConfig;
 use crate::kvstore::{prefix_hashes, StoredChunk, StoredVariant};

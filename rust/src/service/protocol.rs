@@ -21,7 +21,7 @@
 use std::io::{self, Read, Write};
 use std::sync::{Mutex, OnceLock};
 
-use crate::fetcher::ChunkPayload;
+use crate::fetcher::{ChunkPayload, FetchError};
 use crate::kvstore::{StoredChunk, StoredVariant};
 
 /// Upper bound on one frame (tag + payload). Generous: the largest
@@ -108,6 +108,21 @@ pub fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> io::Result<(
     w.flush()
 }
 
+/// The size gate a frame's length prefix must pass before any
+/// allocation happens. Oversized frames are a capacity refusal (a
+/// legitimate peer never sends one); zero-length frames are malformed.
+pub fn validate_frame_len(len: usize) -> Result<(), FetchError> {
+    if len == 0 {
+        return Err(FetchError::decode("zero-length frame"));
+    }
+    if len > MAX_FRAME_BYTES {
+        return Err(FetchError::Capacity {
+            detail: format!("frame length {len} exceeds MAX_FRAME_BYTES {MAX_FRAME_BYTES}"),
+        });
+    }
+    Ok(())
+}
+
 /// Read one frame. A timeout or EOF *before the first byte* is reported
 /// as `Idle` / `Eof`; mid-frame they are errors (a stalled peer retries
 /// via the timeout loop, a truncated frame poisons the connection).
@@ -119,12 +134,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> io::Result<FrameRead> {
         ReadState::Done => {}
     }
     let len = u32::from_le_bytes(len_buf) as usize;
-    if len == 0 || len > MAX_FRAME_BYTES {
-        return Err(io::Error::new(
-            io::ErrorKind::InvalidData,
-            format!("frame length {len} out of range"),
-        ));
-    }
+    validate_frame_len(len).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
     let mut tag = [0u8; 1];
     read_exact_blocking(r, &mut tag)?;
     let mut payload = vec![0u8; len - 1];
@@ -228,57 +238,63 @@ impl<'a> Rd<'a> {
         Rd { b, off: 0 }
     }
 
-    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FetchError> {
         if self.off + n > self.b.len() {
-            return Err(format!(
+            return Err(FetchError::decode(format!(
                 "payload truncated: need {n} bytes at offset {}, have {}",
                 self.off,
                 self.b.len() - self.off
-            ));
+            )));
         }
         let s = &self.b[self.off..self.off + n];
         self.off += n;
         Ok(s)
     }
 
-    fn u8(&mut self) -> Result<u8, String> {
+    fn u8(&mut self) -> Result<u8, FetchError> {
         Ok(self.take(1)?[0])
     }
 
-    fn u32(&mut self) -> Result<u32, String> {
+    fn u32(&mut self) -> Result<u32, FetchError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
-    fn u64(&mut self) -> Result<u64, String> {
+    fn u64(&mut self) -> Result<u64, FetchError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> Result<f32, String> {
+    fn f32(&mut self) -> Result<f32, FetchError> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
     /// A u32 count, bounds-checked so a corrupt count cannot force a
     /// huge allocation (each element is at least `elem_bytes` bytes).
-    fn count(&mut self, elem_bytes: usize) -> Result<usize, String> {
+    fn count(&mut self, elem_bytes: usize) -> Result<usize, FetchError> {
         let n = self.u32()? as usize;
         let remaining = self.b.len() - self.off;
         if n.saturating_mul(elem_bytes.max(1)) > remaining {
-            return Err(format!("count {n} exceeds remaining payload {remaining}"));
+            return Err(FetchError::decode(format!(
+                "count {n} exceeds remaining payload {remaining}"
+            )));
         }
         Ok(n)
     }
 
-    fn str_(&mut self) -> Result<String, String> {
+    fn str_(&mut self) -> Result<String, FetchError> {
         let n = self.u8()? as usize;
         let bytes = self.take(n)?;
-        String::from_utf8(bytes.to_vec()).map_err(|_| "invalid UTF-8 string".to_string())
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| FetchError::decode("invalid UTF-8 string"))
     }
 
-    fn finish(self) -> Result<(), String> {
+    fn finish(self) -> Result<(), FetchError> {
         if self.off == self.b.len() {
             Ok(())
         } else {
-            Err(format!("{} trailing bytes after message", self.b.len() - self.off))
+            Err(FetchError::decode(format!(
+                "{} trailing bytes after message",
+                self.b.len() - self.off
+            )))
         }
     }
 }
@@ -308,7 +324,7 @@ const MAX_INTERNED_RESOLUTIONS: usize = 64;
 /// Map a wire resolution name onto a `&'static str`. Names on the
 /// standard ladder resolve to the canonical constants; unknown names
 /// are interned once per process, up to [`MAX_INTERNED_RESOLUTIONS`].
-pub fn try_intern_resolution(name: &str) -> Result<&'static str, String> {
+pub fn try_intern_resolution(name: &str) -> Result<&'static str, FetchError> {
     if let Some(r) = crate::layout::resolution_by_name(name) {
         return Ok(r.name);
     }
@@ -319,7 +335,9 @@ pub fn try_intern_resolution(name: &str) -> Result<&'static str, String> {
         return Ok(s);
     }
     if g.len() >= MAX_INTERNED_RESOLUTIONS {
-        return Err(format!("too many distinct resolution names; rejecting {name:?}"));
+        return Err(FetchError::Capacity {
+            detail: format!("too many distinct resolution names; rejecting {name:?}"),
+        });
     }
     let leaked: &'static str = Box::leak(name.to_string().into_boxed_str());
     g.push(leaked);
@@ -350,7 +368,7 @@ fn put_chunk(out: &mut Vec<u8>, c: &StoredChunk) {
     }
 }
 
-fn get_chunk(rd: &mut Rd) -> Result<StoredChunk, String> {
+fn get_chunk(rd: &mut Rd) -> Result<StoredChunk, FetchError> {
     let hash = rd.u64()?;
     let tokens = rd.u32()? as usize;
     let n_scales = rd.count(4)?;
@@ -392,7 +410,7 @@ fn put_payload(out: &mut Vec<u8>, p: &ChunkPayload) {
     }
 }
 
-fn get_payload(rd: &mut Rd) -> Result<ChunkPayload, String> {
+fn get_payload(rd: &mut Rd) -> Result<ChunkPayload, FetchError> {
     let hash = rd.u64()?;
     let tokens = rd.u32()? as usize;
     let resolution = rd.str_()?;
@@ -444,7 +462,7 @@ pub fn encode_request(r: &Request) -> (u8, Vec<u8>) {
 }
 
 /// Parse a request frame.
-pub fn decode_request(tag: u8, payload: &[u8]) -> Result<Request, String> {
+pub fn decode_request(tag: u8, payload: &[u8]) -> Result<Request, FetchError> {
     let mut rd = Rd::new(payload);
     let req = match tag {
         TAG_LOOKUP_PREFIX => {
@@ -470,7 +488,7 @@ pub fn decode_request(tag: u8, payload: &[u8]) -> Result<Request, String> {
         }
         TAG_PUT_CHUNK => Request::PutChunk { chunk: get_chunk(&mut rd)? },
         TAG_STATS => Request::Stats,
-        t => return Err(format!("unknown request tag {t}")),
+        t => return Err(FetchError::decode(format!("unknown request tag {t}"))),
     };
     rd.finish()?;
     Ok(req)
@@ -524,7 +542,7 @@ pub fn encode_response(r: &Response) -> (u8, Vec<u8>) {
 }
 
 /// Parse a response frame.
-pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, String> {
+pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, FetchError> {
     let mut rd = Rd::new(payload);
     let resp = match tag {
         TAG_PREFIX_MATCH => {
@@ -563,7 +581,7 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, String> {
             })
         }
         TAG_ERR => Response::Err { msg: rd.str_()? },
-        t => return Err(format!("unknown response tag {t}")),
+        t => return Err(FetchError::decode(format!("unknown response tag {t}"))),
     };
     rd.finish()?;
     Ok(resp)

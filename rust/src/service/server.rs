@@ -158,7 +158,7 @@ fn handle_conn(
         };
         let (resp, pinned) = match protocol::decode_request(tag, &payload) {
             Ok(req) => handle_request(req, &node),
-            Err(msg) => (Response::Err { msg }, None),
+            Err(e) => (Response::Err { msg: e.to_string() }, None),
         };
         let (tag, body) = protocol::encode_response(&resp);
         let frame = protocol::frame_bytes(tag, &body);

@@ -20,16 +20,17 @@
 
 use std::io;
 
-use crate::fetcher::ChunkPayload;
+use crate::fetcher::{ChunkPayload, FetchError};
 use crate::kvstore::{prefix_hashes, StoredChunk};
 
 use super::client::StoreClient;
 use super::protocol::NodeStats;
 
 /// How chunks map onto shards.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Placement {
     /// Chain position `i` -> shard `i % N`.
+    #[default]
     RoundRobin,
     /// `mix(hash) % N`, independent of chain position.
     ByHash,
@@ -77,10 +78,22 @@ pub struct ShardRouter {
 }
 
 impl ShardRouter {
-    /// Connect to every node; fails fast if any address is dead.
-    pub fn connect(addrs: &[String], placement: Placement) -> io::Result<ShardRouter> {
-        let clients =
-            addrs.iter().map(|a| StoreClient::connect(a)).collect::<io::Result<Vec<_>>>()?;
+    /// Connect to every node; fails fast if any address is dead, and
+    /// the error names *which* shard of the fleet is down (instead of
+    /// folding every node into one opaque I/O failure).
+    pub fn connect(addrs: &[String], placement: Placement) -> Result<ShardRouter, FetchError> {
+        if addrs.is_empty() {
+            return Err(FetchError::transport("no shard addresses to connect to"));
+        }
+        let mut clients = Vec::with_capacity(addrs.len());
+        for (shard, addr) in addrs.iter().enumerate() {
+            let client = StoreClient::connect(addr).map_err(|e| FetchError::Connect {
+                shard,
+                addr: addr.clone(),
+                detail: e.to_string(),
+            })?;
+            clients.push(client);
+        }
         Ok(ShardRouter { map: ShardMap::new(clients.len(), placement), clients })
     }
 

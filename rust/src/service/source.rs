@@ -1,23 +1,62 @@
-//! [`TransportSource`] implementations: where the pipelined executor's
-//! transmit stage gets real chunk bytes from.
+//! Transport backends: where the pipelined executor's transmit stage
+//! gets real chunk bytes from, and the registry that selects one by
+//! config string (`[network] backend = "tcp" | "local" | "objstore"`).
 //!
-//! [`LocalSource`] reads an in-process [`StorageNode`] — the reference
-//! the remote path must restore bit-identically against. [`RemoteSource`]
-//! streams from shard servers through a [`ShardRouter`], recording each
-//! chunk's wall-clock wire time so throttle replays can be validated
-//! against the analytic link model.
+//! * [`LocalSource`] reads an in-process [`StorageNode`] — the
+//!   reference the remote paths must restore bit-identically against;
+//! * [`RemoteSource`] streams from TCP shard servers through a
+//!   [`ShardRouter`], attributing every failure to the shard that
+//!   caused it and recording per-chunk wall-clock wire timings;
+//! * [`ObjectStoreSource`] shapes an in-process store like an object
+//!   store (per-request latency plus a throughput ceiling) — the
+//!   ROADMAP's "object-store-shaped `TransportSource`" behind the same
+//!   wire payloads;
+//! * [`SourceRegistry`] maps a [`Backend`] onto a [`SourceFactory`],
+//!   so the CLI / config / tests select transports uniformly instead
+//!   of hard-wiring constructors per entry point. Custom factories
+//!   registered later shadow the built-ins.
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::thread;
+use std::time::{Duration, Instant};
 
-use crate::fetcher::{ChunkPayload, TransportSource};
+use crate::fetcher::{ChunkPayload, FetchError, TransportSource, WireTiming};
 use crate::kvstore::StorageNode;
 
-use super::shard::ShardRouter;
+use super::shard::{Placement, ShardRouter};
 
 /// The resolution-ladder names a source serves for fetcher resolution
 /// indices 0..4 (240p..1080p nominal).
 pub type Ladder = [&'static str; 4];
+
+/// Copy one chunk variant out of a locked storage node as a wire
+/// payload — shared by the in-process backends.
+fn payload_from_node(
+    node: &Arc<Mutex<StorageNode>>,
+    hashes: &[u64],
+    ladder: &Ladder,
+    idx: usize,
+    res_idx: usize,
+) -> Result<ChunkPayload, FetchError> {
+    let hash = *hashes
+        .get(idx)
+        .ok_or_else(|| FetchError::transport(format!("no chunk at index {idx}")))?;
+    let name = ladder[res_idx.min(ladder.len() - 1)];
+    let mut node = node.lock().map_err(|_| FetchError::transport("storage node lock poisoned"))?;
+    let chunk = node
+        .fetch(hash)
+        .ok_or_else(|| FetchError::transport(format!("chunk {hash:#x} not in local store")))?;
+    let v = chunk
+        .variant(name)
+        .ok_or_else(|| FetchError::transport(format!("chunk {hash:#x} has no {name} variant")))?;
+    Ok(ChunkPayload {
+        hash,
+        tokens: chunk.tokens,
+        resolution: name.to_string(),
+        scales: chunk.scales.clone(),
+        group_bytes: v.group_bytes.clone(),
+    })
+}
 
 /// Stream chunks from an in-process storage node.
 pub struct LocalSource {
@@ -33,33 +72,17 @@ impl LocalSource {
 }
 
 impl TransportSource for LocalSource {
-    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, String> {
-        let hash = *self.hashes.get(idx).ok_or_else(|| format!("no chunk at index {idx}"))?;
-        let name = self.ladder[res_idx.min(self.ladder.len() - 1)];
-        let mut node = self.node.lock().map_err(|_| "storage node lock poisoned".to_string())?;
-        let chunk =
-            node.fetch(hash).ok_or_else(|| format!("chunk {hash:#x} not in local store"))?;
-        let v = chunk
-            .variant(name)
-            .ok_or_else(|| format!("chunk {hash:#x} has no {name} variant"))?;
-        Ok(ChunkPayload {
-            hash,
-            tokens: chunk.tokens,
-            resolution: name.to_string(),
-            scales: chunk.scales.clone(),
-            group_bytes: v.group_bytes.clone(),
-        })
+    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, FetchError> {
+        payload_from_node(&self.node, &self.hashes, &self.ladder, idx, res_idx)
     }
-}
 
-/// Wire measurements of one remotely fetched chunk.
-#[derive(Debug, Clone, Copy)]
-pub struct WireTiming {
-    pub idx: usize,
-    /// Bytes that crossed the socket (bitstreams + scale sideband).
-    pub wire_bytes: usize,
-    /// Wall-clock request-to-last-byte duration (seconds).
-    pub wall_secs: f64,
+    fn kind(&self) -> &'static str {
+        "local"
+    }
+
+    fn set_hashes(&mut self, hashes: &[u64]) {
+        self.hashes = hashes.to_vec();
+    }
 }
 
 /// Stream chunks from remote shard servers.
@@ -67,7 +90,8 @@ pub struct RemoteSource {
     router: ShardRouter,
     hashes: Vec<u64>,
     ladder: Ladder,
-    /// Per-chunk wire timings, in fetch order.
+    /// Per-chunk wire timings, in fetch order (drained into the
+    /// `FetchReport` by `take_timings`).
     pub timings: Vec<WireTiming>,
 }
 
@@ -82,22 +106,425 @@ impl RemoteSource {
 }
 
 impl TransportSource for RemoteSource {
-    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, String> {
-        let hash = *self.hashes.get(idx).ok_or_else(|| format!("no chunk at index {idx}"))?;
+    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, FetchError> {
+        let hash = *self
+            .hashes
+            .get(idx)
+            .ok_or_else(|| FetchError::transport(format!("no chunk at index {idx}")))?;
         let name = self.ladder[res_idx.min(self.ladder.len() - 1)];
+        let shard = self.router.map().shard_of(idx, hash);
         let t0 = Instant::now();
         let fetched = self.router.fetch_chunk(idx, hash, name).map_err(|e| {
-            let msg = format!("remote fetch of chunk {idx} ({hash:#x}) failed: {e}");
-            eprintln!("{msg}");
-            msg
+            // recover a typed refusal smuggled through the io boundary
+            // (e.g. an oversized frame's Capacity error), else it's a
+            // transport fault of this chunk's shard
+            FetchError::from_io(&e).unwrap_or_else(|| FetchError::Transport {
+                chunk: Some(idx),
+                shard: Some(shard),
+                detail: format!("remote fetch of chunk {hash:#x} failed: {e}"),
+            })
         })?;
-        let payload =
-            fetched.ok_or_else(|| format!("chunk {hash:#x} not on its shard (evicted?)"))?;
+        let payload = fetched.ok_or_else(|| FetchError::Transport {
+            chunk: Some(idx),
+            shard: Some(shard),
+            detail: format!("chunk {hash:#x} not on its shard (evicted?)"),
+        })?;
         self.timings.push(WireTiming {
             idx,
             wire_bytes: payload.wire_bytes(),
             wall_secs: t0.elapsed().as_secs_f64(),
         });
         Ok(payload)
+    }
+
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn set_hashes(&mut self, hashes: &[u64]) {
+        self.hashes = hashes.to_vec();
+    }
+
+    fn take_timings(&mut self) -> Vec<WireTiming> {
+        std::mem::take(&mut self.timings)
+    }
+}
+
+/// Wall-clock shape of an object-store GET: a flat per-request latency
+/// plus a throughput ceiling on the body.
+#[derive(Debug, Clone, Copy)]
+pub struct ObjStoreShape {
+    /// Per-request latency (seconds); object stores sit at ~10ms.
+    pub latency_s: f64,
+    /// Body throughput ceiling (Gbps).
+    pub gbps: f64,
+}
+
+impl Default for ObjStoreShape {
+    fn default() -> Self {
+        ObjStoreShape { latency_s: 0.010, gbps: 8.0 }
+    }
+}
+
+/// An in-process store shaped like a remote object store: every chunk
+/// GET pays [`ObjStoreShape::latency_s`] plus `bytes / gbps` of wall
+/// time on the transmit thread — so the executor backpressures against
+/// it exactly like against a slow socket, while the virtual timeline
+/// stays untouched.
+pub struct ObjectStoreSource {
+    node: Arc<Mutex<StorageNode>>,
+    hashes: Vec<u64>,
+    ladder: Ladder,
+    shape: ObjStoreShape,
+    pub timings: Vec<WireTiming>,
+}
+
+impl ObjectStoreSource {
+    pub fn new(
+        node: Arc<Mutex<StorageNode>>,
+        hashes: Vec<u64>,
+        ladder: Ladder,
+        shape: ObjStoreShape,
+    ) -> ObjectStoreSource {
+        ObjectStoreSource { node, hashes, ladder, shape, timings: Vec::new() }
+    }
+}
+
+impl TransportSource for ObjectStoreSource {
+    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, FetchError> {
+        let t0 = Instant::now();
+        let payload = payload_from_node(&self.node, &self.hashes, &self.ladder, idx, res_idx)?;
+        let body_secs = payload.wire_bytes() as f64 * 8.0 / (self.shape.gbps.max(1e-9) * 1e9);
+        let wall = self.shape.latency_s + body_secs;
+        if wall > 0.0 {
+            thread::sleep(Duration::from_secs_f64(wall));
+        }
+        self.timings.push(WireTiming {
+            idx,
+            wire_bytes: payload.wire_bytes(),
+            wall_secs: t0.elapsed().as_secs_f64(),
+        });
+        Ok(payload)
+    }
+
+    fn kind(&self) -> &'static str {
+        "objstore"
+    }
+
+    fn set_hashes(&mut self, hashes: &[u64]) {
+        self.hashes = hashes.to_vec();
+    }
+
+    fn take_timings(&mut self) -> Vec<WireTiming> {
+        std::mem::take(&mut self.timings)
+    }
+}
+
+// ------------------------------------------------------------- registry
+
+/// The transport backends the registry can build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// In-process [`StorageNode`] ([`LocalSource`]).
+    Local,
+    /// Remote TCP shard servers ([`RemoteSource`]).
+    Tcp,
+    /// Latency/throughput-shaped object store ([`ObjectStoreSource`]).
+    ObjStore,
+}
+
+impl Backend {
+    /// Parse a config/CLI name.
+    pub fn by_name(name: &str) -> Option<Backend> {
+        match name.to_ascii_lowercase().as_str() {
+            "local" => Some(Backend::Local),
+            "tcp" | "remote" => Some(Backend::Tcp),
+            "objstore" | "object-store" | "obj" => Some(Backend::ObjStore),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Local => "local",
+            Backend::Tcp => "tcp",
+            Backend::ObjStore => "objstore",
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Everything a factory may need to build its source. Callers fill the
+/// fields relevant to the backend they select; factories error with a
+/// typed [`FetchError`] when a required field is missing.
+#[derive(Clone, Default)]
+pub struct SourceSpec {
+    /// Chained chunk hashes of the prefix, in fetch order.
+    pub hashes: Vec<u64>,
+    /// Ladder the source serves for resolution indices 0..4.
+    pub ladder: Option<Ladder>,
+    /// TCP backend: shard addresses + placement.
+    pub addrs: Vec<String>,
+    pub placement: Placement,
+    /// TCP backend: token ids for the fleet-wide prefix match (when
+    /// set, the factory verifies the whole chain is stored remotely).
+    pub tokens: Vec<u32>,
+    pub chunk_tokens: usize,
+    /// In-process backends: the populated storage node.
+    pub node: Option<Arc<Mutex<StorageNode>>>,
+    /// Object-store backend: its wall-clock shape.
+    pub objstore: ObjStoreShape,
+}
+
+impl SourceSpec {
+    pub fn new(hashes: Vec<u64>, ladder: Ladder) -> SourceSpec {
+        SourceSpec { hashes, ladder: Some(ladder), ..Default::default() }
+    }
+
+    fn ladder(&self) -> Result<Ladder, FetchError> {
+        self.ladder.ok_or_else(|| FetchError::transport("source spec has no resolution ladder"))
+    }
+
+    fn node(&self, backend: Backend) -> Result<Arc<Mutex<StorageNode>>, FetchError> {
+        self.node.clone().ok_or_else(|| {
+            FetchError::transport(format!("{backend} backend needs an in-process storage node"))
+        })
+    }
+}
+
+/// Builds one backend's [`TransportSource`] from a [`SourceSpec`].
+pub trait SourceFactory: Send + Sync {
+    fn backend(&self) -> Backend;
+    fn create(&self, spec: &SourceSpec) -> Result<Box<dyn TransportSource>, FetchError>;
+}
+
+struct LocalFactory;
+
+impl SourceFactory for LocalFactory {
+    fn backend(&self) -> Backend {
+        Backend::Local
+    }
+
+    fn create(&self, spec: &SourceSpec) -> Result<Box<dyn TransportSource>, FetchError> {
+        Ok(Box::new(LocalSource::new(
+            spec.node(Backend::Local)?,
+            spec.hashes.clone(),
+            spec.ladder()?,
+        )))
+    }
+}
+
+struct TcpFactory;
+
+impl SourceFactory for TcpFactory {
+    fn backend(&self) -> Backend {
+        Backend::Tcp
+    }
+
+    fn create(&self, spec: &SourceSpec) -> Result<Box<dyn TransportSource>, FetchError> {
+        let router = ShardRouter::connect(&spec.addrs, spec.placement)?;
+        let hashes = if spec.tokens.is_empty() {
+            spec.hashes.clone()
+        } else {
+            let matched = router
+                .match_prefix(&spec.tokens, spec.chunk_tokens.max(1))
+                .map_err(|e| FetchError::transport(format!("fleet prefix lookup failed: {e}")))?;
+            if !spec.hashes.is_empty() && matched != spec.hashes {
+                let detail = if matched.len() < spec.hashes.len()
+                    && matched[..] == spec.hashes[..matched.len()]
+                {
+                    format!(
+                        "only {}/{} chunks of the prefix are stored remotely",
+                        matched.len(),
+                        spec.hashes.len()
+                    )
+                } else {
+                    format!(
+                        "remote chain ({} chunks) does not match the expected prefix \
+                         ({} chunks) — wrong seed or shards?",
+                        matched.len(),
+                        spec.hashes.len()
+                    )
+                };
+                return Err(FetchError::transport(detail));
+            }
+            matched
+        };
+        if hashes.is_empty() {
+            return Err(FetchError::transport("no chunks to fetch (empty hash chain)"));
+        }
+        Ok(Box::new(RemoteSource::new(router, hashes, spec.ladder()?)))
+    }
+}
+
+struct ObjStoreFactory;
+
+impl SourceFactory for ObjStoreFactory {
+    fn backend(&self) -> Backend {
+        Backend::ObjStore
+    }
+
+    fn create(&self, spec: &SourceSpec) -> Result<Box<dyn TransportSource>, FetchError> {
+        Ok(Box::new(ObjectStoreSource::new(
+            spec.node(Backend::ObjStore)?,
+            spec.hashes.clone(),
+            spec.ladder()?,
+            spec.objstore,
+        )))
+    }
+}
+
+/// The pluggable transport registry: one factory per [`Backend`],
+/// selected by enum or config string. [`SourceRegistry::with_defaults`]
+/// installs the three built-ins; later registrations shadow earlier
+/// ones, so deployments can swap a backend without forking call sites.
+pub struct SourceRegistry {
+    factories: Vec<Box<dyn SourceFactory>>,
+}
+
+impl SourceRegistry {
+    pub fn with_defaults() -> SourceRegistry {
+        SourceRegistry {
+            factories: vec![
+                Box::new(LocalFactory),
+                Box::new(TcpFactory),
+                Box::new(ObjStoreFactory),
+            ],
+        }
+    }
+
+    pub fn register(&mut self, factory: Box<dyn SourceFactory>) {
+        self.factories.push(factory);
+    }
+
+    /// Backends currently registered (later shadows earlier).
+    pub fn backends(&self) -> Vec<Backend> {
+        let mut seen = Vec::new();
+        for f in self.factories.iter().rev() {
+            if !seen.contains(&f.backend()) {
+                seen.push(f.backend());
+            }
+        }
+        seen
+    }
+
+    pub fn create(
+        &self,
+        backend: Backend,
+        spec: &SourceSpec,
+    ) -> Result<Box<dyn TransportSource>, FetchError> {
+        self.factories
+            .iter()
+            .rev()
+            .find(|f| f.backend() == backend)
+            .ok_or_else(|| FetchError::transport(format!("no factory for backend {backend}")))?
+            .create(spec)
+    }
+
+    /// [`create`](Self::create) by config string.
+    pub fn create_by_name(
+        &self,
+        name: &str,
+        spec: &SourceSpec,
+    ) -> Result<Box<dyn TransportSource>, FetchError> {
+        let backend = Backend::by_name(name)
+            .ok_or_else(|| FetchError::transport(format!("unknown transport backend {name:?}")))?;
+        self.create(backend, spec)
+    }
+}
+
+impl Default for SourceRegistry {
+    fn default() -> Self {
+        SourceRegistry::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for b in [Backend::Local, Backend::Tcp, Backend::ObjStore] {
+            assert_eq!(Backend::by_name(b.name()), Some(b));
+        }
+        assert_eq!(Backend::by_name("remote"), Some(Backend::Tcp));
+        assert_eq!(Backend::by_name("rdma"), None);
+    }
+
+    #[test]
+    fn registry_defaults_cover_all_backends() {
+        let reg = SourceRegistry::with_defaults();
+        let backends = reg.backends();
+        for b in [Backend::Local, Backend::Tcp, Backend::ObjStore] {
+            assert!(backends.contains(&b), "{b} missing");
+        }
+    }
+
+    #[test]
+    fn missing_spec_fields_produce_typed_errors() {
+        let reg = SourceRegistry::with_defaults();
+        let spec = SourceSpec::new(vec![1, 2], ["144p"; 4]);
+        // local/objstore without a node
+        for name in ["local", "objstore"] {
+            match reg.create_by_name(name, &spec) {
+                Err(FetchError::Transport { detail, .. }) => {
+                    assert!(detail.contains("storage node"), "{detail}")
+                }
+                other => panic!("{name}: wrong result {:?}", other.err()),
+            }
+        }
+        // tcp without addresses
+        match reg.create_by_name("tcp", &spec) {
+            Err(FetchError::Transport { detail, .. }) => {
+                assert!(detail.contains("no shard addresses"), "{detail}")
+            }
+            other => panic!("wrong result {:?}", other.err()),
+        }
+        // unknown backend string
+        assert!(matches!(
+            reg.create_by_name("warp", &spec),
+            Err(FetchError::Transport { .. })
+        ));
+    }
+
+    #[test]
+    fn tcp_factory_attributes_dead_shard() {
+        let reg = SourceRegistry::with_defaults();
+        let mut spec = SourceSpec::new(vec![1], ["144p"; 4]);
+        // port 1 on loopback: nothing listens there
+        spec.addrs = vec!["127.0.0.1:1".into()];
+        match reg.create(Backend::Tcp, &spec) {
+            Err(FetchError::Connect { shard, addr, .. }) => {
+                assert_eq!(shard, 0);
+                assert_eq!(addr, "127.0.0.1:1");
+            }
+            other => panic!("wrong result {:?}", other.err()),
+        }
+    }
+
+    #[test]
+    fn custom_factory_shadows_builtin() {
+        struct NullLocal;
+        impl SourceFactory for NullLocal {
+            fn backend(&self) -> Backend {
+                Backend::Local
+            }
+            fn create(&self, _: &SourceSpec) -> Result<Box<dyn TransportSource>, FetchError> {
+                Err(FetchError::transport("shadowed"))
+            }
+        }
+        let mut reg = SourceRegistry::with_defaults();
+        reg.register(Box::new(NullLocal));
+        let spec = SourceSpec::new(vec![], ["144p"; 4]);
+        match reg.create(Backend::Local, &spec) {
+            Err(FetchError::Transport { detail, .. }) => assert_eq!(detail, "shadowed"),
+            other => panic!("wrong result {:?}", other.err()),
+        }
     }
 }

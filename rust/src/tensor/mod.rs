@@ -115,7 +115,8 @@ impl KvCache {
                 // tailed (most values tiny, few salient), which is what
                 // makes entropy coding effective after quantization.
                 let u = rng.f64() - 0.5;
-                let lap = -u.signum() * (1.0 - 2.0 * u.abs()).max(1e-12).ln() / std::f64::consts::SQRT_2;
+                let lap =
+                    -u.signum() * (1.0 - 2.0 * u.abs()).max(1e-12).ln() / std::f64::consts::SQRT_2;
                 // innovations are smooth *along the head_dim axis* too
                 // (features within a head co-vary), which is what the
                 // intra-frame layout search exploits; reset per head.

@@ -84,7 +84,13 @@ pub fn generate(cfg: &TraceConfig) -> Vec<Request> {
             0
         };
         let output = cfg.out_min + rng.below((cfg.out_max - cfg.out_min).max(1) as u64) as usize;
-        out.push(Request { id, arrival: t, context_tokens: ctx, reusable_tokens: reusable, output_tokens: output });
+        out.push(Request {
+            id,
+            arrival: t,
+            context_tokens: ctx,
+            reusable_tokens: reusable,
+            output_tokens: output,
+        });
     }
     out
 }

@@ -308,7 +308,11 @@ mod tests {
 
     #[test]
     fn parse_manifest_like() {
-        let s = r#"{"model": {"layers": 4, "heads": 8}, "weights": [{"name": "emb", "shape": [512, 256], "byte_offset": 0}], "ok": true, "x": null, "f": -1.5e2}"#;
+        let s = concat!(
+            r#"{"model": {"layers": 4, "heads": 8}, "weights": "#,
+            r#"[{"name": "emb", "shape": [512, 256], "byte_offset": 0}], "#,
+            r#""ok": true, "x": null, "f": -1.5e2}"#
+        );
         let j = Json::parse(s).unwrap();
         assert_eq!(j.get("model").unwrap().get("layers").unwrap().as_usize(), Some(4));
         assert_eq!(

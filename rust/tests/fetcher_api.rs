@@ -1,0 +1,441 @@
+//! Contract tests of the unified `Fetcher` facade (ISSUE 3):
+//!
+//! * builder default/override matrix — the facade reproduces exactly
+//!   what hand-threaded state produced;
+//! * `FetchError` variant mapping from wire faults (truncated frame,
+//!   oversized frame, decode mismatch) and dead shards;
+//! * deprecated-shim equivalence — the old free functions and the new
+//!   facade produce bit-identical results (the shims stay one release).
+
+use std::sync::{Arc, Mutex};
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
+use kvfetcher::codec::CodecConfig;
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::transport::decode_payload;
+use kvfetcher::fetcher::{
+    plan_fetch, ChunkPayload, FetchConfig, FetchError, FetchRequest, Fetcher, PipelineConfig,
+    ResolutionPolicy,
+};
+use kvfetcher::kvstore::StorageNode;
+use kvfetcher::layout::{self, IntraLayout, Resolution};
+use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+use kvfetcher::quant::quantize;
+use kvfetcher::service::{
+    demo_prefix, protocol, Backend, Request, ServerConfig, SourceRegistry, SourceSpec,
+    StorageServer, DEMO_LADDER,
+};
+use kvfetcher::tensor::KvCache;
+use kvfetcher::util::Prng;
+
+const RAW: usize = 100_000 * 245_760;
+
+fn manual_plan(
+    profile: &SystemProfile,
+    cfg: &FetchConfig,
+    gbps: f64,
+    units: usize,
+) -> kvfetcher::fetcher::FetchPlan {
+    let mut link = NetLink::new(BandwidthTrace::constant(gbps));
+    let mut pool = DecodePool::new(units, h20_table());
+    let mut est = BandwidthEstimator::new(0.5);
+    plan_fetch(0.0, 100_000, RAW, profile, cfg, &mut link, &mut pool, &mut est)
+}
+
+fn assert_plans_equal(a: &kvfetcher::fetcher::FetchPlan, b: &kvfetcher::fetcher::FetchPlan) {
+    assert_eq!(a.chunks.len(), b.chunks.len());
+    for (x, y) in a.chunks.iter().zip(&b.chunks) {
+        assert_eq!(x.res_idx, y.res_idx);
+        assert_eq!(x.wire_bytes, y.wire_bytes);
+        assert!((x.trans_end - y.trans_end).abs() < 1e-12);
+        assert!((x.dec_end - y.dec_end).abs() < 1e-12);
+    }
+    assert!((a.done_at - b.done_at).abs() < 1e-12);
+}
+
+// -------------------------------------------------- builder matrix
+
+/// The builder's defaults are exactly the hand-threaded defaults every
+/// call site used to repeat: kvfetcher profile, default fetch config,
+/// 16 Gbps constant link, 7-unit H20 pool, 0.5-alpha estimator.
+#[test]
+fn builder_defaults_match_hand_threaded_state() {
+    let mut f = Fetcher::builder().build();
+    let report = f.run(&FetchRequest::new(100_000, RAW)).unwrap();
+    let manual = manual_plan(&SystemProfile::kvfetcher(), &FetchConfig::default(), 16.0, 7);
+    assert_plans_equal(&report.plan, &manual);
+}
+
+/// Every builder override lands: profile, fetch config, bandwidth,
+/// decode pool, and the perf-model convenience.
+#[test]
+fn builder_overrides_land() {
+    let dev = DeviceSpec::h20();
+    // profile + bandwidth override
+    let mut f = Fetcher::builder()
+        .profile(SystemProfile::cachegen(&dev))
+        .bandwidth_gbps(4.0)
+        .build();
+    let report = f.run(&FetchRequest::new(100_000, RAW)).unwrap();
+    let manual = manual_plan(&SystemProfile::cachegen(&dev), &FetchConfig::default(), 4.0, 7);
+    assert_plans_equal(&report.plan, &manual);
+
+    // fetch-config override: halving chunk_tokens doubles the chunks
+    let cfg = FetchConfig { chunk_tokens: 5_000, ..Default::default() };
+    let mut f = Fetcher::builder().fetch_config(cfg.clone()).build();
+    assert_eq!(f.run(&FetchRequest::new(100_000, RAW)).unwrap().plan.chunks.len(), 20);
+
+    // decode-pool override via for_perf sizes like the engine
+    let perf = PerfModel::new(DeviceSpec::l20(), ModelSpec::lwm_7b());
+    let units = perf.dev.nvdecs * perf.n_gpus;
+    let mut f = Fetcher::builder().bandwidth_gbps(16.0).for_perf(&perf).build();
+    let got = f.run(&FetchRequest::new(100_000, RAW)).unwrap();
+    let mut link = NetLink::new(BandwidthTrace::constant(16.0));
+    let mut pool = DecodePool::new(units, perf.dev.decode_table());
+    let mut est = BandwidthEstimator::new(0.5);
+    let manual = plan_fetch(
+        0.0,
+        100_000,
+        RAW,
+        &SystemProfile::kvfetcher(),
+        &FetchConfig::default(),
+        &mut link,
+        &mut pool,
+        &mut est,
+    );
+    assert_plans_equal(&got.plan, &manual);
+}
+
+/// Request-level overrides beat the builder's config without mutating
+/// it: resolution policy and queue depth are per-request.
+#[test]
+fn request_overrides_do_not_mutate_the_fetcher() {
+    let f = Fetcher::builder().bandwidth_gbps(4.0).build();
+    let mut a = f.fresh();
+    let r1 = a
+        .run(&FetchRequest::new(100_000, RAW).resolution(ResolutionPolicy::Fixed(1)))
+        .unwrap();
+    assert!(r1.plan.chunks.iter().all(|c| c.res_idx == 1));
+    // the fetcher's own config is untouched: a fresh run re-adapts
+    assert!(a.config().adaptive);
+    let mut b = f.fresh();
+    let adaptive = b.run(&FetchRequest::new(100_000, RAW)).unwrap();
+    let manual = manual_plan(&SystemProfile::kvfetcher(), &FetchConfig::default(), 4.0, 7);
+    assert_plans_equal(&adaptive.plan, &manual);
+}
+
+/// Consecutive runs through one fetcher contend on the shared link —
+/// the facade keeps the engine's contention semantics.
+#[test]
+fn consecutive_runs_contend_on_shared_state() {
+    let mut f = Fetcher::builder().bandwidth_gbps(8.0).build();
+    let first = f.run(&FetchRequest::new(50_000, RAW / 2)).unwrap();
+    let second = f.run(&FetchRequest::new(50_000, RAW / 2)).unwrap();
+    assert!(
+        second.plan.chunks[0].trans_start >= first.plan.chunks.last().unwrap().trans_end - 1e-9,
+        "second fetch must queue behind the first on the FIFO link"
+    );
+    // a reset clears the carry-over
+    f.reset();
+    let clean = f.run(&FetchRequest::new(50_000, RAW / 2)).unwrap();
+    assert_plans_equal(&clean.plan, &first.plan);
+}
+
+// ------------------------------------------- wire-fault error mapping
+
+/// Truncated frames surface as `FetchError::Decode` with the truncation
+/// named, from both the payload parser and the chunk marshaling.
+#[test]
+fn truncated_frame_maps_to_decode_error() {
+    // a string field cut short trips the truncation check itself
+    let (tag, body) = protocol::encode_request(&Request::FetchChunk {
+        hash: 7,
+        resolution: "1080p".into(),
+    });
+    match protocol::decode_request(tag, &body[..body.len() - 3]) {
+        Err(FetchError::Decode { detail, .. }) => {
+            assert!(detail.contains("truncated"), "{detail}")
+        }
+        other => panic!("wrong result {:?}", other.err()),
+    }
+    // a truncated chunk body trips the count bound first — still Decode
+    let demo = demo_prefix(3, 1, 32);
+    let (tag, body) = protocol::encode_request(&Request::PutChunk {
+        chunk: demo.chunks[0].clone(),
+    });
+    assert!(matches!(
+        protocol::decode_request(tag, &body[..body.len() - 3]),
+        Err(FetchError::Decode { .. })
+    ));
+}
+
+/// Oversized frames are a capacity refusal before any allocation.
+#[test]
+fn oversized_frame_maps_to_capacity_error() {
+    match protocol::validate_frame_len(protocol::MAX_FRAME_BYTES + 1) {
+        Err(FetchError::Capacity { detail }) => {
+            assert!(detail.contains("MAX_FRAME_BYTES"), "{detail}")
+        }
+        other => panic!("wrong result {:?}", other.err()),
+    }
+    assert!(protocol::validate_frame_len(0).is_err());
+    assert!(protocol::validate_frame_len(1024).is_ok());
+}
+
+/// Payloads whose group streams decode but disagree on the chunk shape
+/// map to `FetchError::Decode` (the codec-mismatch wire fault).
+#[test]
+fn decode_mismatch_maps_to_decode_error() {
+    let res = Resolution { name: "tiny", w: 64, h: 32 };
+    let intra = IntraLayout { hr: 2, hc: 4, dr: 8, dc: 4 };
+    let mut rng = Prng::new(33);
+    // same plane/head geometry, different token counts
+    let big = quantize(&KvCache::synthetic(&mut rng, 48, 6, 8, 32, 0.9));
+    let small = quantize(&KvCache::synthetic(&mut rng, 32, 6, 8, 32, 0.9));
+    let g_big = layout::encode_chunk(&big, res, intra, &CodecConfig::lossless()).unwrap();
+    let g_small = layout::encode_chunk(&small, res, intra, &CodecConfig::lossless()).unwrap();
+    assert!(g_big.len() >= 2 && g_small.len() >= 2);
+    let frankenstein = ChunkPayload {
+        hash: 1,
+        tokens: big.tokens,
+        resolution: "tiny".into(),
+        scales: big.scales.clone(),
+        group_bytes: vec![g_big[0].bytes.clone(), g_small[1].bytes.clone()],
+    };
+    match decode_payload(&frankenstein) {
+        Err(FetchError::Decode { detail, .. }) => {
+            assert!(detail.contains("disagree"), "{detail}")
+        }
+        other => panic!("wrong result {:?}", other.err()),
+    }
+    // garbage bitstreams map to Decode too (via CodecError)
+    let garbage = ChunkPayload {
+        hash: 0,
+        tokens: 0,
+        resolution: "x".into(),
+        scales: vec![],
+        group_bytes: vec![vec![9, 9, 9]],
+    };
+    assert!(matches!(decode_payload(&garbage), Err(FetchError::Decode { .. })));
+}
+
+/// A dead shard in a live fleet is attributed by index and address
+/// (the satellite fix: connect failures no longer fold into a generic
+/// fetch error string).
+#[test]
+fn dead_shard_is_attributed_by_index_and_address() {
+    let demo = demo_prefix(21, 2, 32);
+    let server = StorageServer::spawn(
+        "127.0.0.1:0",
+        StorageNode::new(demo.chunk_tokens),
+        ServerConfig::default(),
+    )
+    .expect("bind");
+    let live = server.local_addr().to_string();
+    let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+    spec.addrs = vec![live, "127.0.0.1:1".into()]; // shard 1 is dead
+    match SourceRegistry::with_defaults().create(Backend::Tcp, &spec) {
+        Err(FetchError::Connect { shard, addr, .. }) => {
+            assert_eq!(shard, 1);
+            assert_eq!(addr, "127.0.0.1:1");
+        }
+        other => panic!("wrong result {:?}", other.err()),
+    }
+    server.shutdown();
+}
+
+/// A sourced fetch that hits a missing chunk surfaces a typed transport
+/// error naming the chunk, and the session keeps the partial report.
+#[test]
+fn missing_chunk_fails_the_session_with_a_transport_error() {
+    let demo = demo_prefix(7, 4, 32);
+    // register only the first two chunks
+    let mut node = StorageNode::new(demo.chunk_tokens);
+    for c in demo.chunks.iter().take(2) {
+        node.register(c.clone());
+    }
+    let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+    spec.node = Some(Arc::new(Mutex::new(node)));
+    let source = SourceRegistry::with_defaults().create(Backend::Local, &spec).unwrap();
+
+    let total = 4 * demo.chunk_tokens;
+    let fetcher = Fetcher::builder()
+        .fetch_config(FetchConfig { chunk_tokens: demo.chunk_tokens, ..Default::default() })
+        .bandwidth_gbps(8.0)
+        .build();
+    let req = FetchRequest::new(total, total * 6 * 8 * 32 * 2)
+        .with_hashes(demo.hashes.clone())
+        .resolution(ResolutionPolicy::Fixed(0))
+        .exec(ExecMode::Pipelined);
+    let mut session = fetcher.session(req).with_source(source);
+    match session.run() {
+        Err(FetchError::Transport { chunk: Some(2), detail, .. }) => {
+            assert!(detail.contains("not in local store"), "{detail}")
+        }
+        other => panic!("wrong result {:?}", other.err()),
+    }
+    let report = session.report().expect("partial report kept");
+    assert!(report.aborted);
+    assert!(report.restored.len() <= 2);
+}
+
+// ------------------------------------------- deprecated-shim equivalence
+
+/// The `#[deprecated]` free functions are thin shims over the facade:
+/// old fn == new facade, bit-exact (plans, link state, restored bytes).
+#[test]
+#[allow(deprecated)]
+fn deprecated_shims_are_bit_exact_with_the_facade() {
+    use kvfetcher::fetcher::{
+        execute_fetch, execute_fetch_with_source, spawn_fetch, CancelToken, FetchParams,
+    };
+    use kvfetcher::service::LocalSource;
+
+    let profile = SystemProfile::kvfetcher();
+    let params = FetchParams {
+        now: 0.0,
+        reusable_tokens: 100_000,
+        raw_bytes_total: RAW,
+        profile: profile.clone(),
+        cfg: FetchConfig::default(),
+    };
+
+    // execute_fetch == facade pipelined run
+    let mut link = NetLink::new(BandwidthTrace::constant(8.0));
+    let mut pool = DecodePool::new(7, h20_table());
+    let mut est = BandwidthEstimator::new(0.5);
+    let old = execute_fetch(
+        &params,
+        &PipelineConfig::default(),
+        &CancelToken::new(),
+        &mut link,
+        &mut pool,
+        &mut est,
+    );
+    let mut f = Fetcher::builder().profile(profile.clone()).bandwidth_gbps(8.0).build();
+    let new = f.run(&FetchRequest::new(100_000, RAW).exec(ExecMode::Pipelined)).unwrap();
+    assert_plans_equal(&old.plan, &new.plan);
+    assert_eq!(old.chunks_completed, new.chunks_completed);
+    assert!((link.busy_until() - f.link().busy_until()).abs() < 1e-12);
+    assert_eq!(link.bytes_sent, f.link().bytes_sent);
+
+    // spawn_fetch == session spawn
+    let job = spawn_fetch(
+        params.clone(),
+        PipelineConfig::default(),
+        NetLink::new(BandwidthTrace::constant(8.0)),
+        DecodePool::new(7, h20_table()),
+        BandwidthEstimator::new(0.5),
+    );
+    let (old_out, old_link, _, _) = job.join();
+    let new_job = f
+        .fresh()
+        .session(FetchRequest::new(100_000, RAW).exec(ExecMode::Pipelined))
+        .spawn();
+    let (mut session, result) = new_job.join();
+    result.unwrap();
+    let new_out = session.take_report().unwrap();
+    assert_plans_equal(&old_out.plan, &new_out.plan);
+    assert_eq!(old_link.bytes_sent, session.into_fetcher().link().bytes_sent);
+
+    // execute_fetch_with_source == session with_source (restored bytes)
+    let demo = demo_prefix(3, 4, 32);
+    let node = {
+        let mut n = StorageNode::new(demo.chunk_tokens);
+        for c in &demo.chunks {
+            n.register(c.clone());
+        }
+        Arc::new(Mutex::new(n))
+    };
+    let total = 4 * demo.chunk_tokens;
+    let demo_params = FetchParams {
+        now: 0.0,
+        reusable_tokens: total,
+        raw_bytes_total: total * 6 * 8 * 32 * 2,
+        profile: profile.clone(),
+        cfg: FetchConfig {
+            chunk_tokens: demo.chunk_tokens,
+            adaptive: false,
+            fixed_res: 0,
+            ..Default::default()
+        },
+    };
+    let mut src_old = LocalSource::new(Arc::clone(&node), demo.hashes.clone(), DEMO_LADDER);
+    let mut link = NetLink::new(BandwidthTrace::constant(8.0));
+    let mut pool = DecodePool::new(7, h20_table());
+    let mut est = BandwidthEstimator::new(0.5);
+    let old = execute_fetch_with_source(
+        &demo_params,
+        &PipelineConfig::default(),
+        &CancelToken::new(),
+        &mut link,
+        &mut pool,
+        &mut est,
+        Some(&mut src_old),
+    );
+    let src_new = Box::new(LocalSource::new(node, demo.hashes.clone(), DEMO_LADDER));
+    let fetcher = Fetcher::builder()
+        .profile(profile)
+        .fetch_config(demo_params.cfg.clone())
+        .bandwidth_gbps(8.0)
+        .build();
+    let mut session = fetcher
+        .session(
+            FetchRequest::new(total, demo_params.raw_bytes_total)
+                .with_hashes(demo.hashes.clone())
+                .exec(ExecMode::Pipelined),
+        )
+        .with_source(src_new);
+    session.run().unwrap();
+    let new = session.take_report().unwrap();
+    assert_plans_equal(&old.plan, &new.plan);
+    assert_eq!(old.restored.len(), new.restored.len());
+    for (a, b) in old.restored.iter().zip(&new.restored) {
+        assert_eq!(a.idx, b.idx);
+        assert_eq!(a.quant.data, b.quant.data, "restored bytes must be bit-exact");
+        assert_eq!(a.quant.scales, b.quant.scales);
+    }
+}
+
+/// The deprecated TTFT primitives equal `Fetcher::ttft` across modes
+/// and profiles (including the FullPrefill special case).
+#[test]
+#[allow(deprecated)]
+fn deprecated_ttft_shims_equal_facade_ttft() {
+    use kvfetcher::engine::{single_request_ttft, single_request_ttft_exec};
+
+    let dev = DeviceSpec::h20();
+    let perf = PerfModel::new(dev.clone(), ModelSpec::yi_34b());
+    let bw = BandwidthTrace::constant(16.0);
+    let cfg = FetchConfig::default();
+    for profile in [
+        SystemProfile::kvfetcher(),
+        SystemProfile::cachegen(&dev),
+        SystemProfile::full_prefill(),
+    ] {
+        let reusable = if profile.kind == kvfetcher::baselines::SystemKind::FullPrefill {
+            0
+        } else {
+            95_000
+        };
+        let facade = Fetcher::builder()
+            .profile(profile.clone())
+            .fetch_config(cfg.clone())
+            .bandwidth(bw.clone())
+            .for_perf(&perf)
+            .build();
+        for exec in [ExecMode::Analytic, ExecMode::Pipelined] {
+            let old =
+                single_request_ttft_exec(&perf, &profile, &cfg, &bw, 100_000, reusable, exec);
+            let new = facade.ttft(&perf, 100_000, reusable, exec);
+            assert!((old.total() - new.total()).abs() < 1e-12, "{} {exec:?}", profile.name);
+            assert!((old.prefill - new.prefill).abs() < 1e-12);
+            assert!((old.transmission - new.transmission).abs() < 1e-12);
+        }
+        let old = single_request_ttft(&perf, &profile, &cfg, &bw, 100_000, reusable);
+        let new = facade.ttft(&perf, 100_000, reusable, ExecMode::Analytic);
+        assert!((old.total() - new.total()).abs() < 1e-12, "{}", profile.name);
+    }
+}

@@ -6,8 +6,8 @@ use kvfetcher::asic::{h20_table, DecodePool};
 use kvfetcher::baselines::{SystemKind, SystemProfile};
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
 use kvfetcher::codec::CodecConfig;
-use kvfetcher::engine::{single_request_ttft, EngineConfig, EngineSim};
-use kvfetcher::fetcher::{plan_fetch, FetchConfig};
+use kvfetcher::engine::{EngineConfig, EngineSim, ExecMode};
+use kvfetcher::fetcher::{plan_fetch, FetchConfig, Fetcher};
 use kvfetcher::kvstore::{prefix_hashes, StorageNode, StoredChunk, StoredVariant};
 use kvfetcher::layout::{self, Resolution};
 use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
@@ -95,7 +95,8 @@ fn engine_system_ordering() {
             layerwise_pipeline: profile.fetching_aware,
             ..Default::default()
         };
-        let mut eng = EngineSim::new(perf.clone(), profile.clone(), cfg, BandwidthTrace::constant(8.0));
+        let mut eng =
+            EngineSim::new(perf.clone(), profile.clone(), cfg, BandwidthTrace::constant(8.0));
         let rec = eng.run(&trace);
         assert_eq!(rec.records.len(), trace.len(), "{} must finish all", profile.name);
         let class = profile.kind != SystemKind::FullPrefill;
@@ -113,15 +114,23 @@ fn engine_system_ordering() {
 fn prop_ttft_dominance() {
     let dev = DeviceSpec::h20();
     let perf = PerfModel::new(dev.clone(), ModelSpec::lwm_7b());
-    let cfg = FetchConfig::default();
+    let ttft = |profile: SystemProfile, trace: &BandwidthTrace, ctx: usize, reusable: usize| {
+        Fetcher::builder()
+            .profile(profile)
+            .bandwidth(trace.clone())
+            .for_perf(&perf)
+            .build()
+            .ttft(&perf, ctx, reusable, ExecMode::Analytic)
+            .total()
+    };
     proptest::check(91, 40, "ttft-dominance", |rng| {
         let bw = rng.f64_range(1.0, 40.0);
         let ctx = 20_000 + rng.below(180_000) as usize;
         let reusable = (ctx as f64 * 0.95) as usize;
         let trace = BandwidthTrace::constant(bw);
-        let ours = single_request_ttft(&perf, &SystemProfile::kvfetcher(), &cfg, &trace, ctx, reusable).total();
-        let raw = single_request_ttft(&perf, &SystemProfile::raw_reuse(), &cfg, &trace, ctx, reusable).total();
-        let cg = single_request_ttft(&perf, &SystemProfile::cachegen(&dev), &cfg, &trace, ctx, reusable).total();
+        let ours = ttft(SystemProfile::kvfetcher(), &trace, ctx, reusable);
+        let raw = ttft(SystemProfile::raw_reuse(), &trace, ctx, reusable);
+        let cg = ttft(SystemProfile::cachegen(&dev), &trace, ctx, reusable);
         if ours > raw * 1.05 {
             return Err(format!("ours {ours} vs raw {raw} at bw={bw} ctx={ctx}"));
         }
@@ -159,7 +168,10 @@ fn prop_fetch_plan_wellformed() {
             if c.trans_start + 1e-9 < prev_ts {
                 return Err("transmissions must serialize".into());
             }
-            if c.trans_end < c.trans_start || c.dec_start + 1e-9 < c.trans_end || c.dec_end < c.dec_start {
+            if c.trans_end < c.trans_start
+                || c.dec_start + 1e-9 < c.trans_end
+                || c.dec_end < c.dec_start
+            {
                 return Err(format!("stage ordering violated: {c:?}"));
             }
             prev_ts = c.trans_start;
@@ -188,7 +200,8 @@ fn engine_memory_bounded() {
         reuse_frac: 0.5,
         ..Default::default()
     });
-    let mut eng = EngineSim::new(perf, SystemProfile::kvfetcher(), cfg, BandwidthTrace::constant(16.0));
+    let mut eng =
+        EngineSim::new(perf, SystemProfile::kvfetcher(), cfg, BandwidthTrace::constant(16.0));
     let rec = eng.run(&trace);
     assert_eq!(rec.records.len(), trace.len(), "tight memory must not deadlock");
 }

@@ -4,7 +4,7 @@
 use kvfetcher::asic::{encode_pool, h20_table, l20_table, DecodePool};
 use kvfetcher::baselines::SystemProfile;
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::engine::{single_request_ttft, EngineConfig, EngineSim};
+use kvfetcher::engine::{EngineConfig, EngineSim, ExecMode};
 use kvfetcher::fetcher::{restore_memory, select_resolution, FetchConfig, RES_SIZE_FACTOR};
 use kvfetcher::layout::{resolution_by_name, RESOLUTIONS};
 use kvfetcher::metrics::Recorder;
@@ -127,8 +127,8 @@ fn full_prefill_engine_never_fetches() {
     );
     let rec = eng.run(&trace);
     assert!(rec.records.iter().all(|r| r.reused_tokens == 0));
-    assert_eq!(eng.link.bytes_sent, 0, "full prefill must move zero bytes");
-    assert_eq!(eng.pool.jobs_done, 0);
+    assert_eq!(eng.fetcher.link().bytes_sent, 0, "full prefill must move zero bytes");
+    assert_eq!(eng.fetcher.pool().jobs_done, 0);
 }
 
 #[test]
@@ -152,15 +152,12 @@ fn zero_reusable_context_takes_full_prefill_path() {
     // a request below the reuse threshold must cost the same under
     // KVFetcher as under FullPrefill when served alone
     let perf = PerfModel::new(DeviceSpec::h20(), ModelSpec::yi_34b());
-    let bw = BandwidthTrace::constant(16.0);
-    let a = single_request_ttft(
-        &perf,
-        &SystemProfile::full_prefill(),
-        &FetchConfig::default(),
-        &bw,
-        30_000,
-        0,
-    );
+    let a = kvfetcher::fetcher::Fetcher::builder()
+        .profile(SystemProfile::full_prefill())
+        .bandwidth(BandwidthTrace::constant(16.0))
+        .for_perf(&perf)
+        .build()
+        .ttft(&perf, 30_000, 0, ExecMode::Analytic);
     assert!(a.transmission == 0.0 && a.decode == 0.0);
     assert!(a.prefill > 0.0);
 }

@@ -1,6 +1,6 @@
-//! Integration tests of the threaded pipelined fetch executor
-//! (`fetcher::executor`) against the analytic stage model, the
-//! no-overlap serialized baseline, and its backpressure / cancellation
+//! Integration tests of the pipelined fetch path behind the `Fetcher`
+//! facade: the threaded executor against the analytic stage model, the
+//! no-overlap serialized baseline, and the backpressure / cancellation
 //! contracts. All timings here are *virtual* (simulation seconds), so
 //! every assertion is deterministic regardless of host scheduling.
 
@@ -9,30 +9,24 @@ use std::time::Duration;
 use kvfetcher::asic::{h20_table, DecodePool};
 use kvfetcher::baselines::SystemProfile;
 use kvfetcher::cluster::{DeviceSpec, ModelSpec, PerfModel};
-use kvfetcher::engine::{single_request_ttft, single_request_ttft_exec, ExecMode};
+use kvfetcher::engine::ExecMode;
 use kvfetcher::fetcher::{
-    execute_fetch, plan_fetch, serialized_fetch, spawn_fetch, CancelToken, FetchConfig,
-    FetchParams, PipelineConfig,
+    serialized_fetch, FetchConfig, FetchError, FetchRequest, Fetcher, PipelineConfig,
 };
 use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
 
-fn setup(trace: BandwidthTrace) -> (NetLink, DecodePool, BandwidthEstimator) {
-    (NetLink::new(trace), DecodePool::new(7, h20_table()), BandwidthEstimator::new(0.5))
-}
-
-fn params(profile: SystemProfile, tokens: usize, raw: usize) -> FetchParams {
-    FetchParams {
-        now: 0.0,
-        reusable_tokens: tokens,
-        raw_bytes_total: raw,
-        profile,
-        cfg: FetchConfig::default(),
-    }
+fn fetcher(profile: SystemProfile, trace: BandwidthTrace) -> Fetcher {
+    Fetcher::builder()
+        .profile(profile)
+        .bandwidth(trace)
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .build()
 }
 
 /// The tentpole determinism contract: for every system profile and
 /// bandwidth regime, the threaded executor's timeline equals the
-/// analytic planner's (same stage model, same order of operations).
+/// analytic planner's (same stage model, same order of operations) —
+/// switched purely by the request's [`ExecMode`].
 #[test]
 fn executor_equals_analytic_across_profiles_and_bandwidths() {
     let raw = 100_000 * 245_760usize;
@@ -50,45 +44,36 @@ fn executor_equals_analytic_across_profiles_and_bandwidths() {
         BandwidthTrace::fig17(),
         BandwidthTrace::jitter(11, 8.0, 2.0, 30.0, 0.5, 500.0),
     ];
+    let req = FetchRequest::new(100_000, raw);
     for profile in &profiles {
         for trace in &traces {
-            let (mut l1, mut p1, mut e1) = setup(trace.clone());
-            let analytic = plan_fetch(
-                0.0,
-                100_000,
-                raw,
-                profile,
-                &FetchConfig::default(),
-                &mut l1,
-                &mut p1,
-                &mut e1,
+            let mut a = fetcher(profile.clone(), trace.clone());
+            let analytic = a.run(&req).unwrap();
+            let mut p = a.fresh();
+            let pipelined = p.run(&req.clone().exec(ExecMode::Pipelined)).unwrap();
+            assert!(!pipelined.aborted);
+            assert_eq!(
+                pipelined.plan.chunks.len(),
+                analytic.plan.chunks.len(),
+                "{}",
+                profile.name
             );
-            let (mut l2, mut p2, mut e2) = setup(trace.clone());
-            let out = execute_fetch(
-                &params(profile.clone(), 100_000, raw),
-                &PipelineConfig::default(),
-                &CancelToken::new(),
-                &mut l2,
-                &mut p2,
-                &mut e2,
-            );
-            assert!(!out.aborted);
-            assert_eq!(out.plan.chunks.len(), analytic.chunks.len(), "{}", profile.name);
-            for (a, b) in analytic.chunks.iter().zip(out.plan.chunks.iter()) {
-                assert_eq!(a.res_idx, b.res_idx, "{}", profile.name);
-                assert_eq!(a.wire_bytes, b.wire_bytes, "{}", profile.name);
-                assert!((a.trans_end - b.trans_end).abs() < 1e-9, "{}", profile.name);
-                assert!((a.dec_start - b.dec_start).abs() < 1e-9, "{}", profile.name);
-                assert!((a.dec_end - b.dec_end).abs() < 1e-9, "{}", profile.name);
+            for (x, y) in analytic.plan.chunks.iter().zip(pipelined.plan.chunks.iter()) {
+                assert_eq!(x.res_idx, y.res_idx, "{}", profile.name);
+                assert_eq!(x.wire_bytes, y.wire_bytes, "{}", profile.name);
+                assert!((x.trans_end - y.trans_end).abs() < 1e-9, "{}", profile.name);
+                assert!((x.dec_start - y.dec_start).abs() < 1e-9, "{}", profile.name);
+                assert!((x.dec_end - y.dec_end).abs() < 1e-9, "{}", profile.name);
             }
             assert!(
-                (analytic.done_at - out.plan.done_at).abs() < 1e-9,
+                (analytic.done_at() - pipelined.done_at()).abs() < 1e-9,
                 "{}: analytic {:.6} vs pipelined {:.6}",
                 profile.name,
-                analytic.done_at,
-                out.plan.done_at
+                analytic.done_at(),
+                pipelined.done_at()
             );
-            assert!((l1.busy_until() - l2.busy_until()).abs() < 1e-9);
+            // both runs left the shared link in the same state
+            assert!((a.link().busy_until() - p.link().busy_until()).abs() < 1e-9);
         }
     }
 }
@@ -102,18 +87,14 @@ fn pipelined_ttft_beats_serialized_schedule() {
     let cfg = FetchConfig::default();
     let raw = 100_000 * 524_288usize; // LWM-7B-sized prefix
     for gbps in [1.0, 4.0, 8.0] {
-        let (mut l1, mut p1, mut e1) = setup(BandwidthTrace::constant(gbps));
-        let pipelined = execute_fetch(
-            &params(profile.clone(), 100_000, raw),
-            &PipelineConfig::default(),
-            &CancelToken::new(),
-            &mut l1,
-            &mut p1,
-            &mut e1,
-        )
-        .plan;
-        let (mut l2, mut p2, mut e2) = setup(BandwidthTrace::constant(gbps));
-        let serial = serialized_fetch(0.0, 100_000, raw, &profile, &cfg, &mut l2, &mut p2, &mut e2);
+        let mut f = fetcher(profile.clone(), BandwidthTrace::constant(gbps));
+        let pipelined =
+            f.run(&FetchRequest::new(100_000, raw).exec(ExecMode::Pipelined)).unwrap().plan;
+        let mut link = NetLink::new(BandwidthTrace::constant(gbps));
+        let mut pool = DecodePool::new(7, h20_table());
+        let mut est = BandwidthEstimator::new(0.5);
+        let serial =
+            serialized_fetch(0.0, 100_000, raw, &profile, &cfg, &mut link, &mut pool, &mut est);
         assert!(
             pipelined.done_at < serial.done_at,
             "{gbps} Gbps: pipelined {:.3}s must strictly beat serialized {:.3}s",
@@ -130,26 +111,25 @@ fn pipelined_ttft_beats_serialized_schedule() {
 /// Satellite acceptance: a slow decode stage backpressures the transmit
 /// stage through the bounded channel, so staged-bitstream memory stays
 /// O(queue_depth) chunks no matter how long the prefix is — and the
-/// wall-clock stall never changes the virtual timeline.
+/// wall-clock stall never changes the virtual timeline. The depth comes
+/// straight off the request.
 #[test]
 fn slow_decode_stage_bounds_transmit_queue_memory() {
     let profile = SystemProfile::kvfetcher();
     let tokens = 160_000usize; // 16 chunks
     let raw = tokens * 245_760;
     let depth = 2usize;
-    let pipe = PipelineConfig {
-        queue_depth: depth,
-        decode_throttle: Some(Duration::from_millis(5)),
-    };
-    let (mut l1, mut p1, mut e1) = setup(BandwidthTrace::constant(8.0));
-    let out = execute_fetch(
-        &params(profile.clone(), tokens, raw),
-        &pipe,
-        &CancelToken::new(),
-        &mut l1,
-        &mut p1,
-        &mut e1,
-    );
+    let mut throttled = Fetcher::builder()
+        .profile(profile.clone())
+        .bandwidth(BandwidthTrace::constant(8.0))
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .pipeline(PipelineConfig {
+            queue_depth: 4,
+            decode_throttle: Some(Duration::from_millis(5)),
+        })
+        .build();
+    let req = FetchRequest::new(tokens, raw).exec(ExecMode::Pipelined).queue_depth(depth);
+    let out = throttled.run(&req).unwrap();
     assert!(!out.aborted);
     assert_eq!(out.chunks_completed, 16);
 
@@ -168,63 +148,61 @@ fn slow_decode_stage_bounds_transmit_queue_memory() {
     assert!(out.peak_inflight_wire_bytes > 0);
 
     // the throttle slows the wall clock, never the simulated clock
-    let (mut l2, mut p2, mut e2) = setup(BandwidthTrace::constant(8.0));
-    let unthrottled = execute_fetch(
-        &params(profile, tokens, raw),
-        &PipelineConfig::default(),
-        &CancelToken::new(),
-        &mut l2,
-        &mut p2,
-        &mut e2,
-    );
-    assert!((out.plan.done_at - unthrottled.plan.done_at).abs() < 1e-9);
+    let mut plain = fetcher(profile, BandwidthTrace::constant(8.0));
+    let unthrottled =
+        plain.run(&FetchRequest::new(tokens, raw).exec(ExecMode::Pipelined)).unwrap();
+    assert!((out.done_at() - unthrottled.done_at()).abs() < 1e-9);
 }
 
-/// The abort path: cancelling a spawned fetch stops the stages at a
-/// chunk boundary, drains the channels, and reports a partial plan.
+/// The abort path: cancelling a spawned session stops the stages at a
+/// chunk boundary, drains the channels, reports `FetchError::Cancelled`,
+/// and keeps the partial report.
 #[test]
-fn cancel_aborts_spawned_fetch_cleanly() {
-    let profile = SystemProfile::kvfetcher();
+fn cancel_aborts_spawned_session_cleanly() {
     let raw = 100_000 * 245_760usize; // 10 chunks
-    let pipe = PipelineConfig {
-        queue_depth: 1,
-        decode_throttle: Some(Duration::from_millis(100)),
-    };
-    let (link, pool, est) = setup(BandwidthTrace::constant(8.0));
-    let job = spawn_fetch(params(profile, 100_000, raw), pipe, link, pool, est);
+    let f = Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .bandwidth(BandwidthTrace::constant(8.0))
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .pipeline(PipelineConfig {
+            queue_depth: 1,
+            decode_throttle: Some(Duration::from_millis(100)),
+        })
+        .build();
+    let job = f.session(FetchRequest::new(100_000, raw).exec(ExecMode::Pipelined)).spawn();
     std::thread::sleep(Duration::from_millis(150));
     job.cancel();
-    let (out, link_back, _pool_back, _est_back) = job.join();
-    assert!(out.aborted);
-    assert!(out.chunks_completed < 10, "{} chunks got through", out.chunks_completed);
-    assert_eq!(out.plan.chunks.len(), out.chunks_completed);
+    let (mut session, result) = job.join();
+    let completed = match result {
+        Err(FetchError::Cancelled { chunks_completed }) => chunks_completed,
+        other => panic!("expected Cancelled, got {other:?}"),
+    };
+    let report = session.take_report().expect("partial report survives the abort");
+    assert!(report.aborted);
+    assert!(completed < 10, "{completed} chunks got through");
+    assert_eq!(report.chunks_completed, completed);
+    assert_eq!(report.plan.chunks.len(), completed);
     // the link reflects only what was actually transmitted
-    let sent: usize = link_back.bytes_sent;
-    assert!(sent > 0);
+    let fetcher = session.into_fetcher();
+    assert!(fetcher.link().bytes_sent > 0);
 }
 
-/// End-to-end: the engine-facing single-request TTFT primitive agrees
+/// End-to-end: the facade's single-request TTFT primitive agrees
 /// between modes across the Fig. 18 grid's device/model pairs.
 #[test]
 fn single_request_ttft_agrees_between_exec_modes() {
-    let cfg = FetchConfig::default();
-    let bw = BandwidthTrace::constant(16.0);
     for dev in [DeviceSpec::a100(), DeviceSpec::h20(), DeviceSpec::l20()] {
         for model in [ModelSpec::lwm_7b(), ModelSpec::yi_34b()] {
             let perf = PerfModel::new(dev.clone(), model);
+            let f = Fetcher::builder()
+                .profile(SystemProfile::kvfetcher())
+                .bandwidth(BandwidthTrace::constant(16.0))
+                .for_perf(&perf)
+                .build();
             let ctx = 100_000;
             let reusable = 95_000;
-            let a = single_request_ttft(&perf, &SystemProfile::kvfetcher(), &cfg, &bw, ctx, reusable);
-            let p = single_request_ttft_exec(
-                &perf,
-                &SystemProfile::kvfetcher(),
-                &cfg,
-                &bw,
-                ctx,
-                reusable,
-                ExecMode::Pipelined,
-            );
-            let (at, pt) = (a.total(), p.total());
+            let at = f.ttft(&perf, ctx, reusable, ExecMode::Analytic).total();
+            let pt = f.ttft(&perf, ctx, reusable, ExecMode::Pipelined).total();
             assert!(
                 (at - pt).abs() <= 0.05 * at,
                 "{} {}: analytic {:.4}s vs pipelined {:.4}s",

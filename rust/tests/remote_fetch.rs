@@ -1,11 +1,13 @@
 //! End-to-end tests of the sharded KV store service: real loopback
-//! sockets, the pipelined executor streaming real bytes, and the
-//! token-bucket bandwidth replay.
+//! sockets, the `Fetcher` facade streaming real bytes through
+//! registry-built transport backends, and the token-bucket bandwidth
+//! replay.
 //!
-//! Acceptance contracts (ISSUE 2):
+//! Acceptance contracts (ISSUE 2 + ISSUE 3):
 //! * a loopback fetch across 2+ shards restores KV **bit-identical** to
-//!   the in-process `ExecMode::Pipelined` path (and to the offline
-//!   ground truth), without moving a single virtual timestamp;
+//!   the in-process pipelined path (and to the offline ground truth),
+//!   without moving a single virtual timestamp — for every registered
+//!   backend (`local`, `tcp`, `objstore`);
 //! * the token-bucket throttle replays a piecewise `BandwidthTrace`
 //!   over the wire with measured per-chunk transmit times within 10%
 //!   of the analytic link model on the (rate-scaled) Fig. 17 trace.
@@ -14,50 +16,57 @@ use std::sync::{Arc, Mutex};
 
 use kvfetcher::asic::{h20_table, DecodePool};
 use kvfetcher::baselines::SystemProfile;
+use kvfetcher::engine::ExecMode;
 use kvfetcher::fetcher::{
-    execute_fetch_with_source, CancelToken, FetchConfig, FetchParams, PipelineConfig,
-    TransportSource,
+    FetchConfig, FetchReport, FetchRequest, Fetcher, ResolutionPolicy, TransportSource,
 };
 use kvfetcher::kvstore::StorageNode;
-use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+use kvfetcher::net::BandwidthTrace;
 use kvfetcher::quant::dequantize;
 use kvfetcher::service::{
-    demo_prefix, DemoPrefix, LocalSource, Placement, RemoteSource, ServerConfig, ShardRouter,
-    StorageServer, ThrottleSpec, DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
+    demo_prefix, Backend, DemoPrefix, Placement, ServerConfig, ShardRouter, SourceRegistry,
+    SourceSpec, StorageServer, ThrottleSpec, DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
 };
 
-fn fetch_params(demo: &DemoPrefix, n_chunks: usize, fixed_res: usize) -> FetchParams {
+fn demo_request(demo: &DemoPrefix, n_chunks: usize, fixed_res: usize) -> FetchRequest {
     let total_tokens = n_chunks * demo.chunk_tokens;
-    FetchParams {
-        now: 0.0,
-        reusable_tokens: total_tokens,
-        raw_bytes_total: total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2,
-        profile: SystemProfile::kvfetcher(),
-        cfg: FetchConfig {
-            chunk_tokens: demo.chunk_tokens,
-            adaptive: false,
-            fixed_res,
-            ..Default::default()
-        },
-    }
+    FetchRequest::new(total_tokens, total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2)
+        .with_hashes(demo.hashes.clone())
+        .resolution(ResolutionPolicy::Fixed(fixed_res))
+        .exec(ExecMode::Pipelined)
 }
 
+fn demo_fetcher(demo: &DemoPrefix) -> Fetcher {
+    Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .fetch_config(FetchConfig { chunk_tokens: demo.chunk_tokens, ..Default::default() })
+        .bandwidth(BandwidthTrace::constant(8.0))
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .build()
+}
+
+/// Run one demo fetch through the facade, optionally with a source.
 fn run_sourced(
-    params: &FetchParams,
-    source: Option<&mut dyn TransportSource>,
-) -> kvfetcher::fetcher::FetchOutcome {
-    let mut link = NetLink::new(BandwidthTrace::constant(8.0));
-    let mut pool = DecodePool::new(7, h20_table());
-    let mut est = BandwidthEstimator::new(0.5);
-    execute_fetch_with_source(
-        params,
-        &PipelineConfig::default(),
-        &CancelToken::new(),
-        &mut link,
-        &mut pool,
-        &mut est,
-        source,
-    )
+    demo: &DemoPrefix,
+    req: &FetchRequest,
+    source: Option<Box<dyn TransportSource>>,
+) -> FetchReport {
+    let mut session = demo_fetcher(demo).session(req.clone());
+    if let Some(src) = source {
+        session = session.with_source(src);
+    }
+    session.run().expect("demo fetch");
+    session.take_report().expect("report stored")
+}
+
+/// An in-process node populated with the demo chunks, ready for the
+/// `local` / `objstore` backends.
+fn demo_node(demo: &DemoPrefix) -> Arc<Mutex<StorageNode>> {
+    let mut node = StorageNode::new(demo.chunk_tokens);
+    for c in &demo.chunks {
+        node.register(c.clone());
+    }
+    Arc::new(Mutex::new(node))
 }
 
 /// Spawn `n` loopback shard servers and register the demo chunks
@@ -86,12 +95,14 @@ fn spawn_shards(
 
 /// Acceptance: serve + fetch over loopback across 2 shards restores KV
 /// bit-identical to the in-process pipelined path, at both ladder ends,
-/// and the virtual timeline is invariant to where the bytes came from.
+/// through every registered backend — and the virtual timeline is
+/// invariant to where the bytes came from.
 #[test]
 fn loopback_two_shard_fetch_restores_bit_identical() {
     let n_chunks = 6;
     let demo = demo_prefix(5, n_chunks, 48);
     let (servers, router) = spawn_shards(&demo, 2, ServerConfig::default());
+    let registry = SourceRegistry::with_defaults();
 
     // round-robin placement really striped the chain across both shards
     let stats = router.stats().expect("stats");
@@ -104,66 +115,58 @@ fn loopback_two_shard_fetch_restores_bit_identical() {
     assert_eq!(matched, demo.hashes);
 
     for fixed_res in [3, 0] {
-        let params = fetch_params(&demo, n_chunks, fixed_res);
+        let req = demo_request(&demo, n_chunks, fixed_res);
 
-        // reference 1: no source — the pure virtual-time pipelined path
-        let bare = run_sourced(&params, None);
+        // reference: no source — the pure virtual-time pipelined path
+        let bare = run_sourced(&demo, &req, None);
         assert!(!bare.aborted);
-        assert!(bare.restored.is_empty());
+        assert!(bare.restored.is_empty() && bare.wire_timings.is_empty());
 
-        // reference 2: in-process store through the same executor
-        let mut local_node = StorageNode::new(demo.chunk_tokens);
-        for c in &demo.chunks {
-            local_node.register(c.clone());
-        }
-        let mut local = LocalSource::new(
-            Arc::new(Mutex::new(local_node)),
-            demo.hashes.clone(),
-            DEMO_LADDER,
-        );
-        let local_out = run_sourced(&params, Some(&mut local));
-        assert!(!local_out.aborted);
+        // every backend the registry knows must restore identically
+        let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+        spec.node = Some(demo_node(&demo));
+        spec.addrs = servers.iter().map(|s| s.local_addr().to_string()).collect();
+        spec.tokens = demo.tokens.clone();
+        spec.chunk_tokens = demo.chunk_tokens;
+        // keep the objstore shape fast for the test
+        spec.objstore.latency_s = 0.0005;
+        spec.objstore.gbps = 8.0;
 
-        // the real thing: stream from the shard servers
-        let router = ShardRouter::connect(
-            &servers.iter().map(|s| s.local_addr().to_string()).collect::<Vec<_>>(),
-            Placement::RoundRobin,
-        )
-        .expect("reconnect");
-        let mut remote = RemoteSource::new(router, demo.hashes.clone(), DEMO_LADDER);
-        let remote_out = run_sourced(&params, Some(&mut remote));
-        assert!(!remote_out.aborted);
+        for backend in [Backend::Local, Backend::Tcp, Backend::ObjStore] {
+            let source = registry.create(backend, &spec).expect("registry builds the source");
+            let out = run_sourced(&demo, &req, Some(source));
+            assert!(!out.aborted, "{backend}");
+            assert_eq!(out.backend, Some(backend.name()));
+            assert_eq!(out.restored.len(), n_chunks, "{backend}");
 
-        // bit-identical restore: remote == local == offline ground truth
-        assert_eq!(local_out.restored.len(), n_chunks);
-        assert_eq!(remote_out.restored.len(), n_chunks);
-        for ((l, r), q) in
-            local_out.restored.iter().zip(&remote_out.restored).zip(&demo.quants)
-        {
-            assert_eq!(l.idx, r.idx);
-            assert_eq!(l.quant.data, q.data, "local restore vs ground truth");
-            assert_eq!(r.quant.data, q.data, "remote restore vs ground truth");
-            assert_eq!(r.quant.scales, q.scales);
-            // and the dequantized tensors agree exactly
-            let a = dequantize(&l.quant);
-            let b = dequantize(&r.quant);
-            assert_eq!(a.data, b.data, "restored tensors must match bit-for-bit");
-        }
+            // bit-identical restore vs the offline ground truth
+            for (d, q) in out.restored.iter().zip(&demo.quants) {
+                assert_eq!(d.quant.data, q.data, "{backend} restore vs ground truth");
+                assert_eq!(d.quant.scales, q.scales, "{backend}");
+                let a = dequantize(&d.quant);
+                let b = dequantize(q);
+                assert_eq!(a.data, b.data, "{backend}: tensors must match bit-for-bit");
+            }
 
-        // timeline invariance: streaming real bytes moved no timestamp
-        for out in [&local_out, &remote_out] {
+            // timeline invariance: streaming real bytes moved no timestamp
             assert_eq!(out.plan.chunks.len(), bare.plan.chunks.len());
             for (a, b) in bare.plan.chunks.iter().zip(&out.plan.chunks) {
-                assert_eq!(a.res_idx, b.res_idx);
-                assert_eq!(a.wire_bytes, b.wire_bytes);
-                assert!((a.trans_end - b.trans_end).abs() < 1e-9);
-                assert!((a.dec_end - b.dec_end).abs() < 1e-9);
+                assert_eq!(a.res_idx, b.res_idx, "{backend}");
+                assert_eq!(a.wire_bytes, b.wire_bytes, "{backend}");
+                assert!((a.trans_end - b.trans_end).abs() < 1e-9, "{backend}");
+                assert!((a.dec_end - b.dec_end).abs() < 1e-9, "{backend}");
             }
-            assert!((out.plan.done_at - bare.plan.done_at).abs() < 1e-9);
+            assert!((out.done_at() - bare.done_at()).abs() < 1e-9, "{backend}");
+
+            // sources with real I/O report one wire timing per chunk
+            match backend {
+                Backend::Local => assert!(out.wire_timings.is_empty()),
+                Backend::Tcp | Backend::ObjStore => {
+                    assert_eq!(out.wire_timings.len(), n_chunks, "{backend}");
+                    assert!(out.wire_timings.iter().all(|t| t.wire_bytes > 0));
+                }
+            }
         }
-        // every remote chunk actually crossed the socket
-        assert_eq!(remote.timings.len(), n_chunks);
-        assert!(remote.timings.iter().all(|t| t.wire_bytes > 0));
     }
 
     for s in servers {
@@ -192,14 +195,12 @@ fn fig17_token_bucket_replay_within_10_percent() {
     // fetch over a *fresh* connection: its token bucket starts counting
     // at accept, milliseconds before the first chunk request, so the
     // analytic cursor below (starting at 0) tracks the replay closely
-    let router = ShardRouter::connect(
-        &[servers[0].local_addr().to_string()],
-        Placement::RoundRobin,
-    )
-    .expect("reconnect");
-    let mut remote = RemoteSource::new(router, demo.hashes.clone(), DEMO_LADDER);
-    let params = fetch_params(&demo, n_chunks, 3); // fixed 240p variant
-    let out = run_sourced(&params, Some(&mut remote));
+    let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+    spec.addrs = vec![servers[0].local_addr().to_string()];
+    let source =
+        SourceRegistry::with_defaults().create(Backend::Tcp, &spec).expect("tcp source");
+    let req = demo_request(&demo, n_chunks, 3); // fixed 240p variant
+    let out = run_sourced(&demo, &req, Some(source));
     assert!(!out.aborted);
     assert_eq!(out.restored.len(), n_chunks);
     for (d, q) in out.restored.iter().zip(&demo.quants) {
@@ -210,7 +211,8 @@ fn fig17_token_bucket_replay_within_10_percent() {
     // byte counts and hold each chunk's wall time to 10%
     let mut cursor = 0.0f64;
     let mut crossed_step = false;
-    for t in &remote.timings {
+    assert_eq!(out.wire_timings.len(), n_chunks);
+    for t in &out.wire_timings {
         let expected = trace.transfer_time(t.wire_bytes, cursor);
         let lo = expected * 0.9;
         let hi = expected * 1.1;
