@@ -7,9 +7,39 @@ use crate::engine::{EngineConfig, ExecMode};
 use crate::fetcher::{FetchConfig, PipelineConfig};
 use crate::net::BandwidthTrace;
 use crate::scheduler::SchedulerConfig;
-use crate::service::{Backend, ObjStoreShape};
+use crate::service::{AdmissionConfig, Backend, ObjStoreShape};
 use crate::trace::TraceConfig;
 use crate::util::config::Config;
+
+/// `[service]` — storage-node scaling knobs shared by `serve --listen`
+/// (admission limits) and `fetch` (replication factor of the fleet).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Per-node cap on in-flight fetch bytes; 0 = unlimited.
+    pub max_inflight: usize,
+    /// Per-node cap on concurrent connections; 0 = unlimited.
+    pub max_conns: usize,
+    /// Replication factor: each chunk lives on its primary shard plus
+    /// `replication - 1` replicas (clamped to the fleet size).
+    pub replication: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { max_inflight: 0, max_conns: 0, replication: 1 }
+    }
+}
+
+impl ServiceConfig {
+    /// The server-side admission limits this config describes.
+    pub fn admission(&self) -> AdmissionConfig {
+        AdmissionConfig {
+            max_conns: self.max_conns,
+            max_inflight_bytes: self.max_inflight,
+            ..Default::default()
+        }
+    }
+}
 
 /// A fully resolved experiment setup.
 #[derive(Debug, Clone)]
@@ -29,6 +59,9 @@ pub struct Experiment {
     /// Wall-clock shape of the `objstore` backend (`[network]
     /// objstore_latency_ms` / `objstore_gbps`).
     pub objstore: ObjStoreShape,
+    /// Storage-node scaling (`[service] max_inflight / max_conns /
+    /// replication`).
+    pub service: ServiceConfig,
     pub engine: EngineConfig,
     pub trace: TraceConfig,
 }
@@ -44,6 +77,7 @@ impl Default for Experiment {
             backend: None,
             remote_addrs: Vec::new(),
             objstore: ObjStoreShape::default(),
+            service: ServiceConfig::default(),
             engine: EngineConfig::default(),
             trace: TraceConfig::default(),
         }
@@ -121,6 +155,11 @@ impl Experiment {
             latency_s: c.get_f64("network", "objstore_latency_ms", 10.0) / 1e3,
             gbps: c.get_f64("network", "objstore_gbps", 8.0),
         };
+        let service = ServiceConfig {
+            max_inflight: c.get_i64("service", "max_inflight", 0).max(0) as usize,
+            max_conns: c.get_i64("service", "max_conns", 0).max(0) as usize,
+            replication: c.get_i64("service", "replication", 1).max(1) as usize,
+        };
         Experiment {
             name: c.get_str("", "name", &d.name).to_string(),
             device,
@@ -130,6 +169,7 @@ impl Experiment {
             backend,
             remote_addrs: parse_addr_list(c.get_str("network", "remote", "")),
             objstore,
+            service,
             engine,
             trace,
         }
@@ -175,6 +215,12 @@ mod tests {
         assert!(e.backend.is_none());
         assert!((e.objstore.latency_s - 0.010).abs() < 1e-12);
         assert!((e.objstore.gbps - 8.0).abs() < 1e-12);
+        assert_eq!(e.service.max_inflight, 0);
+        assert_eq!(e.service.max_conns, 0);
+        assert_eq!(e.service.replication, 1);
+        let a = e.service.admission();
+        assert_eq!((a.max_conns, a.max_inflight_bytes), (0, 0));
+        assert!(a.retry_after_ms > 0);
     }
 
     #[test]
@@ -191,6 +237,10 @@ backend = "objstore"
 objstore_latency_ms = 2.5
 objstore_gbps = 12.0
 remote = "127.0.0.1:7301, 127.0.0.1:7302"
+[service]
+max_inflight = 50000000
+max_conns = 32
+replication = 2
 [scheduler]
 fetching_aware = false
 [fetch]
@@ -218,6 +268,12 @@ n_requests = 10
         assert!((e.objstore.latency_s - 0.0025).abs() < 1e-12);
         assert!((e.objstore.gbps - 12.0).abs() < 1e-12);
         assert_eq!(e.remote_addrs, vec!["127.0.0.1:7301", "127.0.0.1:7302"]);
+        assert_eq!(e.service.max_inflight, 50_000_000);
+        assert_eq!(e.service.max_conns, 32);
+        assert_eq!(e.service.replication, 2);
+        let a = e.service.admission();
+        assert_eq!(a.max_conns, 32);
+        assert_eq!(a.max_inflight_bytes, 50_000_000);
         // jitter trace stays within its clamp bounds
         let tr = e.bandwidth_trace();
         for i in 0..100 {

@@ -347,54 +347,6 @@ impl EngineSim {
     }
 }
 
-/// TTFT of a *single isolated* fetch request — the Fig. 18 / Fig. 21 /
-/// Fig. 3 primitive (no queueing, fresh link/pool) — under the default
-/// analytic execution mode.
-#[deprecated(
-    since = "0.4.0",
-    note = "build a `Fetcher` (`Fetcher::builder().profile(..).for_perf(..)`) and call `ttft`"
-)]
-pub fn single_request_ttft(
-    perf: &PerfModel,
-    profile: &SystemProfile,
-    fetch_cfg: &FetchConfig,
-    bw: &BandwidthTrace,
-    context: usize,
-    reusable: usize,
-) -> crate::metrics::TtftBreakdown {
-    Fetcher::builder()
-        .profile(profile.clone())
-        .fetch_config(fetch_cfg.clone())
-        .bandwidth(bw.clone())
-        .for_perf(perf)
-        .build()
-        .ttft(perf, context, reusable, ExecMode::Analytic)
-}
-
-/// [`single_request_ttft`] with an explicit [`ExecMode`], so benches can
-/// cross-check the threaded executor against the analytic model.
-#[deprecated(
-    since = "0.4.0",
-    note = "build a `Fetcher` (`Fetcher::builder().profile(..).for_perf(..)`) and call `ttft`"
-)]
-pub fn single_request_ttft_exec(
-    perf: &PerfModel,
-    profile: &SystemProfile,
-    fetch_cfg: &FetchConfig,
-    bw: &BandwidthTrace,
-    context: usize,
-    reusable: usize,
-    exec: ExecMode,
-) -> crate::metrics::TtftBreakdown {
-    Fetcher::builder()
-        .profile(profile.clone())
-        .fetch_config(fetch_cfg.clone())
-        .bandwidth(bw.clone())
-        .for_perf(perf)
-        .build()
-        .ttft(perf, context, reusable, exec)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;

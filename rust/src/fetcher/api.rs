@@ -91,8 +91,15 @@ pub enum FetchError {
     /// request teardown); `chunks_completed` made it through all stages.
     Cancelled { chunks_completed: usize },
     /// A capacity bound refused the work: oversized wire frame, a full
-    /// store, an exhausted interner.
+    /// store, an exhausted interner, or a fetch whose every replica was
+    /// saturated (`Busy` past the retry budget on all of them).
     Capacity { detail: String },
+    /// A storage node refused one request at an admission limit and
+    /// suggested retrying after `retry_after_ms`. Transient by design:
+    /// `RemoteSource` absorbs these with bounded retry-with-backoff and
+    /// replica failover, so callers only see `Busy` when talking to a
+    /// node directly (e.g. through `StoreClient`).
+    Busy { retry_after_ms: u64 },
 }
 
 impl FetchError {
@@ -146,6 +153,9 @@ impl fmt::Display for FetchError {
                 write!(f, "fetch: cancelled after {chunks_completed} chunks")
             }
             FetchError::Capacity { detail } => write!(f, "fetch: capacity refused: {detail}"),
+            FetchError::Busy { retry_after_ms } => {
+                write!(f, "fetch: node busy, retry in {retry_after_ms}ms")
+            }
         }
     }
 }
@@ -279,6 +289,7 @@ pub struct FetcherBuilder {
     trace: BandwidthTrace,
     pool: DecodePool,
     est_alpha: f64,
+    replication: usize,
 }
 
 impl Default for FetcherBuilder {
@@ -290,6 +301,7 @@ impl Default for FetcherBuilder {
             trace: BandwidthTrace::constant(16.0),
             pool: DecodePool::new(7, h20_table()),
             est_alpha: 0.5,
+            replication: 1,
         }
     }
 }
@@ -344,6 +356,16 @@ impl FetcherBuilder {
         self
     }
 
+    /// Replication factor the fetcher expects of its sharded backends:
+    /// every chunk is stored on its primary shard plus `r - 1`
+    /// replicas, and a sourced fetch fails over between them. Transport
+    /// factories read this through [`Fetcher::replication`] when the
+    /// caller builds a `SourceSpec` (clamped to the fleet size there).
+    pub fn replication(mut self, r: usize) -> FetcherBuilder {
+        self.replication = r.max(1);
+        self
+    }
+
     pub fn build(self) -> Fetcher {
         Fetcher {
             link: NetLink::new(self.trace.clone()),
@@ -355,6 +377,7 @@ impl FetcherBuilder {
             trace: self.trace,
             pool_template: self.pool,
             est_alpha: self.est_alpha,
+            replication: self.replication,
         }
     }
 }
@@ -373,6 +396,7 @@ pub struct Fetcher {
     trace: BandwidthTrace,
     pool_template: DecodePool,
     est_alpha: f64,
+    replication: usize,
     link: NetLink,
     pool: DecodePool,
     est: BandwidthEstimator,
@@ -401,6 +425,12 @@ impl Fetcher {
     /// next run; link / pool / estimator state is untouched).
     pub fn set_config(&mut self, cfg: FetchConfig) {
         self.cfg = cfg;
+    }
+
+    /// Replication factor for sharded backends (see
+    /// [`FetcherBuilder::replication`]).
+    pub fn replication(&self) -> usize {
+        self.replication
     }
 
     pub fn pipeline_config(&self) -> &PipelineConfig {
@@ -702,9 +732,19 @@ mod tests {
         assert!(e.to_string().contains("chunk 4"));
         let e = FetchError::decode("bad frame").at_chunk(1);
         assert_eq!(e, FetchError::Decode { chunk: Some(1), detail: "bad frame".into() });
-        // Cancelled/Capacity are untouched by at_chunk
+        // Cancelled/Capacity/Busy are untouched by at_chunk
         let e = FetchError::Cancelled { chunks_completed: 3 }.at_chunk(9);
         assert_eq!(e, FetchError::Cancelled { chunks_completed: 3 });
+        let e = FetchError::Busy { retry_after_ms: 25 }.at_chunk(2);
+        assert_eq!(e, FetchError::Busy { retry_after_ms: 25 });
+        assert!(e.to_string().contains("25ms"), "{e}");
+    }
+
+    #[test]
+    fn builder_replication_lands_and_clamps() {
+        assert_eq!(Fetcher::builder().build().replication(), 1);
+        assert_eq!(Fetcher::builder().replication(3).build().replication(), 3);
+        assert_eq!(Fetcher::builder().replication(0).build().replication(), 1);
     }
 
     #[test]

@@ -49,7 +49,7 @@ use super::transport::{decode_payload, ChunkPayload, DecodedChunk, TransportSour
 use super::{ChunkFetch, FetchConfig, FetchPlan};
 
 /// Everything that describes one fetch, owned so a fetch can also run
-/// detached on its own thread (see [`spawn_fetch`]).
+/// detached on its own thread (see [`super::api::FetchSession::spawn`]).
 #[derive(Debug, Clone)]
 pub struct FetchParams {
     /// simulation time the fetch is issued
@@ -77,46 +77,10 @@ pub struct FetchOutcome {
     pub restored: Vec<DecodedChunk>,
 }
 
-/// Execute one fetch through the three-stage threaded pipeline,
-/// mutating the shared link / pool / estimator exactly like
-/// [`super::plan_fetch`] does (so concurrent fetches contend
-/// identically under either `ExecMode`).
-#[deprecated(since = "0.4.0", note = "use the `Fetcher` facade (`fetcher::api`) instead")]
-pub fn execute_fetch(
-    params: &FetchParams,
-    pipe: &PipelineConfig,
-    cancel: &CancelToken,
-    link: &mut NetLink,
-    pool: &mut DecodePool,
-    est: &mut BandwidthEstimator,
-) -> FetchOutcome {
-    run_stages(params, pipe, cancel, link, pool, est, None).0
-}
-
-/// [`execute_fetch`] with an optional [`TransportSource`]: the transmit
-/// stage streams each chunk's encoded bytes from the source (blocking on
-/// its I/O), and the restore stage decodes them into
-/// [`FetchOutcome::restored`]. The virtual timeline is unaffected.
-#[deprecated(
-    since = "0.4.0",
-    note = "use `Fetcher::session(...).with_source(...)` (`fetcher::api`) instead"
-)]
-pub fn execute_fetch_with_source(
-    params: &FetchParams,
-    pipe: &PipelineConfig,
-    cancel: &CancelToken,
-    link: &mut NetLink,
-    pool: &mut DecodePool,
-    est: &mut BandwidthEstimator,
-    source: Option<&mut dyn TransportSource>,
-) -> FetchOutcome {
-    run_stages(params, pipe, cancel, link, pool, est, source).0
-}
-
-/// The three-stage pipeline itself, shared by the deprecated free
-/// functions and the [`super::api::Fetcher`] facade: returns the
-/// outcome plus the first typed error any stage hit (`None` when the
-/// fetch completed or was cancelled without a fault).
+/// The three-stage pipeline itself, driven exclusively by the
+/// [`super::api::Fetcher`] facade (`run_once`): returns the outcome
+/// plus the first typed error any stage hit (`None` when the fetch
+/// completed or was cancelled without a fault).
 pub(crate) fn run_stages(
     params: &FetchParams,
     pipe: &PipelineConfig,
@@ -320,57 +284,6 @@ pub(crate) fn run_stages(
         restored,
     };
     (outcome, error)
-}
-
-/// Handle to a fetch running detached on its own thread: cancel it (the
-/// admission rule's abort path) and/or join for the outcome plus the
-/// mutated link / pool / estimator.
-///
-/// Legacy companion of [`spawn_fetch`]; new code should spawn through
-/// [`super::api::FetchSession::spawn`], whose job unifies with the
-/// blocking path.
-pub struct FetchJob {
-    cancel: CancelToken,
-    handle: thread::JoinHandle<(FetchOutcome, NetLink, DecodePool, BandwidthEstimator)>,
-}
-
-impl FetchJob {
-    /// Request cooperative abort; stages stop at the next chunk border.
-    pub fn cancel(&self) {
-        self.cancel.cancel();
-    }
-
-    pub fn cancel_token(&self) -> CancelToken {
-        self.cancel.clone()
-    }
-
-    /// Wait for the pipeline to drain.
-    pub fn join(self) -> (FetchOutcome, NetLink, DecodePool, BandwidthEstimator) {
-        self.handle.join().expect("fetch job panicked")
-    }
-}
-
-/// Run a fetch on a background thread, taking ownership of the link /
-/// pool / estimator (returned by [`FetchJob::join`]).
-#[deprecated(
-    since = "0.4.0",
-    note = "use `Fetcher::session(...).spawn()` (`fetcher::api`) instead"
-)]
-pub fn spawn_fetch(
-    params: FetchParams,
-    pipe: PipelineConfig,
-    mut link: NetLink,
-    mut pool: DecodePool,
-    mut est: BandwidthEstimator,
-) -> FetchJob {
-    let cancel = CancelToken::new();
-    let token = cancel.clone();
-    let handle = thread::spawn(move || {
-        let (outcome, _) =
-            run_stages(&params, &pipe, &token, &mut link, &mut pool, &mut est, None);
-        (outcome, link, pool, est)
-    });
-    FetchJob { cancel, handle }
 }
 
 // The executor's behavioral contracts (analytic equivalence across

@@ -9,8 +9,9 @@
 //! between the two stages under the predicted bandwidth.
 //!
 //! The public entry point is the [`api`] facade ([`Fetcher`] /
-//! [`FetchRequest`] / [`FetchSession`]); the free functions in
-//! [`executor`] survive one release as `#[deprecated]` shims.
+//! [`FetchRequest`] / [`FetchSession`]); the ISSUE 3 `#[deprecated]`
+//! free-function shims (`execute_fetch*`, `spawn_fetch`) served their
+//! one-release window and are gone.
 
 pub mod api;
 pub mod executor;
@@ -21,8 +22,6 @@ pub use api::{
     ExecMode, FetchError, FetchJob, FetchReport, FetchRequest, FetchSession, Fetcher,
     FetcherBuilder, ResolutionPolicy,
 };
-#[allow(deprecated)]
-pub use executor::{execute_fetch, execute_fetch_with_source, spawn_fetch};
 pub use executor::{FetchOutcome, FetchParams};
 pub use pipeline::{serialized_fetch, CancelToken, PipelineConfig};
 pub use transport::{ChunkPayload, DecodedChunk, TransportSource, WireTiming};

@@ -11,7 +11,8 @@
 //! * [`super::plan_fetch`] — the analytic planner: one pass over the
 //!   chunks on the caller's thread (fast, used by the large-scale
 //!   simulations);
-//! * [`super::executor::execute_fetch`] — the threaded executor: one OS
+//! * the threaded executor (`executor::run_stages`, driven by the
+//!   [`super::api::Fetcher`] facade) — one OS
 //!   thread per stage, connected by bounded channels with backpressure
 //!   and a cancellation path (the shape a real deployment runs).
 //!

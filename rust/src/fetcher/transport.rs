@@ -50,8 +50,13 @@ pub struct WireTiming {
     pub idx: usize,
     /// Bytes that crossed the socket (bitstreams + scale sideband).
     pub wire_bytes: usize,
-    /// Wall-clock request-to-last-byte duration (seconds).
+    /// Wall-clock request-to-last-byte duration (seconds), including
+    /// any busy backoff and replica failover the source performed.
     pub wall_secs: f64,
+    /// Shard that actually served the chunk — the primary unless the
+    /// source failed over to a replica. `None` for sources without a
+    /// shard fleet.
+    pub shard: Option<usize>,
 }
 
 /// Where the transmit stage streams chunk bytes from.

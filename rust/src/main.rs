@@ -53,6 +53,16 @@ fn parse_flag(args: &[String], name: &str) -> Option<String> {
         .cloned()
 }
 
+/// `--replication` flag, falling back to `[service] replication`. Both
+/// `serve --listen` and `fetch` resolve it here so the two ends always
+/// agree on the replica layout.
+fn replication_of(args: &[String], exp: &Experiment) -> usize {
+    parse_flag(args, "--replication")
+        .map(|s| s.parse().expect("--replication takes a count"))
+        .unwrap_or(exp.service.replication)
+        .max(1)
+}
+
 fn load_experiment(args: &[String]) -> Experiment {
     let mut exp = match parse_flag(args, "--config") {
         Some(path) => Experiment::load(&path).unwrap_or_else(|e| {
@@ -82,12 +92,16 @@ fn load_experiment(args: &[String]) -> Experiment {
 
 /// `serve --listen a:p,b:p` — host one storage shard server per
 /// address, populated with the deterministic demo prefix (round-robin
-/// chunk placement), and block until killed.
+/// chunk placement, write-through to `--replication` shards per chunk,
+/// `--max-inflight`/`--max-conns` admission limits), and block until
+/// killed. `--die-after-fetches N` injects a shard-0 death after N
+/// served chunk fetches (the CI failover round trip).
 fn cmd_serve_store(listen: &str, args: &[String]) {
     use kvfetcher::kvstore::StorageNode;
     use kvfetcher::net::BandwidthTrace;
     use kvfetcher::service::{
-        demo_prefix, Placement, ServerConfig, ShardMap, StorageServer, ThrottleSpec,
+        demo_prefix, AdmissionConfig, FaultSpec, Placement, ServerConfig, ShardMap,
+        StorageServer, ThrottleSpec,
     };
 
     let addrs = Experiment::parse_addrs(listen);
@@ -95,6 +109,7 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
         eprintln!("--listen takes a comma-separated address list");
         std::process::exit(2);
     }
+    let exp = load_experiment(args);
     let (seed, n_chunks, chunk_tokens) = demo_params(args);
     let capacity: Option<usize> =
         parse_flag(args, "--capacity").map(|s| s.parse().expect("--capacity takes bytes"));
@@ -102,9 +117,21 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
         let gbps: f64 = s.parse().expect("--throttle-gbps takes Gbps");
         ThrottleSpec::new(BandwidthTrace::constant(gbps), 1.0)
     });
+    let replication = replication_of(args, &exp);
+    let admission = AdmissionConfig {
+        max_conns: parse_flag(args, "--max-conns")
+            .map(|s| s.parse().expect("--max-conns takes a count"))
+            .unwrap_or(exp.service.max_conns),
+        max_inflight_bytes: parse_flag(args, "--max-inflight")
+            .map(|s| s.parse().expect("--max-inflight takes bytes"))
+            .unwrap_or(exp.service.max_inflight),
+        ..Default::default()
+    };
+    let die_after: Option<usize> = parse_flag(args, "--die-after-fetches")
+        .map(|s| s.parse().expect("--die-after-fetches takes a count"));
 
     let demo = demo_prefix(seed, n_chunks, chunk_tokens);
-    let map = ShardMap::new(addrs.len(), Placement::RoundRobin);
+    let map = ShardMap::with_replication(addrs.len(), Placement::RoundRobin, replication);
     let mut nodes: Vec<StorageNode> = (0..addrs.len())
         .map(|_| match capacity {
             Some(c) => StorageNode::with_capacity(chunk_tokens, c),
@@ -112,10 +139,12 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
         })
         .collect();
     for (i, chunk) in demo.chunks.iter().enumerate() {
-        let out = nodes[map.shard_of(i, chunk.hash)].register(chunk.clone());
-        if !out.stored {
-            eprintln!("chunk {i} does not fit shard capacity {capacity:?}");
-            std::process::exit(1);
+        for shard in map.replicas_of(i, chunk.hash) {
+            let out = nodes[shard].register(chunk.clone());
+            if !out.stored {
+                eprintln!("chunk {i} does not fit shard {shard} capacity {capacity:?}");
+                std::process::exit(1);
+            }
         }
     }
 
@@ -123,7 +152,16 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
     for (i, (addr, node)) in addrs.iter().zip(nodes).enumerate() {
         let chunks = node.len();
         let bytes = node.used_bytes();
-        let cfg = ServerConfig { throttle: throttle.clone() };
+        let cfg = ServerConfig {
+            throttle: throttle.clone(),
+            admission: admission.clone(),
+            // the injected death applies to shard 0 only — enough for a
+            // deterministic "kill one of N mid-fetch" round trip
+            fault: FaultSpec {
+                die_after_fetches: if i == 0 { die_after } else { None },
+                ..Default::default()
+            },
+        };
         match StorageServer::spawn(addr, node, cfg) {
             Ok(server) => {
                 println!(
@@ -139,9 +177,15 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
         }
     }
     println!(
-        "# serving demo prefix: seed={seed} chunks={n_chunks} chunk_tokens={chunk_tokens}; \
-         fetch with `kvfetcher fetch --remote {}`",
-        addrs.join(",")
+        "# serving demo prefix: seed={seed} chunks={n_chunks} chunk_tokens={chunk_tokens} \
+         replication={} | fetch with `kvfetcher fetch --remote {}{}`",
+        map.replication(),
+        addrs.join(","),
+        if map.replication() > 1 {
+            format!(" --replication {}", map.replication())
+        } else {
+            String::new()
+        }
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
@@ -163,6 +207,7 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
 
     let (seed, n_chunks, chunk_tokens) = demo_params(args);
     let demo = demo_prefix(seed, n_chunks, chunk_tokens);
+    let replication = replication_of(args, &exp);
 
     let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
     spec.chunk_tokens = chunk_tokens;
@@ -185,24 +230,6 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
             spec.objstore = exp.objstore;
         }
     }
-    let source = match SourceRegistry::with_defaults().create(backend, &spec) {
-        Ok(s) => s,
-        Err(e) => {
-            eprintln!("cannot build {backend} source: {e}");
-            std::process::exit(1);
-        }
-    };
-
-    println!(
-        "# demo fetch: backend {backend} | {} chunks x {} tokens | virtual link {} Gbps",
-        n_chunks, chunk_tokens, exp.bandwidth_gbps,
-    );
-    let total_tokens = n_chunks * chunk_tokens;
-    let raw_bytes_total = total_tokens
-        * kvfetcher::service::DEMO_PLANES
-        * kvfetcher::service::DEMO_HEADS
-        * kvfetcher::service::DEMO_HEAD_DIM
-        * 2;
     let fetcher = Fetcher::builder()
         .profile(SystemProfile::kvfetcher())
         .fetch_config(FetchConfig {
@@ -214,7 +241,32 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
         .pipeline(exp.engine.pipe.clone())
         .bandwidth(exp.bandwidth_trace())
         .decode_pool(DecodePool::new(exp.device.nvdecs, exp.device.decode_table()))
+        .replication(replication)
         .build();
+    // replicated TCP fleets fail chunk fetches over between replicas
+    spec.replication = fetcher.replication();
+    let source = match SourceRegistry::with_defaults().create(backend, &spec) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("cannot build {backend} source: {e}");
+            std::process::exit(1);
+        }
+    };
+
+    println!(
+        "# demo fetch: backend {backend} | {} chunks x {} tokens | replication {} | \
+         virtual link {} Gbps",
+        n_chunks,
+        chunk_tokens,
+        fetcher.replication(),
+        exp.bandwidth_gbps,
+    );
+    let total_tokens = n_chunks * chunk_tokens;
+    let raw_bytes_total = total_tokens
+        * kvfetcher::service::DEMO_PLANES
+        * kvfetcher::service::DEMO_HEADS
+        * kvfetcher::service::DEMO_HEAD_DIM
+        * 2;
     let req = FetchRequest::new(total_tokens, raw_bytes_total)
         .with_hashes(demo.hashes.clone())
         .exec(ExecMode::Pipelined);
@@ -229,14 +281,19 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
         std::process::exit(1);
     }
 
+    let timing_of = |idx: usize| report.wire_timings.iter().find(|t| t.idx == idx);
     let wall_ms_of = |idx: usize| {
-        report
-            .wire_timings
-            .iter()
-            .find(|t| t.idx == idx)
-            .map(|t| format!("{:.1}", t.wall_secs * 1e3))
+        timing_of(idx).map(|t| format!("{:.1}", t.wall_secs * 1e3)).unwrap_or_else(|| "-".into())
+    };
+    // which replica served each chunk (failover makes this differ from
+    // the primary when a shard died or was saturated mid-fetch)
+    let shard_of = |idx: usize| {
+        timing_of(idx)
+            .and_then(|t| t.shard)
+            .map(|s| s.to_string())
             .unwrap_or_else(|| "-".into())
     };
+    const HEADERS: [&str; 5] = ["chunk", "restored bytes", "wall ms", "shard", "bit-exact"];
     let mut rows = Vec::new();
     for d in &report.restored {
         let truth = &demo.quants[d.idx];
@@ -245,15 +302,16 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
             d.idx.to_string(),
             d.quant.data.len().to_string(),
             wall_ms_of(d.idx),
+            shard_of(d.idx),
             if ok { "yes".into() } else { "NO".into() },
         ]);
         if !ok {
-            println!("{}", markdown(&["chunk", "restored bytes", "wall ms", "bit-exact"], &rows));
+            println!("{}", markdown(&HEADERS, &rows));
             eprintln!("chunk {} restored with differences", d.idx);
             std::process::exit(1);
         }
     }
-    println!("{}", markdown(&["chunk", "restored bytes", "wall ms", "bit-exact"], &rows));
+    println!("{}", markdown(&HEADERS, &rows));
     println!(
         "# restored {} chunks bit-exact via {}; virtual TTFT {} (transmit {}, decode {}, \
          restore {})",
@@ -443,12 +501,18 @@ const USAGE: &str = "kvfetcher <serve|fetch|calibrate|layout|real> [flags]
   serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
             [--exec analytic|pipelined]
   serve     --listen a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
-            [--capacity bytes] [--throttle-gbps G]     (storage shard servers)
+            [--capacity bytes] [--throttle-gbps G] [--replication r]
+            [--max-inflight bytes] [--max-conns n] [--die-after-fetches n]
+            (storage shard servers; each chunk is written through to r
+             shards, admission limits answer Busy instead of dropping,
+             and --die-after-fetches kills shard 0 at a chunk boundary)
   fetch     --config <toml> [--context tokens] [--bandwidth G]
   fetch     --backend local|tcp|objstore [--remote a:p[,b:p...]] [--seed s]
-            [--chunks n] [--chunk-tokens t]
+            [--chunks n] [--chunk-tokens t] [--replication r]
             (stream the demo prefix through a transport backend; verifies
-             bit-exact restore; --remote alone implies --backend tcp)
+             bit-exact restore and prints which shard served each chunk;
+             --remote alone implies --backend tcp; with --replication the
+             fetch fails over between a chunk's replicas)
   calibrate [--tokens n]
   layout    [--heads h] [--dim d]
   real      [--artifacts dir]   (requires --features pjrt)";

@@ -11,7 +11,7 @@ use std::io;
 use std::net::TcpStream;
 use std::sync::Mutex;
 
-use crate::fetcher::ChunkPayload;
+use crate::fetcher::{ChunkPayload, FetchError};
 use crate::kvstore::StoredChunk;
 
 use super::protocol::{self, FrameRead, NodeStats, Request, Response};
@@ -72,6 +72,17 @@ impl StoreClient {
             FrameRead::Frame(tag, payload) => {
                 let resp = protocol::decode_response(tag, &payload)
                     .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+                if let Response::Busy { retry_after_ms } = resp {
+                    // admission refusal: the reply ends at a clean frame
+                    // boundary and the server keeps the connection open,
+                    // so pool it for the retry; the typed error crosses
+                    // the io boundary (recovered via FetchError::from_io)
+                    self.checkin(stream);
+                    return Err(io::Error::new(
+                        io::ErrorKind::WouldBlock,
+                        FetchError::Busy { retry_after_ms: retry_after_ms as u64 },
+                    ));
+                }
                 self.checkin(stream);
                 if let Response::Err { msg } = resp {
                     return Err(io::Error::other(format!("{}: {msg}", self.addr)));

@@ -10,10 +10,15 @@
 //! * [`server`] — a multi-threaded storage server hosting one
 //!   capacity-bounded [`crate::kvstore::StorageNode`] shard behind a
 //!   `TcpListener`, with optional [`throttle`] pacing that replays a
-//!   [`crate::net::BandwidthTrace`] over the wire;
+//!   [`crate::net::BandwidthTrace`] over the wire, per-node admission
+//!   limits ([`AdmissionConfig`]: concurrent connections + in-flight
+//!   fetch bytes, refused with a `Busy` reply instead of dropped
+//!   connections), and deterministic fault injection ([`FaultSpec`])
+//!   for the `tests/service_faults.rs` harness;
 //! * [`client`] — typed calls over a per-node connection pool;
 //! * [`shard`] — the placement map + router spreading a chained prefix
-//!   across N nodes with per-node capacity stats;
+//!   across N nodes (optionally on `r` replica shards each, written
+//!   through and read with failover) with per-node capacity stats;
 //! * [`source`] — the transport-backend registry: a [`Backend`] enum +
 //!   [`SourceFactory`] trait mapping config strings onto
 //!   [`crate::fetcher::TransportSource`] impls (in-process store, TCP
@@ -33,12 +38,12 @@ pub mod source;
 pub mod throttle;
 
 pub use client::StoreClient;
-pub use protocol::{NodeStats, Request, Response};
-pub use server::{ServerConfig, StorageServer};
+pub use protocol::{NodeStats, Request, Response, PROTOCOL_VERSION};
+pub use server::{AdmissionConfig, FaultSpec, ServerConfig, StorageServer};
 pub use shard::{Placement, ShardMap, ShardRouter};
 pub use source::{
-    Backend, Ladder, LocalSource, ObjStoreShape, ObjectStoreSource, RemoteSource, SourceFactory,
-    SourceRegistry, SourceSpec,
+    Backend, Ladder, LocalSource, ObjStoreShape, ObjectStoreSource, RemoteSource, RetryPolicy,
+    SourceFactory, SourceRegistry, SourceSpec,
 };
 pub use throttle::{ThrottleSpec, TokenBucket};
 

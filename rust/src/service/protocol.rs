@@ -28,6 +28,14 @@ use crate::kvstore::{StoredChunk, StoredVariant};
 /// legitimate frame is a [`Response::Chunk`] carrying one encoded chunk.
 pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
 
+/// Wire-format revision. Both ends of a connection ship from one build,
+/// so there is no negotiation — the constant documents revisions:
+///
+/// * v1 — the ISSUE 2 frame set (lookup / has / fetch / put / stats).
+/// * v2 — adds the [`Response::Busy`] admission refusal and extends
+///   [`NodeStats`] with the in-flight / busy admission counters.
+pub const PROTOCOL_VERSION: u32 = 2;
+
 const TAG_LOOKUP_PREFIX: u8 = 1;
 const TAG_HAS_CHUNKS: u8 = 2;
 const TAG_FETCH_CHUNK: u8 = 3;
@@ -41,6 +49,7 @@ const TAG_NOT_FOUND: u8 = 131;
 const TAG_STORED: u8 = 132;
 const TAG_STATS_REPLY: u8 = 133;
 const TAG_ERR: u8 = 134;
+const TAG_BUSY: u8 = 135;
 
 /// A client -> server message.
 #[derive(Debug, Clone, PartialEq)]
@@ -58,13 +67,21 @@ pub enum Request {
 }
 
 /// Capacity counters of one storage node.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct NodeStats {
     pub chunks: u64,
     pub used_bytes: u64,
     /// `None` = unbounded.
     pub capacity_bytes: Option<u64>,
     pub evictions: u64,
+    /// Chunk-payload bytes currently being sent to clients (the
+    /// quantity the node's `max_inflight` admission limit caps).
+    pub inflight_bytes: u64,
+    /// High-water mark of `inflight_bytes` since the node started.
+    pub peak_inflight_bytes: u64,
+    /// `Busy` refusals issued since the node started (admission limits
+    /// plus injected faults).
+    pub busy_replies: u64,
 }
 
 /// A server -> client message.
@@ -77,6 +94,11 @@ pub enum Response {
     Stored { stored: bool, evicted: u32 },
     Stats(NodeStats),
     Err { msg: String },
+    /// Admission refusal: the node is at its connection or in-flight
+    /// byte limit. The client should back off ~`retry_after_ms` and
+    /// retry (or fail over to a replica) instead of treating the node
+    /// as dead.
+    Busy { retry_after_ms: u32 },
 }
 
 // ---------------------------------------------------------------- framing
@@ -528,6 +550,9 @@ pub fn encode_response(r: &Response) -> (u8, Vec<u8>) {
             put_u64(&mut out, s.used_bytes);
             put_u64(&mut out, s.capacity_bytes.unwrap_or(u64::MAX));
             put_u64(&mut out, s.evictions);
+            put_u64(&mut out, s.inflight_bytes);
+            put_u64(&mut out, s.peak_inflight_bytes);
+            put_u64(&mut out, s.busy_replies);
             (TAG_STATS_REPLY, out)
         }
         Response::Err { msg } => {
@@ -537,6 +562,10 @@ pub fn encode_response(r: &Response) -> (u8, Vec<u8>) {
             }
             put_str(&mut out, &msg[..end]);
             (TAG_ERR, out)
+        }
+        Response::Busy { retry_after_ms } => {
+            put_u32(&mut out, *retry_after_ms);
+            (TAG_BUSY, out)
         }
     }
 }
@@ -573,14 +602,21 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, FetchError> 
             let used_bytes = rd.u64()?;
             let cap = rd.u64()?;
             let evictions = rd.u64()?;
+            let inflight_bytes = rd.u64()?;
+            let peak_inflight_bytes = rd.u64()?;
+            let busy_replies = rd.u64()?;
             Response::Stats(NodeStats {
                 chunks,
                 used_bytes,
                 capacity_bytes: if cap == u64::MAX { None } else { Some(cap) },
                 evictions,
+                inflight_bytes,
+                peak_inflight_bytes,
+                busy_replies,
             })
         }
         TAG_ERR => Response::Err { msg: rd.str_()? },
+        TAG_BUSY => Response::Busy { retry_after_ms: rd.u32()? },
         t => return Err(FetchError::decode(format!("unknown response tag {t}"))),
     };
     rd.finish()?;
@@ -673,13 +709,13 @@ mod tests {
                 used_bytes: 1000,
                 capacity_bytes: Some(2000),
                 evictions: 1,
+                inflight_bytes: 512,
+                peak_inflight_bytes: 4096,
+                busy_replies: 9,
             }),
-            Response::Stats(NodeStats {
-                chunks: 0,
-                used_bytes: 0,
-                capacity_bytes: None,
-                evictions: 0,
-            }),
+            Response::Stats(NodeStats { capacity_bytes: None, ..NodeStats::default() }),
+            Response::Busy { retry_after_ms: 25 },
+            Response::Busy { retry_after_ms: 0 },
             Response::Err { msg: "nope".into() },
             Response::Chunk(ChunkPayload {
                 hash: 8,
@@ -739,6 +775,9 @@ mod tests {
         // unknown tags
         assert!(decode_request(77, &[]).is_err());
         assert!(decode_response(77, &[]).is_err());
+        // truncated / over-long Busy payloads
+        assert!(decode_response(TAG_BUSY, &[1, 2]).is_err());
+        assert!(decode_response(TAG_BUSY, &[1, 2, 3, 4, 5]).is_err());
         // truncated chunk payload
         let (tag, body) = encode_request(&Request::PutChunk { chunk: sample_chunk() });
         assert!(decode_request(tag, &body[..body.len() - 3]).is_err());

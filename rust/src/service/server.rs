@@ -14,6 +14,26 @@
 //! loopback (`tests/remote_fetch.rs` holds the replay to 10% of the
 //! analytic link model).
 //!
+//! **Admission control** ([`AdmissionConfig`]): the node refuses work
+//! at two limits instead of degrading or dropping connections. While
+//! more than `max_conns` connections are live, data-plane requests
+//! (`FetchChunk` / `PutChunk`) on *any* connection are answered
+//! [`Response::Busy`] until the count falls; control-plane requests
+//! (`Stats`, lookups, probes) always pass, so a saturated node stays
+//! observable. `max_inflight_bytes` caps the chunk-payload bytes being
+//! sent to clients at once: a fetch whose reply frame would exceed the
+//! cap is answered `Busy` (unless nothing is in flight, so one
+//! oversized chunk can never wedge the node). `Busy` carries a
+//! `retry_after_ms` hint; the client backs off and retries or fails
+//! over to a replica. Counters (current / peak in-flight bytes, busy
+//! replies) surface through `Stats`.
+//!
+//! **Fault injection** ([`FaultSpec`]): deterministic faults for the
+//! `tests/service_faults.rs` harness and the CI failover round trip —
+//! kill the shard after serving N chunk fetches (death at a chunk
+//! boundary), delay accepts, or force `Busy` on the first N fetches.
+//! All default to off.
+//!
 //! Shutdown is cooperative: handler sockets carry a short read timeout
 //! so every thread re-checks the stop flag between frames, and
 //! [`StorageServer::shutdown`] unblocks the accept loop with a dummy
@@ -21,7 +41,7 @@
 
 use std::io::{self, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
@@ -38,11 +58,90 @@ const PACE_SLICE: usize = 64 * 1024;
 /// How often idle handler threads re-check the stop flag.
 const POLL_INTERVAL: Duration = Duration::from_millis(100);
 
+/// Admission limits of one storage node. Zero means unlimited.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Live connections above which data-plane requests are refused
+    /// with [`Response::Busy`]. 0 = unlimited.
+    pub max_conns: usize,
+    /// Cap on chunk-payload bytes in flight to clients at once; a
+    /// `FetchChunk` that would exceed it is refused with `Busy` (unless
+    /// nothing is in flight). 0 = unlimited.
+    pub max_inflight_bytes: usize,
+    /// Back-off hint carried in every `Busy` reply (milliseconds).
+    pub retry_after_ms: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { max_conns: 0, max_inflight_bytes: 0, retry_after_ms: 25 }
+    }
+}
+
+/// Deterministic fault injection, all off by default. Used by the
+/// fault-injection test harness and the CI failover round trip; a
+/// production node never sets these.
+#[derive(Debug, Clone, Default)]
+pub struct FaultSpec {
+    /// Die (stop serving, close every connection, refuse new ones)
+    /// after this many `FetchChunk` replies — a shard death at a chosen
+    /// chunk boundary.
+    pub die_after_fetches: Option<usize>,
+    /// Sleep this long before handling each accepted connection.
+    pub accept_delay_ms: u64,
+    /// Answer the first N `FetchChunk` requests with `Busy` regardless
+    /// of admission state.
+    pub busy_first_fetches: usize,
+}
+
 /// Server tuning.
 #[derive(Debug, Clone, Default)]
 pub struct ServerConfig {
     /// Pace every connection's writes through this trace replay.
     pub throttle: Option<ThrottleSpec>,
+    /// Connection / in-flight-byte admission limits.
+    pub admission: AdmissionConfig,
+    /// Injected faults (tests and CI only).
+    pub fault: FaultSpec,
+}
+
+/// Live admission state shared by every handler thread of one node.
+#[derive(Debug, Default)]
+struct Admission {
+    conns: AtomicUsize,
+    inflight: AtomicUsize,
+    peak_inflight: AtomicUsize,
+    busy_replies: AtomicU64,
+    /// `FetchChunk` replies fully sent (drives `die_after_fetches`).
+    fetches_served: AtomicUsize,
+    /// `FetchChunk` requests seen (drives `busy_first_fetches`).
+    fetches_seen: AtomicUsize,
+}
+
+impl Admission {
+    /// Reserve `bytes` of in-flight budget; `false` = refuse with Busy.
+    /// An empty node always admits one payload, whatever its size, so a
+    /// chunk larger than the cap cannot wedge the fetch forever.
+    fn reserve(&self, bytes: usize, max: usize) -> bool {
+        loop {
+            let cur = self.inflight.load(Ordering::SeqCst);
+            if max > 0 && cur > 0 && cur + bytes > max {
+                return false;
+            }
+            if self
+                .inflight
+                .compare_exchange(cur, cur + bytes, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+            {
+                self.peak_inflight.fetch_max(cur + bytes, Ordering::SeqCst);
+                return true;
+            }
+        }
+    }
+
+    fn release(&self, bytes: usize) {
+        self.inflight.fetch_sub(bytes, Ordering::SeqCst);
+    }
 }
 
 /// A running storage shard server. Threads run until [`shutdown`].
@@ -64,12 +163,13 @@ impl StorageServer {
         let addr = listener.local_addr()?;
         let node = Arc::new(Mutex::new(node));
         let stop = Arc::new(AtomicBool::new(false));
+        let admission = Arc::new(Admission::default());
         let workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let accept = {
             let node = Arc::clone(&node);
             let stop = Arc::clone(&stop);
             let workers = Arc::clone(&workers);
-            thread::spawn(move || accept_loop(listener, node, stop, workers, cfg))
+            thread::spawn(move || accept_loop(listener, node, stop, admission, workers, cfg))
         };
         Ok(StorageServer { addr, node, stop, accept: Some(accept), workers })
     }
@@ -103,6 +203,7 @@ fn accept_loop(
     listener: TcpListener,
     node: Arc<Mutex<StorageNode>>,
     stop: Arc<AtomicBool>,
+    admission: Arc<Admission>,
     workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
     cfg: ServerConfig,
 ) {
@@ -119,12 +220,16 @@ fn accept_loop(
                 continue;
             }
         };
+        if cfg.fault.accept_delay_ms > 0 {
+            thread::sleep(Duration::from_millis(cfg.fault.accept_delay_ms));
+        }
         let _ = stream.set_nodelay(true);
         let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
         let node = Arc::clone(&node);
         let stop = Arc::clone(&stop);
-        let throttle = cfg.throttle.clone();
-        let handle = thread::spawn(move || handle_conn(stream, node, stop, throttle));
+        let admission = Arc::clone(&admission);
+        let cfg = cfg.clone();
+        let handle = thread::spawn(move || handle_conn(stream, node, stop, admission, cfg));
         let mut live = workers.lock().expect("workers lock");
         // reap handlers whose connections already closed, so a
         // long-running server holds handles only for live connections
@@ -144,30 +249,129 @@ fn handle_conn(
     mut stream: TcpStream,
     node: Arc<Mutex<StorageNode>>,
     stop: Arc<AtomicBool>,
-    throttle: Option<ThrottleSpec>,
+    admission: Arc<Admission>,
+    cfg: ServerConfig,
 ) {
-    let mut bucket = throttle.as_ref().map(TokenBucket::from_spec);
+    admission.conns.fetch_add(1, Ordering::SeqCst);
+    serve_conn(&mut stream, &node, &stop, &admission, &cfg);
+    admission.conns.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Answer one request with `Busy { retry_after_ms }`.
+fn send_busy(
+    stream: &mut TcpStream,
+    bucket: Option<&mut TokenBucket>,
+    admission: &Admission,
+    retry_after_ms: u64,
+) -> io::Result<()> {
+    admission.busy_replies.fetch_add(1, Ordering::SeqCst);
+    let resp = Response::Busy { retry_after_ms: retry_after_ms.min(u32::MAX as u64) as u32 };
+    let (tag, body) = protocol::encode_response(&resp);
+    send_paced(stream, &protocol::frame_bytes(tag, &body), bucket)
+}
+
+fn serve_conn(
+    stream: &mut TcpStream,
+    node: &Arc<Mutex<StorageNode>>,
+    stop: &AtomicBool,
+    admission: &Admission,
+    cfg: &ServerConfig,
+) {
+    let mut bucket = cfg.throttle.as_ref().map(TokenBucket::from_spec);
+    let retry_ms = cfg.admission.retry_after_ms;
     loop {
         if stop.load(Ordering::SeqCst) {
             break;
         }
-        let (tag, payload) = match protocol::read_frame(&mut stream) {
+        let (tag, payload) = match protocol::read_frame(stream) {
             Ok(FrameRead::Frame(tag, payload)) => (tag, payload),
             Ok(FrameRead::Idle) => continue,
             Ok(FrameRead::Eof) | Err(_) => break,
         };
-        let (resp, pinned) = match protocol::decode_request(tag, &payload) {
-            Ok(req) => handle_request(req, &node),
-            Err(e) => (Response::Err { msg: e.to_string() }, None),
+        let req = match protocol::decode_request(tag, &payload) {
+            Ok(req) => req,
+            Err(e) => {
+                let (tag, body) = protocol::encode_response(&Response::Err { msg: e.to_string() });
+                if send_paced(stream, &protocol::frame_bytes(tag, &body), bucket.as_mut()).is_err()
+                {
+                    break;
+                }
+                continue;
+            }
         };
+        let is_fetch = matches!(req, Request::FetchChunk { .. });
+        let data_plane = is_fetch || matches!(req, Request::PutChunk { .. });
+        if is_fetch {
+            // injected death at a chunk boundary: once the quota of
+            // served fetches is reached, the shard is dead — close the
+            // connection without a reply and stop the whole server
+            if let Some(limit) = cfg.fault.die_after_fetches {
+                if admission.fetches_served.load(Ordering::SeqCst) >= limit {
+                    stop.store(true, Ordering::SeqCst);
+                    break;
+                }
+            }
+            // injected saturation: Busy for the first N fetch requests
+            if cfg.fault.busy_first_fetches > 0
+                && admission.fetches_seen.fetch_add(1, Ordering::SeqCst)
+                    < cfg.fault.busy_first_fetches
+            {
+                if send_busy(stream, bucket.as_mut(), admission, retry_ms).is_err() {
+                    break;
+                }
+                continue;
+            }
+        }
+        // connection-count admission: while over the limit, data-plane
+        // requests are refused (control plane always passes, so the
+        // node stays observable under saturation)
+        if data_plane
+            && cfg.admission.max_conns > 0
+            && admission.conns.load(Ordering::SeqCst) > cfg.admission.max_conns
+        {
+            if send_busy(stream, bucket.as_mut(), admission, retry_ms).is_err() {
+                break;
+            }
+            continue;
+        }
+        let (resp, pinned) = handle_request(req, node, admission);
         let (tag, body) = protocol::encode_response(&resp);
         let frame = protocol::frame_bytes(tag, &body);
-        let sent = send_paced(&mut stream, &frame, bucket.as_mut());
+        // in-flight-byte admission: the cost of a chunk reply is its
+        // whole frame; refuse with Busy when the budget is spent
+        let reserved = if matches!(resp, Response::Chunk(_)) {
+            if !admission.reserve(frame.len(), cfg.admission.max_inflight_bytes) {
+                if let Some(hash) = pinned {
+                    node.lock().expect("node lock").unpin(hash);
+                }
+                if send_busy(stream, bucket.as_mut(), admission, retry_ms).is_err() {
+                    break;
+                }
+                continue;
+            }
+            true
+        } else {
+            false
+        };
+        let sent = send_paced(stream, &frame, bucket.as_mut());
+        if reserved {
+            admission.release(frame.len());
+        }
         if let Some(hash) = pinned {
             node.lock().expect("node lock").unpin(hash);
         }
         if sent.is_err() {
             break;
+        }
+        if reserved {
+            // one more chunk fully on the wire (chunk boundary for the
+            // die_after_fetches fault)
+            let served = admission.fetches_served.fetch_add(1, Ordering::SeqCst) + 1;
+            if cfg.fault.die_after_fetches.is_some_and(|limit| served >= limit) {
+                // die exactly at the boundary: stop the server and close
+                stop.store(true, Ordering::SeqCst);
+                break;
+            }
         }
     }
 }
@@ -175,7 +379,11 @@ fn handle_conn(
 /// Serve one request against the shard. For chunk fetches, the chunk is
 /// pinned *before* the lock is released and stays pinned until its
 /// bytes are fully on the wire (the caller unpins after the send).
-fn handle_request(req: Request, node: &Arc<Mutex<StorageNode>>) -> (Response, Option<u64>) {
+fn handle_request(
+    req: Request,
+    node: &Arc<Mutex<StorageNode>>,
+    admission: &Admission,
+) -> (Response, Option<u64>) {
     let mut node = node.lock().expect("node lock");
     match req {
         Request::LookupPrefix { tokens } => {
@@ -213,6 +421,9 @@ fn handle_request(req: Request, node: &Arc<Mutex<StorageNode>>) -> (Response, Op
                 used_bytes: node.used_bytes() as u64,
                 capacity_bytes: node.capacity_bytes().map(|c| c as u64),
                 evictions: node.evictions(),
+                inflight_bytes: admission.inflight.load(Ordering::SeqCst) as u64,
+                peak_inflight_bytes: admission.peak_inflight.load(Ordering::SeqCst) as u64,
+                busy_replies: admission.busy_replies.load(Ordering::SeqCst),
             };
             (Response::Stats(stats), None)
         }

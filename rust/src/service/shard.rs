@@ -17,10 +17,20 @@
 //! implements chain-aware operations: `match_prefix` batches one
 //! membership probe per shard and walks the chain until the first gap,
 //! exactly like a single node's prefix index but across the fleet.
+//!
+//! **Replication.** A map built with [`ShardMap::with_replication`]
+//! assigns each chunk a *replica set* of `r` distinct shards
+//! ([`ShardMap::replicas_of`]): the primary from the placement function
+//! plus the next `r - 1` shards in ring order. `put_chunk` writes
+//! through to every replica, `match_prefix` falls back to replicas for
+//! chunks the primary is missing (or when the primary is unreachable),
+//! and the fetch path (`service::source::RemoteSource`) fails over in
+//! replica order — so any single shard can die mid-fetch without losing
+//! a chunk.
 
 use std::io;
 
-use crate::fetcher::{ChunkPayload, FetchError};
+use crate::fetcher::FetchError;
 use crate::kvstore::{prefix_hashes, StoredChunk};
 
 use super::client::StoreClient;
@@ -41,24 +51,51 @@ pub enum Placement {
 pub struct ShardMap {
     n: usize,
     placement: Placement,
+    replication: usize,
 }
 
 impl ShardMap {
     pub fn new(n: usize, placement: Placement) -> ShardMap {
+        ShardMap::with_replication(n, placement, 1)
+    }
+
+    /// A map storing each chunk on `replication` distinct shards (the
+    /// primary plus the next `r - 1` in ring order). `replication` is
+    /// clamped to `[1, n]` — a 2-shard fleet cannot hold 3 replicas.
+    pub fn with_replication(n: usize, placement: Placement, replication: usize) -> ShardMap {
         assert!(n > 0, "need at least one shard");
-        ShardMap { n, placement }
+        ShardMap { n, placement, replication: replication.clamp(1, n) }
     }
 
     pub fn n_shards(&self) -> usize {
         self.n
     }
 
-    /// Shard owning chunk `chain_idx` with hash `hash`.
+    /// Effective replication factor (post-clamp).
+    pub fn replication(&self) -> usize {
+        self.replication
+    }
+
+    /// Primary shard owning chunk `chain_idx` with hash `hash`.
     pub fn shard_of(&self, chain_idx: usize, hash: u64) -> usize {
         match self.placement {
             Placement::RoundRobin => chain_idx % self.n,
             Placement::ByHash => (mix(hash) % self.n as u64) as usize,
         }
+    }
+
+    /// The `k`-th replica shard of chunk `chain_idx` (`k = 0` is the
+    /// primary; `k < replication`). Pure arithmetic — no allocation.
+    pub fn replica_at(&self, chain_idx: usize, hash: u64, k: usize) -> usize {
+        debug_assert!(k < self.replication);
+        (self.shard_of(chain_idx, hash) + k) % self.n
+    }
+
+    /// The replica set of chunk `chain_idx`: `replication` distinct
+    /// shards, primary first, then ring order. Readers fail over and
+    /// writers write through in exactly this order.
+    pub fn replicas_of(&self, chain_idx: usize, hash: u64) -> Vec<usize> {
+        (0..self.replication).map(|k| self.replica_at(chain_idx, hash, k)).collect()
     }
 }
 
@@ -82,6 +119,17 @@ impl ShardRouter {
     /// the error names *which* shard of the fleet is down (instead of
     /// folding every node into one opaque I/O failure).
     pub fn connect(addrs: &[String], placement: Placement) -> Result<ShardRouter, FetchError> {
+        ShardRouter::connect_replicated(addrs, placement, 1)
+    }
+
+    /// [`connect`](Self::connect) with a replication factor: each chunk
+    /// lives on `replication` shards (clamped to the fleet size) and
+    /// every chain operation is replica-aware.
+    pub fn connect_replicated(
+        addrs: &[String],
+        placement: Placement,
+        replication: usize,
+    ) -> Result<ShardRouter, FetchError> {
         if addrs.is_empty() {
             return Err(FetchError::transport("no shard addresses to connect to"));
         }
@@ -94,7 +142,8 @@ impl ShardRouter {
             })?;
             clients.push(client);
         }
-        Ok(ShardRouter { map: ShardMap::new(clients.len(), placement), clients })
+        let map = ShardMap::with_replication(clients.len(), placement, replication);
+        Ok(ShardRouter { map, clients })
     }
 
     pub fn map(&self) -> ShardMap {
@@ -110,41 +159,66 @@ impl ShardRouter {
     }
 
     /// Longest stored chain for `tokens` across the fleet: one batched
-    /// membership probe per shard, then the chain walk.
+    /// membership probe per shard per replica round, then the chain
+    /// walk. Probe round `k` asks each chunk's `k`-th replica only for
+    /// the chunks earlier rounds did not find, so a chunk missing (or
+    /// unreachable) on its primary still counts as stored when any
+    /// replica holds it. A shard that fails its probe is treated as
+    /// holding nothing; the error is surfaced only if the chain walk
+    /// stops at a chunk no reachable replica could answer for.
     pub fn match_prefix(&self, tokens: &[u32], block_tokens: usize) -> io::Result<Vec<u64>> {
         let hashes = prefix_hashes(tokens, block_tokens);
-        // batch the probes per owning shard
-        let mut per_shard: Vec<Vec<(usize, u64)>> = vec![Vec::new(); self.clients.len()];
-        for (i, &h) in hashes.iter().enumerate() {
-            per_shard[self.map.shard_of(i, h)].push((i, h));
-        }
         let mut present = vec![false; hashes.len()];
-        for (shard, items) in per_shard.iter().enumerate() {
-            if items.is_empty() {
-                continue;
+        // covered[i]: some replica of chunk i answered a probe
+        let mut covered = vec![false; hashes.len()];
+        let mut first_err: Option<io::Error> = None;
+        for round in 0..self.map.replication() {
+            let mut per_shard: Vec<Vec<(usize, u64)>> = vec![Vec::new(); self.clients.len()];
+            for (i, &h) in hashes.iter().enumerate() {
+                if !present[i] {
+                    per_shard[self.map.replica_at(i, h, round)].push((i, h));
+                }
             }
-            let probe: Vec<u64> = items.iter().map(|&(_, h)| h).collect();
-            let found = self.clients[shard].has_chunks(&probe)?;
-            for (&(i, _), ok) in items.iter().zip(found) {
-                present[i] = ok;
+            for (shard, items) in per_shard.iter().enumerate() {
+                if items.is_empty() {
+                    continue;
+                }
+                let probe: Vec<u64> = items.iter().map(|&(_, h)| h).collect();
+                match self.clients[shard].has_chunks(&probe) {
+                    Ok(found) => {
+                        for (&(i, _), ok) in items.iter().zip(found) {
+                            present[i] |= ok;
+                            covered[i] = true;
+                        }
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
             }
         }
-        Ok(hashes.into_iter().zip(present).take_while(|&(_, ok)| ok).map(|(h, _)| h).collect())
+        let matched = present.iter().take_while(|&&ok| ok).count();
+        if matched < hashes.len() && !covered[matched] {
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+        Ok(hashes.into_iter().take(matched).collect())
     }
 
-    /// Fetch chunk `chain_idx` (hash `hash`) from its owning shard.
-    pub fn fetch_chunk(
-        &self,
-        chain_idx: usize,
-        hash: u64,
-        resolution: &str,
-    ) -> io::Result<Option<ChunkPayload>> {
-        self.clients[self.map.shard_of(chain_idx, hash)].fetch_chunk(hash, resolution)
-    }
-
-    /// Register chunk `chain_idx` on its owning shard.
+    /// Register chunk `chain_idx`, writing through to every replica.
+    /// Returns (stored on all replicas, total evictions across them).
     pub fn put_chunk(&self, chain_idx: usize, chunk: &StoredChunk) -> io::Result<(bool, u32)> {
-        self.clients[self.map.shard_of(chain_idx, chunk.hash)].put_chunk(chunk)
+        let mut all_stored = true;
+        let mut total_evicted = 0u32;
+        for shard in self.map.replicas_of(chain_idx, chunk.hash) {
+            let (stored, evicted) = self.clients[shard].put_chunk(chunk)?;
+            all_stored &= stored;
+            total_evicted += evicted;
+        }
+        Ok((all_stored, total_evicted))
     }
 
     /// Per-node capacity counters (index-aligned with the address list).
@@ -183,5 +257,27 @@ mod tests {
     #[should_panic(expected = "at least one shard")]
     fn zero_shards_rejected() {
         ShardMap::new(0, Placement::RoundRobin);
+    }
+
+    #[test]
+    fn replicas_are_distinct_primary_first_and_clamped() {
+        for placement in [Placement::RoundRobin, Placement::ByHash] {
+            for n in 1..=5usize {
+                for r in 0..=4usize {
+                    let m = ShardMap::with_replication(n, placement, r);
+                    assert_eq!(m.replication(), r.clamp(1, n));
+                    for i in 0..11usize {
+                        let h = crate::kvstore::block_hash(i as u64, &[i as u32, 3]);
+                        let reps = m.replicas_of(i, h);
+                        assert_eq!(reps.len(), m.replication());
+                        assert_eq!(reps[0], m.shard_of(i, h), "primary leads");
+                        let mut sorted = reps.clone();
+                        sorted.sort_unstable();
+                        sorted.dedup();
+                        assert_eq!(sorted.len(), reps.len(), "collision in {reps:?}");
+                    }
+                }
+            }
+        }
     }
 }

@@ -6,7 +6,12 @@
 //!   reference the remote paths must restore bit-identically against;
 //! * [`RemoteSource`] streams from TCP shard servers through a
 //!   [`ShardRouter`], attributing every failure to the shard that
-//!   caused it and recording per-chunk wall-clock wire timings;
+//!   caused it and recording per-chunk wall-clock wire timings. With a
+//!   replicated router it absorbs `Busy` admission refusals with
+//!   bounded retry-with-backoff ([`RetryPolicy`]) and fails over to the
+//!   chunk's replicas on transport faults or retry exhaustion — a shard
+//!   dying mid-fetch is transparent, and `FetchError::Capacity`
+//!   surfaces only when *every* replica of a chunk is saturated;
 //! * [`ObjectStoreSource`] shapes an in-process store like an object
 //!   store (per-request latency plus a throughput ceiling) — the
 //!   ROADMAP's "object-store-shaped `TransportSource`" behind the same
@@ -85,23 +90,107 @@ impl TransportSource for LocalSource {
     }
 }
 
+/// Bounded retry-with-backoff for `Busy` admission refusals, applied
+/// per replica before failing over to the next one.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// `Busy` retries against one replica before failing over.
+    pub max_busy_retries: usize,
+    /// Floor on each backoff sleep (ms), for servers hinting 0.
+    pub min_backoff_ms: u64,
+    /// Cap on each backoff sleep (ms), however large the server's hint
+    /// or the attempt count.
+    pub max_backoff_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_busy_retries: 4, min_backoff_ms: 5, max_backoff_ms: 250 }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (1-based) given the server's
+    /// `retry_after_ms` hint: linear in the attempt, clamped to
+    /// `[min_backoff_ms, max_backoff_ms]`.
+    pub fn backoff(&self, attempt: usize, hinted_ms: u64) -> Duration {
+        let base = hinted_ms.max(self.min_backoff_ms);
+        Duration::from_millis(base.saturating_mul(attempt as u64).min(self.max_backoff_ms))
+    }
+}
+
 /// Stream chunks from remote shard servers.
 pub struct RemoteSource {
     router: ShardRouter,
     hashes: Vec<u64>,
     ladder: Ladder,
+    retry: RetryPolicy,
     /// Per-chunk wire timings, in fetch order (drained into the
-    /// `FetchReport` by `take_timings`).
+    /// `FetchReport` by `take_timings`). `WireTiming::shard` records
+    /// which replica actually served each chunk.
     pub timings: Vec<WireTiming>,
 }
 
 impl RemoteSource {
     pub fn new(router: ShardRouter, hashes: Vec<u64>, ladder: Ladder) -> RemoteSource {
-        RemoteSource { router, hashes, ladder, timings: Vec::new() }
+        RemoteSource { router, hashes, ladder, retry: RetryPolicy::default(), timings: Vec::new() }
+    }
+
+    /// Override the busy retry/backoff policy.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> RemoteSource {
+        self.retry = retry;
+        self
     }
 
     pub fn router(&self) -> &ShardRouter {
         &self.router
+    }
+
+    /// One replica's final verdict for a chunk.
+    fn try_replica(
+        &self,
+        shard: usize,
+        idx: usize,
+        hash: u64,
+        name: &'static str,
+    ) -> Result<ChunkPayload, FetchError> {
+        let mut attempt = 0usize;
+        loop {
+            match self.router.client(shard).fetch_chunk(hash, name) {
+                Ok(Some(payload)) => return Ok(payload),
+                Ok(None) => {
+                    return Err(FetchError::Transport {
+                        chunk: Some(idx),
+                        shard: Some(shard),
+                        detail: format!("chunk {hash:#x} not on shard {shard} (evicted?)"),
+                    });
+                }
+                Err(e) => match FetchError::from_io(&e) {
+                    // admission refusal: bounded retry-with-backoff on
+                    // this replica, then report Busy so the caller can
+                    // fail over (and distinguish saturation from death)
+                    Some(FetchError::Busy { retry_after_ms }) => {
+                        attempt += 1;
+                        if attempt > self.retry.max_busy_retries {
+                            return Err(FetchError::Busy { retry_after_ms });
+                        }
+                        thread::sleep(self.retry.backoff(attempt, retry_after_ms));
+                    }
+                    // other typed refusals (e.g. oversized-frame
+                    // Capacity) pass through unchanged
+                    Some(other) => return Err(other),
+                    None => {
+                        return Err(FetchError::Transport {
+                            chunk: Some(idx),
+                            shard: Some(shard),
+                            detail: format!(
+                                "remote fetch of chunk {hash:#x} from shard {shard} failed: {e}"
+                            ),
+                        });
+                    }
+                },
+            }
+        }
     }
 }
 
@@ -112,29 +201,40 @@ impl TransportSource for RemoteSource {
             .get(idx)
             .ok_or_else(|| FetchError::transport(format!("no chunk at index {idx}")))?;
         let name = self.ladder[res_idx.min(self.ladder.len() - 1)];
-        let shard = self.router.map().shard_of(idx, hash);
+        let replicas = self.router.map().replicas_of(idx, hash);
         let t0 = Instant::now();
-        let fetched = self.router.fetch_chunk(idx, hash, name).map_err(|e| {
-            // recover a typed refusal smuggled through the io boundary
-            // (e.g. an oversized frame's Capacity error), else it's a
-            // transport fault of this chunk's shard
-            FetchError::from_io(&e).unwrap_or_else(|| FetchError::Transport {
-                chunk: Some(idx),
-                shard: Some(shard),
-                detail: format!("remote fetch of chunk {hash:#x} failed: {e}"),
-            })
-        })?;
-        let payload = fetched.ok_or_else(|| FetchError::Transport {
-            chunk: Some(idx),
-            shard: Some(shard),
-            detail: format!("chunk {hash:#x} not on its shard (evicted?)"),
-        })?;
-        self.timings.push(WireTiming {
-            idx,
-            wire_bytes: payload.wire_bytes(),
-            wall_secs: t0.elapsed().as_secs_f64(),
-        });
-        Ok(payload)
+        // Busy is transient and must never escape the source, so track
+        // real faults separately: if any replica failed for a non-Busy
+        // reason, that fault (with its shard attribution) is the story.
+        let mut last_fault: Option<FetchError> = None;
+        for &shard in &replicas {
+            match self.try_replica(shard, idx, hash, name) {
+                Ok(payload) => {
+                    self.timings.push(WireTiming {
+                        idx,
+                        wire_bytes: payload.wire_bytes(),
+                        wall_secs: t0.elapsed().as_secs_f64(),
+                        shard: Some(shard),
+                    });
+                    return Ok(payload);
+                }
+                Err(FetchError::Busy { .. }) => {}
+                Err(e) => last_fault = Some(e),
+            }
+        }
+        // every replica failed: any real fault outranks saturation;
+        // Busy everywhere is a capacity refusal
+        match last_fault {
+            Some(e) => Err(e.at_chunk(idx)),
+            None => Err(FetchError::Capacity {
+                detail: format!(
+                    "all {} replicas of chunk {idx} (hash {hash:#x}) are saturated \
+                     (Busy past {} retries each)",
+                    replicas.len(),
+                    self.retry.max_busy_retries
+                ),
+            }),
+        }
     }
 
     fn kind(&self) -> &'static str {
@@ -203,6 +303,7 @@ impl TransportSource for ObjectStoreSource {
             idx,
             wire_bytes: payload.wire_bytes(),
             wall_secs: t0.elapsed().as_secs_f64(),
+            shard: None,
         });
         Ok(payload)
     }
@@ -271,6 +372,13 @@ pub struct SourceSpec {
     /// TCP backend: shard addresses + placement.
     pub addrs: Vec<String>,
     pub placement: Placement,
+    /// TCP backend: replication factor — each chunk is expected on its
+    /// primary plus `r - 1` replica shards, and the source fails over
+    /// between them. 0 and 1 both mean unreplicated (clamped to the
+    /// fleet size by the shard map).
+    pub replication: usize,
+    /// TCP backend: busy retry/backoff policy.
+    pub retry: RetryPolicy,
     /// TCP backend: token ids for the fleet-wide prefix match (when
     /// set, the factory verifies the whole chain is stored remotely).
     pub tokens: Vec<u32>,
@@ -327,7 +435,11 @@ impl SourceFactory for TcpFactory {
     }
 
     fn create(&self, spec: &SourceSpec) -> Result<Box<dyn TransportSource>, FetchError> {
-        let router = ShardRouter::connect(&spec.addrs, spec.placement)?;
+        let router = ShardRouter::connect_replicated(
+            &spec.addrs,
+            spec.placement,
+            spec.replication.max(1),
+        )?;
         let hashes = if spec.tokens.is_empty() {
             spec.hashes.clone()
         } else {
@@ -358,7 +470,7 @@ impl SourceFactory for TcpFactory {
         if hashes.is_empty() {
             return Err(FetchError::transport("no chunks to fetch (empty hash chain)"));
         }
-        Ok(Box::new(RemoteSource::new(router, hashes, spec.ladder()?)))
+        Ok(Box::new(RemoteSource::new(router, hashes, spec.ladder()?).with_retry(spec.retry)))
     }
 }
 
@@ -447,6 +559,18 @@ impl Default for SourceRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn retry_backoff_honors_hint_floor_and_cap() {
+        let p = RetryPolicy { max_busy_retries: 3, min_backoff_ms: 5, max_backoff_ms: 100 };
+        // a zero hint is floored
+        assert_eq!(p.backoff(1, 0), Duration::from_millis(5));
+        // the hint scales linearly with the attempt...
+        assert_eq!(p.backoff(2, 20), Duration::from_millis(40));
+        // ...but never past the cap
+        assert_eq!(p.backoff(9, 20), Duration::from_millis(100));
+        assert_eq!(p.backoff(1, 5_000), Duration::from_millis(100));
+    }
 
     #[test]
     fn backend_names_roundtrip() {

@@ -188,7 +188,10 @@ fn fig17_token_bucket_replay_within_10_percent() {
     let wire0 = demo.chunks[0].wire_bytes("240p").expect("240p stored") as f64;
     let factor = (wire0 * 8.0) / (6e9 * 0.45);
     let trace = BandwidthTrace::fig17().scaled(factor);
-    let cfg = ServerConfig { throttle: Some(ThrottleSpec::new(trace.clone(), 1.0)) };
+    let cfg = ServerConfig {
+        throttle: Some(ThrottleSpec::new(trace.clone(), 1.0)),
+        ..Default::default()
+    };
 
     let (servers, put_router) = spawn_shards(&demo, 1, cfg);
     drop(put_router);

@@ -1,0 +1,448 @@
+//! Fault-injection tests of the replicated shard service (ISSUE 4):
+//! replica placement, write-through puts, mid-fetch shard death with
+//! transparent failover, and storage-node admission control.
+//!
+//! Acceptance contracts:
+//! * with `replication = 2`, killing any single shard at a chunk
+//!   boundary mid-fetch still restores the demo prefix bit-identically,
+//!   and the report names which replica served each chunk;
+//! * for random token chains, every chunk's replica set holds `r`
+//!   distinct shards (both placements), write-through puts land on
+//!   exactly those shards, and the fleet prefix lookup survives a dead
+//!   primary;
+//! * a saturated node answers `Busy` (never drops the connection), the
+//!   excess requests succeed after backoff, and the server-side
+//!   in-flight byte counter never exceeds `max_inflight`;
+//! * when *every* replica of a chunk is saturated past the retry
+//!   budget, the fetch surfaces `FetchError::Capacity`.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::{
+    ChunkPayload, FetchConfig, FetchError, FetchRequest, Fetcher, ResolutionPolicy,
+};
+use kvfetcher::kvstore::{prefix_hashes, StorageNode};
+use kvfetcher::net::BandwidthTrace;
+use kvfetcher::service::{
+    demo_prefix, protocol, AdmissionConfig, Backend, DemoPrefix, Placement, Response,
+    RetryPolicy, ServerConfig, ShardMap, ShardRouter, SourceRegistry, SourceSpec, StorageServer,
+    StoreClient, ThrottleSpec, DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
+};
+use kvfetcher::util::Prng;
+
+// ---------------------------------------------------------- FaultPlan
+
+/// Declarative fault/limit plan for a loopback shard fleet: which shard
+/// dies at which chunk boundary, which delays accepts or forces `Busy`,
+/// and each node's admission limits. `launch` spawns the servers and
+/// registers the demo chunks through a replicated router (write-through
+/// `PutChunk` over the wire), returning the live fleet.
+struct FaultPlan {
+    replication: usize,
+    placement: Placement,
+    cfgs: Vec<ServerConfig>,
+}
+
+impl FaultPlan {
+    fn new(n_shards: usize, replication: usize) -> FaultPlan {
+        FaultPlan {
+            replication,
+            placement: Placement::RoundRobin,
+            cfgs: vec![ServerConfig::default(); n_shards],
+        }
+    }
+
+    fn placement(mut self, placement: Placement) -> FaultPlan {
+        self.placement = placement;
+        self
+    }
+
+    /// Kill `shard` after it has served `fetches` chunk fetches.
+    fn kill_after(mut self, shard: usize, fetches: usize) -> FaultPlan {
+        self.cfgs[shard].fault.die_after_fetches = Some(fetches);
+        self
+    }
+
+    /// Force `Busy` on `shard`'s first `n` chunk-fetch requests.
+    fn busy_first(mut self, shard: usize, n: usize) -> FaultPlan {
+        self.cfgs[shard].fault.busy_first_fetches = n;
+        self
+    }
+
+    /// Delay every accept on `shard` by `ms` milliseconds.
+    fn delay_accepts(mut self, shard: usize, ms: u64) -> FaultPlan {
+        self.cfgs[shard].fault.accept_delay_ms = ms;
+        self
+    }
+
+    fn launch(&self, demo: &DemoPrefix) -> Fleet {
+        let mut servers = Vec::new();
+        let mut addrs = Vec::new();
+        for cfg in &self.cfgs {
+            let node = StorageNode::new(demo.chunk_tokens);
+            let server = StorageServer::spawn("127.0.0.1:0", node, cfg.clone()).expect("bind");
+            addrs.push(server.local_addr().to_string());
+            servers.push(server);
+        }
+        let router = ShardRouter::connect_replicated(&addrs, self.placement, self.replication)
+            .expect("connect fleet");
+        for (i, chunk) in demo.chunks.iter().enumerate() {
+            let (stored, _) = router.put_chunk(i, chunk).expect("write-through put");
+            assert!(stored, "chunk {i} must register on every replica");
+        }
+        drop(router); // free the populate connections
+        Fleet { servers, addrs, replication: self.replication, placement: self.placement }
+    }
+}
+
+struct Fleet {
+    servers: Vec<StorageServer>,
+    addrs: Vec<String>,
+    replication: usize,
+    placement: Placement,
+}
+
+impl Fleet {
+    /// A TCP source spec over this fleet, with a fast retry policy so
+    /// busy faults resolve in test time.
+    fn source_spec(&self, demo: &DemoPrefix) -> SourceSpec {
+        let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+        spec.addrs = self.addrs.clone();
+        spec.placement = self.placement;
+        spec.replication = self.replication;
+        spec.tokens = demo.tokens.clone();
+        spec.chunk_tokens = demo.chunk_tokens;
+        spec.retry = RetryPolicy { max_busy_retries: 6, min_backoff_ms: 2, max_backoff_ms: 50 };
+        spec
+    }
+
+    fn map(&self) -> ShardMap {
+        ShardMap::with_replication(self.servers.len(), self.placement, self.replication)
+    }
+
+    fn shutdown(self) {
+        for s in self.servers {
+            s.shutdown();
+        }
+    }
+}
+
+fn demo_request(demo: &DemoPrefix, n_chunks: usize) -> FetchRequest {
+    let total_tokens = n_chunks * demo.chunk_tokens;
+    FetchRequest::new(total_tokens, total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2)
+        .with_hashes(demo.hashes.clone())
+        .resolution(ResolutionPolicy::Fixed(0))
+        .exec(ExecMode::Pipelined)
+}
+
+fn demo_fetcher(demo: &DemoPrefix, replication: usize) -> Fetcher {
+    Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .fetch_config(FetchConfig { chunk_tokens: demo.chunk_tokens, ..Default::default() })
+        .bandwidth(BandwidthTrace::constant(8.0))
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .replication(replication)
+        .build()
+}
+
+/// Exact frame cost of serving one demo chunk's 144p payload — the unit
+/// the server's in-flight accounting reserves.
+fn chunk_frame_len(demo: &DemoPrefix, idx: usize) -> usize {
+    let chunk = &demo.chunks[idx];
+    let v = chunk.variant("144p").expect("144p stored");
+    let payload = ChunkPayload {
+        hash: chunk.hash,
+        tokens: chunk.tokens,
+        resolution: "144p".into(),
+        scales: chunk.scales.clone(),
+        group_bytes: v.group_bytes.clone(),
+    };
+    let (tag, body) = protocol::encode_response(&Response::Chunk(payload));
+    protocol::frame_bytes(tag, &body).len()
+}
+
+// ------------------------------------------------- failover acceptance
+
+/// Acceptance: with replication=2 on 3 shards, killing *any* single
+/// shard after its first served chunk still restores the whole demo
+/// prefix bit-identically, and the wire timings name the replica that
+/// served each chunk (at least one chunk must have failed over).
+#[test]
+fn killing_any_single_shard_mid_fetch_restores_bit_identical() {
+    let n_chunks = 6;
+    for victim in 0..3usize {
+        let demo = demo_prefix(31 + victim as u64, n_chunks, 32);
+        let fleet = FaultPlan::new(3, 2).kill_after(victim, 1).launch(&demo);
+        let spec = fleet.source_spec(&demo);
+        let source =
+            SourceRegistry::with_defaults().create(Backend::Tcp, &spec).expect("tcp source");
+        let mut session =
+            demo_fetcher(&demo, 2).session(demo_request(&demo, n_chunks)).with_source(source);
+        session.run().unwrap_or_else(|e| panic!("victim {victim}: failover must complete: {e}"));
+        let report = session.take_report().expect("report stored");
+        assert!(!report.aborted, "victim {victim}");
+        assert_eq!(report.restored.len(), n_chunks, "victim {victim}");
+        for (d, q) in report.restored.iter().zip(&demo.quants) {
+            assert_eq!(d.quant.data, q.data, "victim {victim}: restore must be bit-exact");
+            assert_eq!(d.quant.scales, q.scales, "victim {victim}");
+        }
+
+        // the harness reports which replica served each chunk; served
+        // shards must come from the chunk's replica set, and the chunks
+        // the dead primary owned past the boundary came from replica 1
+        assert_eq!(report.wire_timings.len(), n_chunks);
+        let map = fleet.map();
+        let mut failed_over = 0usize;
+        for t in &report.wire_timings {
+            let replicas = map.replicas_of(t.idx, demo.hashes[t.idx]);
+            let served = t.shard.expect("tcp source names the serving shard");
+            assert!(
+                replicas.contains(&served),
+                "victim {victim}: chunk {} served by non-replica shard {served}",
+                t.idx
+            );
+            if served != replicas[0] {
+                assert_eq!(served, replicas[1], "failover follows replica order");
+                failed_over += 1;
+            }
+        }
+        assert!(failed_over >= 1, "victim {victim}: no chunk failed over to a replica");
+        fleet.shutdown();
+    }
+}
+
+/// Forced `Busy` replies and delayed accepts are absorbed by the retry
+/// policy: the fetch completes bit-exact and the refusals are visible
+/// in the faulty node's counters.
+#[test]
+fn forced_busy_and_slow_accepts_are_ridden_out() {
+    let n_chunks = 4;
+    let demo = demo_prefix(71, n_chunks, 32);
+    let fleet = FaultPlan::new(2, 2).busy_first(0, 2).delay_accepts(1, 40).launch(&demo);
+    let spec = fleet.source_spec(&demo);
+    let source = SourceRegistry::with_defaults().create(Backend::Tcp, &spec).expect("tcp source");
+    let mut session =
+        demo_fetcher(&demo, 2).session(demo_request(&demo, n_chunks)).with_source(source);
+    session.run().expect("busy faults must be retried through");
+    let report = session.take_report().expect("report stored");
+    assert_eq!(report.restored.len(), n_chunks);
+    for (d, q) in report.restored.iter().zip(&demo.quants) {
+        assert_eq!(d.quant.data, q.data, "restore must be bit-exact despite busy faults");
+    }
+    let stats = StoreClient::connect(&fleet.addrs[0]).expect("connect").stats().expect("stats");
+    assert_eq!(stats.busy_replies, 2, "both forced refusals were issued");
+    fleet.shutdown();
+}
+
+// ------------------------------------------------- placement property
+
+/// Property: across shard counts, replication factors 1..=3, and both
+/// placements, every chunk of a random token chain is mapped to
+/// `min(r, n)` *distinct* shards, primary first.
+#[test]
+fn replica_sets_cover_r_distinct_shards_for_random_chains() {
+    let mut prng = Prng::new(0xFA17);
+    for n_shards in 1..=5usize {
+        for r in 1..=3usize {
+            for placement in [Placement::RoundRobin, Placement::ByHash] {
+                let map = ShardMap::with_replication(n_shards, placement, r);
+                let eff = r.min(n_shards);
+                assert_eq!(map.replication(), eff);
+                let tokens: Vec<u32> = (0..27 * 8).map(|_| prng.next_u64() as u32).collect();
+                let hashes = prefix_hashes(&tokens, 8);
+                assert!(hashes.len() >= 27);
+                for (i, &h) in hashes.iter().enumerate() {
+                    let reps = map.replicas_of(i, h);
+                    assert_eq!(reps.len(), eff, "{placement:?} n={n_shards} r={r}");
+                    assert_eq!(reps[0], map.shard_of(i, h), "primary leads the set");
+                    let unique: HashSet<usize> = reps.iter().copied().collect();
+                    assert_eq!(unique.len(), eff, "replicas collide: {reps:?}");
+                    assert!(reps.iter().all(|&s| s < n_shards));
+                }
+            }
+        }
+    }
+}
+
+/// Write-through puts land every chunk on exactly its replica set (both
+/// placements, checked over the wire), and the fleet prefix lookup
+/// still finds the whole chain after the primary-holding shard dies.
+#[test]
+fn write_through_reaches_every_replica_and_lookup_survives_death() {
+    let demo = demo_prefix(41, 5, 32);
+    for placement in [Placement::RoundRobin, Placement::ByHash] {
+        let mut fleet = FaultPlan::new(3, 2).placement(placement).launch(&demo);
+        let map = fleet.map();
+        let clients: Vec<StoreClient> =
+            fleet.addrs.iter().map(|a| StoreClient::connect(a).expect("connect")).collect();
+        for (i, &h) in demo.hashes.iter().enumerate() {
+            let holders: Vec<usize> = (0..3)
+                .filter(|&s| clients[s].has_chunks(&[h]).expect("probe")[0])
+                .collect();
+            let mut replicas = map.replicas_of(i, h);
+            replicas.sort_unstable();
+            assert_eq!(holders, replicas, "{placement:?}: chunk {i} on the wrong shards");
+        }
+        drop(clients);
+
+        let router =
+            ShardRouter::connect_replicated(&fleet.addrs, placement, 2).expect("connect");
+        assert_eq!(
+            router.match_prefix(&demo.tokens, demo.chunk_tokens).expect("fleet lookup"),
+            demo.hashes
+        );
+        // kill shard 0: every chunk it held still resolves via replicas
+        fleet.servers.remove(0).shutdown();
+        assert_eq!(
+            router.match_prefix(&demo.tokens, demo.chunk_tokens).expect("degraded lookup"),
+            demo.hashes,
+            "{placement:?}: lookup must survive a dead shard"
+        );
+        fleet.shutdown();
+    }
+}
+
+// --------------------------------------------------- admission control
+
+/// Acceptance: a 1-shard node under parallel clients answers `Busy` at
+/// its in-flight byte cap instead of dropping connections, the refused
+/// clients succeed after backoff, and the server-side counter proves
+/// `max_inflight` was never exceeded.
+#[test]
+fn saturated_node_returns_busy_then_succeeds_and_inflight_is_capped() {
+    let demo = demo_prefix(53, 1, 48);
+    let frame_len = chunk_frame_len(&demo, 0);
+    // fits one reply in flight, never two
+    let max_inflight = frame_len + frame_len / 2;
+    // pace the wire so one reply takes ~80ms: concurrent fetches must
+    // overlap and collide with the cap
+    let gbps = (frame_len as f64 * 8.0) / (0.080 * 1e9);
+    let mut node = StorageNode::new(demo.chunk_tokens);
+    node.register(demo.chunks[0].clone());
+    let cfg = ServerConfig {
+        throttle: Some(ThrottleSpec::new(BandwidthTrace::constant(gbps), 1.0)),
+        admission: AdmissionConfig { max_inflight_bytes: max_inflight, ..Default::default() },
+        ..Default::default()
+    };
+    let server = StorageServer::spawn("127.0.0.1:0", node, cfg).expect("bind");
+    let addr = server.local_addr().to_string();
+
+    let busy_seen = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                let client = StoreClient::connect(&addr).expect("connect");
+                let mut retries = 0usize;
+                loop {
+                    match client.fetch_chunk(demo.hashes[0], "144p") {
+                        Ok(Some(p)) => {
+                            assert_eq!(p.hash, demo.hashes[0]);
+                            break;
+                        }
+                        Ok(None) => panic!("chunk must be stored"),
+                        Err(e) => match FetchError::from_io(&e) {
+                            Some(FetchError::Busy { retry_after_ms }) => {
+                                busy_seen.fetch_add(1, Ordering::SeqCst);
+                                retries += 1;
+                                assert!(retries < 200, "no progress after 200 busy retries");
+                                std::thread::sleep(Duration::from_millis(
+                                    retry_after_ms.clamp(5, 50),
+                                ));
+                            }
+                            other => panic!("connection dropped instead of Busy: {e} {other:?}"),
+                        },
+                    }
+                }
+            });
+        }
+    });
+    assert!(
+        busy_seen.load(Ordering::SeqCst) >= 1,
+        "parallel fetches over the cap must see Busy"
+    );
+
+    let stats = StoreClient::connect(&addr).expect("connect").stats().expect("stats");
+    assert!(stats.busy_replies >= busy_seen.load(Ordering::SeqCst) as u64);
+    assert!(
+        (stats.peak_inflight_bytes as usize) <= max_inflight,
+        "in-flight bytes exceeded the cap: {} > {max_inflight}",
+        stats.peak_inflight_bytes
+    );
+    assert!((stats.peak_inflight_bytes as usize) >= frame_len, "at least one reply was metered");
+    assert_eq!(stats.inflight_bytes, 0, "all reservations released");
+    server.shutdown();
+}
+
+/// Over the connection limit, data-plane requests are refused with
+/// `Busy` (the connection is not dropped, and the control plane stays
+/// reachable); once the other connection closes, the refused client
+/// succeeds.
+#[test]
+fn connection_limit_refuses_busy_then_recovers() {
+    let demo = demo_prefix(83, 1, 32);
+    let mut node = StorageNode::new(demo.chunk_tokens);
+    node.register(demo.chunks[0].clone());
+    let cfg = ServerConfig {
+        admission: AdmissionConfig { max_conns: 1, ..Default::default() },
+        ..Default::default()
+    };
+    let server = StorageServer::spawn("127.0.0.1:0", node, cfg).expect("bind");
+    let addr = server.local_addr().to_string();
+
+    let first = StoreClient::connect(&addr).expect("connect");
+    assert!(first.fetch_chunk(demo.hashes[0], "144p").expect("within limit").is_some());
+
+    let second = StoreClient::connect(&addr).expect("connect");
+    let err = second.fetch_chunk(demo.hashes[0], "144p").expect_err("over the limit");
+    assert!(
+        matches!(FetchError::from_io(&err), Some(FetchError::Busy { .. })),
+        "expected a typed Busy refusal, got {err}"
+    );
+    // control plane still answers while saturated
+    assert!(second.stats().expect("stats stay reachable").busy_replies >= 1);
+
+    drop(first);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        match second.fetch_chunk(demo.hashes[0], "144p") {
+            Ok(Some(_)) => break,
+            Err(e) if matches!(FetchError::from_io(&e), Some(FetchError::Busy { .. })) => {
+                assert!(Instant::now() < deadline, "connection slot never freed");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            other => panic!("unexpected result {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+/// When *every* replica of a chunk is saturated past the retry budget,
+/// the sourced fetch surfaces `FetchError::Capacity` (not a transport
+/// error), and the session keeps the partial report.
+#[test]
+fn all_replicas_saturated_surfaces_capacity() {
+    let n_chunks = 2;
+    let demo = demo_prefix(67, n_chunks, 32);
+    let fleet =
+        FaultPlan::new(2, 2).busy_first(0, 100_000).busy_first(1, 100_000).launch(&demo);
+    let mut spec = fleet.source_spec(&demo);
+    spec.retry = RetryPolicy { max_busy_retries: 2, min_backoff_ms: 1, max_backoff_ms: 5 };
+    let source = SourceRegistry::with_defaults().create(Backend::Tcp, &spec).expect("tcp source");
+    let mut session =
+        demo_fetcher(&demo, 2).session(demo_request(&demo, n_chunks)).with_source(source);
+    match session.run() {
+        Err(FetchError::Capacity { detail }) => {
+            assert!(detail.contains("saturated"), "{detail}")
+        }
+        other => panic!("wrong result {:?}", other.err()),
+    }
+    let report = session.report().expect("partial report kept");
+    assert!(report.aborted);
+    assert!(report.restored.is_empty());
+    fleet.shutdown();
+}
