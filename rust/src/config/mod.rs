@@ -4,7 +4,7 @@
 
 use crate::cluster::{DeviceSpec, ModelSpec};
 use crate::engine::{EngineConfig, ExecMode};
-use crate::fetcher::{FetchConfig, PipelineConfig};
+use crate::fetcher::{FetchConfig, PipelineConfig, ReadPolicy};
 use crate::net::BandwidthTrace;
 use crate::scheduler::SchedulerConfig;
 use crate::service::{AdmissionConfig, Backend, ObjStoreShape};
@@ -22,11 +22,20 @@ pub struct ServiceConfig {
     /// Replication factor: each chunk lives on its primary shard plus
     /// `replication - 1` replicas (clamped to the fleet size).
     pub replication: usize,
+    /// Replica-read scheduling: which replica serves each chunk when
+    /// `replication >= 2` (`primary-first` | `round-robin` |
+    /// `least-inflight` | `estimator-weighted`).
+    pub read_policy: ReadPolicy,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { max_inflight: 0, max_conns: 0, replication: 1 }
+        ServiceConfig {
+            max_inflight: 0,
+            max_conns: 0,
+            replication: 1,
+            read_policy: ReadPolicy::PrimaryFirst,
+        }
     }
 }
 
@@ -159,6 +168,15 @@ impl Experiment {
             max_inflight: c.get_i64("service", "max_inflight", 0).max(0) as usize,
             max_conns: c.get_i64("service", "max_conns", 0).max(0) as usize,
             replication: c.get_i64("service", "replication", 1).max(1) as usize,
+            read_policy: {
+                let name = c.get_str("service", "read_policy", "primary-first");
+                ReadPolicy::by_name(name).unwrap_or_else(|| {
+                    eprintln!(
+                        "config: unknown [service] read_policy = {name:?}; using primary-first"
+                    );
+                    ReadPolicy::PrimaryFirst
+                })
+            },
         };
         Experiment {
             name: c.get_str("", "name", &d.name).to_string(),
@@ -218,6 +236,7 @@ mod tests {
         assert_eq!(e.service.max_inflight, 0);
         assert_eq!(e.service.max_conns, 0);
         assert_eq!(e.service.replication, 1);
+        assert_eq!(e.service.read_policy, ReadPolicy::PrimaryFirst);
         let a = e.service.admission();
         assert_eq!((a.max_conns, a.max_inflight_bytes), (0, 0));
         assert!(a.retry_after_ms > 0);
@@ -241,6 +260,7 @@ remote = "127.0.0.1:7301, 127.0.0.1:7302"
 max_inflight = 50000000
 max_conns = 32
 replication = 2
+read_policy = "least-inflight"
 [scheduler]
 fetching_aware = false
 [fetch]
@@ -271,6 +291,7 @@ n_requests = 10
         assert_eq!(e.service.max_inflight, 50_000_000);
         assert_eq!(e.service.max_conns, 32);
         assert_eq!(e.service.replication, 2);
+        assert_eq!(e.service.read_policy, ReadPolicy::LeastInflight);
         let a = e.service.admission();
         assert_eq!(a.max_conns, 32);
         assert_eq!(a.max_inflight_bytes, 50_000_000);

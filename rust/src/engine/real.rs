@@ -5,8 +5,8 @@
 //! accuracy benches (Fig. 8 / Fig. 20).
 //!
 //! The wire codings ([`code_prefix`], [`best_intra`]) are pure
-//! CPU-codec paths and always available; [`RealEngine`] and
-//! [`accuracy_eval`] execute the model via PJRT and are gated behind
+//! CPU-codec paths and always available; `RealEngine` and
+//! `accuracy_eval` execute the model via PJRT and are gated behind
 //! the non-default `pjrt` feature.
 
 #[cfg(feature = "pjrt")]

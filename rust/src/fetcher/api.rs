@@ -24,6 +24,8 @@
 //! sources. Failures are typed [`FetchError`]s end to end — no more
 //! `Result<_, String>` anywhere on the fetch path.
 
+#![warn(missing_docs)]
+
 use std::error::Error;
 use std::fmt;
 use std::thread;
@@ -53,8 +55,11 @@ use super::{plan_fetch, FetchConfig, FetchPlan};
 /// real bytes only flow through the threaded stages.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ExecMode {
+    /// Single-pass analytic planning on the caller's thread.
     #[default]
     Analytic,
+    /// The real three-stage threaded executor (bounded channels,
+    /// backpressure, cancellation).
     Pipelined,
 }
 
@@ -69,6 +74,71 @@ impl ExecMode {
     }
 }
 
+// --------------------------------------------------------- read policy
+
+/// How a sourced fetch over a *replicated* shard fleet picks the
+/// replica that serves each chunk (`[service] read_policy` /
+/// `fetch --read-policy`). `service::source::RemoteSource` implements
+/// the policies: the policy orders each chunk's replica set, the source
+/// tries replicas in that order, and the PR 4 `Busy`-retry + failover
+/// machinery still walks the rest of the set when the first pick
+/// refuses or faults. `WireTiming::shard` records who actually served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReadPolicy {
+    /// Always try the placement primary first (the pre-PR 5 behavior):
+    /// deterministic, but a hot primary serves every chunk it owns.
+    #[default]
+    PrimaryFirst,
+    /// Rotate the starting replica per chunk by a hash-keyed offset
+    /// (`ShardMap::rotated_replicas_of`), spreading a multi-chunk
+    /// fetch across replicas without any control-plane traffic. Keyed
+    /// on the chunk hash, not the chain position, so the rotation
+    /// cannot alias with the placement stripe.
+    RoundRobin,
+    /// Probe each replica's `NodeStats` in-flight bytes (one
+    /// control-plane `Stats` round trip per replica per chunk — these
+    /// always pass admission) and start with the least-loaded replica;
+    /// ties and unreachable probes keep primary-first order, with
+    /// unreachable replicas sorted last.
+    LeastInflight,
+    /// Order replicas by a per-replica delivered-bandwidth EWMA built
+    /// from this source's own chunk observations; replicas with no
+    /// observation yet are tried first (explore every link once, then
+    /// exploit the fastest).
+    EstimatorWeighted,
+}
+
+impl ReadPolicy {
+    /// Parse a config/CLI name.
+    pub fn by_name(name: &str) -> Option<ReadPolicy> {
+        match name.to_ascii_lowercase().as_str() {
+            "primary" | "primary-first" => Some(ReadPolicy::PrimaryFirst),
+            "round-robin" | "rr" => Some(ReadPolicy::RoundRobin),
+            "least-inflight" | "inflight" => Some(ReadPolicy::LeastInflight),
+            "estimator" | "estimator-weighted" | "bandwidth" => {
+                Some(ReadPolicy::EstimatorWeighted)
+            }
+            _ => None,
+        }
+    }
+
+    /// Canonical config/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReadPolicy::PrimaryFirst => "primary-first",
+            ReadPolicy::RoundRobin => "round-robin",
+            ReadPolicy::LeastInflight => "least-inflight",
+            ReadPolicy::EstimatorWeighted => "estimator-weighted",
+        }
+    }
+}
+
+impl fmt::Display for ReadPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 // ---------------------------------------------------------- error type
 
 /// Why a fetch failed, typed so callers can react per cause instead of
@@ -80,26 +150,54 @@ pub enum FetchError {
     /// A backend node could not be dialed. `shard` names which node of
     /// the address list is down — the fleet diagnosis the old string
     /// errors hid.
-    Connect { shard: usize, addr: String, detail: String },
+    Connect {
+        /// Index of the unreachable node in the fleet address list.
+        shard: usize,
+        /// The address that refused the dial.
+        addr: String,
+        /// Underlying dial error.
+        detail: String,
+    },
     /// Transport-level failure after connect: socket I/O mid-fetch, a
     /// chunk missing from its owning shard, a store lookup miss.
-    Transport { chunk: Option<usize>, shard: Option<usize>, detail: String },
+    Transport {
+        /// Fetch-order chunk index the failure struck at, if known.
+        chunk: Option<usize>,
+        /// Shard the failing exchange was against, if known.
+        shard: Option<usize>,
+        /// Underlying failure.
+        detail: String,
+    },
     /// Wire bytes arrived but would not decode: truncated or malformed
     /// frames, codec faults, shape mismatches between group streams.
-    Decode { chunk: Option<usize>, detail: String },
+    Decode {
+        /// Fetch-order chunk index the failure struck at, if known.
+        chunk: Option<usize>,
+        /// Underlying decode failure.
+        detail: String,
+    },
     /// The fetch was cancelled cooperatively (admission-rule abort or
     /// request teardown); `chunks_completed` made it through all stages.
-    Cancelled { chunks_completed: usize },
+    Cancelled {
+        /// Chunks that had completed all three stages at the abort.
+        chunks_completed: usize,
+    },
     /// A capacity bound refused the work: oversized wire frame, a full
     /// store, an exhausted interner, or a fetch whose every replica was
     /// saturated (`Busy` past the retry budget on all of them).
-    Capacity { detail: String },
+    Capacity {
+        /// Which bound refused, and by how much.
+        detail: String,
+    },
     /// A storage node refused one request at an admission limit and
     /// suggested retrying after `retry_after_ms`. Transient by design:
     /// `RemoteSource` absorbs these with bounded retry-with-backoff and
     /// replica failover, so callers only see `Busy` when talking to a
     /// node directly (e.g. through `StoreClient`).
-    Busy { retry_after_ms: u64 },
+    Busy {
+        /// The server's back-off hint, in milliseconds.
+        retry_after_ms: u64,
+    },
 }
 
 impl FetchError {
@@ -193,6 +291,7 @@ pub enum ResolutionPolicy {
 pub struct FetchRequest {
     /// Simulation time the fetch is issued.
     pub now: f64,
+    /// Reusable prefix length in tokens.
     pub reusable_tokens: usize,
     /// Raw fp16 bytes of the whole reusable prefix.
     pub raw_bytes_total: usize,
@@ -201,13 +300,17 @@ pub struct FetchRequest {
     /// ([`TransportSource::set_hashes`]), so a request built once fully
     /// describes which chunks a sourced fetch pulls.
     pub hashes: Vec<u64>,
+    /// Per-request resolution policy (overrides the fetcher's config).
     pub resolution: ResolutionPolicy,
+    /// How the fetch executes (analytic plan vs threaded pipeline).
     pub exec: ExecMode,
     /// Override the pipeline's bounded-channel depth for this request.
     pub queue_depth: Option<usize>,
 }
 
 impl FetchRequest {
+    /// A request for `reusable_tokens` of prefix whose raw fp16 size is
+    /// `raw_bytes_total`, with default policies.
     pub fn new(reusable_tokens: usize, raw_bytes_total: usize) -> FetchRequest {
         FetchRequest { reusable_tokens, raw_bytes_total, ..Default::default() }
     }
@@ -218,21 +321,26 @@ impl FetchRequest {
         self
     }
 
+    /// Chained chunk hashes a sourced fetch pulls (see
+    /// [`FetchRequest::hashes`]).
     pub fn with_hashes(mut self, hashes: Vec<u64>) -> FetchRequest {
         self.hashes = hashes;
         self
     }
 
+    /// Override the resolution policy for this request.
     pub fn resolution(mut self, policy: ResolutionPolicy) -> FetchRequest {
         self.resolution = policy;
         self
     }
 
+    /// Select the execution mode for this request.
     pub fn exec(mut self, mode: ExecMode) -> FetchRequest {
         self.exec = mode;
         self
     }
 
+    /// Override the bounded-channel depth (floored at 1).
     pub fn queue_depth(mut self, depth: usize) -> FetchRequest {
         self.queue_depth = Some(depth.max(1));
         self
@@ -250,6 +358,7 @@ impl FetchRequest {
 pub struct FetchReport {
     /// `TransportSource::kind()` of the attached backend, if any.
     pub backend: Option<&'static str>,
+    /// The virtual-time fetch timeline (identical for both exec modes).
     pub plan: FetchPlan,
     /// True if the fetch stopped early (cancellation or stage fault).
     pub aborted: bool,
@@ -272,6 +381,7 @@ impl FetchReport {
         self.plan.done_at
     }
 
+    /// Per-stage TTFT breakdown of the plan.
     pub fn breakdown(&self) -> &TtftBreakdown {
         &self.plan.breakdown
     }
@@ -290,6 +400,7 @@ pub struct FetcherBuilder {
     pool: DecodePool,
     est_alpha: f64,
     replication: usize,
+    read_policy: ReadPolicy,
 }
 
 impl Default for FetcherBuilder {
@@ -302,25 +413,30 @@ impl Default for FetcherBuilder {
             pool: DecodePool::new(7, h20_table()),
             est_alpha: 0.5,
             replication: 1,
+            read_policy: ReadPolicy::PrimaryFirst,
         }
     }
 }
 
 impl FetcherBuilder {
+    /// A builder with the paper's default profile / config / link.
     pub fn new() -> FetcherBuilder {
         FetcherBuilder::default()
     }
 
+    /// System profile (which paper system the fetch models).
     pub fn profile(mut self, profile: SystemProfile) -> FetcherBuilder {
         self.profile = profile;
         self
     }
 
+    /// Fetch configuration (chunking, resolution policy, restore).
     pub fn fetch_config(mut self, cfg: FetchConfig) -> FetcherBuilder {
         self.cfg = cfg;
         self
     }
 
+    /// Pipeline tuning of the threaded executor.
     pub fn pipeline(mut self, pipe: PipelineConfig) -> FetcherBuilder {
         self.pipe = pipe;
         self
@@ -366,6 +482,17 @@ impl FetcherBuilder {
         self
     }
 
+    /// Replica-read scheduling policy of sharded backends: how each
+    /// chunk's serving replica is picked when `replication >= 2` (see
+    /// [`ReadPolicy`]). Transport factories read it through
+    /// [`Fetcher::read_policy`] when the caller builds a `SourceSpec`.
+    pub fn read_policy(mut self, policy: ReadPolicy) -> FetcherBuilder {
+        self.read_policy = policy;
+        self
+    }
+
+    /// Build the configured [`Fetcher`] with pristine link / pool /
+    /// estimator state.
     pub fn build(self) -> Fetcher {
         Fetcher {
             link: NetLink::new(self.trace.clone()),
@@ -378,6 +505,7 @@ impl FetcherBuilder {
             pool_template: self.pool,
             est_alpha: self.est_alpha,
             replication: self.replication,
+            read_policy: self.read_policy,
         }
     }
 }
@@ -397,16 +525,19 @@ pub struct Fetcher {
     pool_template: DecodePool,
     est_alpha: f64,
     replication: usize,
+    read_policy: ReadPolicy,
     link: NetLink,
     pool: DecodePool,
     est: BandwidthEstimator,
 }
 
 impl Fetcher {
+    /// Start configuring a fetcher.
     pub fn builder() -> FetcherBuilder {
         FetcherBuilder::default()
     }
 
+    /// The system profile fetches run under.
     pub fn profile(&self) -> &SystemProfile {
         &self.profile
     }
@@ -417,6 +548,7 @@ impl Fetcher {
         self.profile = profile;
     }
 
+    /// The fetch configuration.
     pub fn config(&self) -> &FetchConfig {
         &self.cfg
     }
@@ -433,6 +565,13 @@ impl Fetcher {
         self.replication
     }
 
+    /// Replica-read scheduling policy for sharded backends (see
+    /// [`FetcherBuilder::read_policy`]).
+    pub fn read_policy(&self) -> ReadPolicy {
+        self.read_policy
+    }
+
+    /// The pipeline tuning of the threaded executor.
     pub fn pipeline_config(&self) -> &PipelineConfig {
         &self.pipe
     }
@@ -442,14 +581,17 @@ impl Fetcher {
         self.pipe = pipe;
     }
 
+    /// The live virtual link state fetches share.
     pub fn link(&self) -> &NetLink {
         &self.link
     }
 
+    /// The live decode-pool state fetches share.
     pub fn pool(&self) -> &DecodePool {
         &self.pool
     }
 
+    /// The live bandwidth-estimator state fetches share.
     pub fn estimator(&self) -> &BandwidthEstimator {
         &self.est
     }
@@ -628,6 +770,7 @@ impl FetchSession {
         self
     }
 
+    /// The request this session runs.
     pub fn request(&self) -> &FetchRequest {
         &self.req
     }
@@ -660,6 +803,7 @@ impl FetchSession {
         self.report.as_ref()
     }
 
+    /// Take ownership of the last run's report, leaving `None`.
     pub fn take_report(&mut self) -> Option<FetchReport> {
         self.report.take()
     }
@@ -696,6 +840,7 @@ impl FetchJob {
         self.cancel.cancel();
     }
 
+    /// Clone of the job's cancel token.
     pub fn cancel_token(&self) -> CancelToken {
         self.cancel.clone()
     }
@@ -745,6 +890,25 @@ mod tests {
         assert_eq!(Fetcher::builder().build().replication(), 1);
         assert_eq!(Fetcher::builder().replication(3).build().replication(), 3);
         assert_eq!(Fetcher::builder().replication(0).build().replication(), 1);
+    }
+
+    #[test]
+    fn read_policy_parses_and_lands_on_the_fetcher() {
+        for p in [
+            ReadPolicy::PrimaryFirst,
+            ReadPolicy::RoundRobin,
+            ReadPolicy::LeastInflight,
+            ReadPolicy::EstimatorWeighted,
+        ] {
+            assert_eq!(ReadPolicy::by_name(p.name()), Some(p), "{p}");
+            assert_eq!(Fetcher::builder().read_policy(p).build().read_policy(), p);
+        }
+        assert_eq!(ReadPolicy::by_name("rr"), Some(ReadPolicy::RoundRobin));
+        assert_eq!(ReadPolicy::by_name("Primary"), Some(ReadPolicy::PrimaryFirst));
+        assert_eq!(ReadPolicy::by_name("bandwidth"), Some(ReadPolicy::EstimatorWeighted));
+        assert_eq!(ReadPolicy::by_name("fastest"), None);
+        assert_eq!(ReadPolicy::default(), ReadPolicy::PrimaryFirst);
+        assert_eq!(Fetcher::builder().build().read_policy(), ReadPolicy::PrimaryFirst);
     }
 
     #[test]

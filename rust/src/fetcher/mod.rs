@@ -20,7 +20,7 @@ pub mod transport;
 
 pub use api::{
     ExecMode, FetchError, FetchJob, FetchReport, FetchRequest, FetchSession, Fetcher,
-    FetcherBuilder, ResolutionPolicy,
+    FetcherBuilder, ReadPolicy, ResolutionPolicy,
 };
 pub use executor::{FetchOutcome, FetchParams};
 pub use pipeline::{serialized_fetch, CancelToken, PipelineConfig};

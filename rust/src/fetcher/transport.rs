@@ -21,10 +21,15 @@ use super::api::FetchError;
 /// plus the dequantization scale sideband.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChunkPayload {
+    /// Chained hash of the chunk.
     pub hash: u64,
+    /// Tokens the chunk covers.
     pub tokens: usize,
+    /// Resolution-variant name these bitstreams were encoded at.
     pub resolution: String,
+    /// Dequantization scale sideband.
     pub scales: Vec<f32>,
+    /// One lossless video bitstream per 3-plane group.
     pub group_bytes: Vec<Vec<u8>>,
 }
 
@@ -53,9 +58,10 @@ pub struct WireTiming {
     /// Wall-clock request-to-last-byte duration (seconds), including
     /// any busy backoff and replica failover the source performed.
     pub wall_secs: f64,
-    /// Shard that actually served the chunk — the primary unless the
-    /// source failed over to a replica. `None` for sources without a
-    /// shard fleet.
+    /// Shard that actually served the chunk — the first pick of the
+    /// source's `ReadPolicy` (the primary under the default
+    /// primary-first policy) unless the source failed over to another
+    /// replica. `None` for sources without a shard fleet.
     pub shard: Option<usize>,
 }
 

@@ -3,10 +3,17 @@
 //! Subcommands:
 //!   serve     — run a serving-trace simulation and report TTFT/TPOT;
 //!               with --listen, host storage shard servers instead
+//!               (optionally only a --shards subset of the fleet, and
+//!               optionally an anti-entropy --repair-every-secs loop)
 //!   fetch     — single-request TTFT breakdown across all systems;
 //!               with --backend/--remote, stream the demo prefix
 //!               through a transport backend (tcp shards, in-process
-//!               store, shaped object store) and verify restore
+//!               store, shaped object store) and verify restore;
+//!               --read-policy balances replicated reads
+//!   repair    — anti-entropy pass over a replicated fleet: diff every
+//!               chunk's holders against its replica set, re-put the
+//!               missing copies, and exit non-zero unless the fleet is
+//!               back at full replication
 //!   calibrate — measure real-codec compression ratios per system
 //!   layout    — run the intra-frame layout search and print the table
 //!   real      — smoke-test the PJRT runtime on the AOT artifacts
@@ -17,7 +24,7 @@
 use kvfetcher::baselines::{calibrate_ratios, SystemProfile};
 use kvfetcher::config::Experiment;
 use kvfetcher::engine::EngineSim;
-use kvfetcher::fetcher::{ExecMode, FetchRequest, Fetcher};
+use kvfetcher::fetcher::{ExecMode, FetchRequest, Fetcher, ReadPolicy};
 use kvfetcher::layout;
 use kvfetcher::quant::quantize;
 use kvfetcher::service::Backend;
@@ -63,6 +70,21 @@ fn replication_of(args: &[String], exp: &Experiment) -> usize {
         .max(1)
 }
 
+/// `--read-policy` flag, falling back to `[service] read_policy`.
+fn read_policy_of(args: &[String], exp: &Experiment) -> ReadPolicy {
+    parse_flag(args, "--read-policy")
+        .map(|s| {
+            ReadPolicy::by_name(&s).unwrap_or_else(|| {
+                eprintln!(
+                    "--read-policy takes `primary-first`, `round-robin`, `least-inflight`, \
+                     or `estimator-weighted` (got {s:?})"
+                );
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or(exp.service.read_policy)
+}
+
 fn load_experiment(args: &[String]) -> Experiment {
     let mut exp = match parse_flag(args, "--config") {
         Some(path) => Experiment::load(&path).unwrap_or_else(|e| {
@@ -94,14 +116,19 @@ fn load_experiment(args: &[String]) -> Experiment {
 /// address, populated with the deterministic demo prefix (round-robin
 /// chunk placement, write-through to `--replication` shards per chunk,
 /// `--max-inflight`/`--max-conns` admission limits), and block until
-/// killed. `--die-after-fetches N` injects a shard-0 death after N
-/// served chunk fetches (the CI failover round trip).
+/// killed. `--shards 0,2` hosts only a subset of the fleet (so shards
+/// can live in separate processes and die/rejoin independently);
+/// `--empty` skips population (a rejoining shard that lost its data);
+/// `--repair-every-secs N` runs a background anti-entropy pass over
+/// the whole fleet every N seconds. `--die-after-fetches N` injects a
+/// shard-0 death after N served chunk fetches (the CI failover round
+/// trip).
 fn cmd_serve_store(listen: &str, args: &[String]) {
-    use kvfetcher::kvstore::StorageNode;
+    use kvfetcher::kvstore::{prefix_hashes, StorageNode};
     use kvfetcher::net::BandwidthTrace;
     use kvfetcher::service::{
-        demo_prefix, AdmissionConfig, FaultSpec, Placement, ServerConfig, ShardMap,
-        StorageServer, ThrottleSpec,
+        demo_prefix, demo_tokens, AdmissionConfig, FaultSpec, Placement, ServerConfig,
+        ShardMap, StorageServer, ThrottleSpec,
     };
 
     let addrs = Experiment::parse_addrs(listen);
@@ -129,27 +156,53 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
     };
     let die_after: Option<usize> = parse_flag(args, "--die-after-fetches")
         .map(|s| s.parse().expect("--die-after-fetches takes a count"));
+    // host only a subset of the fleet's shards, so shards can live in
+    // separate processes and die/rejoin independently
+    let hosted: Vec<usize> = parse_flag(args, "--shards")
+        .map(|list| {
+            list.split(',')
+                .map(|s| s.trim().parse().expect("--shards takes shard indices"))
+                .collect()
+        })
+        .unwrap_or_else(|| (0..addrs.len()).collect());
+    if let Some(&bad) = hosted.iter().find(|&&s| s >= addrs.len()) {
+        eprintln!("--shards index {bad} out of range (fleet has {} shards)", addrs.len());
+        std::process::exit(2);
+    }
+    let empty = args.iter().any(|a| a == "--empty");
+    let repair_every: Option<u64> = parse_flag(args, "--repair-every-secs")
+        .map(|s| s.parse().expect("--repair-every-secs takes seconds"));
 
-    let demo = demo_prefix(seed, n_chunks, chunk_tokens);
+    // the chunk-chain hashes are cheap to derive; the full demo encode
+    // (quantize + codec of every chunk) is paid only when this process
+    // actually populates shards — an --empty rejoin skips it entirely
+    let hashes = prefix_hashes(&demo_tokens(seed, n_chunks * chunk_tokens), chunk_tokens);
     let map = ShardMap::with_replication(addrs.len(), Placement::RoundRobin, replication);
-    let mut nodes: Vec<StorageNode> = (0..addrs.len())
-        .map(|_| match capacity {
-            Some(c) => StorageNode::with_capacity(chunk_tokens, c),
-            None => StorageNode::new(chunk_tokens),
+    let mut nodes: Vec<Option<StorageNode>> = (0..addrs.len())
+        .map(|i| {
+            hosted.contains(&i).then(|| match capacity {
+                Some(c) => StorageNode::with_capacity(chunk_tokens, c),
+                None => StorageNode::new(chunk_tokens),
+            })
         })
         .collect();
-    for (i, chunk) in demo.chunks.iter().enumerate() {
-        for shard in map.replicas_of(i, chunk.hash) {
-            let out = nodes[shard].register(chunk.clone());
-            if !out.stored {
-                eprintln!("chunk {i} does not fit shard {shard} capacity {capacity:?}");
-                std::process::exit(1);
+    if !empty {
+        let demo = demo_prefix(seed, n_chunks, chunk_tokens);
+        for (i, chunk) in demo.chunks.iter().enumerate() {
+            for shard in map.replicas_of(i, chunk.hash) {
+                let Some(node) = nodes[shard].as_mut() else { continue };
+                let out = node.register(chunk.clone());
+                if !out.stored {
+                    eprintln!("chunk {i} does not fit shard {shard} capacity {capacity:?}");
+                    std::process::exit(1);
+                }
             }
         }
     }
 
     let mut servers = Vec::new();
     for (i, (addr, node)) in addrs.iter().zip(nodes).enumerate() {
+        let Some(node) = node else { continue };
         let chunks = node.len();
         let bytes = node.used_bytes();
         let cfg = ServerConfig {
@@ -178,8 +231,9 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
     }
     println!(
         "# serving demo prefix: seed={seed} chunks={n_chunks} chunk_tokens={chunk_tokens} \
-         replication={} | fetch with `kvfetcher fetch --remote {}{}`",
+         replication={} shards={hosted:?}{} | fetch with `kvfetcher fetch --remote {}{}`",
         map.replication(),
+        if empty { " (empty)" } else { "" },
         addrs.join(","),
         if map.replication() > 1 {
             format!(" --replication {}", map.replication())
@@ -187,9 +241,140 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
             String::new()
         }
     );
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    match repair_every {
+        Some(secs) => loop {
+            std::thread::sleep(std::time::Duration::from_secs(secs.max(1)));
+            run_repair(&addrs, replication, &hashes, false, false);
+        },
+        None => loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        },
     }
+}
+
+/// One anti-entropy pass over the fleet at `addrs`: scan, re-put what's
+/// missing (unless `check_only`), print a summary, and report whether
+/// the fleet is at full replication. `verbose` prints per-chunk health
+/// and per-action tables (the `repair` subcommand); the background
+/// serve loop keeps it to one line per pass.
+fn run_repair(
+    addrs: &[String],
+    replication: usize,
+    hashes: &[u64],
+    check_only: bool,
+    verbose: bool,
+) -> bool {
+    use kvfetcher::service::{Placement, RepairScanner, ShardRouter};
+
+    let (router, dead) =
+        match ShardRouter::connect_lenient(addrs, Placement::RoundRobin, replication) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("# repair: cannot reach the fleet: {e}");
+                return false;
+            }
+        };
+    if !dead.is_empty() {
+        println!("# repair: unreachable shards {dead:?} (their deficits persist this pass)");
+    }
+    let scanner = RepairScanner::new(router);
+    let fmt_set = |s: &[usize]| {
+        if s.is_empty() {
+            "-".to_string()
+        } else {
+            s.iter().map(usize::to_string).collect::<Vec<_>>().join(" ")
+        }
+    };
+    if check_only {
+        let scan = scanner.scan(hashes);
+        if verbose {
+            let rows: Vec<Vec<String>> = scan
+                .chunks
+                .iter()
+                .map(|c| {
+                    vec![
+                        c.idx.to_string(),
+                        fmt_set(&c.replicas),
+                        fmt_set(&c.holders),
+                        fmt_set(&c.missing),
+                        fmt_set(&c.unreachable),
+                    ]
+                })
+                .collect();
+            let headers = ["chunk", "replicas", "holders", "missing", "unreachable"];
+            println!("{}", markdown(&headers, &rows));
+        }
+        println!(
+            "# scan: {} chunks, {} under-replicated",
+            scan.chunks.len(),
+            scan.under_replicated()
+        );
+        return scan.healthy();
+    }
+    let report = scanner.repair(hashes);
+    if verbose && !report.repaired.is_empty() {
+        let rows: Vec<Vec<String>> = report
+            .repaired
+            .iter()
+            .map(|a| {
+                vec![
+                    a.idx.to_string(),
+                    format!("{:#x}", a.hash),
+                    a.from.to_string(),
+                    a.to.to_string(),
+                ]
+            })
+            .collect();
+        println!("{}", markdown(&["chunk", "hash", "from", "to"], &rows));
+    }
+    for f in &report.failed {
+        eprintln!("# repair: chunk {} @ shard {}: {}", f.idx, f.shard, f.error);
+    }
+    let after = scanner.scan(hashes);
+    println!(
+        "# repair: {} re-put, {} failed, {} busy backoffs | now {} under-replicated of {}",
+        report.repaired.len(),
+        report.failed.len(),
+        report.busy_retries,
+        after.under_replicated(),
+        after.chunks.len()
+    );
+    after.healthy()
+}
+
+/// `repair --remote a:p,b:p,... [--replication r]` — one-shot
+/// anti-entropy pass over a running fleet (see [`run_repair`]). Both
+/// ends derive the expected chunk chain from the shared demo
+/// parameters, so no ground truth crosses the wire. `--check` scans
+/// without writing. Exits non-zero unless the fleet ends the pass at
+/// full replication — CI uses the exit code as the convergence gate.
+fn cmd_repair(args: &[String]) {
+    use kvfetcher::kvstore::prefix_hashes;
+    use kvfetcher::service::demo_tokens;
+
+    let exp = load_experiment(args);
+    let addrs = parse_flag(args, "--remote")
+        .map(|list| Experiment::parse_addrs(&list))
+        .unwrap_or_else(|| exp.remote_addrs.clone());
+    if addrs.is_empty() {
+        eprintln!("repair needs --remote a:p[,b:p...] (or [network] remote)");
+        std::process::exit(2);
+    }
+    let replication = replication_of(args, &exp);
+    let (seed, n_chunks, chunk_tokens) = demo_params(args);
+    let check_only = args.iter().any(|a| a == "--check");
+    let hashes = prefix_hashes(&demo_tokens(seed, n_chunks * chunk_tokens), chunk_tokens);
+    println!(
+        "# repair: {} shards, replication {replication}, {} chunks{}",
+        addrs.len(),
+        hashes.len(),
+        if check_only { " (check only)" } else { "" }
+    );
+    if !run_repair(&addrs, replication, &hashes, check_only, true) {
+        eprintln!("# fleet is NOT at full replication");
+        std::process::exit(1);
+    }
+    println!("# fleet is at full replication (factor {replication})");
 }
 
 /// `fetch --backend local|tcp|objstore [--remote a:p,b:p]` (or
@@ -208,6 +393,7 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     let (seed, n_chunks, chunk_tokens) = demo_params(args);
     let demo = demo_prefix(seed, n_chunks, chunk_tokens);
     let replication = replication_of(args, &exp);
+    let read_policy = read_policy_of(args, &exp);
 
     let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
     spec.chunk_tokens = chunk_tokens;
@@ -242,9 +428,12 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
         .bandwidth(exp.bandwidth_trace())
         .decode_pool(DecodePool::new(exp.device.nvdecs, exp.device.decode_table()))
         .replication(replication)
+        .read_policy(read_policy)
         .build();
-    // replicated TCP fleets fail chunk fetches over between replicas
+    // replicated TCP fleets balance reads per the policy and fail
+    // chunk fetches over between replicas
     spec.replication = fetcher.replication();
+    spec.read_policy = fetcher.read_policy();
     let source = match SourceRegistry::with_defaults().create(backend, &spec) {
         Ok(s) => s,
         Err(e) => {
@@ -255,10 +444,11 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
 
     println!(
         "# demo fetch: backend {backend} | {} chunks x {} tokens | replication {} | \
-         virtual link {} Gbps",
+         read policy {} | virtual link {} Gbps",
         n_chunks,
         chunk_tokens,
         fetcher.replication(),
+        fetcher.read_policy(),
         exp.bandwidth_gbps,
     );
     let total_tokens = n_chunks * chunk_tokens;
@@ -497,22 +687,33 @@ fn cmd_real(_args: &[String]) {
     std::process::exit(2);
 }
 
-const USAGE: &str = "kvfetcher <serve|fetch|calibrate|layout|real> [flags]
+const USAGE: &str = "kvfetcher <serve|fetch|repair|calibrate|layout|real> [flags]
   serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
             [--exec analytic|pipelined]
   serve     --listen a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
             [--capacity bytes] [--throttle-gbps G] [--replication r]
             [--max-inflight bytes] [--max-conns n] [--die-after-fetches n]
+            [--shards i,j] [--empty] [--repair-every-secs n]
             (storage shard servers; each chunk is written through to r
              shards, admission limits answer Busy instead of dropping,
-             and --die-after-fetches kills shard 0 at a chunk boundary)
+             --die-after-fetches kills shard 0 at a chunk boundary,
+             --shards hosts a fleet subset so shards can die/rejoin
+             independently, --empty rejoins without data, and
+             --repair-every-secs runs a background anti-entropy loop)
   fetch     --config <toml> [--context tokens] [--bandwidth G]
   fetch     --backend local|tcp|objstore [--remote a:p[,b:p...]] [--seed s]
             [--chunks n] [--chunk-tokens t] [--replication r]
+            [--read-policy primary-first|round-robin|least-inflight|estimator-weighted]
             (stream the demo prefix through a transport backend; verifies
              bit-exact restore and prints which shard served each chunk;
              --remote alone implies --backend tcp; with --replication the
-             fetch fails over between a chunk's replicas)
+             fetch balances reads per --read-policy and fails over
+             between a chunk's replicas)
+  repair    --remote a:p[,b:p...] [--replication r] [--seed s] [--chunks n]
+            [--chunk-tokens t] [--check]
+            (anti-entropy pass: diff holder sets against the replica map,
+             re-put missing chunks from surviving holders, exit non-zero
+             unless the fleet converges to factor r; --check only scans)
   calibrate [--tokens n]
   layout    [--heads h] [--dim d]
   real      [--artifacts dir]   (requires --features pjrt)";
@@ -522,6 +723,7 @@ fn main() {
     match args.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args[1..]),
         Some("fetch") => cmd_fetch(&args[1..]),
+        Some("repair") => cmd_repair(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("layout") => cmd_layout(&args[1..]),
         Some("real") => cmd_real(&args[1..]),

@@ -6,7 +6,7 @@
 //! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
 //! `PjRtClient::compile` -> `execute`.
 //!
-//! The [`Runtime`] itself (everything touching the `xla` crate) is
+//! The `Runtime` itself (everything touching the `xla` crate) is
 //! gated behind the non-default `pjrt` feature so the default build has
 //! zero external-system dependencies; the model-shape config and the
 //! KV layout converters below are pure and always available.

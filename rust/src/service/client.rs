@@ -34,6 +34,16 @@ impl StoreClient {
         Ok(StoreClient { addr: addr.to_string(), idle: Mutex::new(vec![first]) })
     }
 
+    /// A client whose first dial is deferred to the first call — used by
+    /// `ShardRouter::connect_lenient` so control-plane tooling (the
+    /// anti-entropy repair scanner) can be built over a fleet with dead
+    /// members. Calls against a dead node surface the dial error per
+    /// call instead of poisoning construction.
+    pub fn lazy(addr: &str) -> StoreClient {
+        StoreClient { addr: addr.to_string(), idle: Mutex::new(Vec::new()) }
+    }
+
+    /// The node address this client dials.
     pub fn addr(&self) -> &str {
         &self.addr
     }
@@ -130,6 +140,17 @@ impl StoreClient {
         }
     }
 
+    /// Pull a chunk's full stored record (every resolution variant +
+    /// scales) — the anti-entropy repair transfer. `None` if the node
+    /// doesn't store the chunk.
+    pub fn pull_chunk(&self, hash: u64) -> io::Result<Option<StoredChunk>> {
+        match self.call(&Request::PullChunk { hash })? {
+            Response::ChunkFull(c) => Ok(Some(c)),
+            Response::NotFound { .. } => Ok(None),
+            r => Err(self.unexpected("PullChunk", &r)),
+        }
+    }
+
     /// Register a chunk; returns (stored, chunks evicted to make room).
     pub fn put_chunk(&self, chunk: &StoredChunk) -> io::Result<(bool, u32)> {
         match self.call(&Request::PutChunk { chunk: chunk.clone() })? {
@@ -157,6 +178,37 @@ mod tests {
     fn connect_fails_fast_on_dead_address() {
         // port 1 on loopback: nothing listens there
         assert!(StoreClient::connect("127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn lazy_client_defers_the_dial_and_pull_roundtrips_the_record() {
+        use crate::kvstore::{StoredChunk, StoredVariant};
+        // a lazy client over a dead address constructs fine; the dial
+        // error surfaces per call (port 1: nothing listens there)
+        let dead = StoreClient::lazy("127.0.0.1:1");
+        assert_eq!(dead.pooled(), 0);
+        assert!(dead.stats().is_err());
+
+        let chunk = StoredChunk {
+            hash: 0xFEED,
+            tokens: 16,
+            scales: vec![0.5, 2.0],
+            variants: vec![StoredVariant {
+                resolution: "144p",
+                group_bytes: vec![vec![7; 30], vec![9; 12]],
+                total_bytes: 42,
+                n_frames: 3,
+            }],
+        };
+        let mut node = StorageNode::new(16);
+        node.register(chunk.clone());
+        let server =
+            StorageServer::spawn("127.0.0.1:0", node, ServerConfig::default()).expect("bind");
+        let live = StoreClient::lazy(&server.local_addr().to_string());
+        // the whole record (variants + frame counts) survives the pull
+        assert_eq!(live.pull_chunk(0xFEED).expect("pull"), Some(chunk));
+        assert_eq!(live.pull_chunk(0xBAD).expect("pull"), None);
+        server.shutdown();
     }
 
     #[test]

@@ -24,14 +24,22 @@
 //!   [`crate::fetcher::TransportSource`] impls (in-process store, TCP
 //!   shards, object-store-shaped), so `ExecMode::Pipelined` streams and
 //!   restores *real bytes* while its virtual timeline stays
-//!   bit-identical to the analytic planner.
+//!   bit-identical to the analytic planner. Replicated TCP fleets
+//!   balance reads under a pluggable `ReadPolicy`;
+//! * [`repair`] — the anti-entropy scanner: diff every chunk's holder
+//!   set against its replica set and re-put what's missing, so a shard
+//!   that dies and rejoins converges back to replication factor `r`.
 //!
 //! Everything runs hermetically on loopback; `tests/remote_fetch.rs`
 //! asserts the end-to-end contracts (bit-exact restore across 2+
-//! shards, throttle replay within 10% of the analytic link model).
+//! shards, throttle replay within 10% of the analytic link model) and
+//! `tests/replica_balance.rs` the balancing/repair contracts.
+
+#![warn(missing_docs)]
 
 pub mod client;
 pub mod protocol;
+pub mod repair;
 pub mod server;
 pub mod shard;
 pub mod source;
@@ -39,6 +47,9 @@ pub mod throttle;
 
 pub use client::StoreClient;
 pub use protocol::{NodeStats, Request, Response, PROTOCOL_VERSION};
+pub use repair::{
+    ChunkHealth, RepairAction, RepairFailure, RepairReport, RepairScanner, ScanReport,
+};
 pub use server::{AdmissionConfig, FaultSpec, ServerConfig, StorageServer};
 pub use shard::{Placement, ShardMap, ShardRouter};
 pub use source::{
@@ -63,9 +74,11 @@ use crate::util::Prng;
 /// offline encode fast while exercising two real variants.
 pub const DEMO_LADDER: Ladder = ["144p", "144p", "240p", "240p"];
 
-/// KV shape of the demo dataset (planes = 2 * 3 layers).
+/// KV shape of the demo dataset: planes (= 2 * 3 layers).
 pub const DEMO_PLANES: usize = 6;
+/// KV shape of the demo dataset: attention heads.
 pub const DEMO_HEADS: usize = 8;
+/// KV shape of the demo dataset: per-head dimension.
 pub const DEMO_HEAD_DIM: usize = 32;
 
 /// A deterministic synthetic prefix, chunked, quantized, and encoded at
@@ -75,6 +88,7 @@ pub const DEMO_HEAD_DIM: usize = 32;
 /// chunk_tokens)` alone, which is how the CLI verifies a remote fetch
 /// restored bit-exactly without shipping ground truth out of band.
 pub struct DemoPrefix {
+    /// Tokens per chunk of the demo chain.
     pub chunk_tokens: usize,
     /// Token ids of the whole prefix (`n_chunks * chunk_tokens`).
     pub tokens: Vec<u32>,
@@ -86,14 +100,21 @@ pub struct DemoPrefix {
     pub chunks: Vec<StoredChunk>,
 }
 
-/// Build the demo prefix. Deterministic in `seed`.
-pub fn demo_prefix(seed: u64, n_chunks: usize, chunk_tokens: usize) -> DemoPrefix {
-    assert!(n_chunks > 0 && chunk_tokens > 0);
-    let total = n_chunks * chunk_tokens;
+/// Token stream of the demo prefix: deterministic in `seed`, cheap to
+/// rebuild anywhere the chunk *hashes* are needed without paying for
+/// the full encode (the repair CLI derives its expected chain this
+/// way). `demo_prefix` builds its chain from exactly these tokens.
+pub fn demo_tokens(seed: u64, total: usize) -> Vec<u32> {
     // full-seed token stream: seeds differing anywhere in their 64 bits
     // produce different chains (no u32 truncation aliasing)
     let mut trng = Prng::new(seed ^ 0xC0FF_EE00_D15C_0DE5);
-    let tokens: Vec<u32> = (0..total).map(|_| trng.next_u64() as u32).collect();
+    (0..total).map(|_| trng.next_u64() as u32).collect()
+}
+
+/// Build the demo prefix. Deterministic in `seed`.
+pub fn demo_prefix(seed: u64, n_chunks: usize, chunk_tokens: usize) -> DemoPrefix {
+    assert!(n_chunks > 0 && chunk_tokens > 0);
+    let tokens = demo_tokens(seed, n_chunks * chunk_tokens);
     let hashes = prefix_hashes(&tokens, chunk_tokens);
     // 16x16 tile: fits both demo resolutions for the 8x32 head layout
     let intra = IntraLayout { hr: 2, hc: 4, dr: 8, dc: 4 };
@@ -137,6 +158,9 @@ mod tests {
         let a = demo_prefix(7, 3, 32);
         let b = demo_prefix(7, 3, 32);
         assert_eq!(a.tokens, b.tokens);
+        // the cheap token helper rebuilds the same chain
+        assert_eq!(a.tokens, demo_tokens(7, 3 * 32));
+        assert_eq!(a.hashes, prefix_hashes(&demo_tokens(7, 3 * 32), 32));
         assert_eq!(a.hashes, b.hashes);
         assert_eq!(a.chunks.len(), 3);
         assert_eq!(a.quants.len(), 3);

@@ -10,9 +10,11 @@
 //! Requests (client -> server): [`Request::LookupPrefix`] walks the
 //! node's chained-hash prefix index, [`Request::HasChunks`] is the
 //! batched membership probe the shard router uses, [`Request::FetchChunk`]
-//! streams one chunk variant's bitstreams, [`Request::PutChunk`]
-//! registers a chunk (subject to the node's capacity / LRU policy),
-//! and [`Request::Stats`] reads the node's capacity counters.
+//! streams one chunk variant's bitstreams, [`Request::PullChunk`]
+//! streams a chunk's *full* stored record (the anti-entropy repair
+//! transfer), [`Request::PutChunk`] registers a chunk (subject to the
+//! node's capacity / LRU policy), and [`Request::Stats`] reads the
+//! node's capacity counters.
 //!
 //! The protocol is deliberately std-only and version-tagged per chunk
 //! (the codec bitstreams carry their own in-band layout meta), so any
@@ -34,13 +36,18 @@ pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
 /// * v1 — the ISSUE 2 frame set (lookup / has / fetch / put / stats).
 /// * v2 — adds the [`Response::Busy`] admission refusal and extends
 ///   [`NodeStats`] with the in-flight / busy admission counters.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// * v3 — adds the anti-entropy repair transfer:
+///   [`Request::PullChunk`] / [`Response::ChunkFull`] move a chunk's
+///   full stored record (every resolution variant + scales) between
+///   replicas, so a rejoined shard can be re-filled from a holder.
+pub const PROTOCOL_VERSION: u32 = 3;
 
 const TAG_LOOKUP_PREFIX: u8 = 1;
 const TAG_HAS_CHUNKS: u8 = 2;
 const TAG_FETCH_CHUNK: u8 = 3;
 const TAG_PUT_CHUNK: u8 = 4;
 const TAG_STATS: u8 = 5;
+const TAG_PULL_CHUNK: u8 = 6;
 
 const TAG_PREFIX_MATCH: u8 = 128;
 const TAG_HAS: u8 = 129;
@@ -50,18 +57,40 @@ const TAG_STORED: u8 = 132;
 const TAG_STATS_REPLY: u8 = 133;
 const TAG_ERR: u8 = 134;
 const TAG_BUSY: u8 = 135;
+const TAG_CHUNK_FULL: u8 = 136;
 
 /// A client -> server message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
     /// Longest stored chunk chain for these tokens (single-node mode).
-    LookupPrefix { tokens: Vec<u32> },
+    LookupPrefix {
+        /// Token ids of the prefix to match.
+        tokens: Vec<u32>,
+    },
     /// Batched membership probe: which of these chunk hashes are stored?
-    HasChunks { hashes: Vec<u64> },
+    HasChunks {
+        /// Chunk hashes to probe, answered order-aligned.
+        hashes: Vec<u64>,
+    },
     /// Stream one chunk's bitstreams at one resolution variant.
-    FetchChunk { hash: u64, resolution: String },
+    FetchChunk {
+        /// Chained hash of the chunk.
+        hash: u64,
+        /// Resolution-variant name to stream.
+        resolution: String,
+    },
+    /// Stream a chunk's *full* stored record (every resolution variant
+    /// plus scales) — the anti-entropy repair transfer, as opposed to
+    /// the fetch path's single-variant [`Request::FetchChunk`].
+    PullChunk {
+        /// Chained hash of the chunk.
+        hash: u64,
+    },
     /// Register a chunk (the offline encode path, done over the wire).
-    PutChunk { chunk: StoredChunk },
+    PutChunk {
+        /// The full chunk record to store.
+        chunk: StoredChunk,
+    },
     /// Capacity counters.
     Stats,
 }
@@ -69,10 +98,13 @@ pub enum Request {
 /// Capacity counters of one storage node.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct NodeStats {
+    /// Chunks currently stored.
     pub chunks: u64,
+    /// Bytes currently stored (all variants + scale sidebands).
     pub used_bytes: u64,
     /// `None` = unbounded.
     pub capacity_bytes: Option<u64>,
+    /// Chunks evicted by the LRU since the node started.
     pub evictions: u64,
     /// Chunk-payload bytes currently being sent to clients (the
     /// quantity the node's `max_inflight` admission limit caps).
@@ -87,18 +119,49 @@ pub struct NodeStats {
 /// A server -> client message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    PrefixMatch { hashes: Vec<u64> },
-    Has { present: Vec<bool> },
+    /// The longest stored chain for a [`Request::LookupPrefix`].
+    PrefixMatch {
+        /// Chained hashes of the stored chain, longest prefix first.
+        hashes: Vec<u64>,
+    },
+    /// Membership answer to a [`Request::HasChunks`] probe.
+    Has {
+        /// One flag per probed hash, order-aligned with the request.
+        present: Vec<bool>,
+    },
+    /// One chunk variant's bitstreams ([`Request::FetchChunk`]).
     Chunk(ChunkPayload),
-    NotFound { hash: u64 },
-    Stored { stored: bool, evicted: u32 },
+    /// The requested chunk is not stored on this node.
+    NotFound {
+        /// The hash that missed.
+        hash: u64,
+    },
+    /// Outcome of a [`Request::PutChunk`] registration.
+    Stored {
+        /// Whether the chunk fit (false = refused by capacity).
+        stored: bool,
+        /// Chunks the LRU evicted to make room.
+        evicted: u32,
+    },
+    /// Capacity counters ([`Request::Stats`]).
     Stats(NodeStats),
-    Err { msg: String },
+    /// Request-level failure (unparseable request, missing variant...).
+    Err {
+        /// Human-readable cause, truncated to 255 bytes on the wire.
+        msg: String,
+    },
     /// Admission refusal: the node is at its connection or in-flight
     /// byte limit. The client should back off ~`retry_after_ms` and
     /// retry (or fail over to a replica) instead of treating the node
     /// as dead.
-    Busy { retry_after_ms: u32 },
+    Busy {
+        /// Suggested back-off before retrying, in milliseconds.
+        retry_after_ms: u32,
+    },
+    /// A chunk's full stored record ([`Request::PullChunk`]) — every
+    /// resolution variant plus the scale sideband, ready to re-put on
+    /// an under-replicated shard.
+    ChunkFull(StoredChunk),
 }
 
 // ---------------------------------------------------------------- framing
@@ -107,6 +170,7 @@ pub enum Response {
 /// read timeout and no bytes pending — the server's shutdown-poll path.
 #[derive(Debug)]
 pub enum FrameRead {
+    /// A complete frame: tag byte + payload.
     Frame(u8, Vec<u8>),
     /// Peer closed the connection before the next frame.
     Eof,
@@ -345,7 +409,7 @@ const MAX_INTERNED_RESOLUTIONS: usize = 64;
 
 /// Map a wire resolution name onto a `&'static str`. Names on the
 /// standard ladder resolve to the canonical constants; unknown names
-/// are interned once per process, up to [`MAX_INTERNED_RESOLUTIONS`].
+/// are interned once per process, up to `MAX_INTERNED_RESOLUTIONS`.
 pub fn try_intern_resolution(name: &str) -> Result<&'static str, FetchError> {
     if let Some(r) = crate::layout::resolution_by_name(name) {
         return Ok(r.name);
@@ -475,6 +539,10 @@ pub fn encode_request(r: &Request) -> (u8, Vec<u8>) {
             put_str(&mut out, resolution);
             (TAG_FETCH_CHUNK, out)
         }
+        Request::PullChunk { hash } => {
+            put_u64(&mut out, *hash);
+            (TAG_PULL_CHUNK, out)
+        }
         Request::PutChunk { chunk } => {
             put_chunk(&mut out, chunk);
             (TAG_PUT_CHUNK, out)
@@ -508,6 +576,7 @@ pub fn decode_request(tag: u8, payload: &[u8]) -> Result<Request, FetchError> {
             let resolution = rd.str_()?;
             Request::FetchChunk { hash, resolution }
         }
+        TAG_PULL_CHUNK => Request::PullChunk { hash: rd.u64()? },
         TAG_PUT_CHUNK => Request::PutChunk { chunk: get_chunk(&mut rd)? },
         TAG_STATS => Request::Stats,
         t => return Err(FetchError::decode(format!("unknown request tag {t}"))),
@@ -567,6 +636,10 @@ pub fn encode_response(r: &Response) -> (u8, Vec<u8>) {
             put_u32(&mut out, *retry_after_ms);
             (TAG_BUSY, out)
         }
+        Response::ChunkFull(c) => {
+            put_chunk(&mut out, c);
+            (TAG_CHUNK_FULL, out)
+        }
     }
 }
 
@@ -617,6 +690,7 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, FetchError> 
         }
         TAG_ERR => Response::Err { msg: rd.str_()? },
         TAG_BUSY => Response::Busy { retry_after_ms: rd.u32()? },
+        TAG_CHUNK_FULL => Response::ChunkFull(get_chunk(&mut rd)?),
         t => return Err(FetchError::decode(format!("unknown response tag {t}"))),
     };
     rd.finish()?;
@@ -667,6 +741,7 @@ mod tests {
             Request::LookupPrefix { tokens: vec![] },
             Request::HasChunks { hashes: vec![7, u64::MAX] },
             Request::FetchChunk { hash: 99, resolution: "1080p".into() },
+            Request::PullChunk { hash: 0xD00D },
             Request::Stats,
         ];
         for r in reqs {
@@ -781,5 +856,18 @@ mod tests {
         // truncated chunk payload
         let (tag, body) = encode_request(&Request::PutChunk { chunk: sample_chunk() });
         assert!(decode_request(tag, &body[..body.len() - 3]).is_err());
+        // truncated / over-long pull requests and full-chunk replies
+        assert!(decode_request(TAG_PULL_CHUNK, &[1, 2, 3]).is_err());
+        assert!(decode_request(TAG_PULL_CHUNK, &[0; 9]).is_err());
+        let (tag, body) = encode_response(&Response::ChunkFull(sample_chunk()));
+        assert!(decode_response(tag, &body[..body.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn pull_chunk_roundtrips_the_full_record() {
+        let c = sample_chunk();
+        let rt = roundtrip_response(Response::ChunkFull(c.clone()));
+        let Response::ChunkFull(back) = rt else { panic!("wrong variant") };
+        assert_eq!(back, c, "the repair transfer must preserve every variant bit-exactly");
     }
 }

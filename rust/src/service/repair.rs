@@ -1,0 +1,414 @@
+//! Anti-entropy repair: converge a replicated fleet back to factor `r`
+//! after shards die and rejoin.
+//!
+//! PR 4's replication layer keeps *fetches* alive through a shard death
+//! (write-through puts + failover reads), but a shard that rejoins
+//! empty stays empty: every chunk it should hold is now one fault away
+//! from loss, and nothing heals it. The [`RepairScanner`] closes that
+//! loop:
+//!
+//! 1. **Scan** — walk the [`ShardMap`]: for every chunk of a chain,
+//!    probe each replica with the existing batched `HasChunks`
+//!    control-plane request (one probe frame per shard per scan) and
+//!    diff the *holder set* against the placement's replica set.
+//!    Unreachable shards are recorded, never fatal — the scanner runs
+//!    on a degraded fleet via [`ShardRouter::connect_lenient`].
+//! 2. **Repair** — for every under-replicated chunk, pull the full
+//!    stored record from a surviving holder (wire-v3
+//!    `PullChunk`/`ChunkFull`) and re-put it on each reachable replica
+//!    that is missing it. Both transfers ride the admission `Busy`
+//!    handshake: a loaded node refuses with a retry hint, the scanner
+//!    backs off under its [`RetryPolicy`], and past the budget the
+//!    chunk is skipped this round (a later pass converges) — so repair
+//!    traffic yields to foreground fetches instead of stampeding a
+//!    node that is already saturated.
+//!
+//! The CLI exposes this as `kvfetcher repair --remote a:p,b:p,...`
+//! (one-shot, exit code = converged) and as a background loop on
+//! `serve --listen ... --repair-every-secs N`; `tests/replica_balance.rs`
+//! proves kill → rejoin → repair → holder sets back at factor `r` with
+//! bit-identical restores.
+
+use crate::fetcher::FetchError;
+
+use super::shard::{ShardMap, ShardRouter};
+use super::source::RetryPolicy;
+
+/// Replication health of one chunk: its replica set diffed against the
+/// shards that actually answered for it.
+#[derive(Debug, Clone)]
+pub struct ChunkHealth {
+    /// Chain position of the chunk.
+    pub idx: usize,
+    /// Chained hash of the chunk.
+    pub hash: u64,
+    /// The placement's replica set (primary first).
+    pub replicas: Vec<usize>,
+    /// Reachable replicas that hold the chunk.
+    pub holders: Vec<usize>,
+    /// Reachable replicas that should hold the chunk but don't.
+    pub missing: Vec<usize>,
+    /// Replicas whose probe failed (dead or unreachable shard).
+    pub unreachable: Vec<usize>,
+}
+
+impl ChunkHealth {
+    /// Every replica is reachable and holds the chunk.
+    pub fn healthy(&self) -> bool {
+        self.missing.is_empty() && self.unreachable.is_empty()
+    }
+
+    /// Something is missing *and* a surviving holder can source it.
+    pub fn repairable(&self) -> bool {
+        !self.missing.is_empty() && !self.holders.is_empty()
+    }
+}
+
+/// One scan pass over a chain: per-chunk health plus which shards never
+/// answered a probe.
+#[derive(Debug, Clone)]
+pub struct ScanReport {
+    /// Health of each chunk, in chain order.
+    pub chunks: Vec<ChunkHealth>,
+    /// Shards whose membership probe failed this pass.
+    pub unreachable_shards: Vec<usize>,
+}
+
+impl ScanReport {
+    /// Every chunk sits at full replication on reachable shards.
+    pub fn healthy(&self) -> bool {
+        self.chunks.iter().all(ChunkHealth::healthy)
+    }
+
+    /// Chunks currently below their replication factor (missing or
+    /// unreachable replicas).
+    pub fn under_replicated(&self) -> usize {
+        self.chunks.iter().filter(|c| !c.healthy()).count()
+    }
+}
+
+/// One successful re-put: `hash` moved `from` -> `to`.
+#[derive(Debug, Clone, Copy)]
+pub struct RepairAction {
+    /// Chain position of the repaired chunk.
+    pub idx: usize,
+    /// Chained hash of the repaired chunk.
+    pub hash: u64,
+    /// The holder the full record was pulled from.
+    pub from: usize,
+    /// The under-replicated shard it was re-put on.
+    pub to: usize,
+}
+
+/// One re-put that did not land this round.
+#[derive(Debug, Clone)]
+pub struct RepairFailure {
+    /// Chain position of the chunk.
+    pub idx: usize,
+    /// The shard the repair was for (or pulled from, for pull faults).
+    pub shard: usize,
+    /// Why it failed (`Busy` = skipped past the retry budget).
+    pub error: FetchError,
+}
+
+/// What one repair pass did: the pre-repair scan, every re-put that
+/// landed, every one that didn't, and how often the admission handshake
+/// made the scanner back off.
+#[derive(Debug, Clone)]
+pub struct RepairReport {
+    /// Fleet state *before* this pass re-put anything.
+    pub before: ScanReport,
+    /// Re-puts that landed (chunk is on that replica now).
+    pub repaired: Vec<RepairAction>,
+    /// Re-puts (or pulls) that failed or were skipped this round.
+    pub failed: Vec<RepairFailure>,
+    /// `Busy` refusals absorbed by backoff across all transfers.
+    pub busy_retries: usize,
+}
+
+impl RepairReport {
+    /// Every deficit that could be repaired was repaired: no failures,
+    /// and no replica was unreachable when the pass started. Re-scan
+    /// for ground truth — this summarizes what *this pass* saw.
+    pub fn converged(&self) -> bool {
+        self.failed.is_empty() && self.before.chunks.iter().all(|c| c.unreachable.is_empty())
+    }
+}
+
+/// Walks a replicated fleet and re-puts missing chunks — see the
+/// module docs for the scan/repair contract.
+pub struct RepairScanner {
+    router: ShardRouter,
+    retry: RetryPolicy,
+}
+
+impl RepairScanner {
+    /// A scanner over a connected (possibly lenient) router.
+    pub fn new(router: ShardRouter) -> RepairScanner {
+        RepairScanner { router, retry: RetryPolicy::default() }
+    }
+
+    /// Override the `Busy` retry/backoff budget of repair transfers.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> RepairScanner {
+        self.retry = retry;
+        self
+    }
+
+    /// The fleet router this scanner walks.
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// Diff every chunk's holder set against its replica set: one
+    /// batched `HasChunks` probe per shard, never fatal — a failed
+    /// probe marks the shard unreachable for this pass.
+    pub fn scan(&self, hashes: &[u64]) -> ScanReport {
+        let map: ShardMap = self.router.map();
+        let n = self.router.n_shards();
+        // per_shard[s] = (chain idx, hash) of every chunk replicated on s
+        let mut per_shard: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
+        for (i, &h) in hashes.iter().enumerate() {
+            for shard in map.replicas_of(i, h) {
+                per_shard[shard].push((i, h));
+            }
+        }
+        // holds[i] = per-replica probe verdict, None = unreachable
+        let mut holds: Vec<Vec<(usize, Option<bool>)>> = vec![Vec::new(); hashes.len()];
+        let mut unreachable_shards = Vec::new();
+        for (shard, items) in per_shard.iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            let probe: Vec<u64> = items.iter().map(|&(_, h)| h).collect();
+            match self.router.client(shard).has_chunks(&probe) {
+                Ok(found) => {
+                    for (&(i, _), ok) in items.iter().zip(found) {
+                        holds[i].push((shard, Some(ok)));
+                    }
+                }
+                Err(_) => {
+                    unreachable_shards.push(shard);
+                    for &(i, _) in items {
+                        holds[i].push((shard, None));
+                    }
+                }
+            }
+        }
+        let chunks = hashes
+            .iter()
+            .enumerate()
+            .map(|(i, &h)| {
+                let replicas = map.replicas_of(i, h);
+                // holder order follows the replica set (primary first),
+                // not probe order, so `holders[0]` is the best source
+                let verdict = |s: usize| {
+                    holds[i].iter().find(|&&(shard, _)| shard == s).and_then(|&(_, v)| v)
+                };
+                let holders: Vec<usize> =
+                    replicas.iter().copied().filter(|&s| verdict(s) == Some(true)).collect();
+                let missing: Vec<usize> =
+                    replicas.iter().copied().filter(|&s| verdict(s) == Some(false)).collect();
+                let unreachable: Vec<usize> =
+                    replicas.iter().copied().filter(|&s| verdict(s).is_none()).collect();
+                ChunkHealth { idx: i, hash: h, replicas, holders, missing, unreachable }
+            })
+            .collect();
+        ScanReport { chunks, unreachable_shards }
+    }
+
+    /// Scan, then re-put every repairable chunk: pull the full record
+    /// from the first surviving holder and register it on each
+    /// reachable replica missing it, riding out `Busy` refusals under
+    /// the retry policy. Per-chunk faults are recorded, never fatal.
+    pub fn repair(&self, hashes: &[u64]) -> RepairReport {
+        let before = self.scan(hashes);
+        let mut repaired = Vec::new();
+        let mut failed = Vec::new();
+        let mut busy_retries = 0usize;
+        for c in &before.chunks {
+            if c.missing.is_empty() {
+                continue;
+            }
+            let Some(&from) = c.holders.first() else {
+                // no reachable holder: nothing to source the re-put from
+                // (every surviving replica lost it, or all are down)
+                for &to in &c.missing {
+                    failed.push(RepairFailure {
+                        idx: c.idx,
+                        shard: to,
+                        error: FetchError::transport(format!(
+                            "chunk {:#x} has no reachable holder to repair from",
+                            c.hash
+                        )),
+                    });
+                }
+                continue;
+            };
+            let pulled = self.with_busy_retry(
+                || self.router.client(from).pull_chunk(c.hash),
+                &mut busy_retries,
+            );
+            let chunk = match pulled {
+                Ok(Some(chunk)) => chunk,
+                Ok(None) => {
+                    failed.push(RepairFailure {
+                        idx: c.idx,
+                        shard: from,
+                        error: FetchError::transport(format!(
+                            "holder shard {from} evicted chunk {:#x} between scan and pull",
+                            c.hash
+                        )),
+                    });
+                    continue;
+                }
+                Err(e) => {
+                    failed.push(RepairFailure { idx: c.idx, shard: from, error: e });
+                    continue;
+                }
+            };
+            for &to in &c.missing {
+                let put = self.with_busy_retry(
+                    || self.router.client(to).put_chunk(&chunk),
+                    &mut busy_retries,
+                );
+                match put {
+                    Ok((true, _evicted)) => {
+                        repaired.push(RepairAction { idx: c.idx, hash: c.hash, from, to });
+                    }
+                    Ok((false, _)) => failed.push(RepairFailure {
+                        idx: c.idx,
+                        shard: to,
+                        error: FetchError::Capacity {
+                            detail: format!(
+                                "shard {to} refused re-put of chunk {:#x} (full?)",
+                                c.hash
+                            ),
+                        },
+                    }),
+                    Err(e) => failed.push(RepairFailure { idx: c.idx, shard: to, error: e }),
+                }
+            }
+        }
+        RepairReport { before, repaired, failed, busy_retries }
+    }
+
+    /// Run `op` through the shared [`RetryPolicy::run_busy`] loop,
+    /// counting each `Busy` refusal into `busy_retries`; any other
+    /// fault is returned typed.
+    fn with_busy_retry<T>(
+        &self,
+        op: impl FnMut() -> std::io::Result<T>,
+        busy_retries: &mut usize,
+    ) -> Result<T, FetchError> {
+        self.retry.run_busy(op, || *busy_retries += 1, |e| FetchError::transport(e.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvstore::{prefix_hashes, StorageNode, StoredChunk, StoredVariant};
+    use crate::service::server::{ServerConfig, StorageServer};
+    use crate::service::shard::Placement;
+
+    fn chunk(hash: u64, bytes: usize) -> StoredChunk {
+        StoredChunk {
+            hash,
+            tokens: 8,
+            scales: vec![1.0; 2],
+            variants: vec![StoredVariant {
+                resolution: "144p",
+                group_bytes: vec![vec![0xAB; bytes]],
+                total_bytes: bytes,
+                n_frames: 1,
+            }],
+        }
+    }
+
+    /// Two shards, replication 2: shard 1 starts empty, one repair pass
+    /// converges it, and a second pass is a no-op.
+    #[test]
+    fn repair_fills_an_empty_replica_and_is_idempotent() {
+        let tokens: Vec<u32> = (0..24).collect();
+        let hashes = prefix_hashes(&tokens, 8);
+        assert_eq!(hashes.len(), 3);
+        let mut full = StorageNode::new(8);
+        for &h in &hashes {
+            full.register(chunk(h, 40));
+        }
+        let a = StorageServer::spawn("127.0.0.1:0", full, ServerConfig::default()).expect("bind");
+        let b = StorageServer::spawn("127.0.0.1:0", StorageNode::new(8), ServerConfig::default())
+            .expect("bind");
+        let addrs = vec![a.local_addr().to_string(), b.local_addr().to_string()];
+        let router =
+            ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 2).expect("connect");
+        let scanner = RepairScanner::new(router);
+
+        let scan = scanner.scan(&hashes);
+        assert!(!scan.healthy());
+        // every chunk is missing exactly its shard-1 replica
+        assert_eq!(scan.under_replicated(), 3);
+        for c in &scan.chunks {
+            assert_eq!(c.holders, vec![0]);
+            assert_eq!(c.missing, vec![1]);
+            assert!(c.unreachable.is_empty());
+            assert!(c.repairable());
+        }
+
+        let report = scanner.repair(&hashes);
+        assert!(report.converged(), "failed: {:?}", report.failed);
+        assert_eq!(report.repaired.len(), 3);
+        assert!(report.repaired.iter().all(|r| r.from == 0 && r.to == 1));
+        assert!(scanner.scan(&hashes).healthy(), "post-repair fleet must be at factor r");
+        // bytes actually landed on shard 1
+        assert_eq!(b.node().lock().unwrap().len(), 3);
+
+        let again = scanner.repair(&hashes);
+        assert!(again.repaired.is_empty() && again.failed.is_empty(), "repair is idempotent");
+        a.shutdown();
+        b.shutdown();
+    }
+
+    /// On a degraded fleet, deficits split three ways and none is
+    /// fatal: chunks the live shard holds are merely unreachable on the
+    /// dead one, while a chunk with *no reachable holder* (data loss
+    /// until the dead shard returns) is recorded as a failure — never
+    /// silently skipped.
+    #[test]
+    fn unreachable_holder_is_reported_not_fatal() {
+        let tokens: Vec<u32> = (0..16).collect();
+        let hashes = prefix_hashes(&tokens, 8);
+        // shard 0 (a replica of everything at r=2) is dead; the live
+        // shard 1 holds only chunk 0 — chunk 1 has no reachable holder
+        let mut node1 = StorageNode::new(8);
+        node1.register(chunk(hashes[0], 10));
+        let b = StorageServer::spawn("127.0.0.1:0", node1, ServerConfig::default()).expect("bind");
+        let addrs = vec!["127.0.0.1:1".to_string(), b.local_addr().to_string()];
+        let (router, dead) =
+            ShardRouter::connect_lenient(&addrs, Placement::RoundRobin, 2).expect("lenient");
+        assert_eq!(dead, vec![0]);
+        let scanner = RepairScanner::new(router);
+        let scan = scanner.scan(&hashes);
+        assert_eq!(scan.unreachable_shards, vec![0]);
+        assert_eq!(scan.under_replicated(), 2);
+        assert_eq!(scan.chunks[0].holders, vec![1]);
+        assert!(scan.chunks[0].missing.is_empty());
+        assert_eq!(scan.chunks[0].unreachable, vec![0]);
+        assert_eq!(scan.chunks[1].holders, Vec::<usize>::new());
+        assert_eq!(scan.chunks[1].missing, vec![1]);
+        assert!(!scan.chunks[1].repairable(), "no reachable holder to source from");
+
+        let report = scanner.repair(&hashes);
+        assert!(report.repaired.is_empty());
+        assert_eq!(report.failed.len(), 1, "the lost chunk must be reported, not skipped");
+        assert_eq!((report.failed[0].idx, report.failed[0].shard), (1, 1));
+        match &report.failed[0].error {
+            FetchError::Transport { detail, .. } => {
+                assert!(detail.contains("no reachable holder"), "{detail}")
+            }
+            other => panic!("wrong error {other:?}"),
+        }
+        assert!(!report.converged());
+        b.shutdown();
+    }
+}

@@ -17,7 +17,7 @@
 //! **Admission control** ([`AdmissionConfig`]): the node refuses work
 //! at two limits instead of degrading or dropping connections. While
 //! more than `max_conns` connections are live, data-plane requests
-//! (`FetchChunk` / `PutChunk`) on *any* connection are answered
+//! (`FetchChunk` / `PullChunk` / `PutChunk`) on *any* connection are answered
 //! [`Response::Busy`] until the count falls; control-plane requests
 //! (`Stats`, lookups, probes) always pass, so a saturated node stays
 //! observable. `max_inflight_bytes` caps the chunk-payload bytes being
@@ -89,8 +89,8 @@ pub struct FaultSpec {
     pub die_after_fetches: Option<usize>,
     /// Sleep this long before handling each accepted connection.
     pub accept_delay_ms: u64,
-    /// Answer the first N `FetchChunk` requests with `Busy` regardless
-    /// of admission state.
+    /// Answer the first N chunk-read requests (`FetchChunk` and repair
+    /// `PullChunk`) with `Busy` regardless of admission state.
     pub busy_first_fetches: usize,
 }
 
@@ -114,7 +114,8 @@ struct Admission {
     busy_replies: AtomicU64,
     /// `FetchChunk` replies fully sent (drives `die_after_fetches`).
     fetches_served: AtomicUsize,
-    /// `FetchChunk` requests seen (drives `busy_first_fetches`).
+    /// Chunk-read requests seen — fetches and repair pulls (drives
+    /// `busy_first_fetches`).
     fetches_seen: AtomicUsize,
 }
 
@@ -300,7 +301,10 @@ fn serve_conn(
             }
         };
         let is_fetch = matches!(req, Request::FetchChunk { .. });
-        let data_plane = is_fetch || matches!(req, Request::PutChunk { .. });
+        // chunk *reads* (fetches and repair pulls) share the injected-
+        // saturation fault; the death fault stays a fetch-reply boundary
+        let is_chunk_read = is_fetch || matches!(req, Request::PullChunk { .. });
+        let data_plane = is_chunk_read || matches!(req, Request::PutChunk { .. });
         if is_fetch {
             // injected death at a chunk boundary: once the quota of
             // served fetches is reached, the shard is dead — close the
@@ -311,16 +315,17 @@ fn serve_conn(
                     break;
                 }
             }
-            // injected saturation: Busy for the first N fetch requests
-            if cfg.fault.busy_first_fetches > 0
-                && admission.fetches_seen.fetch_add(1, Ordering::SeqCst)
-                    < cfg.fault.busy_first_fetches
-            {
-                if send_busy(stream, bucket.as_mut(), admission, retry_ms).is_err() {
-                    break;
-                }
-                continue;
+        }
+        // injected saturation: Busy for the first N chunk-read requests
+        if is_chunk_read
+            && cfg.fault.busy_first_fetches > 0
+            && admission.fetches_seen.fetch_add(1, Ordering::SeqCst)
+                < cfg.fault.busy_first_fetches
+        {
+            if send_busy(stream, bucket.as_mut(), admission, retry_ms).is_err() {
+                break;
             }
+            continue;
         }
         // connection-count admission: while over the limit, data-plane
         // requests are refused (control plane always passes, so the
@@ -335,11 +340,13 @@ fn serve_conn(
             continue;
         }
         let (resp, pinned) = handle_request(req, node, admission);
+        let is_fetch_reply = matches!(resp, Response::Chunk(_));
         let (tag, body) = protocol::encode_response(&resp);
         let frame = protocol::frame_bytes(tag, &body);
-        // in-flight-byte admission: the cost of a chunk reply is its
-        // whole frame; refuse with Busy when the budget is spent
-        let reserved = if matches!(resp, Response::Chunk(_)) {
+        // in-flight-byte admission: the cost of a chunk reply (a fetched
+        // variant or a repair pull's full record) is its whole frame;
+        // refuse with Busy when the budget is spent
+        let reserved = if matches!(resp, Response::Chunk(_) | Response::ChunkFull(_)) {
             if !admission.reserve(frame.len(), cfg.admission.max_inflight_bytes) {
                 if let Some(hash) = pinned {
                     node.lock().expect("node lock").unpin(hash);
@@ -363,9 +370,9 @@ fn serve_conn(
         if sent.is_err() {
             break;
         }
-        if reserved {
+        if is_fetch_reply {
             // one more chunk fully on the wire (chunk boundary for the
-            // die_after_fetches fault)
+            // die_after_fetches fault; repair pulls don't count)
             let served = admission.fetches_served.fetch_add(1, Ordering::SeqCst) + 1;
             if cfg.fault.die_after_fetches.is_some_and(|limit| served >= limit) {
                 // die exactly at the boundary: stop the server and close
@@ -410,6 +417,13 @@ fn handle_request(
             };
             node.pin(hash);
             (Response::Chunk(payload), Some(hash))
+        }
+        Request::PullChunk { hash } => {
+            let Some(chunk) = node.fetch(hash).cloned() else {
+                return (Response::NotFound { hash }, None);
+            };
+            node.pin(hash);
+            (Response::ChunkFull(chunk), Some(hash))
         }
         Request::PutChunk { chunk } => {
             let out = node.register(chunk);

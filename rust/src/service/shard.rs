@@ -55,6 +55,7 @@ pub struct ShardMap {
 }
 
 impl ShardMap {
+    /// An unreplicated map over `n` shards.
     pub fn new(n: usize, placement: Placement) -> ShardMap {
         ShardMap::with_replication(n, placement, 1)
     }
@@ -67,6 +68,7 @@ impl ShardMap {
         ShardMap { n, placement, replication: replication.clamp(1, n) }
     }
 
+    /// Number of shards in the fleet.
     pub fn n_shards(&self) -> usize {
         self.n
     }
@@ -96,6 +98,22 @@ impl ShardMap {
     /// writers write through in exactly this order.
     pub fn replicas_of(&self, chain_idx: usize, hash: u64) -> Vec<usize> {
         (0..self.replication).map(|k| self.replica_at(chain_idx, hash, k)).collect()
+    }
+
+    /// [`replicas_of`](Self::replicas_of) rotated by a hash-keyed
+    /// offset — the round-robin *read* schedule. The rotation is keyed
+    /// on a re-mixed chunk hash rather than the chain position: with
+    /// `RoundRobin` placement the primary already advances by one per
+    /// chunk, so a position-keyed rotation aliases with the placement
+    /// stripe (e.g. 2 shards at replication 2 would first-pick shard 0
+    /// for *every* chunk); a hash-keyed offset cannot line up with any
+    /// placement pattern. The salt decorrelates the rotation from
+    /// `ByHash` placement, which consumes `mix(hash)` itself.
+    pub fn rotated_replicas_of(&self, chain_idx: usize, hash: u64) -> Vec<usize> {
+        let mut reps = self.replicas_of(chain_idx, hash);
+        let k = (mix(hash ^ 0x517C_C1B7_2722_0A95) % self.replication as u64) as usize;
+        reps.rotate_left(k);
+        reps
     }
 }
 
@@ -146,14 +164,47 @@ impl ShardRouter {
         Ok(ShardRouter { map, clients })
     }
 
+    /// [`connect_replicated`](Self::connect_replicated), but a dead
+    /// address does not fail construction: its client is built lazily
+    /// ([`StoreClient::lazy`]) and its shard index is returned in the
+    /// second tuple slot. Calls against those shards surface the dial
+    /// error per call. The anti-entropy repair scanner uses this to
+    /// diff holder sets on a *degraded* fleet — exactly the state that
+    /// most needs diagnosing.
+    pub fn connect_lenient(
+        addrs: &[String],
+        placement: Placement,
+        replication: usize,
+    ) -> Result<(ShardRouter, Vec<usize>), FetchError> {
+        if addrs.is_empty() {
+            return Err(FetchError::transport("no shard addresses to connect to"));
+        }
+        let mut clients = Vec::with_capacity(addrs.len());
+        let mut unreachable = Vec::new();
+        for (shard, addr) in addrs.iter().enumerate() {
+            match StoreClient::connect(addr) {
+                Ok(client) => clients.push(client),
+                Err(_) => {
+                    unreachable.push(shard);
+                    clients.push(StoreClient::lazy(addr));
+                }
+            }
+        }
+        let map = ShardMap::with_replication(clients.len(), placement, replication);
+        Ok((ShardRouter { map, clients }, unreachable))
+    }
+
+    /// The pure placement map this router routes by.
     pub fn map(&self) -> ShardMap {
         self.map
     }
 
+    /// Number of shards in the fleet.
     pub fn n_shards(&self) -> usize {
         self.clients.len()
     }
 
+    /// The pooled client of one shard.
     pub fn client(&self, shard: usize) -> &StoreClient {
         &self.clients[shard]
     }
@@ -257,6 +308,32 @@ mod tests {
     #[should_panic(expected = "at least one shard")]
     fn zero_shards_rejected() {
         ShardMap::new(0, Placement::RoundRobin);
+    }
+
+    #[test]
+    fn rotated_replicas_permute_the_set_and_dodge_the_placement_stripe() {
+        // the aliasing trap: 2 shards, replication 2, round-robin
+        // placement — a position-keyed rotation would first-pick shard
+        // 0 for every chunk; the hash-keyed one must hit both shards
+        for placement in [Placement::RoundRobin, Placement::ByHash] {
+            let m = ShardMap::with_replication(2, placement, 2);
+            let tokens: Vec<u32> = (0..64 * 4).map(|t| t.wrapping_mul(2_654_435_761)).collect();
+            let hashes = crate::kvstore::prefix_hashes(&tokens, 4);
+            let mut first_picks = [false; 2];
+            for (i, &h) in hashes.iter().enumerate() {
+                let rotated = m.rotated_replicas_of(i, h);
+                // a rotation of the replica set: same shards, same len
+                let mut a = rotated.clone();
+                let mut b = m.replicas_of(i, h);
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "{placement:?}: rotation must permute the set");
+                // deterministic per (idx, hash)
+                assert_eq!(rotated, m.rotated_replicas_of(i, h));
+                first_picks[rotated[0]] = true;
+            }
+            assert_eq!(first_picks, [true, true], "{placement:?}: one shard never first-picked");
+        }
     }
 
     #[test]

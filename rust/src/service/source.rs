@@ -11,7 +11,12 @@
 //!   bounded retry-with-backoff ([`RetryPolicy`]) and fails over to the
 //!   chunk's replicas on transport faults or retry exhaustion — a shard
 //!   dying mid-fetch is transparent, and `FetchError::Capacity`
-//!   surfaces only when *every* replica of a chunk is saturated;
+//!   surfaces only when *every* replica of a chunk is saturated. A
+//!   [`ReadPolicy`] decides which replica each chunk is *tried on
+//!   first* (primary-first, round-robin, least-inflight via the wire-v2
+//!   `NodeStats` in-flight counter, or weighted by per-replica
+//!   bandwidth EWMAs), so a replicated fleet balances read load instead
+//!   of hammering primaries;
 //! * [`ObjectStoreSource`] shapes an in-process store like an object
 //!   store (per-request latency plus a throughput ceiling) — the
 //!   ROADMAP's "object-store-shaped `TransportSource`" behind the same
@@ -21,12 +26,14 @@
 //!   of hard-wiring constructors per entry point. Custom factories
 //!   registered later shadow the built-ins.
 
+use std::io;
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::fetcher::{ChunkPayload, FetchError, TransportSource, WireTiming};
+use crate::fetcher::{ChunkPayload, FetchError, ReadPolicy, TransportSource, WireTiming};
 use crate::kvstore::StorageNode;
+use crate::net::BandwidthEstimator;
 
 use super::shard::{Placement, ShardRouter};
 
@@ -71,6 +78,7 @@ pub struct LocalSource {
 }
 
 impl LocalSource {
+    /// A source over an in-process node serving `hashes` at `ladder`.
     pub fn new(node: Arc<Mutex<StorageNode>>, hashes: Vec<u64>, ladder: Ladder) -> LocalSource {
         LocalSource { node, hashes, ladder }
     }
@@ -117,7 +125,45 @@ impl RetryPolicy {
         let base = hinted_ms.max(self.min_backoff_ms);
         Duration::from_millis(base.saturating_mul(attempt as u64).min(self.max_backoff_ms))
     }
+
+    /// Run `op`, absorbing `Busy` admission refusals with this policy's
+    /// bounded retry-with-backoff — the one busy loop shared by the
+    /// fetch path (`RemoteSource`) and the repair scanner, so their
+    /// backoff semantics cannot drift. `on_busy` fires once per refusal
+    /// (counters); past the budget the typed `Busy` is returned. Other
+    /// typed errors smuggled through the io boundary pass through, and
+    /// untyped I/O faults go through `map_io` so each caller keeps its
+    /// own shard/chunk attribution.
+    pub fn run_busy<T>(
+        &self,
+        mut op: impl FnMut() -> io::Result<T>,
+        mut on_busy: impl FnMut(),
+        map_io: impl Fn(io::Error) -> FetchError,
+    ) -> Result<T, FetchError> {
+        let mut attempt = 0usize;
+        loop {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) => match FetchError::from_io(&e) {
+                    Some(FetchError::Busy { retry_after_ms }) => {
+                        on_busy();
+                        attempt += 1;
+                        if attempt > self.max_busy_retries {
+                            return Err(FetchError::Busy { retry_after_ms });
+                        }
+                        thread::sleep(self.backoff(attempt, retry_after_ms));
+                    }
+                    Some(other) => return Err(other),
+                    None => return Err(map_io(e)),
+                },
+            }
+        }
+    }
 }
+
+/// EWMA smoothing of the per-replica delivery-bandwidth estimators the
+/// [`ReadPolicy::EstimatorWeighted`] policy ranks replicas by.
+const REPLICA_EST_ALPHA: f64 = 0.5;
 
 /// Stream chunks from remote shard servers.
 pub struct RemoteSource {
@@ -125,6 +171,11 @@ pub struct RemoteSource {
     hashes: Vec<u64>,
     ladder: Ladder,
     retry: RetryPolicy,
+    policy: ReadPolicy,
+    /// Per-shard EWMA of delivered bandwidth, fed by this source's own
+    /// successful chunk fetches (attempt-local timing, so busy backoff
+    /// and paced sends both count against the serving replica).
+    estimators: Vec<BandwidthEstimator>,
     /// Per-chunk wire timings, in fetch order (drained into the
     /// `FetchReport` by `take_timings`). `WireTiming::shard` records
     /// which replica actually served each chunk.
@@ -132,8 +183,19 @@ pub struct RemoteSource {
 }
 
 impl RemoteSource {
+    /// A source over a connected fleet serving `hashes` at `ladder`,
+    /// with the default retry policy and primary-first reads.
     pub fn new(router: ShardRouter, hashes: Vec<u64>, ladder: Ladder) -> RemoteSource {
-        RemoteSource { router, hashes, ladder, retry: RetryPolicy::default(), timings: Vec::new() }
+        let estimators = vec![BandwidthEstimator::new(REPLICA_EST_ALPHA); router.n_shards()];
+        RemoteSource {
+            router,
+            hashes,
+            ladder,
+            retry: RetryPolicy::default(),
+            policy: ReadPolicy::PrimaryFirst,
+            estimators,
+            timings: Vec::new(),
+        }
     }
 
     /// Override the busy retry/backoff policy.
@@ -142,11 +204,75 @@ impl RemoteSource {
         self
     }
 
+    /// Override the replica-read scheduling policy (see [`ReadPolicy`]).
+    pub fn with_policy(mut self, policy: ReadPolicy) -> RemoteSource {
+        self.policy = policy;
+        self
+    }
+
+    /// The underlying fleet router.
     pub fn router(&self) -> &ShardRouter {
         &self.router
     }
 
-    /// One replica's final verdict for a chunk.
+    /// Order a chunk's replica set by the read policy: the first entry
+    /// is tried first, the rest are the failover chain. Every policy
+    /// returns a permutation of `replicas`, so the PR 4 failover /
+    /// `Busy` semantics are unchanged — only who gets asked first.
+    fn replica_order(&self, idx: usize, hash: u64, replicas: &[usize]) -> Vec<usize> {
+        let mut order = replicas.to_vec();
+        if order.len() < 2 {
+            // nothing to schedule — and least-inflight must not pay a
+            // Stats round trip per chunk just to sort one element
+            return order;
+        }
+        match self.policy {
+            ReadPolicy::PrimaryFirst => {}
+            // hash-keyed rotation: a chain-position rotation would
+            // alias with the RoundRobin placement stripe (see
+            // ShardMap::rotated_replicas_of)
+            ReadPolicy::RoundRobin => order = self.router.map().rotated_replicas_of(idx, hash),
+            ReadPolicy::LeastInflight => {
+                // one control-plane Stats probe per replica (these pass
+                // admission even on a saturated node); an unreachable
+                // replica sorts last and fails over normally. The sort
+                // is stable, so ties keep primary-first order.
+                let load: Vec<u64> = order
+                    .iter()
+                    .map(|&s| {
+                        self.router
+                            .client(s)
+                            .stats()
+                            .map(|st| st.inflight_bytes)
+                            .unwrap_or(u64::MAX)
+                    })
+                    .collect();
+                let mut keyed: Vec<(u64, usize)> =
+                    load.into_iter().zip(order.iter().copied()).collect();
+                keyed.sort_by_key(|&(inflight, _)| inflight);
+                order = keyed.into_iter().map(|(_, s)| s).collect();
+            }
+            ReadPolicy::EstimatorWeighted => {
+                // unobserved replicas estimate to +inf, so each replica
+                // is probed once before the fastest link wins (stable
+                // sort: all-unobserved degrades to primary-first)
+                let mut keyed: Vec<(f64, usize)> = order
+                    .iter()
+                    .map(|&s| (self.estimators[s].estimate(f64::INFINITY), s))
+                    .collect();
+                keyed.sort_by(|a, b| {
+                    b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal)
+                });
+                order = keyed.into_iter().map(|(_, s)| s).collect();
+            }
+        }
+        order
+    }
+
+    /// One replica's final verdict for a chunk: `Busy` refusals are
+    /// retried on this replica under the retry policy, then reported
+    /// typed so the caller can fail over (and distinguish saturation
+    /// from death); other typed refusals pass through unchanged.
     fn try_replica(
         &self,
         shard: usize,
@@ -154,42 +280,22 @@ impl RemoteSource {
         hash: u64,
         name: &'static str,
     ) -> Result<ChunkPayload, FetchError> {
-        let mut attempt = 0usize;
-        loop {
-            match self.router.client(shard).fetch_chunk(hash, name) {
-                Ok(Some(payload)) => return Ok(payload),
-                Ok(None) => {
-                    return Err(FetchError::Transport {
-                        chunk: Some(idx),
-                        shard: Some(shard),
-                        detail: format!("chunk {hash:#x} not on shard {shard} (evicted?)"),
-                    });
-                }
-                Err(e) => match FetchError::from_io(&e) {
-                    // admission refusal: bounded retry-with-backoff on
-                    // this replica, then report Busy so the caller can
-                    // fail over (and distinguish saturation from death)
-                    Some(FetchError::Busy { retry_after_ms }) => {
-                        attempt += 1;
-                        if attempt > self.retry.max_busy_retries {
-                            return Err(FetchError::Busy { retry_after_ms });
-                        }
-                        thread::sleep(self.retry.backoff(attempt, retry_after_ms));
-                    }
-                    // other typed refusals (e.g. oversized-frame
-                    // Capacity) pass through unchanged
-                    Some(other) => return Err(other),
-                    None => {
-                        return Err(FetchError::Transport {
-                            chunk: Some(idx),
-                            shard: Some(shard),
-                            detail: format!(
-                                "remote fetch of chunk {hash:#x} from shard {shard} failed: {e}"
-                            ),
-                        });
-                    }
-                },
-            }
+        let fetched = self.retry.run_busy(
+            || self.router.client(shard).fetch_chunk(hash, name),
+            || {},
+            |e| FetchError::Transport {
+                chunk: Some(idx),
+                shard: Some(shard),
+                detail: format!("remote fetch of chunk {hash:#x} from shard {shard} failed: {e}"),
+            },
+        )?;
+        match fetched {
+            Some(payload) => Ok(payload),
+            None => Err(FetchError::Transport {
+                chunk: Some(idx),
+                shard: Some(shard),
+                detail: format!("chunk {hash:#x} not on shard {shard} (evicted?)"),
+            }),
         }
     }
 }
@@ -202,14 +308,18 @@ impl TransportSource for RemoteSource {
             .ok_or_else(|| FetchError::transport(format!("no chunk at index {idx}")))?;
         let name = self.ladder[res_idx.min(self.ladder.len() - 1)];
         let replicas = self.router.map().replicas_of(idx, hash);
+        let order = self.replica_order(idx, hash, &replicas);
         let t0 = Instant::now();
         // Busy is transient and must never escape the source, so track
         // real faults separately: if any replica failed for a non-Busy
         // reason, that fault (with its shard attribution) is the story.
         let mut last_fault: Option<FetchError> = None;
-        for &shard in &replicas {
+        for &shard in &order {
+            let t_attempt = Instant::now();
             match self.try_replica(shard, idx, hash, name) {
                 Ok(payload) => {
+                    self.estimators[shard]
+                        .observe(payload.wire_bytes(), t_attempt.elapsed().as_secs_f64());
                     self.timings.push(WireTiming {
                         idx,
                         wire_bytes: payload.wire_bytes(),
@@ -218,8 +328,18 @@ impl TransportSource for RemoteSource {
                     });
                     return Ok(payload);
                 }
-                Err(FetchError::Busy { .. }) => {}
-                Err(e) => last_fault = Some(e),
+                Err(e) => {
+                    // a failed attempt counts as zero delivered bytes,
+                    // so a dead or saturated-out replica's estimate
+                    // collapses instead of staying "unobserved" (+inf)
+                    // and being first-picked for every later chunk
+                    self.estimators[shard]
+                        .observe(0, t_attempt.elapsed().as_secs_f64().max(1e-6));
+                    match e {
+                        FetchError::Busy { .. } => {}
+                        e => last_fault = Some(e),
+                    }
+                }
             }
         }
         // every replica failed: any real fault outranks saturation;
@@ -276,10 +396,12 @@ pub struct ObjectStoreSource {
     hashes: Vec<u64>,
     ladder: Ladder,
     shape: ObjStoreShape,
+    /// Per-chunk wire timings, in fetch order (`shard` is `None`).
     pub timings: Vec<WireTiming>,
 }
 
 impl ObjectStoreSource {
+    /// A shaped source over an in-process node serving `hashes`.
     pub fn new(
         node: Arc<Mutex<StorageNode>>,
         hashes: Vec<u64>,
@@ -345,6 +467,7 @@ impl Backend {
         }
     }
 
+    /// Canonical config/CLI name.
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Local => "local",
@@ -369,8 +492,9 @@ pub struct SourceSpec {
     pub hashes: Vec<u64>,
     /// Ladder the source serves for resolution indices 0..4.
     pub ladder: Option<Ladder>,
-    /// TCP backend: shard addresses + placement.
+    /// TCP backend: shard addresses.
     pub addrs: Vec<String>,
+    /// TCP backend: chunk-to-shard placement function.
     pub placement: Placement,
     /// TCP backend: replication factor — each chunk is expected on its
     /// primary plus `r - 1` replica shards, and the source fails over
@@ -379,9 +503,13 @@ pub struct SourceSpec {
     pub replication: usize,
     /// TCP backend: busy retry/backoff policy.
     pub retry: RetryPolicy,
+    /// TCP backend: replica-read scheduling policy (which replica
+    /// serves each chunk when `replication >= 2`).
+    pub read_policy: ReadPolicy,
     /// TCP backend: token ids for the fleet-wide prefix match (when
     /// set, the factory verifies the whole chain is stored remotely).
     pub tokens: Vec<u32>,
+    /// Tokens per chunk of the chain `tokens` hashes into.
     pub chunk_tokens: usize,
     /// In-process backends: the populated storage node.
     pub node: Option<Arc<Mutex<StorageNode>>>,
@@ -390,6 +518,7 @@ pub struct SourceSpec {
 }
 
 impl SourceSpec {
+    /// A spec serving `hashes` at `ladder`, defaults everywhere else.
     pub fn new(hashes: Vec<u64>, ladder: Ladder) -> SourceSpec {
         SourceSpec { hashes, ladder: Some(ladder), ..Default::default() }
     }
@@ -407,7 +536,9 @@ impl SourceSpec {
 
 /// Builds one backend's [`TransportSource`] from a [`SourceSpec`].
 pub trait SourceFactory: Send + Sync {
+    /// Which backend this factory builds.
     fn backend(&self) -> Backend;
+    /// Build the source, erroring (typed) on missing spec fields.
     fn create(&self, spec: &SourceSpec) -> Result<Box<dyn TransportSource>, FetchError>;
 }
 
@@ -470,7 +601,11 @@ impl SourceFactory for TcpFactory {
         if hashes.is_empty() {
             return Err(FetchError::transport("no chunks to fetch (empty hash chain)"));
         }
-        Ok(Box::new(RemoteSource::new(router, hashes, spec.ladder()?).with_retry(spec.retry)))
+        Ok(Box::new(
+            RemoteSource::new(router, hashes, spec.ladder()?)
+                .with_retry(spec.retry)
+                .with_policy(spec.read_policy),
+        ))
     }
 }
 
@@ -500,6 +635,7 @@ pub struct SourceRegistry {
 }
 
 impl SourceRegistry {
+    /// A registry with the three built-in factories installed.
     pub fn with_defaults() -> SourceRegistry {
         SourceRegistry {
             factories: vec![
@@ -510,6 +646,7 @@ impl SourceRegistry {
         }
     }
 
+    /// Install a factory; it shadows earlier ones for its backend.
     pub fn register(&mut self, factory: Box<dyn SourceFactory>) {
         self.factories.push(factory);
     }
@@ -525,6 +662,7 @@ impl SourceRegistry {
         seen
     }
 
+    /// Build `backend`'s source from `spec` via its newest factory.
     pub fn create(
         &self,
         backend: Backend,

@@ -26,12 +26,15 @@ use crate::net::BandwidthTrace;
 /// each server connection instantiates its own [`TokenBucket`] from it.
 #[derive(Debug, Clone)]
 pub struct ThrottleSpec {
+    /// The bandwidth schedule to replay over the wire.
     pub trace: BandwidthTrace,
     /// Wall seconds per trace second (1.0 = real time).
     pub dilation: f64,
 }
 
 impl ThrottleSpec {
+    /// A throttle replaying `trace` at `dilation` wall-seconds per
+    /// trace-second.
     pub fn new(trace: BandwidthTrace, dilation: f64) -> Self {
         assert!(dilation > 0.0 && dilation.is_finite());
         ThrottleSpec { trace, dilation }
@@ -69,11 +72,13 @@ pub struct TokenBucket {
 }
 
 impl TokenBucket {
+    /// A bucket replaying `trace`, starting its clock now.
     pub fn new(trace: BandwidthTrace, dilation: f64) -> Self {
         assert!(dilation > 0.0 && dilation.is_finite());
         TokenBucket { trace, dilation, started: Instant::now(), vt: 0.0 }
     }
 
+    /// A bucket instantiated from a connection's [`ThrottleSpec`].
     pub fn from_spec(spec: &ThrottleSpec) -> Self {
         TokenBucket::new(spec.trace.clone(), spec.dilation)
     }

@@ -1,0 +1,334 @@
+//! Replica read load-balancing + anti-entropy repair (ISSUE 5).
+//!
+//! Acceptance contracts:
+//! * with replication >= 2 and a `round-robin` or `least-inflight`
+//!   read policy, a multi-chunk fetch is served by >= 2 distinct
+//!   replicas (asserted on `WireTiming::shard` histograms) and still
+//!   restores bit-identically;
+//! * `least-inflight` steers every chunk away from a replica whose
+//!   `NodeStats.inflight_bytes` is pinned high, and `estimator-weighted`
+//!   probes every replica once before settling on the fastest link;
+//! * kill shard -> rejoin empty -> `RepairScanner::repair` converges
+//!   every chunk's holder set back to replication factor `r`, restores
+//!   stay bit-identical, and a second pass is a no-op;
+//! * repair transfers ride the admission `Busy` handshake (bounded
+//!   backoff) instead of stampeding a refusing holder.
+
+use std::collections::BTreeMap;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::fetcher::{
+    ExecMode, FetchConfig, FetchReport, FetchRequest, Fetcher, ReadPolicy, ResolutionPolicy,
+};
+use kvfetcher::kvstore::StorageNode;
+use kvfetcher::net::BandwidthTrace;
+use kvfetcher::service::{
+    demo_prefix, Backend, DemoPrefix, Placement, RepairScanner, RetryPolicy, ServerConfig,
+    ShardMap, ShardRouter, SourceRegistry, SourceSpec, StorageServer, StoreClient, ThrottleSpec,
+    DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
+};
+
+/// Spawn one server per shard, populated *in-process* with the demo
+/// chunks each shard's replica set owns (write-through-over-the-wire is
+/// `tests/service_faults.rs` territory; here population must not ride
+/// a throttled socket).
+fn launch(
+    demo: &DemoPrefix,
+    replication: usize,
+    cfgs: Vec<ServerConfig>,
+) -> (Vec<StorageServer>, Vec<String>, ShardMap) {
+    let map = ShardMap::with_replication(cfgs.len(), Placement::RoundRobin, replication);
+    let mut nodes: Vec<StorageNode> =
+        (0..cfgs.len()).map(|_| StorageNode::new(demo.chunk_tokens)).collect();
+    for (i, chunk) in demo.chunks.iter().enumerate() {
+        for shard in map.replicas_of(i, chunk.hash) {
+            assert!(nodes[shard].register(chunk.clone()).stored);
+        }
+    }
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for (node, cfg) in nodes.into_iter().zip(cfgs) {
+        let server = StorageServer::spawn("127.0.0.1:0", node, cfg).expect("bind");
+        addrs.push(server.local_addr().to_string());
+        servers.push(server);
+    }
+    (servers, addrs, map)
+}
+
+fn spec_for(demo: &DemoPrefix, addrs: &[String], replication: usize) -> SourceSpec {
+    let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+    spec.addrs = addrs.to_vec();
+    spec.placement = Placement::RoundRobin;
+    spec.replication = replication;
+    spec.tokens = demo.tokens.clone();
+    spec.chunk_tokens = demo.chunk_tokens;
+    spec.retry = RetryPolicy { max_busy_retries: 6, min_backoff_ms: 2, max_backoff_ms: 50 };
+    spec
+}
+
+/// Run one pipelined demo fetch through the facade under `policy` and
+/// return its report (bit-exactness asserted here for every caller).
+fn policy_fetch(
+    demo: &DemoPrefix,
+    addrs: &[String],
+    replication: usize,
+    policy: ReadPolicy,
+) -> FetchReport {
+    let mut spec = spec_for(demo, addrs, replication);
+    spec.read_policy = policy;
+    let source = SourceRegistry::with_defaults().create(Backend::Tcp, &spec).expect("tcp source");
+    let n_chunks = demo.hashes.len();
+    let total_tokens = n_chunks * demo.chunk_tokens;
+    let req = FetchRequest::new(
+        total_tokens,
+        total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2,
+    )
+    .with_hashes(demo.hashes.clone())
+    .resolution(ResolutionPolicy::Fixed(0))
+    .exec(ExecMode::Pipelined);
+    let fetcher = Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .fetch_config(FetchConfig { chunk_tokens: demo.chunk_tokens, ..Default::default() })
+        .bandwidth(BandwidthTrace::constant(8.0))
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .replication(replication)
+        .read_policy(policy)
+        .build();
+    let mut session = fetcher.session(req).with_source(source);
+    session.run().unwrap_or_else(|e| panic!("{policy} fetch must complete: {e}"));
+    let report = session.take_report().expect("report stored");
+    assert_eq!(report.restored.len(), n_chunks, "{policy}");
+    for (d, q) in report.restored.iter().zip(&demo.quants) {
+        assert_eq!(d.quant.data, q.data, "{policy}: restore must be bit-exact");
+        assert_eq!(d.quant.scales, q.scales, "{policy}");
+    }
+    assert_eq!(report.wire_timings.len(), n_chunks, "{policy}");
+    report
+}
+
+/// Serving-shard histogram of a report, with replica-set membership
+/// asserted for every chunk.
+fn shard_histogram(
+    report: &FetchReport,
+    demo: &DemoPrefix,
+    map: &ShardMap,
+) -> BTreeMap<usize, usize> {
+    let mut hist = BTreeMap::new();
+    for t in &report.wire_timings {
+        let served = t.shard.expect("tcp source names the serving shard");
+        let replicas = map.replicas_of(t.idx, demo.hashes[t.idx]);
+        assert!(replicas.contains(&served), "chunk {} served off-replica-set", t.idx);
+        *hist.entry(served).or_insert(0usize) += 1;
+    }
+    hist
+}
+
+// ----------------------------------------------------- read balancing
+
+/// Acceptance: round-robin on 3 shards / replication 2 serves a
+/// 6-chunk fetch from >= 2 distinct replicas (guaranteed here: the
+/// three primaries' candidate sets {0,1}/{1,2}/{2,0} share no common
+/// element), each chunk from exactly the replica the hash-keyed
+/// rotation predicts.
+#[test]
+fn round_robin_spreads_reads_across_replicas() {
+    let demo = demo_prefix(101, 6, 32);
+    let (servers, addrs, map) = launch(&demo, 2, vec![ServerConfig::default(); 3]);
+    let report = policy_fetch(&demo, &addrs, 2, ReadPolicy::RoundRobin);
+    let hist = shard_histogram(&report, &demo, &map);
+    assert!(hist.len() >= 2, "round-robin must hit >= 2 distinct replicas: {hist:?}");
+    // the rotation is deterministic and keyed on the chunk hash (a
+    // chain-position rotation would alias with the placement stripe)
+    for t in &report.wire_timings {
+        let expected = map.rotated_replicas_of(t.idx, demo.hashes[t.idx])[0];
+        assert_eq!(t.shard, Some(expected), "chunk {} rotated wrong", t.idx);
+    }
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// With nothing in flight anywhere, least-inflight degrades to
+/// primary-first order — which on a round-robin-placed chain already
+/// stripes the fetch across every shard.
+#[test]
+fn least_inflight_serves_primaries_when_fleet_is_idle() {
+    let demo = demo_prefix(103, 6, 32);
+    let (servers, addrs, map) = launch(&demo, 2, vec![ServerConfig::default(); 3]);
+    let report = policy_fetch(&demo, &addrs, 2, ReadPolicy::LeastInflight);
+    let hist = shard_histogram(&report, &demo, &map);
+    assert!(hist.len() >= 2, "idle least-inflight must still spread: {hist:?}");
+    for t in &report.wire_timings {
+        let primary = map.replicas_of(t.idx, demo.hashes[t.idx])[0];
+        assert_eq!(t.shard, Some(primary), "ties must keep primary-first order");
+    }
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Acceptance: least-inflight reads the wire-v2 `NodeStats.inflight`
+/// signal — a replica with bytes pinned in flight serves nothing while
+/// its peer is idle.
+#[test]
+fn least_inflight_avoids_the_loaded_replica() {
+    let demo = demo_prefix(107, 6, 32);
+    // shard 0 paces every write very slowly, so one background fetch
+    // pins its in-flight reservation for seconds
+    let slow = ServerConfig {
+        throttle: Some(ThrottleSpec::new(BandwidthTrace::constant(8e-5), 1.0)),
+        ..Default::default()
+    };
+    let (servers, addrs, map) = launch(&demo, 2, vec![slow, ServerConfig::default()]);
+
+    let pin_addr = addrs[0].clone();
+    let pin_hash = demo.hashes[0];
+    let pinner = thread::spawn(move || {
+        let client = StoreClient::connect(&pin_addr).expect("connect");
+        let payload = client.fetch_chunk(pin_hash, "144p").expect("paced fetch");
+        assert!(payload.is_some(), "shard 0 stores chunk 0");
+    });
+    // wait until the paced reply's reservation is visible in Stats
+    let probe = StoreClient::connect(&addrs[0]).expect("connect");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while probe.stats().expect("stats").inflight_bytes == 0 {
+        assert!(Instant::now() < deadline, "pinned reservation never appeared");
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    let report = policy_fetch(&demo, &addrs, 2, ReadPolicy::LeastInflight);
+    let hist = shard_histogram(&report, &demo, &map);
+    assert_eq!(
+        hist.get(&1).copied().unwrap_or(0),
+        demo.hashes.len(),
+        "every chunk must dodge the loaded replica: {hist:?}"
+    );
+    pinner.join().expect("pinned fetch completes");
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Estimator-weighted reads probe each replica once (unobserved links
+/// sort first), then route everything over the faster link.
+#[test]
+fn estimator_weighted_probes_once_then_prefers_the_fast_link() {
+    let demo = demo_prefix(109, 6, 32);
+    // shard 0's wire is ~3 orders of magnitude slower than loopback
+    let slow = ServerConfig {
+        throttle: Some(ThrottleSpec::new(BandwidthTrace::constant(2e-3), 1.0)),
+        ..Default::default()
+    };
+    let (servers, addrs, map) = launch(&demo, 2, vec![slow, ServerConfig::default()]);
+    let report = policy_fetch(&demo, &addrs, 2, ReadPolicy::EstimatorWeighted);
+    let hist = shard_histogram(&report, &demo, &map);
+    assert_eq!(hist.len(), 2, "both replicas must be probed: {hist:?}");
+    assert_eq!(hist.get(&0), Some(&1), "the slow replica serves only its probe: {hist:?}");
+    assert_eq!(report.wire_timings[0].shard, Some(0), "first chunk probes the primary");
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+// -------------------------------------------------- anti-entropy repair
+
+/// Acceptance: kill a shard, rejoin it empty, run repair — every
+/// chunk's holder set is back at factor r, the restore is
+/// bit-identical, and a second pass repairs nothing.
+#[test]
+fn repair_converges_after_kill_and_rejoin() {
+    let demo = demo_prefix(113, 6, 32);
+    let (mut servers, addrs, map) = launch(&demo, 2, vec![ServerConfig::default(); 3]);
+    let expected_deficit = (0..demo.hashes.len())
+        .filter(|&i| map.replicas_of(i, demo.hashes[i]).contains(&1))
+        .count();
+    assert!(expected_deficit >= 2, "victim must replicate several chunks");
+
+    // healthy fleet scans clean
+    let router =
+        ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 2).expect("connect");
+    assert!(RepairScanner::new(router).scan(&demo.hashes).healthy());
+
+    // kill shard 1 — the degraded fleet is still scannable (lenient)
+    servers.remove(1).shutdown();
+    let (router, dead) =
+        ShardRouter::connect_lenient(&addrs, Placement::RoundRobin, 2).expect("lenient");
+    assert_eq!(dead, vec![1]);
+    let degraded = RepairScanner::new(router).scan(&demo.hashes);
+    assert_eq!(degraded.unreachable_shards, vec![1]);
+    assert_eq!(degraded.under_replicated(), expected_deficit);
+
+    // shard 1 rejoins with nothing (same address, fresh node)
+    let blank = StorageNode::new(demo.chunk_tokens);
+    let rejoined = StorageServer::spawn(&addrs[1], blank, ServerConfig::default())
+        .expect("rebind freed port");
+    servers.insert(1, rejoined);
+
+    let router =
+        ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 2).expect("connect");
+    let scanner = RepairScanner::new(router);
+    let report = scanner.repair(&demo.hashes);
+    assert!(report.converged(), "failed: {:?}", report.failed);
+    assert_eq!(report.repaired.len(), expected_deficit);
+    assert!(report.repaired.iter().all(|a| a.to == 1), "only the rejoined shard was short");
+    assert!(scanner.scan(&demo.hashes).healthy(), "fleet must be back at factor r");
+
+    // holder sets equal the replica sets, over the wire
+    let clients: Vec<StoreClient> =
+        addrs.iter().map(|a| StoreClient::connect(a).expect("connect")).collect();
+    for (i, &h) in demo.hashes.iter().enumerate() {
+        let holders: Vec<usize> =
+            (0..3).filter(|&s| clients[s].has_chunks(&[h]).expect("probe")[0]).collect();
+        let mut replicas = map.replicas_of(i, h);
+        replicas.sort_unstable();
+        assert_eq!(holders, replicas, "chunk {i} holder set after repair");
+    }
+    drop(clients);
+
+    // the healed fleet serves balanced reads bit-identically
+    let fetched = policy_fetch(&demo, &addrs, 2, ReadPolicy::RoundRobin);
+    assert!(shard_histogram(&fetched, &demo, &map).contains_key(&1), "rejoined shard serves");
+
+    // idempotent: nothing left to move
+    let again = scanner.repair(&demo.hashes);
+    assert!(again.repaired.is_empty() && again.failed.is_empty());
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Repair transfers are rate-limited by the admission `Busy` handshake:
+/// a holder that refuses the first pulls is retried with backoff, and
+/// the pass still converges.
+#[test]
+fn repair_rides_out_busy_holders() {
+    let demo = demo_prefix(127, 3, 32);
+    let busy_holder = ServerConfig {
+        fault: kvfetcher::service::FaultSpec { busy_first_fetches: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let (mut servers, addrs, _map) =
+        launch(&demo, 2, vec![busy_holder, ServerConfig::default()]);
+
+    // shard 1 dies and rejoins empty; shard 0 is the only holder left
+    servers.remove(1).shutdown();
+    let blank = StorageNode::new(demo.chunk_tokens);
+    let rejoined = StorageServer::spawn(&addrs[1], blank, ServerConfig::default())
+        .expect("rebind freed port");
+    servers.insert(1, rejoined);
+
+    let router =
+        ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 2).expect("connect");
+    let scanner = RepairScanner::new(router)
+        .with_retry(RetryPolicy { max_busy_retries: 6, min_backoff_ms: 2, max_backoff_ms: 20 });
+    let report = scanner.repair(&demo.hashes);
+    assert!(report.busy_retries >= 2, "the forced refusals must be absorbed by backoff");
+    assert!(report.converged(), "failed: {:?}", report.failed);
+    assert!(scanner.scan(&demo.hashes).healthy());
+    for s in servers {
+        s.shutdown();
+    }
+}
