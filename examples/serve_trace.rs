@@ -1,185 +1,336 @@
-//! End-to-end serving driver (the DESIGN.md validation run): load the
-//! real AOT-compiled tiny model via PJRT, build a remote KV store of
-//! encoded prefixes, then serve a batched request trace where reuse
-//! requests take the full KVFetcher path —
+//! Trace-replay load generation (the repo's perf-trajectory driver):
+//! replay a two-tenant arrival trace — bursty `interactive` against
+//! Poisson `batch` — through the multi-tenant [`FetchScheduler`], with
+//! every admitted fetch running the full pipelined restore path over an
+//! in-process store and verified bit-identically against the demo
+//! ground truth. Prints per-tenant TTFT p50/p95/p99 + goodput and
+//! writes the run as `BENCH_serve_trace.json` (schema checked by
+//! `python/tools/check_bench_schema.py` in the CI `bench-trajectory`
+//! job, which runs this with `--quick`).
 //!
-//!   prefix lookup -> simulated transmission (1 Gbps link) -> real
-//!   lossless video decode -> frame-wise restore -> dequantize -> PJRT
-//!   suffix prefill -> autoregressive decode steps
+//! Run: `cargo run --release --example serve_trace -- [--quick]`
+//!   flags: --sched-policy fifo|deadline-edf|fair-share|strict-priority
+//!          --slots n --requests n --chunks n --chunk-tokens t --seed s
+//!          --rate r --burst n --out file
 //!
-//! and non-reuse requests take full prefill. Correctness is asserted on
-//! the fly (reuse path must produce the same next tokens as full
-//! prefill); latency/throughput are reported per class.
+//! With `--real` (requires `--features pjrt` and `make artifacts`) this
+//! instead runs the original end-to-end validation: the AOT-compiled
+//! tiny model served via PJRT with the reuse path asserted token-exact
+//! against the quantized baseline.
 //!
-//! Run: `make artifacts && cargo run --release --example serve_trace`
+//! [`FetchScheduler`]: kvfetcher::fetcher::FetchScheduler
 
-use kvfetcher::asic::{h20_table, DecodePool};
-use kvfetcher::engine::real::RealEngine;
-use kvfetcher::net::{BandwidthTrace, NetLink};
-use kvfetcher::runtime::Runtime;
-use kvfetcher::util::stats::Summary;
-use kvfetcher::util::table::{fmt_bytes, fmt_secs, markdown};
-use kvfetcher::util::Prng;
+use std::process::exit;
 
-const N_PREFIXES: usize = 6;
-const N_REQUESTS: usize = 24;
-const DECODE_STEPS: usize = 8;
+use kvfetcher::fetcher::{SchedConfig, SchedPolicy};
+use kvfetcher::service::{demo_mix, run_load, LoadSpec, RetryPolicy};
 
-fn main() -> anyhow::Result<()> {
-    println!("== serve_trace: real-model end-to-end serving ==\n");
-    let rt = Runtime::load("artifacts")?;
-    println!("PJRT platform: {} | model {:?}\n", rt.platform(), rt.cfg);
-    let cfg = rt.cfg;
-    let mut engine = RealEngine::new(rt);
+fn parse_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
 
-    // --- build the remote store: N shared prefixes, compressed offline
-    let mut rng = Prng::new(2024);
-    let mut prefixes: Vec<(u64, Vec<i32>)> = Vec::new();
-    let t_reg = std::time::Instant::now();
-    for _ in 0..N_PREFIXES {
-        let toks: Vec<i32> =
-            (0..cfg.prefix_len).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
-        let hash = engine.register_prefix(&toks)?;
-        prefixes.push((hash, toks));
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--real") {
+        real::run(&args);
+        return;
     }
+    let quick = args.iter().any(|a| a == "--quick");
+    let seed: u64 = parse_flag(&args, "--seed")
+        .map(|s| s.parse().expect("--seed takes a u64"))
+        .unwrap_or(42);
+    let n_chunks: usize = parse_flag(&args, "--chunks")
+        .map(|s| s.parse().expect("--chunks takes a count"))
+        .unwrap_or(if quick { 3 } else { 4 });
+    let chunk_tokens: usize = parse_flag(&args, "--chunk-tokens")
+        .map(|s| s.parse().expect("--chunk-tokens takes a count"))
+        .unwrap_or(if quick { 32 } else { 64 });
+    let requests: usize = parse_flag(&args, "--requests")
+        .map(|s| s.parse().expect("--requests takes a count"))
+        .unwrap_or(if quick { 48 } else { 64 });
+    let slots: usize = parse_flag(&args, "--slots")
+        .map(|s| s.parse().expect("--slots takes a count"))
+        .unwrap_or(if quick { 4 } else { 8 });
+    // near-simultaneous arrivals by default: the backlog peaks around
+    // the total job count, so the scheduler actually has to order work
+    let rate: f64 = parse_flag(&args, "--rate")
+        .map(|s| s.parse().expect("--rate takes requests/sec"))
+        .unwrap_or(1e5);
+    let burst: usize = parse_flag(&args, "--burst")
+        .map(|s| s.parse().expect("--burst takes a count"))
+        .unwrap_or(requests);
+    let policy = parse_flag(&args, "--sched-policy")
+        .map(|s| {
+            SchedPolicy::by_name(&s).unwrap_or_else(|| {
+                eprintln!(
+                    "--sched-policy takes `fifo`, `deadline-edf`, `fair-share`, \
+                     or `strict-priority` (got {s:?})"
+                );
+                exit(2);
+            })
+        })
+        .unwrap_or(SchedPolicy::StrictPriority);
+
+    let spec = LoadSpec {
+        seed,
+        n_chunks,
+        chunk_tokens,
+        sched: SchedConfig { policy, slots, ..Default::default() },
+        tenants: demo_mix(requests, rate, burst),
+        retry: RetryPolicy::default(),
+    };
+    println!("== serve_trace: multi-tenant trace-replay load generation ==\n");
     println!(
-        "registered {} encoded prefixes in {} ({} stored)",
-        prefixes.len(),
-        fmt_secs(t_reg.elapsed().as_secs_f64()),
-        fmt_bytes(engine.store.stored_bytes()),
+        "policy {policy} | {} tenants x {requests} requests | {n_chunks} chunks x \
+         {chunk_tokens} tokens | {slots} slots\n",
+        spec.tenants.len()
     );
+    let report = run_load(&spec);
+    println!("{}", report.markdown());
+    println!(
+        "wall {:.2}s | peak in-system {} | {} failures",
+        report.wall_secs,
+        report.peak_in_system,
+        report.failures.len()
+    );
+    for f in &report.failures {
+        eprintln!("failure: {f}");
+    }
 
-    // --- serve a trace: 50% reuse, 50% full prefill
-    let mut link = NetLink::new(BandwidthTrace::constant(1.0)); // 1 Gbps
-    let mut pool = DecodePool::new(7, h20_table());
-    let mut reuse_ttft = Vec::new();
-    let mut full_ttft = Vec::new();
-    let mut wire_total = 0usize;
-    let mut tokens_served = 0usize;
-    let mut decode_lat = Vec::new();
-    let mut mismatches = 0usize;
-    let (mut fp32_agree, mut fp32_total) = (0usize, 0usize);
-    let t_serve = std::time::Instant::now();
+    let out = parse_flag(&args, "--out").unwrap_or_else(|| "BENCH_serve_trace.json".into());
+    if let Err(e) = std::fs::write(&out, report.to_json().to_string() + "\n") {
+        eprintln!("cannot write {out}: {e}");
+        exit(1);
+    }
+    println!("wrote {out}");
 
-    for i in 0..N_REQUESTS {
-        let (hash, ptoks) = &prefixes[rng.below(prefixes.len() as u64) as usize];
-        let suffix: Vec<i32> =
-            (0..cfg.suffix_len).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
-        let full_tokens: Vec<i32> = ptoks.iter().chain(suffix.iter()).cloned().collect();
-
-        if i % 2 == 0 {
-            // KVFetcher path: sim transmission + real decode/restore/compute
-            let now = t_serve.elapsed().as_secs_f64();
-            let wire = engine.store.get(*hash).unwrap().wire_bytes("1080p").unwrap();
-            let (_, t_net_done) = link.transmit(now, wire);
-            let out = engine.serve_with_reuse(*hash, &suffix, "1080p")?;
-            // TTFT = sim transmission + sim NVDEC decode + real compute
-            let job = pool.decode(t_net_done, 3, cfg.prefix_len as f64 / 10_000.0);
-            let ttft = (t_net_done - now) + (job.end - job.start) + out.compute_secs;
-            reuse_ttft.push(ttft);
-            wire_total += wire;
-
-            // correctness contract (paper §5.2: "lossless" = identical
-            // to the quantized baseline): the video path must produce
-            // EXACTLY the tokens of the quantize->dequantize path.
-            let (_, kvp) = engine.rt.prefill_prefix(ptoks)?;
-            let cache = kvfetcher::runtime::kv_to_cache(&cfg, cfg.prefix_len, &kvp);
-            let qref = kvfetcher::quant::dequantize(&kvfetcher::quant::quantize(&cache));
-            let kv_ref = kvfetcher::runtime::cache_to_kv(&cfg, &qref);
-            let (logits_ref, _) = engine.rt.suffix(&kv_ref, &suffix)?;
-            let v = cfg.vocab;
-            let ref_tokens: Vec<usize> = (0..suffix.len())
-                .map(|j| kvfetcher::runtime::argmax(&logits_ref[j * v..(j + 1) * v]))
-                .collect();
-            if out.next_tokens != ref_tokens {
-                mismatches += 1;
-            }
-            // informational: agreement vs the fp32 full prefill
-            let reference = engine.serve_full(&full_tokens)?;
-            fp32_agree += out
-                .next_tokens
-                .iter()
-                .zip(&reference.next_tokens)
-                .filter(|(a, b)| a == b)
-                .count();
-            fp32_total += out.next_tokens.len();
-        } else {
-            // full prefill path
-            let out = engine.serve_full(&full_tokens)?;
-            full_ttft.push(out.compute_secs);
+    // --- acceptance contracts of the load generator ---
+    assert!(report.failures.is_empty(), "every admitted fetch must restore bit-identically");
+    for t in &report.tenants {
+        assert_eq!(t.dropped, 0, "tenant {} abandoned arrivals", t.name);
+        assert_eq!(t.completed, t.offered, "tenant {} lost jobs", t.name);
+        assert_eq!(t.verified, t.completed, "tenant {} restored with differences", t.name);
+    }
+    let floor = (2 * requests).min(64);
+    assert!(
+        report.peak_in_system >= floor,
+        "load must contend: peak in-system {} < {floor}",
+        report.peak_in_system
+    );
+    if policy == SchedPolicy::StrictPriority {
+        let (hi, lo) = (&report.tenants[0], &report.tenants[1]);
+        if hi.completed >= 8 && lo.completed >= 8 {
+            let (hp, lp) = (hi.ttft_ms_at(99.0), lo.ttft_ms_at(99.0));
+            assert!(
+                hp < lp,
+                "strict-priority must favor {}: p99 {hp:.1} ms vs {} {lp:.1} ms",
+                hi.name,
+                lo.name
+            );
+            println!(
+                "strict-priority p99 TTFT: {} {hp:.1} ms < {} {lp:.1} ms",
+                hi.name, lo.name
+            );
         }
-        tokens_served += full_tokens.len();
+    }
+    println!("\nserve_trace OK");
+}
 
-        // a few autoregressive decode steps (real PJRT decode entry)
-        if i == 0 {
-            let (_, kv_full) = engine.rt.prefill_full(&full_tokens)?;
-            // embed the prefill KV into the fixed decode window
-            let mut kv = vec![0f32; cfg.kv_elems(cfg.decode_cap)];
-            let per_tok = cfg.heads * cfg.head_dim;
-            for l in 0..cfg.layers {
-                for k in 0..2 {
-                    for t in 0..cfg.full_len {
-                        let src = (((l * 2 + k) * cfg.full_len) + t) * per_tok;
-                        let dst = (((l * 2 + k) * cfg.decode_cap) + t) * per_tok;
-                        kv[dst..dst + per_tok].copy_from_slice(&kv_full[src..src + per_tok]);
+/// The original end-to-end validation run, behind `--real`: load the
+/// AOT-compiled tiny model via PJRT, build a remote KV store of encoded
+/// prefixes, then serve a batched request trace where reuse requests
+/// take the full KVFetcher path and must produce exactly the tokens of
+/// the quantize->dequantize baseline.
+#[cfg(feature = "pjrt")]
+mod real {
+    use kvfetcher::asic::{h20_table, DecodePool};
+    use kvfetcher::engine::real::RealEngine;
+    use kvfetcher::net::{BandwidthTrace, NetLink};
+    use kvfetcher::runtime::Runtime;
+    use kvfetcher::util::stats::Summary;
+    use kvfetcher::util::table::{fmt_bytes, fmt_secs, markdown};
+    use kvfetcher::util::Prng;
+
+    const N_PREFIXES: usize = 6;
+    const N_REQUESTS: usize = 24;
+    const DECODE_STEPS: usize = 8;
+
+    pub fn run(_args: &[String]) {
+        if let Err(e) = run_inner() {
+            eprintln!("serve_trace --real failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+
+    fn run_inner() -> anyhow::Result<()> {
+        println!("== serve_trace --real: real-model end-to-end serving ==\n");
+        let rt = Runtime::load("artifacts")?;
+        println!("PJRT platform: {} | model {:?}\n", rt.platform(), rt.cfg);
+        let cfg = rt.cfg;
+        let mut engine = RealEngine::new(rt);
+
+        // --- build the remote store: N shared prefixes, compressed offline
+        let mut rng = Prng::new(2024);
+        let mut prefixes: Vec<(u64, Vec<i32>)> = Vec::new();
+        let t_reg = std::time::Instant::now();
+        for _ in 0..N_PREFIXES {
+            let toks: Vec<i32> =
+                (0..cfg.prefix_len).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+            let hash = engine.register_prefix(&toks)?;
+            prefixes.push((hash, toks));
+        }
+        println!(
+            "registered {} encoded prefixes in {} ({} stored)",
+            prefixes.len(),
+            fmt_secs(t_reg.elapsed().as_secs_f64()),
+            fmt_bytes(engine.store.stored_bytes()),
+        );
+
+        // --- serve a trace: 50% reuse, 50% full prefill
+        let mut link = NetLink::new(BandwidthTrace::constant(1.0)); // 1 Gbps
+        let mut pool = DecodePool::new(7, h20_table());
+        let mut reuse_ttft = Vec::new();
+        let mut full_ttft = Vec::new();
+        let mut wire_total = 0usize;
+        let mut tokens_served = 0usize;
+        let mut decode_lat = Vec::new();
+        let mut mismatches = 0usize;
+        let (mut fp32_agree, mut fp32_total) = (0usize, 0usize);
+        let t_serve = std::time::Instant::now();
+
+        for i in 0..N_REQUESTS {
+            let (hash, ptoks) = &prefixes[rng.below(prefixes.len() as u64) as usize];
+            let suffix: Vec<i32> =
+                (0..cfg.suffix_len).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+            let full_tokens: Vec<i32> = ptoks.iter().chain(suffix.iter()).cloned().collect();
+
+            if i % 2 == 0 {
+                // KVFetcher path: sim transmission + real decode/restore/compute
+                let now = t_serve.elapsed().as_secs_f64();
+                let wire = engine.store.get(*hash).unwrap().wire_bytes("1080p").unwrap();
+                let (_, t_net_done) = link.transmit(now, wire);
+                let out = engine.serve_with_reuse(*hash, &suffix, "1080p")?;
+                // TTFT = sim transmission + sim NVDEC decode + real compute
+                let job = pool.decode(t_net_done, 3, cfg.prefix_len as f64 / 10_000.0);
+                let ttft = (t_net_done - now) + (job.end - job.start) + out.compute_secs;
+                reuse_ttft.push(ttft);
+                wire_total += wire;
+
+                // correctness contract (paper §5.2: "lossless" = identical
+                // to the quantized baseline): the video path must produce
+                // EXACTLY the tokens of the quantize->dequantize path.
+                let (_, kvp) = engine.rt.prefill_prefix(ptoks)?;
+                let cache = kvfetcher::runtime::kv_to_cache(&cfg, cfg.prefix_len, &kvp);
+                let qref = kvfetcher::quant::dequantize(&kvfetcher::quant::quantize(&cache));
+                let kv_ref = kvfetcher::runtime::cache_to_kv(&cfg, &qref);
+                let (logits_ref, _) = engine.rt.suffix(&kv_ref, &suffix)?;
+                let v = cfg.vocab;
+                let ref_tokens: Vec<usize> = (0..suffix.len())
+                    .map(|j| kvfetcher::runtime::argmax(&logits_ref[j * v..(j + 1) * v]))
+                    .collect();
+                if out.next_tokens != ref_tokens {
+                    mismatches += 1;
+                }
+                // informational: agreement vs the fp32 full prefill
+                let reference = engine.serve_full(&full_tokens)?;
+                fp32_agree += out
+                    .next_tokens
+                    .iter()
+                    .zip(&reference.next_tokens)
+                    .filter(|(a, b)| a == b)
+                    .count();
+                fp32_total += out.next_tokens.len();
+            } else {
+                // full prefill path
+                let out = engine.serve_full(&full_tokens)?;
+                full_ttft.push(out.compute_secs);
+            }
+            tokens_served += full_tokens.len();
+
+            // a few autoregressive decode steps (real PJRT decode entry)
+            if i == 0 {
+                let (_, kv_full) = engine.rt.prefill_full(&full_tokens)?;
+                // embed the prefill KV into the fixed decode window
+                let mut kv = vec![0f32; cfg.kv_elems(cfg.decode_cap)];
+                let per_tok = cfg.heads * cfg.head_dim;
+                for l in 0..cfg.layers {
+                    for k in 0..2 {
+                        for t in 0..cfg.full_len {
+                            let src = (((l * 2 + k) * cfg.full_len) + t) * per_tok;
+                            let dst = (((l * 2 + k) * cfg.decode_cap) + t) * per_tok;
+                            kv[dst..dst + per_tok].copy_from_slice(&kv_full[src..src + per_tok]);
+                        }
                     }
                 }
-            }
-            let mut cur = cfg.full_len;
-            let mut tok = 7i32;
-            for _ in 0..DECODE_STEPS {
-                let t0 = std::time::Instant::now();
-                let (logits, kv_next) = engine.rt.decode(&kv, cur, tok)?;
-                decode_lat.push(t0.elapsed().as_secs_f64());
-                tok = kvfetcher::runtime::argmax(&logits) as i32;
-                kv = kv_next;
-                cur += 1;
-                tokens_served += 1;
+                let mut cur = cfg.full_len;
+                let mut tok = 7i32;
+                for _ in 0..DECODE_STEPS {
+                    let t0 = std::time::Instant::now();
+                    let (logits, kv_next) = engine.rt.decode(&kv, cur, tok)?;
+                    decode_lat.push(t0.elapsed().as_secs_f64());
+                    tok = kvfetcher::runtime::argmax(&logits) as i32;
+                    kv = kv_next;
+                    cur += 1;
+                    tokens_served += 1;
+                }
             }
         }
-    }
 
-    let wall = t_serve.elapsed().as_secs_f64();
-    let reuse = Summary::of(&reuse_ttft);
-    let full = Summary::of(&full_ttft);
-    let dec = Summary::of(&decode_lat);
-    println!("\nserved {N_REQUESTS} requests ({tokens_served} tokens) in {}", fmt_secs(wall));
-    println!("fetched {} over the simulated 1 Gbps link\n", fmt_bytes(wire_total));
-    let rows = vec![
-        vec![
-            "reuse (KVFetcher)".to_string(),
-            format!("{}", reuse.n),
-            fmt_secs(reuse.mean),
-            fmt_secs(reuse.p90),
-        ],
-        vec![
-            "full prefill".to_string(),
-            format!("{}", full.n),
-            fmt_secs(full.mean),
-            fmt_secs(full.p90),
-        ],
-        vec![
-            "decode step".to_string(),
-            format!("{}", dec.n),
-            fmt_secs(dec.mean),
-            fmt_secs(dec.p90),
-        ],
-    ];
-    println!("{}", markdown(&["path", "n", "mean", "p90"], &rows));
-    println!(
-        "throughput: {:.0} tokens/s end-to-end (host CPU, tiny model)",
-        tokens_served as f64 / wall
-    );
-    println!(
-        "correctness: {mismatches}/{} reuse requests diverged from the quantized baseline",
-        reuse.n
-    );
-    println!(
-        "fp32 full-prefill next-token agreement: {:.1}% (quantization only)",
-        fp32_agree as f64 / fp32_total as f64 * 100.0
-    );
-    assert_eq!(mismatches, 0, "lossless video path must bit-match the quantized baseline");
-    assert!(fp32_agree as f64 / fp32_total as f64 > 0.8);
-    println!("\nserve_trace OK");
-    Ok(())
+        let wall = t_serve.elapsed().as_secs_f64();
+        let reuse = Summary::of(&reuse_ttft);
+        let full = Summary::of(&full_ttft);
+        let dec = Summary::of(&decode_lat);
+        println!("\nserved {N_REQUESTS} requests ({tokens_served} tokens) in {}", fmt_secs(wall));
+        println!("fetched {} over the simulated 1 Gbps link\n", fmt_bytes(wire_total));
+        let rows = vec![
+            vec![
+                "reuse (KVFetcher)".to_string(),
+                format!("{}", reuse.n),
+                fmt_secs(reuse.mean),
+                fmt_secs(reuse.p90),
+            ],
+            vec![
+                "full prefill".to_string(),
+                format!("{}", full.n),
+                fmt_secs(full.mean),
+                fmt_secs(full.p90),
+            ],
+            vec![
+                "decode step".to_string(),
+                format!("{}", dec.n),
+                fmt_secs(dec.mean),
+                fmt_secs(dec.p90),
+            ],
+        ];
+        println!("{}", markdown(&["path", "n", "mean", "p90"], &rows));
+        println!(
+            "throughput: {:.0} tokens/s end-to-end (host CPU, tiny model)",
+            tokens_served as f64 / wall
+        );
+        println!(
+            "correctness: {mismatches}/{} reuse requests diverged from the quantized baseline",
+            reuse.n
+        );
+        println!(
+            "fp32 full-prefill next-token agreement: {:.1}% (quantization only)",
+            fp32_agree as f64 / fp32_total as f64 * 100.0
+        );
+        assert_eq!(mismatches, 0, "lossless video path must bit-match the quantized baseline");
+        assert!(fp32_agree as f64 / fp32_total as f64 > 0.8);
+        println!("\nserve_trace OK");
+        Ok(())
+    }
+}
+
+/// Without the `pjrt` feature the `--real` path cannot run; the default
+/// load-generation path above needs no feature at all.
+#[cfg(not(feature = "pjrt"))]
+mod real {
+    pub fn run(_args: &[String]) {
+        eprintln!(
+            "serve_trace --real executes the AOT model via PJRT; \
+             rebuild with `--features pjrt` and run `make artifacts` first"
+        );
+        std::process::exit(2);
+    }
 }

@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_*.json perf-trajectory point (schema version 1).
+
+Usage: check_bench_schema.py BENCH_serve_trace.json [...]
+
+The CI ``bench-trajectory`` job runs the trace-replay load generator
+(``cargo run --release --example serve_trace -- --quick``) and gates the
+emitted point on this schema before uploading it as an artifact, so
+every point in the trajectory stays machine-comparable. Exits non-zero
+on any violation; stdlib only.
+"""
+
+import json
+import sys
+
+TTFT_KEYS = ("p50", "p95", "p99", "mean", "max")
+TENANT_INTS = (
+    "offered",
+    "submitted",
+    "shed",
+    "resubmits",
+    "dropped",
+    "completed",
+    "failed",
+    "verified",
+    "goodput_bytes",
+    "deadline_hits",
+)
+POLICIES = ("fifo", "deadline-edf", "fair-share", "strict-priority")
+
+
+def fail(path, msg):
+    print(f"{path}: SCHEMA VIOLATION: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def expect(path, cond, msg):
+    if not cond:
+        fail(path, msg)
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def is_count(x):
+    return is_num(x) and float(x) == int(x) and x >= 0
+
+
+def check_tenant(path, i, t):
+    where = f"tenants[{i}]"
+    expect(path, isinstance(t, dict), f"{where} is not an object")
+    expect(path, isinstance(t.get("name"), str) and t["name"], f"{where}.name")
+    expect(path, is_count(t.get("priority")), f"{where}.priority")
+    expect(path, is_num(t.get("weight")) and t["weight"] > 0, f"{where}.weight")
+    expect(path, is_count(t.get("deadline_ms")), f"{where}.deadline_ms")
+    for key in TENANT_INTS:
+        expect(path, is_count(t.get(key)), f"{where}.{key} is not a count")
+    expect(path, is_num(t.get("goodput_mbps")) and t["goodput_mbps"] >= 0, f"{where}.goodput_mbps")
+    expect(path, t["completed"] + t["failed"] <= t["submitted"], f"{where}: done > submitted")
+    expect(path, t["verified"] <= t["completed"], f"{where}: verified > completed")
+    expect(path, t["deadline_hits"] <= t["completed"] + t["failed"], f"{where}: hits > jobs")
+    ttft = t.get("ttft_ms")
+    expect(path, isinstance(ttft, dict), f"{where}.ttft_ms is not an object")
+    for key in TTFT_KEYS:
+        expect(path, is_num(ttft.get(key)) and ttft[key] >= 0, f"{where}.ttft_ms.{key}")
+    expect(
+        path,
+        ttft["p50"] <= ttft["p95"] <= ttft["p99"] <= ttft["max"],
+        f"{where}.ttft_ms percentiles are not monotone: {ttft}",
+    )
+
+
+def check(path):
+    with open(path) as f:
+        doc = json.load(f)
+    expect(path, isinstance(doc, dict), "top level is not an object")
+    expect(path, doc.get("bench") == "serve_trace_loadgen", "bench name")
+    expect(path, doc.get("schema_version") == 1, "schema_version != 1")
+    expect(path, doc.get("policy") in POLICIES, f"unknown policy {doc.get('policy')!r}")
+    expect(path, is_count(doc.get("slots")) and doc["slots"] >= 1, "slots")
+    expect(path, is_num(doc.get("wall_secs")) and doc["wall_secs"] > 0, "wall_secs")
+    expect(path, is_count(doc.get("peak_in_system")), "peak_in_system")
+    expect(path, is_count(doc.get("failures")), "failures")
+    expect(path, doc["failures"] == 0, f"run recorded {doc['failures']} failures")
+    tenants = doc.get("tenants")
+    expect(path, isinstance(tenants, list) and len(tenants) >= 2, "needs >= 2 tenants")
+    for i, t in enumerate(tenants):
+        check_tenant(path, i, t)
+    total = sum(t["completed"] for t in tenants)
+    expect(path, total >= 1, "no completed jobs at all")
+    print(
+        f"{path}: OK ({doc['policy']}, {len(tenants)} tenants, "
+        f"{total} completed, peak {doc['peak_in_system']})"
+    )
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    for path in argv[1:]:
+        check(path)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

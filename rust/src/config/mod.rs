@@ -4,7 +4,7 @@
 
 use crate::cluster::{DeviceSpec, ModelSpec};
 use crate::engine::{EngineConfig, ExecMode};
-use crate::fetcher::{FetchConfig, PipelineConfig, ReadPolicy};
+use crate::fetcher::{FetchConfig, PipelineConfig, ReadPolicy, SchedConfig, SchedPolicy};
 use crate::net::BandwidthTrace;
 use crate::scheduler::SchedulerConfig;
 use crate::service::{AdmissionConfig, Backend, ObjStoreShape};
@@ -71,6 +71,13 @@ pub struct Experiment {
     /// Storage-node scaling (`[service] max_inflight / max_conns /
     /// replication`).
     pub service: ServiceConfig,
+    /// Multi-tenant fetch scheduling (`[scheduler] policy / slots /
+    /// queue_cap / deadline_ms / shed_retry_ms / fleet_rate_bytes /
+    /// fleet_burst_bytes`). Coexists with the engine batch-scheduler
+    /// keys (`fetching_aware` / `max_batch` / `prefill_budget`) in the
+    /// same table; this one shapes the fetch-side
+    /// [`crate::fetcher::FetchScheduler`].
+    pub fetch_sched: SchedConfig,
     pub engine: EngineConfig,
     pub trace: TraceConfig,
 }
@@ -87,6 +94,7 @@ impl Default for Experiment {
             remote_addrs: Vec::new(),
             objstore: ObjStoreShape::default(),
             service: ServiceConfig::default(),
+            fetch_sched: SchedConfig::default(),
             engine: EngineConfig::default(),
             trace: TraceConfig::default(),
         }
@@ -178,6 +186,21 @@ impl Experiment {
                 })
             },
         };
+        let fetch_sched = SchedConfig {
+            policy: {
+                let name = c.get_str("scheduler", "policy", "fifo");
+                SchedPolicy::by_name(name).unwrap_or_else(|| {
+                    eprintln!("config: unknown [scheduler] policy = {name:?}; using fifo");
+                    SchedPolicy::Fifo
+                })
+            },
+            slots: c.get_i64("scheduler", "slots", 4).max(1) as usize,
+            queue_cap: c.get_i64("scheduler", "queue_cap", 0).max(0) as usize,
+            deadline_ms: c.get_i64("scheduler", "deadline_ms", 1000).max(0) as u64,
+            shed_retry_ms: c.get_i64("scheduler", "shed_retry_ms", 25).max(1) as u64,
+            fleet_rate_bytes_per_sec: c.get_f64("scheduler", "fleet_rate_bytes", 0.0),
+            fleet_burst_bytes: c.get_f64("scheduler", "fleet_burst_bytes", 0.0),
+        };
         Experiment {
             name: c.get_str("", "name", &d.name).to_string(),
             device,
@@ -188,6 +211,7 @@ impl Experiment {
             remote_addrs: parse_addr_list(c.get_str("network", "remote", "")),
             objstore,
             service,
+            fetch_sched,
             engine,
             trace,
         }
@@ -237,6 +261,11 @@ mod tests {
         assert_eq!(e.service.max_conns, 0);
         assert_eq!(e.service.replication, 1);
         assert_eq!(e.service.read_policy, ReadPolicy::PrimaryFirst);
+        assert_eq!(e.fetch_sched.policy, SchedPolicy::Fifo);
+        assert_eq!(e.fetch_sched.slots, 4);
+        assert_eq!(e.fetch_sched.queue_cap, 0);
+        assert_eq!(e.fetch_sched.deadline_ms, 1000);
+        assert_eq!(e.fetch_sched.shed_retry_ms, 25);
         let a = e.service.admission();
         assert_eq!((a.max_conns, a.max_inflight_bytes), (0, 0));
         assert!(a.retry_after_ms > 0);
@@ -263,6 +292,12 @@ replication = 2
 read_policy = "least-inflight"
 [scheduler]
 fetching_aware = false
+policy = "fair-share"
+slots = 2
+queue_cap = 64
+deadline_ms = 250
+shed_retry_ms = 10
+fleet_rate_bytes = 4e9
 [fetch]
 adaptive = false
 chunk_tokens = 5000
@@ -292,6 +327,12 @@ n_requests = 10
         assert_eq!(e.service.max_conns, 32);
         assert_eq!(e.service.replication, 2);
         assert_eq!(e.service.read_policy, ReadPolicy::LeastInflight);
+        assert_eq!(e.fetch_sched.policy, SchedPolicy::FairShare);
+        assert_eq!(e.fetch_sched.slots, 2);
+        assert_eq!(e.fetch_sched.queue_cap, 64);
+        assert_eq!(e.fetch_sched.deadline_ms, 250);
+        assert_eq!(e.fetch_sched.shed_retry_ms, 10);
+        assert_eq!(e.fetch_sched.fleet_rate_bytes_per_sec, 4e9);
         let a = e.service.admission();
         assert_eq!(a.max_conns, 32);
         assert_eq!(a.max_inflight_bytes, 50_000_000);

@@ -39,6 +39,7 @@ use crate::net::{BandwidthEstimator, BandwidthTrace, NetLink};
 
 use super::executor::{run_stages, FetchParams};
 use super::pipeline::{CancelToken, PipelineConfig};
+use super::sched::SchedPolicy;
 use super::transport::{DecodedChunk, TransportSource, WireTiming};
 use super::{plan_fetch, FetchConfig, FetchPlan};
 
@@ -401,6 +402,7 @@ pub struct FetcherBuilder {
     est_alpha: f64,
     replication: usize,
     read_policy: ReadPolicy,
+    sched_policy: SchedPolicy,
 }
 
 impl Default for FetcherBuilder {
@@ -414,6 +416,7 @@ impl Default for FetcherBuilder {
             est_alpha: 0.5,
             replication: 1,
             read_policy: ReadPolicy::PrimaryFirst,
+            sched_policy: SchedPolicy::Fifo,
         }
     }
 }
@@ -491,6 +494,17 @@ impl FetcherBuilder {
         self
     }
 
+    /// Multi-tenant scheduling class of the serving surface built over
+    /// this fetcher: how `fetcher::sched::FetchScheduler` orders queued
+    /// fetch jobs when demand exceeds its worker slots (see
+    /// [`SchedPolicy`]). The serving layer reads it back through
+    /// [`Fetcher::sched_policy`], the same way transport factories read
+    /// [`Fetcher::read_policy`] into a `SourceSpec`.
+    pub fn sched_policy(mut self, policy: SchedPolicy) -> FetcherBuilder {
+        self.sched_policy = policy;
+        self
+    }
+
     /// Build the configured [`Fetcher`] with pristine link / pool /
     /// estimator state.
     pub fn build(self) -> Fetcher {
@@ -506,6 +520,7 @@ impl FetcherBuilder {
             est_alpha: self.est_alpha,
             replication: self.replication,
             read_policy: self.read_policy,
+            sched_policy: self.sched_policy,
         }
     }
 }
@@ -526,6 +541,7 @@ pub struct Fetcher {
     est_alpha: f64,
     replication: usize,
     read_policy: ReadPolicy,
+    sched_policy: SchedPolicy,
     link: NetLink,
     pool: DecodePool,
     est: BandwidthEstimator,
@@ -569,6 +585,12 @@ impl Fetcher {
     /// [`FetcherBuilder::read_policy`]).
     pub fn read_policy(&self) -> ReadPolicy {
         self.read_policy
+    }
+
+    /// Multi-tenant scheduling class of the serving surface (see
+    /// [`FetcherBuilder::sched_policy`]).
+    pub fn sched_policy(&self) -> SchedPolicy {
+        self.sched_policy
     }
 
     /// The pipeline tuning of the threaded executor.
@@ -909,6 +931,20 @@ mod tests {
         assert_eq!(ReadPolicy::by_name("fastest"), None);
         assert_eq!(ReadPolicy::default(), ReadPolicy::PrimaryFirst);
         assert_eq!(Fetcher::builder().build().read_policy(), ReadPolicy::PrimaryFirst);
+    }
+
+    #[test]
+    fn sched_policy_parses_and_lands_on_the_fetcher() {
+        for p in [
+            SchedPolicy::Fifo,
+            SchedPolicy::DeadlineEdf,
+            SchedPolicy::FairShare,
+            SchedPolicy::StrictPriority,
+        ] {
+            assert_eq!(SchedPolicy::by_name(p.name()), Some(p), "{p}");
+            assert_eq!(Fetcher::builder().sched_policy(p).build().sched_policy(), p);
+        }
+        assert_eq!(Fetcher::builder().build().sched_policy(), SchedPolicy::Fifo);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 pub mod api;
 pub mod executor;
 pub mod pipeline;
+pub mod sched;
 pub mod transport;
 
 pub use api::{
@@ -24,6 +25,10 @@ pub use api::{
 };
 pub use executor::{FetchOutcome, FetchParams};
 pub use pipeline::{serialized_fetch, CancelToken, PipelineConfig};
+pub use sched::{
+    CreditBucket, FetchScheduler, JobDone, JobTicket, SchedConfig, SchedPolicy, SchedReport,
+    TenantReport, TenantSpec, TenantStats,
+};
 pub use transport::{ChunkPayload, DecodedChunk, TransportSource, WireTiming};
 
 use crate::asic::DecodePool;

@@ -1,0 +1,770 @@
+//! Multi-tenant fetch scheduling: multiplex N concurrent fetch jobs
+//! over the shared [`Fetcher`](super::Fetcher) resources under
+//! per-tenant admission and a pluggable ordering policy.
+//!
+//! The PR 5 stack serves one `FetchSession` at a time; production means
+//! thousands of concurrent prefix fetches contending for the same
+//! connection pools, decode stages, and shard bandwidth. This module is
+//! the serving layer in between: callers `submit` fetch jobs tagged
+//! with a tenant and an optional TTFT deadline, a fixed pool of worker
+//! slots runs them, and a [`SchedPolicy`] decides who goes next when
+//! demand exceeds the slots.
+//!
+//! Admission is hierarchical credit accounting in the style of
+//! scx_layered's `cost.bpf.c` budgets: each tenant owns a
+//! [`CreditBucket`], and a fleet-wide bucket caps the sum. A submission
+//! must afford its byte cost in *both* buckets or it is shed with the
+//! same typed [`FetchError::Busy`] (`retry_after_ms`) refusal the
+//! storage servers use (PR 4), so one retry/backoff loop
+//! ([`RetryPolicy`](crate::service::RetryPolicy)) serves client-side
+//! shedding and server-side admission alike. The bucket arithmetic
+//! mirrors [`TokenBucket`](crate::service::TokenBucket): the throttle
+//! *sleeps* until the schedule affords the bytes, the scheduler
+//! *refuses* with the same wait as a hint.
+//!
+//! Completion percentiles come from the load generator
+//! ([`crate::service::loadgen`]) which drives this scheduler with
+//! trace-replay arrivals and reports per-tenant TTFT p50/p95/p99.
+
+#![warn(missing_docs)]
+
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::api::{FetchError, FetchReport};
+
+/// How queued fetch jobs are ordered when demand exceeds the worker
+/// slots. Admission (credit buckets, queue cap) is policy-independent;
+/// the policy only decides *who runs next* among admitted jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedPolicy {
+    /// Arrival order, tenant-blind (the baseline every other policy is
+    /// judged against).
+    #[default]
+    Fifo,
+    /// Earliest deadline first: the job whose TTFT deadline expires
+    /// soonest runs next; arrival order breaks ties.
+    DeadlineEdf,
+    /// Start-time fair queuing over per-tenant virtual time: each
+    /// dispatch advances the tenant's clock by `cost / weight`, so
+    /// long-run goodput converges to the weight ratio.
+    FairShare,
+    /// Higher [`TenantSpec::priority`] always preempts lower at
+    /// dispatch; a saturated high class starves low classes, which is
+    /// why the queue cap sheds to `Busy` instead of growing unbounded.
+    StrictPriority,
+}
+
+impl SchedPolicy {
+    /// Parse a config/CLI name (canonical names plus short aliases).
+    pub fn by_name(name: &str) -> Option<SchedPolicy> {
+        match name.to_ascii_lowercase().as_str() {
+            "fifo" => Some(SchedPolicy::Fifo),
+            "deadline-edf" | "edf" | "deadline" => Some(SchedPolicy::DeadlineEdf),
+            "fair-share" | "fair" => Some(SchedPolicy::FairShare),
+            "strict-priority" | "strict" | "priority" => Some(SchedPolicy::StrictPriority),
+            _ => None,
+        }
+    }
+
+    /// Canonical config/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedPolicy::Fifo => "fifo",
+            SchedPolicy::DeadlineEdf => "deadline-edf",
+            SchedPolicy::FairShare => "fair-share",
+            SchedPolicy::StrictPriority => "strict-priority",
+        }
+    }
+}
+
+impl std::fmt::Display for SchedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Admission-side credit bucket: the refusal-flavored dual of the
+/// throttle's [`TokenBucket`](crate::service::TokenBucket) pacer.
+///
+/// Credits are bytes; they refill continuously at `rate` up to `burst`.
+/// Where the throttle sleeps until the trace schedule affords the
+/// bytes, this bucket answers *how long that sleep would be* so the
+/// caller can shed with `Busy { retry_after_ms }` instead of blocking
+/// the submit path. A cost larger than the burst is admitted when the
+/// bucket is as full as it can get, driving the balance negative — the
+/// debt amortizes oversized requests against the long-run rate instead
+/// of refusing them forever.
+#[derive(Debug, Clone)]
+pub struct CreditBucket {
+    /// Refill rate (bytes/second); `<= 0` disables accounting entirely.
+    rate: f64,
+    /// Credit ceiling (bytes).
+    burst: f64,
+    /// Current balance (bytes); may go negative (see above).
+    credits: f64,
+    /// When the balance was last refilled.
+    last: Instant,
+}
+
+impl CreditBucket {
+    /// A bucket refilling at `rate_bytes_per_sec` up to `burst_bytes`,
+    /// starting full. A non-positive rate means unlimited (every
+    /// admission query passes); a non-positive burst defaults to one
+    /// second of refill.
+    pub fn new(rate_bytes_per_sec: f64, burst_bytes: f64) -> CreditBucket {
+        let rate = rate_bytes_per_sec;
+        let burst = if burst_bytes > 0.0 { burst_bytes } else { rate.max(0.0) };
+        CreditBucket { rate, burst, credits: burst, last: Instant::now() }
+    }
+
+    /// Whether this bucket admits everything (non-positive rate).
+    pub fn unlimited(&self) -> bool {
+        self.rate <= 0.0
+    }
+
+    /// Refill credits for the wall time elapsed since the last query.
+    fn refill(&mut self, now: Instant) {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        if self.rate > 0.0 {
+            self.credits = (self.credits + self.rate * dt).min(self.burst);
+        }
+    }
+
+    /// Admission query at `now`: `None` when `cost_bytes` is affordable
+    /// (the caller should then [`charge`](Self::charge) it), otherwise
+    /// the milliseconds until the refill affords it — the
+    /// `retry_after_ms` hint of the resulting `Busy`.
+    pub fn deficit_ms(&mut self, cost_bytes: u64, now: Instant) -> Option<u64> {
+        if self.unlimited() {
+            return None;
+        }
+        self.refill(now);
+        // an oversized cost is payable at the ceiling (it then runs the
+        // balance negative); below the ceiling it must be paid in full
+        let due = (cost_bytes as f64).min(self.burst);
+        if self.credits >= due {
+            return None;
+        }
+        let wait_s = (due - self.credits) / self.rate;
+        Some(((wait_s * 1e3).ceil() as u64).max(1))
+    }
+
+    /// Deduct an admitted cost (call only after a `None` from
+    /// [`deficit_ms`](Self::deficit_ms)).
+    pub fn charge(&mut self, cost_bytes: u64) {
+        if !self.unlimited() {
+            self.credits -= cost_bytes as f64;
+        }
+    }
+
+    /// Current balance (bytes); negative while paying off an oversized
+    /// admission.
+    pub fn credits(&self) -> f64 {
+        self.credits
+    }
+}
+
+/// One tenant's identity and resource envelope.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Display/config name (also the `--tenant` CLI key).
+    pub name: String,
+    /// Fair-share weight: long-run goodput converges to the weight
+    /// ratio under [`SchedPolicy::FairShare`].
+    pub weight: f64,
+    /// Strict-priority class (higher dispatches first under
+    /// [`SchedPolicy::StrictPriority`]).
+    pub priority: u8,
+    /// Admission rate (bytes/second); `0` = unlimited.
+    pub rate_bytes_per_sec: f64,
+    /// Admission burst (bytes); `0` defaults to one second of rate.
+    pub burst_bytes: f64,
+    /// Default TTFT deadline (ms) for this tenant's jobs; `0` falls
+    /// back to [`SchedConfig::deadline_ms`].
+    pub deadline_ms: u64,
+}
+
+impl TenantSpec {
+    /// A tenant with weight 1, priority 0, and unlimited admission.
+    pub fn new(name: impl Into<String>) -> TenantSpec {
+        TenantSpec {
+            name: name.into(),
+            weight: 1.0,
+            priority: 0,
+            rate_bytes_per_sec: 0.0,
+            burst_bytes: 0.0,
+            deadline_ms: 0,
+        }
+    }
+
+    /// Set the fair-share weight.
+    pub fn weight(mut self, weight: f64) -> TenantSpec {
+        self.weight = weight.max(1e-9);
+        self
+    }
+
+    /// Set the strict-priority class.
+    pub fn priority(mut self, priority: u8) -> TenantSpec {
+        self.priority = priority;
+        self
+    }
+
+    /// Set the admission rate (bytes/second).
+    pub fn rate(mut self, bytes_per_sec: f64) -> TenantSpec {
+        self.rate_bytes_per_sec = bytes_per_sec;
+        self
+    }
+
+    /// Set the admission burst (bytes).
+    pub fn burst(mut self, bytes: f64) -> TenantSpec {
+        self.burst_bytes = bytes;
+        self
+    }
+
+    /// Set the default TTFT deadline (ms).
+    pub fn deadline_ms(mut self, ms: u64) -> TenantSpec {
+        self.deadline_ms = ms;
+        self
+    }
+}
+
+/// Scheduler shape: slots, queue bound, shed hint, and the fleet-wide
+/// admission envelope. Parsed from the `[scheduler]` config table.
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Ordering policy among admitted jobs.
+    pub policy: SchedPolicy,
+    /// Concurrent fetch jobs (worker threads).
+    pub slots: usize,
+    /// Queued (not yet running) jobs before submissions shed to
+    /// `Busy`; `0` = unbounded.
+    pub queue_cap: usize,
+    /// Default TTFT deadline (ms) when neither the job nor its tenant
+    /// sets one; `0` = effectively no deadline.
+    pub deadline_ms: u64,
+    /// `retry_after_ms` hint on queue-cap sheds (and the floor on
+    /// bucket-deficit hints). Defaults to the storage servers'
+    /// [`AdmissionConfig`](crate::service::AdmissionConfig) hint so
+    /// both shed paths back off alike.
+    pub shed_retry_ms: u64,
+    /// Fleet-wide admission rate (bytes/second) across all tenants;
+    /// `0` = unlimited.
+    pub fleet_rate_bytes_per_sec: f64,
+    /// Fleet-wide admission burst (bytes); `0` defaults to one second
+    /// of rate.
+    pub fleet_burst_bytes: f64,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            policy: SchedPolicy::Fifo,
+            slots: 4,
+            queue_cap: 0,
+            deadline_ms: 1000,
+            shed_retry_ms: 25,
+            fleet_rate_bytes_per_sec: 0.0,
+            fleet_burst_bytes: 0.0,
+        }
+    }
+}
+
+/// Lifetime counters of one tenant, accumulated by the scheduler and
+/// surfaced in [`SchedReport`].
+#[derive(Debug, Clone, Default)]
+pub struct TenantStats {
+    /// `submit` calls, including ones that were shed.
+    pub submitted: usize,
+    /// Submissions refused with `Busy` (queue cap or credit deficit).
+    pub shed: usize,
+    /// Jobs whose work returned `Ok`.
+    pub completed: usize,
+    /// Jobs whose work returned `Err`.
+    pub failed: usize,
+    /// Restored payload bytes summed over completed jobs' reports.
+    pub goodput_bytes: u64,
+    /// Jobs whose TTFT landed within their deadline.
+    pub deadline_hits: usize,
+    /// Per-job TTFT (submit-to-completion), seconds, completion order.
+    pub ttft_secs: Vec<f64>,
+    /// Per-job queue wait (TTFT minus service), seconds.
+    pub queued_secs: Vec<f64>,
+}
+
+/// One tenant's slice of the final [`SchedReport`].
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// The tenant's spec as configured.
+    pub spec: TenantSpec,
+    /// Its lifetime counters.
+    pub stats: TenantStats,
+}
+
+/// What [`FetchScheduler::join`] returns once every worker has drained.
+#[derive(Debug, Clone)]
+pub struct SchedReport {
+    /// The policy the run was scheduled under.
+    pub policy: SchedPolicy,
+    /// Worker slots the run was dispatched over.
+    pub slots: usize,
+    /// Peak of queued + running jobs observed at any submission.
+    pub peak_in_system: usize,
+    /// Per-tenant outcomes, in tenant-index order.
+    pub tenants: Vec<TenantReport>,
+}
+
+/// Everything one scheduled job reports back on completion.
+#[derive(Debug)]
+pub struct JobDone {
+    /// Tenant index the job was submitted under.
+    pub tenant: usize,
+    /// Admission sequence number (ticket identity).
+    pub seq: u64,
+    /// Dispatch order across the whole scheduler (0 = first job any
+    /// worker picked) — what the ordering-invariant tests assert on.
+    pub dispatch_seq: u64,
+    /// Seconds spent queued before a worker picked the job.
+    pub queued_secs: f64,
+    /// Seconds the work itself ran.
+    pub service_secs: f64,
+    /// Submit-to-completion seconds — the TTFT the SLO judges.
+    pub ttft_secs: f64,
+    /// Whether `ttft_secs` landed within the job's deadline.
+    pub deadline_hit: bool,
+    /// The work's own result.
+    pub result: Result<FetchReport, FetchError>,
+}
+
+/// Handle to one admitted job; redeem with [`wait`](Self::wait).
+pub struct JobTicket {
+    seq: u64,
+    rx: mpsc::Receiver<JobDone>,
+}
+
+impl JobTicket {
+    /// Admission sequence number of the job this ticket tracks.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Block until the job completes.
+    pub fn wait(self) -> JobDone {
+        self.rx.recv().expect("scheduler worker dropped a job without reporting")
+    }
+}
+
+type Work = Box<dyn FnOnce() -> Result<FetchReport, FetchError> + Send>;
+
+struct Queued {
+    seq: u64,
+    tenant: usize,
+    cost: u64,
+    deadline: Instant,
+    deadline_dur: Duration,
+    submitted: Instant,
+    work: Work,
+    done: mpsc::Sender<JobDone>,
+}
+
+struct TenantState {
+    spec: TenantSpec,
+    bucket: CreditBucket,
+    /// Start-time-fair-queuing virtual clock (advances by cost/weight
+    /// per dispatch).
+    vtime: f64,
+    /// Jobs queued or running (for the SFQ idle catch-up).
+    inflight: usize,
+    stats: TenantStats,
+}
+
+struct State {
+    tenants: Vec<TenantState>,
+    fleet: CreditBucket,
+    queue: Vec<Queued>,
+    next_seq: u64,
+    dispatched: u64,
+    running: usize,
+    peak_in_system: usize,
+    shutdown: bool,
+}
+
+struct Inner {
+    cfg: SchedConfig,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+/// The multi-tenant fetch scheduler: a bounded worker pool over a
+/// policy-ordered queue with hierarchical credit admission.
+///
+/// `submit` either admits a job (returning a [`JobTicket`]) or sheds it
+/// with [`FetchError::Busy`]; [`join`](Self::join) drains the queue,
+/// stops the workers, and returns the per-tenant [`SchedReport`].
+/// Dropping without `join` stops the workers after the queue drains,
+/// detached.
+pub struct FetchScheduler {
+    inner: Arc<Inner>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl FetchScheduler {
+    /// A scheduler over `cfg.slots` workers serving `tenants` (at least
+    /// one).
+    pub fn new(cfg: SchedConfig, tenants: Vec<TenantSpec>) -> FetchScheduler {
+        assert!(!tenants.is_empty(), "scheduler needs at least one tenant");
+        let slots = cfg.slots.max(1);
+        let tenants: Vec<TenantState> = tenants
+            .into_iter()
+            .map(|spec| TenantState {
+                bucket: CreditBucket::new(spec.rate_bytes_per_sec, spec.burst_bytes),
+                vtime: 0.0,
+                inflight: 0,
+                stats: TenantStats::default(),
+                spec,
+            })
+            .collect();
+        let fleet = CreditBucket::new(cfg.fleet_rate_bytes_per_sec, cfg.fleet_burst_bytes);
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                tenants,
+                fleet,
+                queue: Vec::new(),
+                next_seq: 0,
+                dispatched: 0,
+                running: 0,
+                peak_in_system: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            cfg,
+        });
+        let workers = (0..slots)
+            .map(|_| {
+                let inner = Arc::clone(&inner);
+                thread::spawn(move || worker_loop(&inner))
+            })
+            .collect();
+        FetchScheduler { inner, workers }
+    }
+
+    /// The config this scheduler was built with.
+    pub fn config(&self) -> &SchedConfig {
+        &self.inner.cfg
+    }
+
+    /// Tenant index by name (the `--tenant` CLI lookup).
+    pub fn tenant_named(&self, name: &str) -> Option<usize> {
+        let st = self.inner.state.lock().expect("scheduler state poisoned");
+        st.tenants.iter().position(|t| t.spec.name == name)
+    }
+
+    /// Submit one fetch job for `tenant` costing `cost_bytes` of
+    /// admission credit, with an optional per-job TTFT deadline
+    /// overriding the tenant/config defaults.
+    ///
+    /// Sheds with [`FetchError::Busy`] when the queue cap is reached or
+    /// either credit bucket (tenant, fleet) cannot afford the cost —
+    /// the hint is the larger bucket deficit, floored at
+    /// [`SchedConfig::shed_retry_ms`]. After shutdown every submission
+    /// returns [`FetchError::Cancelled`].
+    pub fn submit(
+        &self,
+        tenant: usize,
+        cost_bytes: u64,
+        deadline_ms: Option<u64>,
+        work: impl FnOnce() -> Result<FetchReport, FetchError> + Send + 'static,
+    ) -> Result<JobTicket, FetchError> {
+        let mut st = self.inner.state.lock().expect("scheduler state poisoned");
+        if st.shutdown {
+            return Err(FetchError::Cancelled { chunks_completed: 0 });
+        }
+        assert!(tenant < st.tenants.len(), "unknown tenant index {tenant}");
+        st.tenants[tenant].stats.submitted += 1;
+        let cap = self.inner.cfg.queue_cap;
+        if cap > 0 && st.queue.len() >= cap {
+            st.tenants[tenant].stats.shed += 1;
+            return Err(FetchError::Busy { retry_after_ms: self.inner.cfg.shed_retry_ms });
+        }
+        // hierarchical admission: the job must afford its cost in the
+        // tenant's bucket AND the fleet-wide one (scx-style: a child
+        // can never spend budget its parent does not have)
+        let now = Instant::now();
+        let tenant_wait = st.tenants[tenant].bucket.deficit_ms(cost_bytes, now);
+        let fleet_wait = st.fleet.deficit_ms(cost_bytes, now);
+        if tenant_wait.is_some() || fleet_wait.is_some() {
+            st.tenants[tenant].stats.shed += 1;
+            let hint = tenant_wait.unwrap_or(0).max(fleet_wait.unwrap_or(0));
+            return Err(FetchError::Busy {
+                retry_after_ms: hint.max(self.inner.cfg.shed_retry_ms),
+            });
+        }
+        st.tenants[tenant].bucket.charge(cost_bytes);
+        st.fleet.charge(cost_bytes);
+        // SFQ idle catch-up: a tenant returning from idle must not
+        // replay its saved-up virtual time against backlogged tenants
+        if st.tenants[tenant].inflight == 0 {
+            let floor = st
+                .tenants
+                .iter()
+                .filter(|t| t.inflight > 0)
+                .map(|t| t.vtime)
+                .fold(f64::INFINITY, f64::min);
+            if floor.is_finite() && st.tenants[tenant].vtime < floor {
+                st.tenants[tenant].vtime = floor;
+            }
+        }
+        st.tenants[tenant].inflight += 1;
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        let spec_deadline = st.tenants[tenant].spec.deadline_ms;
+        let ms = deadline_ms
+            .or(if spec_deadline > 0 { Some(spec_deadline) } else { None })
+            .unwrap_or(self.inner.cfg.deadline_ms);
+        // "no deadline" still needs an Instant for EDF ordering; an
+        // hour is beyond any fetch this stack schedules
+        let deadline_dur =
+            if ms > 0 { Duration::from_millis(ms) } else { Duration::from_secs(3600) };
+        let (tx, rx) = mpsc::channel();
+        st.queue.push(Queued {
+            seq,
+            tenant,
+            cost: cost_bytes,
+            deadline: now + deadline_dur,
+            deadline_dur,
+            submitted: now,
+            work: Box::new(work),
+            done: tx,
+        });
+        let in_system = st.queue.len() + st.running;
+        st.peak_in_system = st.peak_in_system.max(in_system);
+        drop(st);
+        self.inner.cv.notify_one();
+        Ok(JobTicket { seq, rx })
+    }
+
+    /// Drain the queue, stop the workers, and report. Queued and
+    /// running jobs complete first (drain semantics); only *new*
+    /// submissions are refused once shutdown begins.
+    pub fn join(mut self) -> SchedReport {
+        self.inner.state.lock().expect("scheduler state poisoned").shutdown = true;
+        self.inner.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        let st = self.inner.state.lock().expect("scheduler state poisoned");
+        SchedReport {
+            policy: self.inner.cfg.policy,
+            slots: self.inner.cfg.slots.max(1),
+            peak_in_system: st.peak_in_system,
+            tenants: st
+                .tenants
+                .iter()
+                .map(|t| TenantReport { spec: t.spec.clone(), stats: t.stats.clone() })
+                .collect(),
+        }
+    }
+}
+
+impl Drop for FetchScheduler {
+    fn drop(&mut self) {
+        // join() drains self.workers; a bare drop leaves the workers
+        // detached but tells them to exit once the queue empties
+        if !self.workers.is_empty() {
+            if let Ok(mut st) = self.inner.state.lock() {
+                st.shutdown = true;
+            }
+            self.inner.cv.notify_all();
+        }
+    }
+}
+
+/// Index into `st.queue` of the job the policy runs next, or `None`
+/// when the queue is empty.
+fn pick(policy: SchedPolicy, st: &State) -> Option<usize> {
+    if st.queue.is_empty() {
+        return None;
+    }
+    match policy {
+        SchedPolicy::Fifo => {
+            st.queue.iter().enumerate().min_by_key(|(_, q)| q.seq).map(|(i, _)| i)
+        }
+        SchedPolicy::DeadlineEdf => st
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| (q.deadline, q.seq))
+            .map(|(i, _)| i),
+        SchedPolicy::StrictPriority => st
+            .queue
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, q)| (std::cmp::Reverse(st.tenants[q.tenant].spec.priority), q.seq))
+            .map(|(i, _)| i),
+        SchedPolicy::FairShare => {
+            // min tenant vtime, arrival order among ties (f64 keys, so
+            // no min_by_key)
+            let mut best: Option<(f64, u64, usize)> = None;
+            for (i, q) in st.queue.iter().enumerate() {
+                let v = st.tenants[q.tenant].vtime;
+                let better = match best {
+                    None => true,
+                    Some((bv, bs, _)) => v < bv || (v == bv && q.seq < bs),
+                };
+                if better {
+                    best = Some((v, q.seq, i));
+                }
+            }
+            best.map(|(_, _, i)| i)
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        let mut st = inner.state.lock().expect("scheduler state poisoned");
+        let picked = loop {
+            if let Some(i) = pick(inner.cfg.policy, &st) {
+                break Some(i);
+            }
+            if st.shutdown {
+                break None;
+            }
+            st = inner.cv.wait(st).expect("scheduler state poisoned");
+        };
+        let Some(i) = picked else { return };
+        let job = st.queue.swap_remove(i);
+        let dispatch_seq = st.dispatched;
+        st.dispatched += 1;
+        st.running += 1;
+        if inner.cfg.policy == SchedPolicy::FairShare {
+            let t = &mut st.tenants[job.tenant];
+            t.vtime += job.cost as f64 / t.spec.weight.max(1e-9);
+        }
+        drop(st);
+
+        // the work runs outside the lock: jobs block on sockets and
+        // decode stages, never on the scheduler
+        let t_run = Instant::now();
+        let result = (job.work)();
+        let service_secs = t_run.elapsed().as_secs_f64();
+        let ttft_secs = job.submitted.elapsed().as_secs_f64();
+        let queued_secs = (ttft_secs - service_secs).max(0.0);
+        let deadline_hit = ttft_secs <= job.deadline_dur.as_secs_f64();
+
+        let mut st = inner.state.lock().expect("scheduler state poisoned");
+        st.running -= 1;
+        let t = &mut st.tenants[job.tenant];
+        t.inflight -= 1;
+        match &result {
+            Ok(report) => {
+                t.stats.completed += 1;
+                t.stats.goodput_bytes +=
+                    report.restored.iter().map(|d| d.quant.data.len() as u64).sum::<u64>();
+            }
+            Err(_) => t.stats.failed += 1,
+        }
+        t.stats.ttft_secs.push(ttft_secs);
+        t.stats.queued_secs.push(queued_secs);
+        if deadline_hit {
+            t.stats.deadline_hits += 1;
+        }
+        drop(st);
+        let _ = job.done.send(JobDone {
+            tenant: job.tenant,
+            seq: job.seq,
+            dispatch_seq,
+            queued_secs,
+            service_secs,
+            ttft_secs,
+            deadline_hit,
+            result,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fetcher::{FetchRequest, Fetcher};
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [
+            SchedPolicy::Fifo,
+            SchedPolicy::DeadlineEdf,
+            SchedPolicy::FairShare,
+            SchedPolicy::StrictPriority,
+        ] {
+            assert_eq!(SchedPolicy::by_name(p.name()), Some(p));
+            assert_eq!(format!("{p}"), p.name());
+        }
+        assert_eq!(SchedPolicy::by_name("edf"), Some(SchedPolicy::DeadlineEdf));
+        assert_eq!(SchedPolicy::by_name("strict"), Some(SchedPolicy::StrictPriority));
+        assert_eq!(SchedPolicy::by_name("lottery"), None);
+        assert_eq!(SchedPolicy::default(), SchedPolicy::Fifo);
+    }
+
+    #[test]
+    fn credit_bucket_charges_and_hints() {
+        // unlimited bucket: never refuses, charge is a no-op
+        let mut free = CreditBucket::new(0.0, 0.0);
+        assert!(free.unlimited());
+        assert_eq!(free.deficit_ms(u64::MAX, Instant::now()), None);
+        free.charge(u64::MAX);
+
+        // burst 100 at 1000 B/s, starting full
+        let mut b = CreditBucket::new(1000.0, 100.0);
+        let now = Instant::now();
+        assert_eq!(b.deficit_ms(80, now), None);
+        b.charge(80);
+        // 20 left: 80 more costs a 60-byte deficit = 60 ms at 1 B/ms
+        let hint = b.deficit_ms(80, now).expect("must refuse");
+        assert!((55..=65).contains(&hint), "hint {hint}");
+
+        // an oversized cost is admitted at the ceiling and drives the
+        // balance negative (debt against the long-run rate)
+        let mut big = CreditBucket::new(1000.0, 100.0);
+        let now = Instant::now();
+        assert_eq!(big.deficit_ms(100_000, now), None);
+        big.charge(100_000);
+        assert!(big.credits() < 0.0);
+        let hint = big.deficit_ms(10, now).expect("in debt");
+        assert!(hint >= 99_000, "debt hint {hint}");
+    }
+
+    #[test]
+    fn fifo_scheduler_runs_jobs_and_counts_stats() {
+        let sched = FetchScheduler::new(
+            SchedConfig { slots: 2, ..Default::default() },
+            vec![TenantSpec::new("t0")],
+        );
+        let tickets: Vec<JobTicket> = (0..4)
+            .map(|_| {
+                sched
+                    .submit(0, 1, None, || {
+                        Fetcher::builder().build().run(&FetchRequest::new(1000, 245_760_000))
+                    })
+                    .expect("unlimited tenant must admit")
+            })
+            .collect();
+        assert_eq!(sched.tenant_named("t0"), Some(0));
+        assert_eq!(sched.tenant_named("nope"), None);
+        for t in tickets {
+            let done = t.wait();
+            assert!(done.result.is_ok());
+            assert!(done.ttft_secs >= done.service_secs);
+        }
+        let report = sched.join();
+        assert_eq!(report.tenants.len(), 1);
+        let stats = &report.tenants[0].stats;
+        assert_eq!(stats.submitted, 4);
+        assert_eq!(stats.completed, 4);
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.shed, 0);
+        assert_eq!(stats.ttft_secs.len(), 4);
+        assert!(report.peak_in_system >= 1);
+    }
+}

@@ -4,12 +4,17 @@
 //!   serve     — run a serving-trace simulation and report TTFT/TPOT;
 //!               with --listen, host storage shard servers instead
 //!               (optionally only a --shards subset of the fleet, and
-//!               optionally an anti-entropy --repair-every-secs loop)
+//!               optionally an anti-entropy --repair-every-secs loop);
+//!               with --loadgen, replay a multi-tenant arrival trace
+//!               through the fetch scheduler and report per-tenant
+//!               TTFT percentiles (writing a BENCH json point)
 //!   fetch     — single-request TTFT breakdown across all systems;
 //!               with --backend/--remote, stream the demo prefix
 //!               through a transport backend (tcp shards, in-process
 //!               store, shaped object store) and verify restore;
-//!               --read-policy balances replicated reads
+//!               --read-policy balances replicated reads;
+//!               --sched-policy/--tenant/--deadline-ms route the fetch
+//!               through the multi-tenant scheduler
 //!   repair    — anti-entropy pass over a replicated fleet: diff every
 //!               chunk's holders against its replica set, re-put the
 //!               missing copies, and exit non-zero unless the fleet is
@@ -24,7 +29,7 @@
 use kvfetcher::baselines::{calibrate_ratios, SystemProfile};
 use kvfetcher::config::Experiment;
 use kvfetcher::engine::EngineSim;
-use kvfetcher::fetcher::{ExecMode, FetchRequest, Fetcher, ReadPolicy};
+use kvfetcher::fetcher::{ExecMode, FetchRequest, Fetcher, ReadPolicy, SchedPolicy};
 use kvfetcher::layout;
 use kvfetcher::quant::quantize;
 use kvfetcher::service::Backend;
@@ -83,6 +88,21 @@ fn read_policy_of(args: &[String], exp: &Experiment) -> ReadPolicy {
             })
         })
         .unwrap_or(exp.service.read_policy)
+}
+
+/// `--sched-policy` flag, falling back to `[scheduler] policy`.
+fn sched_policy_of(args: &[String], exp: &Experiment) -> SchedPolicy {
+    parse_flag(args, "--sched-policy")
+        .map(|s| {
+            SchedPolicy::by_name(&s).unwrap_or_else(|| {
+                eprintln!(
+                    "--sched-policy takes `fifo`, `deadline-edf`, `fair-share`, \
+                     or `strict-priority` (got {s:?})"
+                );
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or(exp.fetch_sched.policy)
 }
 
 fn load_experiment(args: &[String]) -> Experiment {
@@ -386,7 +406,7 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     use std::sync::{Arc, Mutex};
 
     use kvfetcher::asic::DecodePool;
-    use kvfetcher::fetcher::FetchConfig;
+    use kvfetcher::fetcher::{FetchConfig, FetchScheduler, SchedConfig, TenantSpec};
     use kvfetcher::kvstore::StorageNode;
     use kvfetcher::service::{demo_prefix, SourceRegistry, SourceSpec, DEMO_LADDER};
 
@@ -394,6 +414,7 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     let demo = demo_prefix(seed, n_chunks, chunk_tokens);
     let replication = replication_of(args, &exp);
     let read_policy = read_policy_of(args, &exp);
+    let sched_policy = sched_policy_of(args, &exp);
 
     let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
     spec.chunk_tokens = chunk_tokens;
@@ -429,11 +450,13 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
         .decode_pool(DecodePool::new(exp.device.nvdecs, exp.device.decode_table()))
         .replication(replication)
         .read_policy(read_policy)
+        .sched_policy(sched_policy)
         .build();
     // replicated TCP fleets balance reads per the policy and fail
     // chunk fetches over between replicas
     spec.replication = fetcher.replication();
     spec.read_policy = fetcher.read_policy();
+    spec.sched_policy = fetcher.sched_policy();
     let source = match SourceRegistry::with_defaults().create(backend, &spec) {
         Ok(s) => s,
         Err(e) => {
@@ -460,12 +483,56 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     let req = FetchRequest::new(total_tokens, raw_bytes_total)
         .with_hashes(demo.hashes.clone())
         .exec(ExecMode::Pipelined);
-    let mut session = fetcher.session(req).with_source(source);
-    if let Err(e) = session.run() {
-        eprintln!("demo fetch failed: {e}");
-        std::process::exit(1);
-    }
-    let report = session.take_report().expect("run stores a report");
+    // any scheduler flag routes the fetch through a single-tenant
+    // FetchScheduler so admission, ordering, and TTFT accounting run
+    // end to end; without them the session path is unchanged
+    let sched_requested = ["--sched-policy", "--tenant", "--deadline-ms"]
+        .iter()
+        .any(|f| parse_flag(args, f).is_some());
+    let report = if sched_requested {
+        let tenant = parse_flag(args, "--tenant").unwrap_or_else(|| "default".into());
+        let deadline_ms: Option<u64> = parse_flag(args, "--deadline-ms")
+            .map(|s| s.parse().expect("--deadline-ms takes milliseconds"));
+        let cfg =
+            SchedConfig { policy: fetcher.sched_policy(), slots: 1, ..exp.fetch_sched.clone() };
+        let policy = cfg.policy;
+        let sched = FetchScheduler::new(cfg, vec![TenantSpec::new(tenant.clone())]);
+        let ticket = sched
+            .submit(0, raw_bytes_total as u64, deadline_ms, move || {
+                let mut session = fetcher.session(req).with_source(source);
+                if let Err(e) = session.run() {
+                    return Err(e);
+                }
+                Ok(session.take_report().expect("run stores a report"))
+            })
+            .unwrap_or_else(|e| {
+                eprintln!("scheduler refused the fetch: {e}");
+                std::process::exit(1);
+            });
+        let done = ticket.wait();
+        sched.join();
+        println!(
+            "# sched: policy {policy} tenant {tenant} | wall ttft {:.1} ms (queued {:.1} ms, \
+             deadline {})",
+            done.ttft_secs * 1e3,
+            done.queued_secs * 1e3,
+            if done.deadline_hit { "hit" } else { "MISSED" }
+        );
+        match done.result {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("demo fetch failed: {e}");
+                std::process::exit(1);
+            }
+        }
+    } else {
+        let mut session = fetcher.session(req).with_source(source);
+        if let Err(e) = session.run() {
+            eprintln!("demo fetch failed: {e}");
+            std::process::exit(1);
+        }
+        session.take_report().expect("run stores a report")
+    };
     if report.restored.len() != n_chunks {
         eprintln!("demo fetch incomplete: {}/{n_chunks} chunks restored", report.restored.len());
         std::process::exit(1);
@@ -514,9 +581,84 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     );
 }
 
+/// `serve --loadgen` — replay the canonical two-tenant arrival trace
+/// (`interactive` bursts + `batch` Poisson) through the multi-tenant
+/// fetch scheduler, print the per-tenant TTFT percentile table, and
+/// write the run as a `BENCH_*.json` perf-trajectory point. `--quick`
+/// shrinks the demo prefix for CI-speed runs; every restore is still
+/// verified bit-identically. Exits non-zero on any failed or
+/// mismatched job.
+fn cmd_serve_loadgen(args: &[String]) {
+    use kvfetcher::fetcher::SchedConfig;
+    use kvfetcher::service::{demo_mix, run_load, LoadSpec, RetryPolicy};
+
+    let exp = load_experiment(args);
+    let quick = args.iter().any(|a| a == "--quick");
+    let (seed, mut n_chunks, mut chunk_tokens) = demo_params(args);
+    if quick {
+        if parse_flag(args, "--chunks").is_none() {
+            n_chunks = 3;
+        }
+        if parse_flag(args, "--chunk-tokens").is_none() {
+            chunk_tokens = 32;
+        }
+    }
+    let requests: usize = parse_flag(args, "--requests")
+        .map(|s| s.parse().expect("--requests takes a count"))
+        .unwrap_or(if quick { 48 } else { 64 });
+    let rate: f64 = parse_flag(args, "--rate")
+        .map(|s| s.parse().expect("--rate takes requests/sec"))
+        .unwrap_or(1e5);
+    let burst: usize = parse_flag(args, "--burst")
+        .map(|s| s.parse().expect("--burst takes a count"))
+        .unwrap_or(requests);
+    let mut sched = SchedConfig { policy: sched_policy_of(args, &exp), ..exp.fetch_sched.clone() };
+    if let Some(s) = parse_flag(args, "--slots") {
+        sched.slots = s.parse().expect("--slots takes a count");
+    }
+    let spec = LoadSpec {
+        seed,
+        n_chunks,
+        chunk_tokens,
+        sched,
+        tenants: demo_mix(requests, rate, burst),
+        retry: RetryPolicy::default(),
+    };
+    println!(
+        "# loadgen: policy {} | {} tenants x {requests} requests | {n_chunks} chunks x \
+         {chunk_tokens} tokens | rate {rate}/s burst {burst} | {} slots",
+        spec.sched.policy,
+        spec.tenants.len(),
+        spec.sched.slots
+    );
+    let report = run_load(&spec);
+    println!("{}", report.markdown());
+    println!(
+        "# wall {:.2}s | peak in-system {} | {} failures",
+        report.wall_secs,
+        report.peak_in_system,
+        report.failures.len()
+    );
+    for f in &report.failures {
+        eprintln!("# failure: {f}");
+    }
+    let out = parse_flag(args, "--out").unwrap_or_else(|| "BENCH_serve_trace.json".into());
+    if let Err(e) = std::fs::write(&out, report.to_json().to_string() + "\n") {
+        eprintln!("cannot write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("# wrote {out}");
+    if !report.failures.is_empty() {
+        std::process::exit(1);
+    }
+}
+
 fn cmd_serve(args: &[String]) {
     if let Some(listen) = parse_flag(args, "--listen") {
         return cmd_serve_store(&listen, args);
+    }
+    if args.iter().any(|a| a == "--loadgen") {
+        return cmd_serve_loadgen(args);
     }
     let exp = load_experiment(args);
     let perf = kvfetcher::cluster::PerfModel::new(exp.device.clone(), exp.model.clone());
@@ -700,15 +842,26 @@ const USAGE: &str = "kvfetcher <serve|fetch|repair|calibrate|layout|real> [flags
              --shards hosts a fleet subset so shards can die/rejoin
              independently, --empty rejoins without data, and
              --repair-every-secs runs a background anti-entropy loop)
+  serve     --loadgen [--sched-policy p] [--slots n] [--requests n] [--rate r]
+            [--burst n] [--quick] [--out file] [--seed s] [--chunks n]
+            [--chunk-tokens t]
+            (trace-replay load generator: an interactive + a batch tenant
+             replayed through the multi-tenant fetch scheduler, per-tenant
+             TTFT p50/p95/p99 + goodput, run written as a BENCH json
+             point; --quick shrinks the prefix for CI)
   fetch     --config <toml> [--context tokens] [--bandwidth G]
   fetch     --backend local|tcp|objstore [--remote a:p[,b:p...]] [--seed s]
             [--chunks n] [--chunk-tokens t] [--replication r]
             [--read-policy primary-first|round-robin|least-inflight|estimator-weighted]
+            [--sched-policy fifo|deadline-edf|fair-share|strict-priority]
+            [--tenant name] [--deadline-ms n]
             (stream the demo prefix through a transport backend; verifies
              bit-exact restore and prints which shard served each chunk;
              --remote alone implies --backend tcp; with --replication the
              fetch balances reads per --read-policy and fails over
-             between a chunk's replicas)
+             between a chunk's replicas; any --sched-* flag routes the
+             fetch through the multi-tenant scheduler and reports wall
+             TTFT against the deadline)
   repair    --remote a:p[,b:p...] [--replication r] [--seed s] [--chunks n]
             [--chunk-tokens t] [--check]
             (anti-entropy pass: diff holder sets against the replica map,

@@ -1,0 +1,502 @@
+//! Trace-replay load generation: drive the multi-tenant
+//! [`FetchScheduler`] with realistic arrival processes and report
+//! per-tenant TTFT percentiles and goodput.
+//!
+//! A [`LoadSpec`] names the tenants, their arrival processes
+//! ([`ArrivalProcess::Poisson`] open-loop or [`ArrivalProcess::Bursty`]
+//! batched), and the scheduler shape; [`run_load`] replays the merged
+//! arrival trace in wall-clock time, submits one full pipelined fetch
+//! of the shared demo prefix per arrival, honors `Busy` sheds with the
+//! [`RetryPolicy`] backoff (the same client loop the remote source
+//! runs), verifies every completed restore bit-identically against the
+//! ground-truth [`DemoPrefix`], and folds the scheduler's counters into
+//! a [`LoadReport`] with TTFT p50/p95/p99 per tenant.
+//!
+//! `examples/serve_trace.rs` and `kvfetcher serve --loadgen` are thin
+//! CLI skins over this module; [`LoadReport::to_json`] is the schema of
+//! the repo's `BENCH_*.json` perf-trajectory points (validated by
+//! `python/tools/check_bench_schema.py` in CI).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::fetcher::{
+    ExecMode, FetchConfig, FetchError, FetchReport, FetchRequest, FetchScheduler, Fetcher,
+    JobTicket, SchedConfig, SchedPolicy, TenantSpec,
+};
+use crate::kvstore::StorageNode;
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile};
+use crate::util::table;
+use crate::util::Prng;
+
+use super::source::LocalSource;
+use super::{
+    demo_prefix, DemoPrefix, RetryPolicy, DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
+};
+
+/// How one tenant's requests arrive on the replay clock.
+#[derive(Debug, Clone, Copy)]
+pub enum ArrivalProcess {
+    /// Open-loop Poisson arrivals: exponential inter-arrival times at
+    /// `rate_per_sec` requests/second.
+    Poisson {
+        /// Mean arrival rate (requests/second).
+        rate_per_sec: f64,
+    },
+    /// Bursty arrivals: batches of `burst` requests land at the same
+    /// instant; batch gaps are exponential at `rate_per_sec / burst`,
+    /// so the long-run rate matches the Poisson process while the
+    /// instantaneous demand spikes.
+    Bursty {
+        /// Mean arrival rate (requests/second) across batches.
+        rate_per_sec: f64,
+        /// Requests per batch (floored at 1).
+        burst: usize,
+    },
+}
+
+impl ArrivalProcess {
+    /// Deterministic arrival offsets (seconds from replay start) for
+    /// `n` requests, drawn from `rng`.
+    pub fn schedule(&self, rng: &mut Prng, n: usize) -> Vec<f64> {
+        let mut times = Vec::with_capacity(n);
+        let mut t = 0.0;
+        match *self {
+            ArrivalProcess::Poisson { rate_per_sec } => {
+                for _ in 0..n {
+                    t += rng.exp(rate_per_sec.max(1e-9));
+                    times.push(t);
+                }
+            }
+            ArrivalProcess::Bursty { rate_per_sec, burst } => {
+                let burst = burst.max(1);
+                while times.len() < n {
+                    t += rng.exp(rate_per_sec.max(1e-9) / burst as f64);
+                    for _ in 0..burst.min(n - times.len()) {
+                        times.push(t);
+                    }
+                }
+            }
+        }
+        times
+    }
+}
+
+/// One tenant's slice of the generated load.
+#[derive(Debug, Clone)]
+pub struct TenantLoad {
+    /// Scheduler-facing identity and envelope.
+    pub spec: TenantSpec,
+    /// Requests this tenant offers over the run.
+    pub n_requests: usize,
+    /// How those requests arrive.
+    pub arrival: ArrivalProcess,
+}
+
+/// A full load-generation run, ready for [`run_load`].
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Seed of the demo prefix and of every arrival schedule.
+    pub seed: u64,
+    /// Chunks per fetched prefix.
+    pub n_chunks: usize,
+    /// Tokens per chunk.
+    pub chunk_tokens: usize,
+    /// Scheduler shape (policy, slots, queue cap, buckets).
+    pub sched: SchedConfig,
+    /// The tenants and their arrival processes.
+    pub tenants: Vec<TenantLoad>,
+    /// Client-side backoff on `Busy` sheds — deliberately the same
+    /// policy type the remote source retries servers with, so shed
+    /// handling cannot drift between the two admission paths.
+    pub retry: RetryPolicy,
+}
+
+/// The canonical two-tenant mix of the trace-replay generator: an
+/// `interactive` tenant (weight 3, priority 2, 250 ms TTFT deadline)
+/// arriving in bursts against a `batch` tenant (weight 1, priority 0,
+/// 2 s deadline) arriving Poisson — the strict-priority acceptance run.
+pub fn demo_mix(requests_per_tenant: usize, rate_per_sec: f64, burst: usize) -> Vec<TenantLoad> {
+    vec![
+        TenantLoad {
+            spec: TenantSpec::new("interactive").weight(3.0).priority(2).deadline_ms(250),
+            n_requests: requests_per_tenant,
+            arrival: ArrivalProcess::Bursty { rate_per_sec, burst },
+        },
+        TenantLoad {
+            spec: TenantSpec::new("batch").weight(1.0).priority(0).deadline_ms(2000),
+            n_requests: requests_per_tenant,
+            arrival: ArrivalProcess::Poisson { rate_per_sec },
+        },
+    ]
+}
+
+/// One tenant's outcome in a [`LoadReport`].
+#[derive(Debug, Clone)]
+pub struct TenantLoadReport {
+    /// Tenant name.
+    pub name: String,
+    /// Strict-priority class.
+    pub priority: u8,
+    /// Fair-share weight.
+    pub weight: f64,
+    /// Effective TTFT deadline (ms) the run judged hits against.
+    pub deadline_ms: u64,
+    /// Arrivals the generator offered (the trace length).
+    pub offered: usize,
+    /// Scheduler `submit` calls, including shed re-submissions.
+    pub submitted: usize,
+    /// Submissions the scheduler refused with `Busy`.
+    pub shed: usize,
+    /// Shed submissions re-offered after backing off per the hint.
+    pub resubmits: usize,
+    /// Arrivals abandoned after exhausting the retry budget.
+    pub dropped: usize,
+    /// Jobs that completed.
+    pub completed: usize,
+    /// Jobs whose fetch failed.
+    pub failed: usize,
+    /// Completed jobs whose restore matched the ground truth
+    /// bit-identically.
+    pub verified: usize,
+    /// Restored payload bytes over the run.
+    pub goodput_bytes: u64,
+    /// Jobs whose TTFT landed within the deadline.
+    pub deadline_hits: usize,
+    /// Per-job TTFT (ms), completion order.
+    pub ttft_ms: Vec<f64>,
+}
+
+impl TenantLoadReport {
+    /// TTFT percentile (ms), `q` in [0, 100].
+    pub fn ttft_ms_at(&self, q: f64) -> f64 {
+        percentile(&self.ttft_ms, q)
+    }
+
+    /// Goodput in Mbit/s over `wall_secs`.
+    pub fn goodput_mbps(&self, wall_secs: f64) -> f64 {
+        if wall_secs <= 0.0 {
+            return 0.0;
+        }
+        self.goodput_bytes as f64 * 8.0 / wall_secs / 1e6
+    }
+}
+
+/// What [`run_load`] returns: the scheduler's counters per tenant plus
+/// the generator's own bookkeeping (verification, drops, wall time).
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Scheduling policy of the run.
+    pub policy: SchedPolicy,
+    /// Worker slots of the run.
+    pub slots: usize,
+    /// Wall-clock seconds from first arrival to last completion.
+    pub wall_secs: f64,
+    /// Peak of queued + running jobs the scheduler observed — the
+    /// concurrency the run actually reached.
+    pub peak_in_system: usize,
+    /// Human-readable descriptions of every failed or mismatched job
+    /// (empty on a clean run).
+    pub failures: Vec<String>,
+    /// Per-tenant outcomes, in spec order.
+    pub tenants: Vec<TenantLoadReport>,
+}
+
+impl LoadReport {
+    /// The `BENCH_*.json` perf-trajectory point of this run (schema
+    /// version 1, validated by `python/tools/check_bench_schema.py`).
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("bench".into(), Json::Str("serve_trace_loadgen".into()));
+        o.insert("schema_version".into(), Json::Num(1.0));
+        o.insert("policy".into(), Json::Str(self.policy.name().into()));
+        o.insert("slots".into(), Json::Num(self.slots as f64));
+        o.insert("wall_secs".into(), Json::Num(self.wall_secs));
+        o.insert("peak_in_system".into(), Json::Num(self.peak_in_system as f64));
+        o.insert("failures".into(), Json::Num(self.failures.len() as f64));
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut m = BTreeMap::new();
+                m.insert("name".into(), Json::Str(t.name.clone()));
+                m.insert("priority".into(), Json::Num(t.priority as f64));
+                m.insert("weight".into(), Json::Num(t.weight));
+                m.insert("deadline_ms".into(), Json::Num(t.deadline_ms as f64));
+                m.insert("offered".into(), Json::Num(t.offered as f64));
+                m.insert("submitted".into(), Json::Num(t.submitted as f64));
+                m.insert("shed".into(), Json::Num(t.shed as f64));
+                m.insert("resubmits".into(), Json::Num(t.resubmits as f64));
+                m.insert("dropped".into(), Json::Num(t.dropped as f64));
+                m.insert("completed".into(), Json::Num(t.completed as f64));
+                m.insert("failed".into(), Json::Num(t.failed as f64));
+                m.insert("verified".into(), Json::Num(t.verified as f64));
+                m.insert("goodput_bytes".into(), Json::Num(t.goodput_bytes as f64));
+                m.insert("goodput_mbps".into(), Json::Num(t.goodput_mbps(self.wall_secs)));
+                m.insert("deadline_hits".into(), Json::Num(t.deadline_hits as f64));
+                let mut tt = BTreeMap::new();
+                tt.insert("p50".into(), Json::Num(t.ttft_ms_at(50.0)));
+                tt.insert("p95".into(), Json::Num(t.ttft_ms_at(95.0)));
+                tt.insert("p99".into(), Json::Num(t.ttft_ms_at(99.0)));
+                tt.insert("mean".into(), Json::Num(mean(&t.ttft_ms)));
+                tt.insert(
+                    "max".into(),
+                    Json::Num(t.ttft_ms.iter().cloned().fold(0.0, f64::max)),
+                );
+                m.insert("ttft_ms".into(), Json::Obj(tt));
+                Json::Obj(m)
+            })
+            .collect();
+        o.insert("tenants".into(), Json::Arr(tenants));
+        Json::Obj(o)
+    }
+
+    /// The per-tenant TTFT/goodput table the CLI prints.
+    pub fn markdown(&self) -> String {
+        let headers = [
+            "tenant", "offered", "shed", "dropped", "done", "verified", "p50 ms", "p95 ms",
+            "p99 ms", "goodput Mbps", "deadline hits",
+        ];
+        let rows: Vec<Vec<String>> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                vec![
+                    t.name.clone(),
+                    t.offered.to_string(),
+                    t.shed.to_string(),
+                    t.dropped.to_string(),
+                    t.completed.to_string(),
+                    t.verified.to_string(),
+                    format!("{:.1}", t.ttft_ms_at(50.0)),
+                    format!("{:.1}", t.ttft_ms_at(95.0)),
+                    format!("{:.1}", t.ttft_ms_at(99.0)),
+                    format!("{:.1}", t.goodput_mbps(self.wall_secs)),
+                    format!("{}/{}", t.deadline_hits, t.completed),
+                ]
+            })
+            .collect();
+        table::markdown(&headers, &rows)
+    }
+}
+
+/// One fetch job over the shared demo store: a pristine clone of the
+/// template fetcher pipelines the whole prefix through a [`LocalSource`]
+/// and returns the report with its restored chunks.
+fn fetch_job(
+    template: &Fetcher,
+    node: &Arc<Mutex<StorageNode>>,
+    demo: &Arc<DemoPrefix>,
+    total_tokens: usize,
+    raw_bytes: usize,
+) -> impl FnOnce() -> Result<FetchReport, FetchError> + Send + 'static {
+    let fetcher = template.fresh();
+    let node = Arc::clone(node);
+    let demo = Arc::clone(demo);
+    move || {
+        let src = LocalSource::new(node, demo.hashes.clone(), DEMO_LADDER);
+        let req = FetchRequest::new(total_tokens, raw_bytes)
+            .with_hashes(demo.hashes.clone())
+            .exec(ExecMode::Pipelined);
+        let mut session = fetcher.session(req).with_source(Box::new(src));
+        if let Err(e) = session.run() {
+            return Err(e);
+        }
+        Ok(session.take_report().expect("run stores a report"))
+    }
+}
+
+/// Replay `spec` against a fresh scheduler and report. Restores are
+/// verified bit-identically against the demo ground truth; any failed
+/// or mismatched job lands in [`LoadReport::failures`] rather than
+/// panicking, so callers choose their own strictness.
+pub fn run_load(spec: &LoadSpec) -> LoadReport {
+    assert!(!spec.tenants.is_empty(), "load spec needs at least one tenant");
+    let demo = Arc::new(demo_prefix(spec.seed, spec.n_chunks, spec.chunk_tokens));
+    let mut node = StorageNode::new(spec.chunk_tokens);
+    for c in &demo.chunks {
+        node.register(c.clone());
+    }
+    let node = Arc::new(Mutex::new(node));
+    let total_tokens = spec.n_chunks * spec.chunk_tokens;
+    let raw_bytes = total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2;
+    let template = Fetcher::builder()
+        .fetch_config(FetchConfig {
+            chunk_tokens: spec.chunk_tokens,
+            adaptive: false,
+            fixed_res: 3,
+            ..Default::default()
+        })
+        .sched_policy(spec.sched.policy)
+        .build();
+
+    // deterministic per-tenant schedules, merged into one arrival trace
+    let mut arrivals: Vec<(f64, usize)> = Vec::new();
+    for (ti, t) in spec.tenants.iter().enumerate() {
+        let mut rng = Prng::new(spec.seed ^ (ti as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        for off in t.arrival.schedule(&mut rng, t.n_requests) {
+            arrivals.push((off, ti));
+        }
+    }
+    arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+
+    let tenant_specs: Vec<TenantSpec> = spec.tenants.iter().map(|t| t.spec.clone()).collect();
+    let sched = FetchScheduler::new(spec.sched.clone(), tenant_specs);
+    let n = spec.tenants.len();
+    let mut resubmits = vec![0usize; n];
+    let mut dropped = vec![0usize; n];
+    let mut pending: Vec<JobTicket> = Vec::new();
+    let t0 = Instant::now();
+    for &(off, ti) in &arrivals {
+        let target = Duration::from_secs_f64(off.max(0.0));
+        let elapsed = t0.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        let mut attempt = 0usize;
+        loop {
+            let work = fetch_job(&template, &node, &demo, total_tokens, raw_bytes);
+            match sched.submit(ti, raw_bytes as u64, None, work) {
+                Ok(ticket) => {
+                    pending.push(ticket);
+                    break;
+                }
+                Err(FetchError::Busy { retry_after_ms }) => {
+                    attempt += 1;
+                    if attempt > spec.retry.max_busy_retries {
+                        dropped[ti] += 1;
+                        break;
+                    }
+                    resubmits[ti] += 1;
+                    std::thread::sleep(spec.retry.backoff(attempt, retry_after_ms));
+                }
+                Err(e) => panic!("scheduler refused a submission non-transiently: {e}"),
+            }
+        }
+    }
+
+    // redeem every admitted ticket, verifying restores bit-identically
+    let mut verified = vec![0usize; n];
+    let mut failures: Vec<String> = Vec::new();
+    for ticket in pending {
+        let done = ticket.wait();
+        match done.result {
+            Ok(report) => {
+                let ok = report.restored.len() == spec.n_chunks
+                    && report.restored.iter().all(|d| {
+                        let truth = &demo.quants[d.idx];
+                        d.quant.data == truth.data && d.quant.scales == truth.scales
+                    });
+                if ok {
+                    verified[done.tenant] += 1;
+                } else {
+                    failures.push(format!(
+                        "job {} (tenant {}) restored {} of {} chunks with differences",
+                        done.seq,
+                        done.tenant,
+                        report.restored.len(),
+                        spec.n_chunks
+                    ));
+                }
+            }
+            Err(e) => {
+                failures.push(format!("job {} (tenant {}) failed: {e}", done.seq, done.tenant));
+            }
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let sched_report = sched.join();
+
+    let tenants = spec
+        .tenants
+        .iter()
+        .enumerate()
+        .map(|(ti, t)| {
+            let s = &sched_report.tenants[ti].stats;
+            let deadline_ms = if t.spec.deadline_ms > 0 {
+                t.spec.deadline_ms
+            } else {
+                spec.sched.deadline_ms
+            };
+            TenantLoadReport {
+                name: t.spec.name.clone(),
+                priority: t.spec.priority,
+                weight: t.spec.weight,
+                deadline_ms,
+                offered: t.n_requests,
+                submitted: s.submitted,
+                shed: s.shed,
+                resubmits: resubmits[ti],
+                dropped: dropped[ti],
+                completed: s.completed,
+                failed: s.failed,
+                verified: verified[ti],
+                goodput_bytes: s.goodput_bytes,
+                deadline_hits: s.deadline_hits,
+                ttft_ms: s.ttft_secs.iter().map(|t| t * 1e3).collect(),
+            }
+        })
+        .collect();
+    LoadReport {
+        policy: sched_report.policy,
+        slots: sched_report.slots,
+        wall_secs,
+        peak_in_system: sched_report.peak_in_system,
+        failures,
+        tenants,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrival_schedules_are_deterministic_and_shaped() {
+        let p = ArrivalProcess::Poisson { rate_per_sec: 100.0 };
+        let a = p.schedule(&mut Prng::new(3), 50);
+        let b = p.schedule(&mut Prng::new(3), 50);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "monotone offsets");
+
+        let bursty = ArrivalProcess::Bursty { rate_per_sec: 100.0, burst: 8 };
+        let c = bursty.schedule(&mut Prng::new(3), 20);
+        assert_eq!(c.len(), 20);
+        // the first batch lands at one instant
+        assert_eq!(c[0], c[7]);
+        assert!(c[8] > c[7]);
+    }
+
+    #[test]
+    fn small_load_run_completes_verified() {
+        let spec = LoadSpec {
+            seed: 5,
+            n_chunks: 2,
+            chunk_tokens: 16,
+            sched: SchedConfig { slots: 2, ..Default::default() },
+            tenants: demo_mix(4, 1e5, 4),
+            retry: RetryPolicy::default(),
+        };
+        let report = run_load(&spec);
+        assert!(report.failures.is_empty(), "{:?}", report.failures);
+        assert_eq!(report.tenants.len(), 2);
+        for t in &report.tenants {
+            assert_eq!(t.offered, 4);
+            assert_eq!(t.dropped, 0);
+            assert_eq!(t.completed, 4);
+            assert_eq!(t.verified, 4);
+            assert_eq!(t.ttft_ms.len(), 4);
+            assert!(t.goodput_bytes > 0);
+        }
+        // the BENCH point round-trips through the json module
+        let j = report.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve_trace_loadgen"));
+        assert_eq!(parsed.get("tenants").unwrap().as_arr().unwrap().len(), 2);
+        assert!(parsed.idx(0).is_none());
+        assert!(report.markdown().contains("interactive"));
+    }
+}

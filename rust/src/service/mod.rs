@@ -28,7 +28,12 @@
 //!   balance reads under a pluggable `ReadPolicy`;
 //! * [`repair`] — the anti-entropy scanner: diff every chunk's holder
 //!   set against its replica set and re-put what's missing, so a shard
-//!   that dies and rejoins converges back to replication factor `r`.
+//!   that dies and rejoins converges back to replication factor `r`;
+//! * [`loadgen`] — the trace-replay load generator: Poisson/bursty
+//!   multi-tenant arrivals driven through the
+//!   [`crate::fetcher::FetchScheduler`], with bit-identical restore
+//!   verification and per-tenant TTFT percentile reports emitted as
+//!   the repo's `BENCH_*.json` perf-trajectory points.
 //!
 //! Everything runs hermetically on loopback; `tests/remote_fetch.rs`
 //! asserts the end-to-end contracts (bit-exact restore across 2+
@@ -38,6 +43,7 @@
 #![warn(missing_docs)]
 
 pub mod client;
+pub mod loadgen;
 pub mod protocol;
 pub mod repair;
 pub mod server;
@@ -46,6 +52,9 @@ pub mod source;
 pub mod throttle;
 
 pub use client::StoreClient;
+pub use loadgen::{
+    demo_mix, run_load, ArrivalProcess, LoadReport, LoadSpec, TenantLoad, TenantLoadReport,
+};
 pub use protocol::{NodeStats, Request, Response, PROTOCOL_VERSION};
 pub use repair::{
     ChunkHealth, RepairAction, RepairFailure, RepairReport, RepairScanner, ScanReport,

@@ -13,8 +13,9 @@
 //!   dying mid-fetch is transparent, and `FetchError::Capacity`
 //!   surfaces only when *every* replica of a chunk is saturated. A
 //!   [`ReadPolicy`] decides which replica each chunk is *tried on
-//!   first* (primary-first, round-robin, least-inflight via the wire-v2
-//!   `NodeStats` in-flight counter, or weighted by per-replica
+//!   first* (primary-first, round-robin, least-inflight via the
+//!   `NodeStats` in-flight counter — added in wire v2, still served at
+//!   v3 — or weighted by per-replica
 //!   bandwidth EWMAs), so a replicated fleet balances read load instead
 //!   of hammering primaries;
 //! * [`ObjectStoreSource`] shapes an in-process store like an object
@@ -31,7 +32,9 @@ use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use crate::fetcher::{ChunkPayload, FetchError, ReadPolicy, TransportSource, WireTiming};
+use crate::fetcher::{
+    ChunkPayload, FetchError, ReadPolicy, SchedPolicy, TransportSource, WireTiming,
+};
 use crate::kvstore::StorageNode;
 use crate::net::BandwidthEstimator;
 
@@ -129,7 +132,11 @@ impl RetryPolicy {
     /// Run `op`, absorbing `Busy` admission refusals with this policy's
     /// bounded retry-with-backoff — the one busy loop shared by the
     /// fetch path (`RemoteSource`) and the repair scanner, so their
-    /// backoff semantics cannot drift. `on_busy` fires once per refusal
+    /// backoff semantics cannot drift. Since wire v2 the refusal is the
+    /// typed `Busy` reply (never a dropped connection), and the
+    /// scheduler's load shedding reuses the same error, so this loop
+    /// also covers scheduler refusals when an `op` submits through a
+    /// [`crate::fetcher::FetchScheduler`]. `on_busy` fires once per refusal
     /// (counters); past the budget the typed `Busy` is returned. Other
     /// typed errors smuggled through the io boundary pass through, and
     /// untyped I/O faults go through `map_io` so each caller keeps its
@@ -515,6 +522,12 @@ pub struct SourceSpec {
     pub node: Option<Arc<Mutex<StorageNode>>>,
     /// Object-store backend: its wall-clock shape.
     pub objstore: ObjStoreShape,
+    /// Scheduling class of the requests this source will serve.
+    /// Built-in factories don't consume it (ordering happens in
+    /// [`crate::fetcher::FetchScheduler`], above the transport), but it
+    /// rides along like `read_policy` so custom factories can plumb the
+    /// class into their own admission or prioritization.
+    pub sched_policy: SchedPolicy,
 }
 
 impl SourceSpec {
