@@ -11,7 +11,7 @@
 //! Run: `cargo run --release --example serve_trace -- [--quick]`
 //!   flags: --sched-policy fifo|deadline-edf|fair-share|strict-priority
 //!          --slots n --requests n --chunks n --chunk-tokens t --seed s
-//!          --rate r --burst n --out file
+//!          --rate r --burst n --out file --trace-out file
 //!
 //! With `--real` (requires `--features pjrt` and `make artifacts`) this
 //! instead runs the original end-to-end validation: the AOT-compiled
@@ -23,6 +23,7 @@
 use std::process::exit;
 
 use kvfetcher::fetcher::{SchedConfig, SchedPolicy};
+use kvfetcher::obs::TraceRecorder;
 use kvfetcher::service::{demo_mix, run_load, LoadSpec, RetryPolicy};
 
 fn parse_flag(args: &[String], name: &str) -> Option<String> {
@@ -71,6 +72,7 @@ fn main() {
         })
         .unwrap_or(SchedPolicy::StrictPriority);
 
+    let trace_out = parse_flag(&args, "--trace-out");
     let spec = LoadSpec {
         seed,
         n_chunks,
@@ -78,6 +80,7 @@ fn main() {
         sched: SchedConfig { policy, slots, ..Default::default() },
         tenants: demo_mix(requests, rate, burst),
         retry: RetryPolicy::default(),
+        recorder: trace_out.as_ref().map(|_| TraceRecorder::new(1 << 18)),
     };
     println!("== serve_trace: multi-tenant trace-replay load generation ==\n");
     println!(
@@ -103,6 +106,13 @@ fn main() {
         exit(1);
     }
     println!("wrote {out}");
+    if let (Some(path), Some(rec)) = (&trace_out, spec.recorder.as_deref()) {
+        if let Err(e) = rec.write_chrome_json(path) {
+            eprintln!("cannot write {path}: {e}");
+            exit(1);
+        }
+        println!("wrote {path} ({} events, {} dropped)", rec.len(), rec.dropped());
+    }
 
     // --- acceptance contracts of the load generator ---
     assert!(report.failures.is_empty(), "every admitted fetch must restore bit-identically");

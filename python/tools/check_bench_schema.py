@@ -3,14 +3,23 @@
 
 Usage: check_bench_schema.py BENCH_serve_trace.json [...]
 
-The CI ``bench-trajectory`` job runs the trace-replay load generator
-(``cargo run --release --example serve_trace -- --quick``) and gates the
-emitted point on this schema before uploading it as an artifact, so
-every point in the trajectory stays machine-comparable. Exits non-zero
-on any violation; stdlib only.
+Two document shapes share schema version 1, dispatched on ``bench``:
+
+- ``serve_trace_loadgen`` — the trace-replay load generator's
+  per-tenant TTFT/goodput report (``serve --loadgen`` or the
+  ``serve_trace`` example).
+- ``perf_codec`` / ``perf_fetch_path`` — micro-bench ``points``
+  documents: a flat list of ``{name, value, unit}`` throughput points
+  with unique non-empty names and finite positive values.
+
+The CI ``bench-trajectory`` job runs all three emitters with
+``--quick`` and gates every emitted point on this schema before
+uploading it as an artifact, so every point in the trajectory stays
+machine-comparable. Exits non-zero on any violation; stdlib only.
 """
 
 import json
+import math
 import sys
 
 TTFT_KEYS = ("p50", "p95", "p99", "mean", "max")
@@ -71,12 +80,39 @@ def check_tenant(path, i, t):
     )
 
 
+MICRO_BENCHES = ("perf_codec", "perf_fetch_path")
+
+
+def check_micro(path, doc):
+    """A micro-bench ``points`` document: flat throughput points."""
+    points = doc.get("points")
+    expect(path, isinstance(points, list) and points, "points must be a non-empty list")
+    names = []
+    for i, p in enumerate(points):
+        where = f"points[{i}]"
+        expect(path, isinstance(p, dict), f"{where} is not an object")
+        expect(path, isinstance(p.get("name"), str) and p["name"], f"{where}.name")
+        value = p.get("value")
+        expect(
+            path,
+            is_num(value) and math.isfinite(value) and value > 0,
+            f"{where}.value must be finite and > 0 (got {value!r})",
+        )
+        expect(path, isinstance(p.get("unit"), str) and p["unit"], f"{where}.unit")
+        names.append(p["name"])
+    expect(path, len(names) == len(set(names)), f"duplicate point names: {sorted(names)}")
+    print(f"{path}: OK ({doc['bench']}, {len(points)} points)")
+
+
 def check(path):
     with open(path) as f:
         doc = json.load(f)
     expect(path, isinstance(doc, dict), "top level is not an object")
-    expect(path, doc.get("bench") == "serve_trace_loadgen", "bench name")
+    bench = doc.get("bench")
     expect(path, doc.get("schema_version") == 1, "schema_version != 1")
+    if bench in MICRO_BENCHES:
+        return check_micro(path, doc)
+    expect(path, bench == "serve_trace_loadgen", f"unknown bench name {bench!r}")
     expect(path, doc.get("policy") in POLICIES, f"unknown policy {doc.get('policy')!r}")
     expect(path, is_count(doc.get("slots")) and doc["slots"] >= 1, "slots")
     expect(path, is_num(doc.get("wall_secs")) and doc["wall_secs"] > 0, "wall_secs")

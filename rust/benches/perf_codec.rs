@@ -3,15 +3,48 @@
 //! (DESIGN.md §7): encode >= 200 MB/s, decode >= 300 MB/s per core so
 //! the simulated NVDEC latency — not host CPU — is always the modelled
 //! cost in the examples.
+//!
+//! Run: `cargo bench --bench perf_codec -- [--quick] [--out file]`
+//! Writes the run as `BENCH_perf_codec.json` (schema version 1,
+//! validated by `python/tools/check_bench_schema.py` in the CI
+//! `bench-trajectory` job); `--quick` shrinks inputs and reps for CI.
+
+use std::collections::BTreeMap;
 
 use kvfetcher::codec::{decode_video, encode_video, rans, CodecConfig};
 use kvfetcher::engine::real::best_intra;
 use kvfetcher::layout::{decode_chunk, encode_chunk, Resolution};
 use kvfetcher::quant::quantize;
 use kvfetcher::tensor::KvCache;
+use kvfetcher::util::json::Json;
 use kvfetcher::util::proptest::gen_bytes;
 use kvfetcher::util::table::markdown;
 use kvfetcher::util::Prng;
+
+fn parse_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// The `BENCH_*.json` perf-trajectory point of a micro-bench run
+/// (schema version 1, `points` variant — validated by
+/// `python/tools/check_bench_schema.py`).
+fn bench_json(bench: &str, points: &[(String, f64, &'static str)]) -> Json {
+    let arr = points
+        .iter()
+        .map(|(name, value, unit)| {
+            let mut p = BTreeMap::new();
+            p.insert("name".into(), Json::Str(name.clone()));
+            p.insert("value".into(), Json::Num(*value));
+            p.insert("unit".into(), Json::Str((*unit).into()));
+            Json::Obj(p)
+        })
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("bench".into(), Json::Str(bench.into()));
+    o.insert("schema_version".into(), Json::Num(1.0));
+    o.insert("points".into(), Json::Arr(arr));
+    Json::Obj(o)
+}
 
 fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     // warmup
@@ -24,22 +57,28 @@ fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
 }
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let reps = if quick { 1 } else { 3 };
     println!("# perf_codec — host codec throughput\n");
     let mut rng = Prng::new(123);
     let mut rows = Vec::new();
+    let mut points: Vec<(String, f64, &'static str)> = Vec::new();
 
-    // rANS on residual-like (peaked) data, 8 MB
-    let peaked = gen_bytes(&mut rng, 8 << 20, true);
+    // rANS on residual-like (peaked) data
+    let peaked = gen_bytes(&mut rng, if quick { 2 << 20 } else { 8 << 20 }, true);
     let enc = rans::encode(&peaked);
-    let t_enc = time(3, || {
+    let t_enc = time(reps, || {
         std::hint::black_box(rans::encode(&peaked));
     });
-    let t_dec = time(3, || {
+    let t_dec = time(reps, || {
         std::hint::black_box(rans::decode(&enc).unwrap());
     });
     let mb = (peaked.len() >> 20) as f64;
-    rows.push(vec!["rANS encode (peaked 8MB)".into(), format!("{:.0} MB/s", mb / t_enc)]);
-    rows.push(vec!["rANS decode (peaked 8MB)".into(), format!("{:.0} MB/s", mb / t_dec)]);
+    rows.push(vec![format!("rANS encode (peaked {mb:.0}MB)"), format!("{:.0} MB/s", mb / t_enc)]);
+    rows.push(vec![format!("rANS decode (peaked {mb:.0}MB)"), format!("{:.0} MB/s", mb / t_dec)]);
+    points.push(("rans_encode".into(), mb / t_enc, "MB/s"));
+    points.push(("rans_decode".into(), mb / t_dec, "MB/s"));
 
     // full video pipeline on a 1024-token chunk (8 planes, 8x32)
     let kv = KvCache::synthetic(&mut rng, 1024, 8, 8, 32, 0.97);
@@ -48,10 +87,10 @@ fn main() {
     let intra = best_intra(&q, res);
     let raw_mb = q.data.len() as f64 / (1 << 20) as f64;
     let groups = encode_chunk(&q, res, intra, &CodecConfig::lossless()).unwrap();
-    let t_venc = time(3, || {
+    let t_venc = time(reps, || {
         std::hint::black_box(encode_chunk(&q, res, intra, &CodecConfig::lossless()).unwrap());
     });
-    let t_vdec = time(3, || {
+    let t_vdec = time(reps, || {
         std::hint::black_box(decode_chunk(&groups, q.scales.clone()).unwrap());
     });
     rows.push(vec![
@@ -62,20 +101,32 @@ fn main() {
         format!("video decode+restore ({raw_mb:.0}MB chunk)"),
         format!("{:.0} MB/s", raw_mb / t_vdec),
     ]);
+    points.push(("chunk_encode".into(), raw_mb / t_venc, "MB/s"));
+    points.push(("chunk_decode_restore".into(), raw_mb / t_vdec, "MB/s"));
 
     // single-video paths (frames only, no layout) for profiling deltas
     let frames = groups[0].layout.build_frames(&q);
     let (bytes, _) = encode_video(&frames, &CodecConfig::lossless(), &[]);
-    let t_e1 = time(3, || {
+    let t_e1 = time(reps, || {
         std::hint::black_box(encode_video(&frames, &CodecConfig::lossless(), &[]));
     });
-    let t_d1 = time(3, || {
+    let t_d1 = time(reps, || {
         std::hint::black_box(decode_video(&bytes).unwrap());
     });
     let fmb = frames.iter().map(|f| f.byte_len()).sum::<usize>() as f64 / (1 << 20) as f64;
     rows.push(vec![format!("encode_video ({fmb:.1}MB frames)"), format!("{:.0} MB/s", fmb / t_e1)]);
     rows.push(vec![format!("decode_video ({fmb:.1}MB frames)"), format!("{:.0} MB/s", fmb / t_d1)]);
+    points.push(("encode_video".into(), fmb / t_e1, "MB/s"));
+    points.push(("decode_video".into(), fmb / t_d1, "MB/s"));
 
     println!("{}", markdown(&["path", "throughput"], &rows));
     println!("targets (DESIGN.md §7): encode >= 200 MB/s, decode >= 300 MB/s");
+
+    let out = parse_flag(&args, "--out").unwrap_or_else(|| "BENCH_perf_codec.json".into());
+    let json = bench_json("perf_codec", &points);
+    if let Err(e) = std::fs::write(&out, json.to_string() + "\n") {
+        eprintln!("cannot write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
 }

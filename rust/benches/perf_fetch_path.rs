@@ -1,6 +1,13 @@
 //! §Perf — L3 coordinator hot path: fetch planning, scheduler
 //! admission, paged allocation, and full-engine simulation throughput.
 //! Target (DESIGN.md §7): >= 100k scheduling/fetch events per second.
+//!
+//! Run: `cargo bench --bench perf_fetch_path -- [--quick] [--out file]`
+//! Writes the run as `BENCH_perf_fetch_path.json` (schema version 1,
+//! validated by `python/tools/check_bench_schema.py` in the CI
+//! `bench-trajectory` job); `--quick` shrinks iteration counts for CI.
+
+use std::collections::BTreeMap;
 
 use kvfetcher::asic::{h20_table, DecodePool};
 use kvfetcher::baselines::SystemProfile;
@@ -10,15 +17,44 @@ use kvfetcher::engine::{EngineConfig, EngineSim};
 use kvfetcher::fetcher::{plan_fetch, select_resolution, FetchConfig};
 use kvfetcher::net::{BandwidthEstimator, BandwidthTrace, NetLink};
 use kvfetcher::trace::{generate, TraceConfig};
+use kvfetcher::util::json::Json;
 use kvfetcher::util::table::markdown;
 
+fn parse_flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
+}
+
+/// The `BENCH_*.json` perf-trajectory point of a micro-bench run
+/// (schema version 1, `points` variant — validated by
+/// `python/tools/check_bench_schema.py`).
+fn bench_json(bench: &str, points: &[(String, f64, &'static str)]) -> Json {
+    let arr = points
+        .iter()
+        .map(|(name, value, unit)| {
+            let mut p = BTreeMap::new();
+            p.insert("name".into(), Json::Str(name.clone()));
+            p.insert("value".into(), Json::Num(*value));
+            p.insert("unit".into(), Json::Str((*unit).into()));
+            Json::Obj(p)
+        })
+        .collect();
+    let mut o = BTreeMap::new();
+    o.insert("bench".into(), Json::Str(bench.into()));
+    o.insert("schema_version".into(), Json::Num(1.0));
+    o.insert("points".into(), Json::Arr(arr));
+    Json::Obj(o)
+}
+
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
     println!("# perf_fetch_path — coordinator hot-path throughput\n");
     let mut rows = Vec::new();
+    let mut points: Vec<(String, f64, &'static str)> = Vec::new();
 
     // Alg. 1 resolution selection rate
     let pool = DecodePool::new(7, h20_table());
-    let n = 1_000_000;
+    let n = if quick { 200_000 } else { 1_000_000 };
     let t0 = std::time::Instant::now();
     let mut acc = 0usize;
     for i in 0..n {
@@ -27,6 +63,7 @@ fn main() {
     std::hint::black_box(acc);
     let dt = t0.elapsed().as_secs_f64();
     rows.push(vec!["Alg.1 select_resolution".into(), format!("{:.1}M ops/s", n as f64 / dt / 1e6)]);
+    points.push(("select_resolution".into(), n as f64 / dt / 1e6, "Mops/s"));
 
     // fetch planning rate (10-chunk plans)
     let profile = SystemProfile::kvfetcher();
@@ -34,7 +71,7 @@ fn main() {
     let perf = PerfModel::new(DeviceSpec::h20(), ModelSpec::yi_34b());
     let raw = perf.kv_bytes(100_000);
     let t0 = std::time::Instant::now();
-    let plans = 20_000;
+    let plans = if quick { 4_000 } else { 20_000 };
     for i in 0..plans {
         let mut link = NetLink::new(BandwidthTrace::constant(16.0));
         let mut p = DecodePool::new(14, h20_table());
@@ -52,11 +89,13 @@ fn main() {
             plans as f64 * 10.0 / dt / 1e3
         ),
     ]);
+    points.push(("plan_fetch".into(), plans as f64 / dt / 1e3, "Kplans/s"));
+    points.push(("plan_fetch_chunk_events".into(), plans as f64 * 10.0 / dt / 1e3, "Kevents/s"));
 
     // allocator churn
     let mut alloc = BlockAllocator::new(4096, 256);
     let t0 = std::time::Instant::now();
-    let rounds = 200_000;
+    let rounds = if quick { 50_000 } else { 200_000 };
     for _ in 0..rounds {
         let b = alloc.alloc(8).unwrap();
         alloc.release_all(&b);
@@ -66,9 +105,11 @@ fn main() {
         "paged alloc/release (8 blocks)".into(),
         format!("{:.1}M ops/s", rounds as f64 / dt / 1e6),
     ]);
+    points.push(("alloc_release".into(), rounds as f64 / dt / 1e6, "Mops/s"));
 
     // full engine sim throughput (requests simulated per second)
-    let trace = generate(&TraceConfig { n_requests: 256, rate: 1.0, ..Default::default() });
+    let n_requests = if quick { 64 } else { 256 };
+    let trace = generate(&TraceConfig { n_requests, rate: 1.0, ..Default::default() });
     let t0 = std::time::Instant::now();
     let mut eng = EngineSim::new(
         perf.clone(),
@@ -80,10 +121,19 @@ fn main() {
     let dt = t0.elapsed().as_secs_f64();
     assert_eq!(rec.records.len(), trace.len());
     rows.push(vec![
-        "EngineSim end-to-end (256 reqs)".into(),
+        format!("EngineSim end-to-end ({n_requests} reqs)"),
         format!("{:.0} simulated reqs/s", trace.len() as f64 / dt),
     ]);
+    points.push(("enginesim_requests".into(), trace.len() as f64 / dt, "reqs/s"));
 
     println!("{}", markdown(&["hot path", "throughput"], &rows));
     println!("target (DESIGN.md §7): fetch-path event loop >= 100k events/s");
+
+    let out = parse_flag(&args, "--out").unwrap_or_else(|| "BENCH_perf_fetch_path.json".into());
+    let json = bench_json("perf_fetch_path", &points);
+    if let Err(e) = std::fs::write(&out, json.to_string() + "\n") {
+        eprintln!("cannot write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
 }

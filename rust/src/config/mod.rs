@@ -6,6 +6,7 @@ use crate::cluster::{DeviceSpec, ModelSpec};
 use crate::engine::{EngineConfig, ExecMode};
 use crate::fetcher::{FetchConfig, PipelineConfig, ReadPolicy, SchedConfig, SchedPolicy};
 use crate::net::BandwidthTrace;
+use crate::obs::ObsConfig;
 use crate::scheduler::SchedulerConfig;
 use crate::service::{AdmissionConfig, Backend, ObjStoreShape};
 use crate::trace::TraceConfig;
@@ -80,6 +81,12 @@ pub struct Experiment {
     pub fetch_sched: SchedConfig,
     pub engine: EngineConfig,
     pub trace: TraceConfig,
+    /// Execution tracing (`[trace] enabled / out / capacity`): when
+    /// `enabled`, the CLI builds a [`crate::obs::TraceRecorder`] and
+    /// writes a Chrome/Perfetto trace to `out` after each run. Shares
+    /// the `[trace]` table with the workload-replay keys above; the key
+    /// sets are disjoint.
+    pub obs: ObsConfig,
 }
 
 impl Default for Experiment {
@@ -97,6 +104,7 @@ impl Default for Experiment {
             fetch_sched: SchedConfig::default(),
             engine: EngineConfig::default(),
             trace: TraceConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -158,6 +166,12 @@ impl Experiment {
             out_min: c.get_i64("trace", "out_min", 16) as usize,
             out_max: c.get_i64("trace", "out_max", 256) as usize,
         };
+        let obs_default = ObsConfig::default();
+        let obs = ObsConfig {
+            enabled: c.get_bool("trace", "enabled", false),
+            out: c.get_str("trace", "out", &obs_default.out).to_string(),
+            capacity: c.get_i64("trace", "capacity", obs_default.capacity as i64).max(1) as usize,
+        };
         let backend = match c.get_str("network", "backend", "") {
             "" => None,
             name => match Backend::by_name(name) {
@@ -214,6 +228,7 @@ impl Experiment {
             fetch_sched,
             engine,
             trace,
+            obs,
         }
     }
 
@@ -269,6 +284,10 @@ mod tests {
         let a = e.service.admission();
         assert_eq!((a.max_conns, a.max_inflight_bytes), (0, 0));
         assert!(a.retry_after_ms > 0);
+        assert!(!e.obs.enabled, "tracing must default off");
+        assert_eq!(e.obs.out, "trace.json");
+        assert!(e.obs.capacity > 0);
+        assert!(e.obs.recorder().is_none());
     }
 
     #[test]
@@ -306,6 +325,9 @@ queue_depth = 2
 exec = "pipelined"
 [trace]
 n_requests = 10
+enabled = true
+out = "run.trace.json"
+capacity = 4096
 "#;
         let e = Experiment::from_config(&Config::parse(text).unwrap());
         assert_eq!(e.name, "fig18-l20");
@@ -318,6 +340,10 @@ n_requests = 10
         assert_eq!(e.engine.exec, ExecMode::Pipelined);
         assert_eq!(e.engine.pipe.queue_depth, 2);
         assert_eq!(e.trace.n_requests, 10);
+        assert!(e.obs.enabled, "[trace] enabled must parse");
+        assert_eq!(e.obs.out, "run.trace.json");
+        assert_eq!(e.obs.capacity, 4096);
+        assert!(e.obs.recorder().is_some());
         assert!(e.jitter);
         assert_eq!(e.backend, Some(Backend::ObjStore));
         assert!((e.objstore.latency_s - 0.0025).abs() < 1e-12);

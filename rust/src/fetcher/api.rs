@@ -28,6 +28,7 @@
 
 use std::error::Error;
 use std::fmt;
+use std::sync::Arc;
 use std::thread;
 
 use crate::asic::{h20_table, DecodePool};
@@ -36,6 +37,9 @@ use crate::cluster::PerfModel;
 use crate::codec::CodecError;
 use crate::metrics::TtftBreakdown;
 use crate::net::{BandwidthEstimator, BandwidthTrace, NetLink};
+use crate::obs::TraceRecorder;
+use crate::util::stats::percentile;
+use crate::util::table;
 
 use super::executor::{run_stages, FetchParams};
 use super::pipeline::{CancelToken, PipelineConfig};
@@ -386,6 +390,40 @@ impl FetchReport {
     pub fn breakdown(&self) -> &TtftBreakdown {
         &self.plan.breakdown
     }
+
+    /// Aggregated per-stage latency summary of this fetch, rendered as
+    /// a markdown table the CLI prints after every fetch: one row per
+    /// stage with chunk count, p50/p95, and total milliseconds.
+    ///
+    /// The `transmit` / `decode` / `bubble` rows come from the virtual
+    /// timeline ([`FetchPlan::chunks`]) and so are identical across
+    /// exec modes; when the attached source did real I/O, a `wire
+    /// (wall)` row summarizes the measured wall-clock request-to-last-
+    /// byte durations ([`WireTiming::wall_secs`]), busy backoff and
+    /// failover included.
+    pub fn stage_summary(&self) -> String {
+        fn row(stage: &str, ms: &[f64]) -> Vec<String> {
+            vec![
+                stage.to_string(),
+                ms.len().to_string(),
+                format!("{:.3}", percentile(ms, 50.0)),
+                format!("{:.3}", percentile(ms, 95.0)),
+                format!("{:.3}", ms.iter().sum::<f64>()),
+            ]
+        }
+        let chunks = &self.plan.chunks;
+        let trans: Vec<f64> =
+            chunks.iter().map(|c| (c.trans_end - c.trans_start) * 1e3).collect();
+        let dec: Vec<f64> = chunks.iter().map(|c| (c.dec_end - c.dec_start) * 1e3).collect();
+        let bubble: Vec<f64> = chunks.iter().map(|c| c.bubble * 1e3).collect();
+        let mut rows =
+            vec![row("transmit", &trans), row("decode", &dec), row("bubble", &bubble)];
+        if !self.wire_timings.is_empty() {
+            let wire: Vec<f64> = self.wire_timings.iter().map(|t| t.wall_secs * 1e3).collect();
+            rows.push(row("wire (wall)", &wire));
+        }
+        table::markdown(&["stage", "n", "p50 ms", "p95 ms", "total ms"], &rows)
+    }
 }
 
 // ------------------------------------------------------------- builder
@@ -403,6 +441,7 @@ pub struct FetcherBuilder {
     replication: usize,
     read_policy: ReadPolicy,
     sched_policy: SchedPolicy,
+    recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl Default for FetcherBuilder {
@@ -417,6 +456,7 @@ impl Default for FetcherBuilder {
             replication: 1,
             read_policy: ReadPolicy::PrimaryFirst,
             sched_policy: SchedPolicy::Fifo,
+            recorder: None,
         }
     }
 }
@@ -505,6 +545,17 @@ impl FetcherBuilder {
         self
     }
 
+    /// Attach a trace recorder (see [`crate::obs::TraceRecorder`]): the
+    /// pipelined executor stamps per-chunk transmit/decode/restore
+    /// spans onto it. `None` (the default) keeps tracing off at zero
+    /// cost — the executor takes no timestamps and allocates nothing.
+    /// Shared by `Arc`, so one recorder can collect a whole fleet of
+    /// fetchers (e.g. every per-tenant clone the load generator spawns).
+    pub fn recorder(mut self, rec: Option<Arc<TraceRecorder>>) -> FetcherBuilder {
+        self.recorder = rec;
+        self
+    }
+
     /// Build the configured [`Fetcher`] with pristine link / pool /
     /// estimator state.
     pub fn build(self) -> Fetcher {
@@ -521,6 +572,7 @@ impl FetcherBuilder {
             replication: self.replication,
             read_policy: self.read_policy,
             sched_policy: self.sched_policy,
+            recorder: self.recorder,
         }
     }
 }
@@ -542,6 +594,7 @@ pub struct Fetcher {
     replication: usize,
     read_policy: ReadPolicy,
     sched_policy: SchedPolicy,
+    recorder: Option<Arc<TraceRecorder>>,
     link: NetLink,
     pool: DecodePool,
     est: BandwidthEstimator,
@@ -591,6 +644,13 @@ impl Fetcher {
     /// [`FetcherBuilder::sched_policy`]).
     pub fn sched_policy(&self) -> SchedPolicy {
         self.sched_policy
+    }
+
+    /// The attached trace recorder, if tracing is on (see
+    /// [`FetcherBuilder::recorder`]). Clones and [`Fetcher::fresh`]
+    /// copies share it, so per-tenant fetchers all feed one timeline.
+    pub fn recorder(&self) -> Option<&Arc<TraceRecorder>> {
+        self.recorder.as_ref()
     }
 
     /// The pipeline tuning of the threaded executor.
@@ -747,6 +807,7 @@ fn run_once(
         &mut fetcher.pool,
         &mut fetcher.est,
         source.as_mut().map(|s| &mut **s),
+        fetcher.recorder.as_deref(),
     );
     let err = match err {
         Some(e) => Some(e),
@@ -999,6 +1060,33 @@ mod tests {
             )
             .unwrap();
         assert!(r2.plan.chunks.iter().all(|c| c.res_idx == 3), "fixed_res clamps to the ladder");
+    }
+
+    #[test]
+    fn stage_summary_covers_the_virtual_stages() {
+        let mut f = Fetcher::builder().bandwidth_gbps(8.0).build();
+        let r = f.run(&FetchRequest::new(50_000, 50_000 * 245_760)).unwrap();
+        let s = r.stage_summary();
+        for stage in ["transmit", "decode", "bubble"] {
+            assert!(s.contains(stage), "missing {stage} row in:\n{s}");
+        }
+        // source-less fetches measure no wall-clock wire row
+        assert!(!s.contains("wire (wall)"), "{s}");
+        assert!(s.contains("p50 ms") && s.contains("p95 ms") && s.contains("total ms"), "{s}");
+    }
+
+    #[test]
+    fn recorder_rides_through_build_clone_and_fresh() {
+        assert!(Fetcher::builder().build().recorder().is_none());
+        let rec = crate::obs::TraceRecorder::new(64);
+        let f = Fetcher::builder().recorder(Some(rec.clone())).build();
+        assert!(Arc::ptr_eq(f.recorder().unwrap(), &rec));
+        assert!(Arc::ptr_eq(f.fresh().recorder().unwrap(), &rec), "fresh() keeps the recorder");
+        // a traced pipelined fetch lands span events on the shared ring
+        let mut traced = f.fresh();
+        let req = FetchRequest::new(50_000, 50_000 * 245_760).exec(ExecMode::Pipelined);
+        traced.run(&req).unwrap();
+        assert!(!rec.is_empty(), "pipelined run must record spans");
     }
 
     #[test]

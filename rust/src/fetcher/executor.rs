@@ -35,10 +35,12 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::thread;
+use std::time::Instant;
 
 use crate::asic::DecodePool;
 use crate::baselines::{Decompress, SystemProfile};
 use crate::net::{BandwidthEstimator, NetLink};
+use crate::obs::{ArgValue, Track, TraceRecorder};
 
 use super::api::FetchError;
 use super::pipeline::{
@@ -80,7 +82,11 @@ pub struct FetchOutcome {
 /// The three-stage pipeline itself, driven exclusively by the
 /// [`super::api::Fetcher`] facade (`run_once`): returns the outcome
 /// plus the first typed error any stage hit (`None` when the fetch
-/// completed or was cancelled without a fault).
+/// completed or was cancelled without a fault). With a
+/// [`TraceRecorder`] attached, each stage records one wall-clock span
+/// per chunk (transmit with shard/resolution attribution, decode,
+/// restore); with `None` no timestamp is taken and nothing allocates —
+/// the disabled path is the pre-observability code, branch for branch.
 pub(crate) fn run_stages(
     params: &FetchParams,
     pipe: &PipelineConfig,
@@ -89,6 +95,7 @@ pub(crate) fn run_stages(
     pool: &mut DecodePool,
     est: &mut BandwidthEstimator,
     source: Option<&mut dyn TransportSource>,
+    rec: Option<&TraceRecorder>,
 ) -> (FetchOutcome, Option<FetchError>) {
     let geo = chunk_geometry(params.reusable_tokens, params.raw_bytes_total, &params.cfg);
     let now = params.now;
@@ -135,12 +142,16 @@ pub(crate) fn run_stages(
                     link.busy_until().max(now),
                     geo.scale,
                 );
+                let t0 = rec.map(|_| Instant::now());
                 // with a source attached, the transmit stage really pulls
                 // the chunk's bitstream (blocking socket/store I/O) — its
                 // wall latency rides this thread, never the virtual clock
-                let payload = match source.as_deref_mut() {
+                let (payload, shard) = match source.as_deref_mut() {
                     Some(src) => match src.fetch_chunk(idx, res_idx) {
-                        Ok(p) => Some(p),
+                        Ok(p) => {
+                            let shard = src.last_shard();
+                            (Some(p), shard)
+                        }
                         Err(e) => {
                             aborted = true;
                             error = Some(e.at_chunk(idx));
@@ -148,7 +159,7 @@ pub(crate) fn run_stages(
                             break;
                         }
                     },
-                    None => None,
+                    None => (None, None),
                 };
                 let wire = wire_bytes_at(profile, wire_1080p, res_idx);
                 let (ts, te) = link.transmit(now, wire);
@@ -157,6 +168,17 @@ pub(crate) fn run_stages(
                     // mirror the decode the pool will perform for this
                     // chunk, keeping the predictor's occupancy honest
                     predictor.decode(te, res_idx, geo.scale);
+                }
+                if let (Some(r), Some(t0)) = (rec, t0) {
+                    let mut args = vec![
+                        ("chunk", ArgValue::U64(idx as u64)),
+                        ("res", ArgValue::U64(res_idx as u64)),
+                        ("wire_bytes", ArgValue::U64(wire as u64)),
+                    ];
+                    if let Some(s) = shard {
+                        args.push(("shard", ArgValue::U64(s as u64)));
+                    }
+                    r.span(Track::Transmit, "transmit", t0, Instant::now(), args);
                 }
                 let staged = inflight_ref.fetch_add(wire, Ordering::SeqCst) + wire;
                 peak_ref.fetch_max(staged, Ordering::SeqCst);
@@ -184,6 +206,7 @@ pub(crate) fn run_stages(
                     aborted = true;
                     break;
                 }
+                let t0 = rec.map(|_| Instant::now());
                 if let Some(d) = throttle {
                     thread::sleep(d);
                 }
@@ -209,6 +232,13 @@ pub(crate) fn run_stages(
                     dec_end: de,
                     bubble: (ds - msg.trans_end).max(0.0),
                 };
+                if let (Some(r), Some(t0)) = (rec, t0) {
+                    let args = vec![
+                        ("chunk", ArgValue::U64(msg.idx as u64)),
+                        ("res", ArgValue::U64(msg.res_idx as u64)),
+                    ];
+                    r.span(Track::Decode, "decode", t0, Instant::now(), args);
+                }
                 if to_restore.send((msg.idx, chunk, payload)).is_err() {
                     aborted = true;
                     break;
@@ -224,11 +254,16 @@ pub(crate) fn run_stages(
             let mut aborted = false;
             let mut error: Option<FetchError> = None;
             while let Ok((idx, chunk, payload)) = from_decode.recv() {
+                let t0 = rec.map(|_| Instant::now());
+                let mut restored_bytes = 0u64;
                 if let Some(p) = payload {
                     // real restoration: decode the bitstream back into
                     // the quantized chunk, overlapping later transmits
                     match decode_payload(&p) {
-                        Ok(quant) => restored.push(DecodedChunk { idx, quant }),
+                        Ok(quant) => {
+                            restored_bytes = quant.data.len() as u64;
+                            restored.push(DecodedChunk { idx, quant });
+                        }
                         Err(e) => {
                             aborted = true;
                             error = Some(e.at_chunk(idx));
@@ -242,6 +277,13 @@ pub(crate) fn run_stages(
                     // alongside its decode; only the final frame trails
                     restored_through =
                         chunk.dec_end + restore_tail_secs(profile, cfg, geo.raw_per_chunk, 1);
+                }
+                if let (Some(r), Some(t0)) = (rec, t0) {
+                    let args = vec![
+                        ("chunk", ArgValue::U64(idx as u64)),
+                        ("restored_bytes", ArgValue::U64(restored_bytes)),
+                    ];
+                    r.span(Track::Restore, "restore", t0, Instant::now(), args);
                 }
                 chunks.push(chunk);
                 if cancel.is_cancelled() {

@@ -32,6 +32,8 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::obs::{ArgValue, Track, TraceRecorder};
+
 use super::api::{FetchError, FetchReport};
 
 /// How queued fetch jobs are ordered when demand exceeds the worker
@@ -395,6 +397,9 @@ struct Inner {
     cfg: SchedConfig,
     state: Mutex<State>,
     cv: Condvar,
+    /// Trace sink for queue-wait / service spans and shed instants;
+    /// `None` keeps the dispatch path untraced at zero cost.
+    rec: Option<Arc<TraceRecorder>>,
 }
 
 /// The multi-tenant fetch scheduler: a bounded worker pool over a
@@ -414,6 +419,20 @@ impl FetchScheduler {
     /// A scheduler over `cfg.slots` workers serving `tenants` (at least
     /// one).
     pub fn new(cfg: SchedConfig, tenants: Vec<TenantSpec>) -> FetchScheduler {
+        FetchScheduler::with_recorder(cfg, tenants, None)
+    }
+
+    /// Like [`new`](Self::new), additionally stamping every dispatch
+    /// with a queue-wait span (submit → worker pickup) and a service
+    /// span, and every shed with a `shed_queue_full` / `shed_credit`
+    /// instant, onto `rec` (Track `sched`). The recorder is installed
+    /// before the workers spawn, so even the first dispatch is traced;
+    /// `None` keeps tracing off at zero cost.
+    pub fn with_recorder(
+        cfg: SchedConfig,
+        tenants: Vec<TenantSpec>,
+        rec: Option<Arc<TraceRecorder>>,
+    ) -> FetchScheduler {
         assert!(!tenants.is_empty(), "scheduler needs at least one tenant");
         let slots = cfg.slots.max(1);
         let tenants: Vec<TenantState> = tenants
@@ -440,6 +459,7 @@ impl FetchScheduler {
             }),
             cv: Condvar::new(),
             cfg,
+            rec,
         });
         let workers = (0..slots)
             .map(|_| {
@@ -486,6 +506,13 @@ impl FetchScheduler {
         let cap = self.inner.cfg.queue_cap;
         if cap > 0 && st.queue.len() >= cap {
             st.tenants[tenant].stats.shed += 1;
+            if let Some(r) = self.inner.rec.as_deref() {
+                r.instant(
+                    Track::Sched,
+                    "shed_queue_full",
+                    vec![("tenant", ArgValue::U64(tenant as u64))],
+                );
+            }
             return Err(FetchError::Busy { retry_after_ms: self.inner.cfg.shed_retry_ms });
         }
         // hierarchical admission: the job must afford its cost in the
@@ -497,9 +524,18 @@ impl FetchScheduler {
         if tenant_wait.is_some() || fleet_wait.is_some() {
             st.tenants[tenant].stats.shed += 1;
             let hint = tenant_wait.unwrap_or(0).max(fleet_wait.unwrap_or(0));
-            return Err(FetchError::Busy {
-                retry_after_ms: hint.max(self.inner.cfg.shed_retry_ms),
-            });
+            let retry_after_ms = hint.max(self.inner.cfg.shed_retry_ms);
+            if let Some(r) = self.inner.rec.as_deref() {
+                r.instant(
+                    Track::Sched,
+                    "shed_credit",
+                    vec![
+                        ("tenant", ArgValue::U64(tenant as u64)),
+                        ("retry_after_ms", ArgValue::U64(retry_after_ms)),
+                    ],
+                );
+            }
+            return Err(FetchError::Busy { retry_after_ms });
         }
         st.tenants[tenant].bucket.charge(cost_bytes);
         st.fleet.charge(cost_bytes);
@@ -649,8 +685,17 @@ fn worker_loop(inner: &Inner) {
         // decode stages, never on the scheduler
         let t_run = Instant::now();
         let result = (job.work)();
-        let service_secs = t_run.elapsed().as_secs_f64();
-        let ttft_secs = job.submitted.elapsed().as_secs_f64();
+        let t_end = Instant::now();
+        if let Some(r) = inner.rec.as_deref() {
+            let args = vec![
+                ("tenant", ArgValue::U64(job.tenant as u64)),
+                ("seq", ArgValue::U64(job.seq)),
+            ];
+            r.span(Track::Sched, "queue_wait", job.submitted, t_run, args.clone());
+            r.span(Track::Sched, "service", t_run, t_end, args);
+        }
+        let service_secs = t_end.saturating_duration_since(t_run).as_secs_f64();
+        let ttft_secs = t_end.saturating_duration_since(job.submitted).as_secs_f64();
         let queued_secs = (ttft_secs - service_secs).max(0.0);
         let deadline_hit = ttft_secs <= job.deadline_dur.as_secs_f64();
 
@@ -733,6 +778,54 @@ mod tests {
         assert!(big.credits() < 0.0);
         let hint = big.deficit_ms(10, now).expect("in debt");
         assert!(hint >= 99_000, "debt hint {hint}");
+    }
+
+    #[test]
+    fn recorder_captures_dispatch_spans_and_shed_instants() {
+        let rec = crate::obs::TraceRecorder::new(1024);
+        let sched = FetchScheduler::with_recorder(
+            SchedConfig { slots: 1, queue_cap: 1, ..Default::default() },
+            vec![TenantSpec::new("t0"), TenantSpec::new("t1").rate(1.0).burst(10.0)],
+            Some(rec.clone()),
+        );
+        let quick = || Fetcher::builder().build().run(&FetchRequest::new(1000, 245_760_000));
+        // occupy the single slot with a gated job so the queue fills
+        let (started_tx, started_rx) = mpsc::channel::<()>();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let a = sched
+            .submit(0, 1, None, move || {
+                started_tx.send(()).expect("observer gone");
+                gate_rx.recv().expect("gate dropped");
+                Fetcher::builder().build().run(&FetchRequest::new(1000, 245_760_000))
+            })
+            .expect("admit a");
+        started_rx.recv().expect("job a never started");
+        let b = sched.submit(0, 1, None, quick).expect("admit b into the queue");
+        // queue_cap 1 is now full -> queue shed
+        match sched.submit(0, 1, None, quick) {
+            Err(FetchError::Busy { .. }) => {}
+            other => panic!("expected queue-full shed, got {other:?}"),
+        }
+        gate_tx.send(()).expect("worker gone");
+        assert!(a.wait().result.is_ok());
+        assert!(b.wait().result.is_ok());
+        // t1's bucket affords one 10-byte job; the second sheds on credit
+        let d = sched.submit(1, 10, None, quick).expect("first t1 job affordable");
+        assert!(d.wait().result.is_ok());
+        match sched.submit(1, 10, None, quick) {
+            Err(FetchError::Busy { retry_after_ms }) => assert!(retry_after_ms >= 25),
+            other => panic!("expected credit shed, got {other:?}"),
+        }
+        sched.join();
+        let evs = rec.events();
+        let count = |n: &str| evs.iter().filter(|e| e.name == n).count();
+        assert_eq!(count("queue_wait"), 3, "one per dispatched job");
+        assert_eq!(count("service"), 3);
+        assert_eq!(count("shed_queue_full"), 1);
+        assert_eq!(count("shed_credit"), 1);
+        // spans carry durations, instants do not
+        assert!(evs.iter().filter(|e| e.name == "service").all(|e| e.dur_us.is_some()));
+        assert!(evs.iter().filter(|e| e.name == "shed_credit").all(|e| e.dur_us.is_none()));
     }
 
     #[test]

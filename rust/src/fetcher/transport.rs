@@ -94,6 +94,14 @@ pub trait TransportSource: Send {
     fn take_timings(&mut self) -> Vec<WireTiming> {
         Vec::new()
     }
+
+    /// Shard that served the most recent successful `fetch_chunk` —
+    /// the same attribution [`WireTiming::shard`] records, surfaced
+    /// immediately so the executor can stamp it onto the chunk's
+    /// transmit trace span. `None` for sources without a shard fleet.
+    fn last_shard(&self) -> Option<usize> {
+        None
+    }
 }
 
 /// Decode a payload back into the quantized chunk — the restore stage's

@@ -30,6 +30,7 @@ pub mod fetcher;
 pub mod kvstore;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod scheduler;
 pub mod service;

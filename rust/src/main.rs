@@ -1,6 +1,9 @@
 //! KVFetcher CLI — the L3 leader entrypoint.
 //!
 //! Subcommands:
+//!   stats     — poll every shard's control-plane NodeStats and print a
+//!               fleet table; --watch redraws it in place with delivered
+//!               bandwidth from served_bytes deltas (a `top` for shards)
 //!   serve     — run a serving-trace simulation and report TTFT/TPOT;
 //!               with --listen, host storage shard servers instead
 //!               (optionally only a --shards subset of the fleet, and
@@ -24,18 +27,24 @@
 //!   real      — smoke-test the PJRT runtime on the AOT artifacts
 //!
 //! `--config configs/foo.toml` applies to serve/fetch; individual flags
-//! override config values.
+//! override config values. `--trace-out file` (fetch, serve --loadgen)
+//! records every pipeline/scheduler/source event of the run into a
+//! Chrome trace-event JSON loadable in ui.perfetto.dev or
+//! chrome://tracing; `[trace]` in the config enables the same recorder.
+
+use std::sync::Arc;
 
 use kvfetcher::baselines::{calibrate_ratios, SystemProfile};
 use kvfetcher::config::Experiment;
 use kvfetcher::engine::EngineSim;
 use kvfetcher::fetcher::{ExecMode, FetchRequest, Fetcher, ReadPolicy, SchedPolicy};
 use kvfetcher::layout;
+use kvfetcher::obs::TraceRecorder;
 use kvfetcher::quant::quantize;
 use kvfetcher::service::Backend;
 use kvfetcher::tensor::KvCache;
 use kvfetcher::trace::generate;
-use kvfetcher::util::table::{fmt_secs, markdown};
+use kvfetcher::util::table::{fmt_bytes, fmt_secs, markdown};
 use kvfetcher::util::Prng;
 
 /// Shared defaults of the `--listen` / `--remote` demo dataset: both
@@ -103,6 +112,29 @@ fn sched_policy_of(args: &[String], exp: &Experiment) -> SchedPolicy {
             })
         })
         .unwrap_or(exp.fetch_sched.policy)
+}
+
+/// `--trace-out` flag, falling back to `[trace] enabled` + `[trace]
+/// out` in the config: the recorder to thread through the run plus the
+/// path its Chrome trace is written to on exit. `None` keeps every
+/// producer on the zero-cost disabled path (no clocks, no allocation).
+fn trace_setup(args: &[String], exp: &Experiment) -> Option<(Arc<TraceRecorder>, String)> {
+    let path = parse_flag(args, "--trace-out")
+        .or_else(|| exp.obs.enabled.then(|| exp.obs.out.clone()))?;
+    Some((TraceRecorder::new(exp.obs.capacity), path))
+}
+
+/// Flush a recorder to `path` as Chrome trace-event JSON.
+fn write_trace(rec: &TraceRecorder, path: &str) {
+    if let Err(e) = rec.write_chrome_json(path) {
+        eprintln!("cannot write {path}: {e}");
+        std::process::exit(1);
+    }
+    println!(
+        "# wrote {path} ({} events, {} dropped) — load it in ui.perfetto.dev",
+        rec.len(),
+        rec.dropped()
+    );
 }
 
 fn load_experiment(args: &[String]) -> Experiment {
@@ -415,6 +447,10 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     let replication = replication_of(args, &exp);
     let read_policy = read_policy_of(args, &exp);
     let sched_policy = sched_policy_of(args, &exp);
+    // one shared recorder across executor, scheduler, and source: all
+    // of the run's spans land on one timeline in the exported trace
+    let trace = trace_setup(args, &exp);
+    let rec = trace.as_ref().map(|(r, _)| Arc::clone(r));
 
     let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
     spec.chunk_tokens = chunk_tokens;
@@ -451,12 +487,14 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
         .replication(replication)
         .read_policy(read_policy)
         .sched_policy(sched_policy)
+        .recorder(rec.clone())
         .build();
     // replicated TCP fleets balance reads per the policy and fail
     // chunk fetches over between replicas
     spec.replication = fetcher.replication();
     spec.read_policy = fetcher.read_policy();
     spec.sched_policy = fetcher.sched_policy();
+    spec.recorder = rec.clone();
     let source = match SourceRegistry::with_defaults().create(backend, &spec) {
         Ok(s) => s,
         Err(e) => {
@@ -496,7 +534,8 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
         let cfg =
             SchedConfig { policy: fetcher.sched_policy(), slots: 1, ..exp.fetch_sched.clone() };
         let policy = cfg.policy;
-        let sched = FetchScheduler::new(cfg, vec![TenantSpec::new(tenant.clone())]);
+        let sched =
+            FetchScheduler::with_recorder(cfg, vec![TenantSpec::new(tenant.clone())], rec.clone());
         let ticket = sched
             .submit(0, raw_bytes_total as u64, deadline_ms, move || {
                 let mut session = fetcher.session(req).with_source(source);
@@ -579,6 +618,10 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
         fmt_secs(report.breakdown().decode),
         fmt_secs(report.breakdown().restore),
     );
+    println!("# per-stage latency:\n{}", report.stage_summary());
+    if let Some((rec, path)) = &trace {
+        write_trace(rec, path);
+    }
 }
 
 /// `serve --loadgen` — replay the canonical two-tenant arrival trace
@@ -616,6 +659,7 @@ fn cmd_serve_loadgen(args: &[String]) {
     if let Some(s) = parse_flag(args, "--slots") {
         sched.slots = s.parse().expect("--slots takes a count");
     }
+    let trace = trace_setup(args, &exp);
     let spec = LoadSpec {
         seed,
         n_chunks,
@@ -623,6 +667,7 @@ fn cmd_serve_loadgen(args: &[String]) {
         sched,
         tenants: demo_mix(requests, rate, burst),
         retry: RetryPolicy::default(),
+        recorder: trace.as_ref().map(|(r, _)| Arc::clone(r)),
     };
     println!(
         "# loadgen: policy {} | {} tenants x {requests} requests | {n_chunks} chunks x \
@@ -648,8 +693,103 @@ fn cmd_serve_loadgen(args: &[String]) {
         std::process::exit(1);
     }
     println!("# wrote {out}");
+    if let Some((rec, path)) = &trace {
+        write_trace(rec, path);
+    }
     if !report.failures.is_empty() {
         std::process::exit(1);
+    }
+}
+
+/// `stats --remote a:p[,b:p...] [--watch] [--interval-secs n]` — poll
+/// every shard's control-plane `NodeStats` and print a fleet table.
+/// One-shot by default (exit non-zero if any shard is unreachable);
+/// `--watch` clears and redraws the table in place every interval —
+/// plain ANSI, no dependencies — with each shard's delivered bandwidth
+/// computed from the `served_bytes` delta between polls. Every shard
+/// gets its own lazy client, so a dead shard renders `-` in its row
+/// instead of failing the whole poll.
+fn cmd_stats(args: &[String]) {
+    use std::time::{Duration, Instant};
+
+    use kvfetcher::service::{NodeStats, StoreClient};
+
+    let exp = load_experiment(args);
+    let addrs = parse_flag(args, "--remote")
+        .map(|list| Experiment::parse_addrs(&list))
+        .unwrap_or_else(|| exp.remote_addrs.clone());
+    if addrs.is_empty() {
+        eprintln!("stats needs --remote a:p[,b:p...] (or [network] remote)");
+        std::process::exit(2);
+    }
+    let watch = args.iter().any(|a| a == "--watch");
+    let interval: f64 = parse_flag(args, "--interval-secs")
+        .map(|s| s.parse().expect("--interval-secs takes seconds"))
+        .unwrap_or(2.0);
+    let clients: Vec<StoreClient> = addrs.iter().map(|a| StoreClient::lazy(a)).collect();
+    // last successful poll per shard, for the served_bytes delta
+    let mut last: Vec<Option<(Instant, NodeStats)>> = vec![None; addrs.len()];
+    loop {
+        let polled: Vec<Option<NodeStats>> = clients.iter().map(|c| c.stats().ok()).collect();
+        let now = Instant::now();
+        if watch {
+            // clear screen + cursor home: redraw the dashboard in place
+            print!("\x1b[2J\x1b[H");
+        }
+        let mut rows = Vec::new();
+        for (i, s) in polled.iter().enumerate() {
+            rows.push(match s {
+                Some(s) => {
+                    let mbps = last[i].as_ref().map(|(t0, prev)| {
+                        let dt = now.duration_since(*t0).as_secs_f64();
+                        let delta = s.served_bytes.saturating_sub(prev.served_bytes);
+                        if dt > 0.0 { delta as f64 * 8.0 / dt / 1e6 } else { 0.0 }
+                    });
+                    vec![
+                        i.to_string(),
+                        addrs[i].clone(),
+                        s.chunks.to_string(),
+                        fmt_bytes(s.used_bytes as usize),
+                        s.capacity_bytes.map_or("-".into(), |c| fmt_bytes(c as usize)),
+                        fmt_bytes(s.inflight_bytes as usize),
+                        fmt_bytes(s.peak_inflight_bytes as usize),
+                        s.busy_replies.to_string(),
+                        s.evictions.to_string(),
+                        fmt_bytes(s.served_bytes as usize),
+                        mbps.map_or("-".into(), |m| format!("{m:.1}")),
+                    ]
+                }
+                None => {
+                    let mut row = vec![i.to_string(), addrs[i].clone()];
+                    row.extend((0..9).map(|_| "-".to_string()));
+                    row
+                }
+            });
+        }
+        let headers = [
+            "shard", "addr", "chunks", "used", "cap", "inflight", "peak", "busy", "evict",
+            "served", "Mbps",
+        ];
+        println!("{}", markdown(&headers, &rows));
+        let up = polled.iter().filter(|s| s.is_some()).count();
+        println!(
+            "# {up}/{} shards reachable{}",
+            addrs.len(),
+            if watch {
+                format!(" | refresh {interval:.1}s | ctrl-c to quit")
+            } else {
+                String::new()
+            }
+        );
+        for (i, s) in polled.into_iter().enumerate() {
+            if let Some(s) = s {
+                last[i] = Some((now, s));
+            }
+        }
+        if !watch {
+            std::process::exit(if up == addrs.len() { 0 } else { 1 });
+        }
+        std::thread::sleep(Duration::from_secs_f64(interval.max(0.1)));
     }
 }
 
@@ -829,7 +969,7 @@ fn cmd_real(_args: &[String]) {
     std::process::exit(2);
 }
 
-const USAGE: &str = "kvfetcher <serve|fetch|repair|calibrate|layout|real> [flags]
+const USAGE: &str = "kvfetcher <serve|fetch|stats|repair|calibrate|layout|real> [flags]
   serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
             [--exec analytic|pipelined]
   serve     --listen a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
@@ -844,24 +984,34 @@ const USAGE: &str = "kvfetcher <serve|fetch|repair|calibrate|layout|real> [flags
              --repair-every-secs runs a background anti-entropy loop)
   serve     --loadgen [--sched-policy p] [--slots n] [--requests n] [--rate r]
             [--burst n] [--quick] [--out file] [--seed s] [--chunks n]
-            [--chunk-tokens t]
+            [--chunk-tokens t] [--trace-out file]
             (trace-replay load generator: an interactive + a batch tenant
              replayed through the multi-tenant fetch scheduler, per-tenant
              TTFT p50/p95/p99 + goodput, run written as a BENCH json
-             point; --quick shrinks the prefix for CI)
+             point; --quick shrinks the prefix for CI; --trace-out records
+             every pipeline + scheduler event as a Chrome trace JSON)
   fetch     --config <toml> [--context tokens] [--bandwidth G]
   fetch     --backend local|tcp|objstore [--remote a:p[,b:p...]] [--seed s]
             [--chunks n] [--chunk-tokens t] [--replication r]
             [--read-policy primary-first|round-robin|least-inflight|estimator-weighted]
             [--sched-policy fifo|deadline-edf|fair-share|strict-priority]
-            [--tenant name] [--deadline-ms n]
+            [--tenant name] [--deadline-ms n] [--trace-out file]
             (stream the demo prefix through a transport backend; verifies
-             bit-exact restore and prints which shard served each chunk;
-             --remote alone implies --backend tcp; with --replication the
-             fetch balances reads per --read-policy and fails over
-             between a chunk's replicas; any --sched-* flag routes the
-             fetch through the multi-tenant scheduler and reports wall
-             TTFT against the deadline)
+             bit-exact restore and prints which shard served each chunk
+             plus a per-stage p50/p95 latency table; --remote alone
+             implies --backend tcp; with --replication the fetch balances
+             reads per --read-policy and fails over between a chunk's
+             replicas; any --sched-* flag routes the fetch through the
+             multi-tenant scheduler and reports wall TTFT against the
+             deadline; --trace-out writes the run's transmit/decode/
+             restore spans as a Chrome trace JSON for ui.perfetto.dev)
+  stats     --remote a:p[,b:p...] [--watch] [--interval-secs n]
+            (poll every shard's NodeStats into one fleet table: chunks,
+             bytes, inflight/peak, busy refusals, evictions, served
+             bytes; --watch redraws in place each interval and derives
+             per-shard delivered Mbps from served_bytes deltas; dead
+             shards render `-`; one-shot mode exits non-zero unless the
+             whole fleet answered)
   repair    --remote a:p[,b:p...] [--replication r] [--seed s] [--chunks n]
             [--chunk-tokens t] [--check]
             (anti-entropy pass: diff holder sets against the replica map,
@@ -876,6 +1026,7 @@ fn main() {
     match args.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args[1..]),
         Some("fetch") => cmd_fetch(&args[1..]),
+        Some("stats") => cmd_stats(&args[1..]),
         Some("repair") => cmd_repair(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("layout") => cmd_layout(&args[1..]),

@@ -1,0 +1,416 @@
+//! Zero-cost-when-off observability: end-to-end fetch tracing.
+//!
+//! KVFetcher's claim is a minimum-TTFT pipeline that masks network
+//! fluctuation by overlapping transmit/decode/restore (§3.3); this
+//! module is the attribution layer that *shows* where a microsecond
+//! goes. A [`TraceRecorder`] is a lock-light, fixed-capacity ring of
+//! typed events that the pipelined executor, the multi-tenant
+//! [`crate::fetcher::FetchScheduler`], the replicated
+//! [`crate::service::RemoteSource`], and the anti-entropy repair
+//! scanner feed with:
+//!
+//! * per-chunk **transmit / decode / restore spans** (with shard +
+//!   resolution attribution on the transmit leg),
+//! * **queue-wait and job-service spans** plus shed instants from the
+//!   scheduler (queue-cap and credit-deficit sheds are distinct),
+//! * **busy / failover / capacity instants** from the remote source's
+//!   replica walk,
+//! * **repair pull/re-put instants** from anti-entropy passes.
+//!
+//! The recorder exports Chrome trace-event JSON
+//! ([`TraceRecorder::to_chrome_json`]) loadable in `ui.perfetto.dev`
+//! or `chrome://tracing`: one process, one named thread ([`Track`]) per
+//! pipeline stage/subsystem, `ph:"X"` complete slices for spans and
+//! `ph:"i"` thread-scoped instants for point events.
+//!
+//! **Cost model.** Disabled means *absent*: every producer holds an
+//! `Option<Arc<TraceRecorder>>` and takes no timestamp, allocates
+//! nothing, and branches once per would-be event when it is `None` —
+//! the fetch path is bit-identical with tracing off (asserted by
+//! `tests/obs_trace.rs`). Enabled, each event is one `Instant` pair,
+//! one short `Vec` of args, and one mutex push into the ring; when the
+//! ring is full the oldest event is overwritten and a drop counter
+//! ticks, so a recorder never grows without bound and never blocks the
+//! pipeline on I/O.
+
+#![warn(missing_docs)]
+
+use std::collections::BTreeMap;
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// `[trace]` table of the experiment config: whether fetch tracing is
+/// on, where the Chrome JSON lands, and how many events the ring keeps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Record spans/instants during fetches (`[trace] enabled`).
+    pub enabled: bool,
+    /// Output path of the exported Chrome trace (`[trace] out`).
+    pub out: String,
+    /// Ring capacity in events; the oldest events are overwritten past
+    /// it (`[trace] capacity`).
+    pub capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: false, out: "trace.json".into(), capacity: 262_144 }
+    }
+}
+
+impl ObsConfig {
+    /// A recorder per this config — `None` when tracing is disabled, so
+    /// producers skip all instrumentation (see the module cost model).
+    pub fn recorder(&self) -> Option<Arc<TraceRecorder>> {
+        self.enabled.then(|| TraceRecorder::new(self.capacity))
+    }
+}
+
+/// The timeline an event renders on — one named Perfetto thread per
+/// pipeline stage / subsystem, so a whole fetch reads top-to-bottom:
+/// wire, decoder, restore, then the control planes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Track {
+    /// The executor's transmit stage (wire + source I/O).
+    Transmit,
+    /// The executor's decode stage (NVDEC model + throttle).
+    Decode,
+    /// The executor's restore stage (payload decode back to KV).
+    Restore,
+    /// The multi-tenant fetch scheduler (queue waits, job service,
+    /// sheds).
+    Sched,
+    /// The remote source's replica walk (busy, failover, capacity).
+    Source,
+    /// Anti-entropy repair traffic (pulls and re-puts).
+    Repair,
+}
+
+impl Track {
+    /// Stable Chrome `tid` of this track (1-based).
+    pub fn tid(self) -> u64 {
+        match self {
+            Track::Transmit => 1,
+            Track::Decode => 2,
+            Track::Restore => 3,
+            Track::Sched => 4,
+            Track::Source => 5,
+            Track::Repair => 6,
+        }
+    }
+
+    /// Thread name shown by the trace viewer.
+    pub fn label(self) -> &'static str {
+        match self {
+            Track::Transmit => "transmit",
+            Track::Decode => "decode",
+            Track::Restore => "restore",
+            Track::Sched => "scheduler",
+            Track::Source => "source",
+            Track::Repair => "repair",
+        }
+    }
+
+    /// Every track, in `tid` order (the exporter emits one thread-name
+    /// metadata record per entry).
+    pub fn all() -> [Track; 6] {
+        [Track::Transmit, Track::Decode, Track::Restore, Track::Sched, Track::Source, Track::Repair]
+    }
+}
+
+/// One typed argument attached to an event (rendered in the viewer's
+/// args pane). Numbers stay numbers in the exported JSON.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    /// Unsigned counter/index (chunk, shard, seq, bytes).
+    U64(u64),
+    /// Measured quantity (seconds, ratios).
+    F64(f64),
+    /// Static label (tenant kind, policy name).
+    Str(&'static str),
+    /// Owned label (tenant names resolved at runtime).
+    Text(String),
+}
+
+impl ArgValue {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgValue::U64(x) => Json::Num(*x as f64),
+            ArgValue::F64(x) => Json::Num(*x),
+            ArgValue::Str(s) => Json::Str((*s).into()),
+            ArgValue::Text(s) => Json::Str(s.clone()),
+        }
+    }
+}
+
+/// One recorded event: a complete span (`dur_us` set) or an instant.
+/// Timestamps are microseconds since the recorder's epoch.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Constant event name — Perfetto aggregates slices by name, so
+    /// per-occurrence identity (chunk, shard, tenant) lives in `args`.
+    pub name: &'static str,
+    /// Timeline the event renders on.
+    pub track: Track,
+    /// Start, µs since the recorder epoch.
+    pub ts_us: u64,
+    /// Span duration in µs; `None` marks an instant event.
+    pub dur_us: Option<u64>,
+    /// Typed key/value attribution (chunk, shard, tenant, bytes, ...).
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Fixed-capacity overwrite-oldest event buffer.
+#[derive(Debug)]
+struct Ring {
+    cap: usize,
+    buf: Vec<TraceEvent>,
+    next: usize,
+}
+
+/// The lock-light trace recorder — see the module docs for the event
+/// model and cost contract. Cheap to share: producers hold
+/// `Option<Arc<TraceRecorder>>` and clone the `Arc`, never the ring.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    epoch: Instant,
+    ring: Mutex<Ring>,
+    dropped: AtomicU64,
+}
+
+impl TraceRecorder {
+    /// A recorder whose ring keeps the most recent `capacity` events
+    /// (floored at 16). The epoch — timestamp zero of the exported
+    /// trace — is the moment of creation.
+    pub fn new(capacity: usize) -> Arc<TraceRecorder> {
+        let cap = capacity.max(16);
+        Arc::new(TraceRecorder {
+            epoch: Instant::now(),
+            // lazily grown up to `cap`: a quiet run never pays for the
+            // full ring allocation
+            ring: Mutex::new(Ring { cap, buf: Vec::with_capacity(cap.min(4096)), next: 0 }),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Microseconds elapsed since the recorder epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Microseconds from the epoch to `t` (0 if `t` predates it).
+    pub fn us_at(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record a complete span from `start` to `end` on `track`.
+    /// `name` must be a constant — viewers group slices by it; put
+    /// per-occurrence identity (chunk, shard, tenant) in `args`.
+    pub fn span(
+        &self,
+        track: Track,
+        name: &'static str,
+        start: Instant,
+        end: Instant,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        let ts_us = self.us_at(start);
+        let dur_us = end.saturating_duration_since(start).as_micros() as u64;
+        self.push(TraceEvent { name, track, ts_us, dur_us: Some(dur_us), args });
+    }
+
+    /// Record a point event at "now" on `track`.
+    pub fn instant(&self, track: Track, name: &'static str, args: Vec<(&'static str, ArgValue)>) {
+        let ts_us = self.now_us();
+        self.push(TraceEvent { name, track, ts_us, dur_us: None, args });
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut ring = self.ring.lock().expect("trace ring lock");
+        if ring.buf.len() < ring.cap {
+            ring.buf.push(ev);
+        } else {
+            let at = ring.next;
+            ring.buf[at] = ev;
+            ring.next = (at + 1) % ring.cap;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events recorded and still held by the ring.
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("trace ring lock").buf.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events overwritten because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the ring, oldest event first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let ring = self.ring.lock().expect("trace ring lock");
+        if ring.buf.len() < ring.cap {
+            return ring.buf.clone();
+        }
+        let mut out = Vec::with_capacity(ring.buf.len());
+        out.extend_from_slice(&ring.buf[ring.next..]);
+        out.extend_from_slice(&ring.buf[..ring.next]);
+        out
+    }
+
+    /// Export the ring as a Chrome trace-event document (the
+    /// `{"traceEvents": [...]}` object form): process/thread metadata,
+    /// `ph:"X"` complete slices, `ph:"i"` thread-scoped instants —
+    /// loadable in `ui.perfetto.dev` or `chrome://tracing`. Events are
+    /// emitted in ascending timestamp order.
+    pub fn to_chrome_json(&self) -> Json {
+        let mut events = self.events();
+        events.sort_by_key(|e| e.ts_us);
+        let mut out = Vec::with_capacity(events.len() + 1 + Track::all().len());
+        let meta = |name: &str, tid: Option<u64>, value: &str| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(name.into()));
+            o.insert("ph".into(), Json::Str("M".into()));
+            o.insert("pid".into(), Json::Num(1.0));
+            if let Some(tid) = tid {
+                o.insert("tid".into(), Json::Num(tid as f64));
+            }
+            let mut args = BTreeMap::new();
+            args.insert("name".into(), Json::Str(value.into()));
+            o.insert("args".into(), Json::Obj(args));
+            Json::Obj(o)
+        };
+        out.push(meta("process_name", None, "kvfetcher"));
+        for t in Track::all() {
+            out.push(meta("thread_name", Some(t.tid()), t.label()));
+        }
+        for e in &events {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(e.name.into()));
+            o.insert("cat".into(), Json::Str(e.track.label().into()));
+            o.insert("pid".into(), Json::Num(1.0));
+            o.insert("tid".into(), Json::Num(e.track.tid() as f64));
+            o.insert("ts".into(), Json::Num(e.ts_us as f64));
+            match e.dur_us {
+                Some(dur) => {
+                    o.insert("ph".into(), Json::Str("X".into()));
+                    o.insert("dur".into(), Json::Num(dur as f64));
+                }
+                None => {
+                    o.insert("ph".into(), Json::Str("i".into()));
+                    o.insert("s".into(), Json::Str("t".into()));
+                }
+            }
+            if !e.args.is_empty() {
+                let mut args = BTreeMap::new();
+                for (k, v) in &e.args {
+                    args.insert((*k).into(), v.to_json());
+                }
+                o.insert("args".into(), Json::Obj(args));
+            }
+            out.push(Json::Obj(o));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("traceEvents".into(), Json::Arr(out));
+        doc.insert("displayTimeUnit".into(), Json::Str("ms".into()));
+        doc.insert("droppedEvents".into(), Json::Num(self.dropped() as f64));
+        Json::Obj(doc)
+    }
+
+    /// Write [`Self::to_chrome_json`] to `path`.
+    pub fn write_chrome_json(&self, path: &str) -> io::Result<()> {
+        std::fs::write(path, self.to_chrome_json().to_string() + "\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn spans_and_instants_land_in_order_with_args() {
+        let rec = TraceRecorder::new(64);
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        let t1 = Instant::now();
+        rec.span(Track::Transmit, "transmit", t0, t1, vec![("chunk", ArgValue::U64(3))]);
+        rec.instant(Track::Source, "busy", vec![("shard", ArgValue::U64(1))]);
+        assert_eq!(rec.len(), 2);
+        assert!(!rec.is_empty());
+        assert_eq!(rec.dropped(), 0);
+        let evs = rec.events();
+        assert_eq!(evs[0].name, "transmit");
+        assert!(evs[0].dur_us.unwrap() >= 1_000, "2ms span measures >=1ms");
+        assert_eq!(evs[0].args, vec![("chunk", ArgValue::U64(3))]);
+        assert_eq!(evs[1].name, "busy");
+        assert!(evs[1].dur_us.is_none());
+        assert!(evs[1].ts_us >= evs[0].ts_us + evs[0].dur_us.unwrap());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_counts_drops() {
+        let rec = TraceRecorder::new(1); // floored to 16
+        for i in 0..20u64 {
+            rec.instant(Track::Sched, "tick", vec![("i", ArgValue::U64(i))]);
+        }
+        assert_eq!(rec.len(), 16);
+        assert_eq!(rec.dropped(), 4);
+        let evs = rec.events();
+        // oldest-first snapshot: ticks 4..20 survive
+        assert_eq!(evs.first().unwrap().args, vec![("i", ArgValue::U64(4))]);
+        assert_eq!(evs.last().unwrap().args, vec![("i", ArgValue::U64(19))]);
+        assert!(evs.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+    }
+
+    #[test]
+    fn chrome_export_is_wellformed_and_parses_back() {
+        let rec = TraceRecorder::new(64);
+        let t0 = Instant::now();
+        rec.span(Track::Decode, "decode", t0, Instant::now(), vec![("chunk", ArgValue::U64(0))]);
+        rec.instant(Track::Repair, "repair_put", vec![("to", ArgValue::U64(2))]);
+        let doc = rec.to_chrome_json();
+        let parsed = Json::parse(&doc.to_string()).expect("export parses");
+        let evs = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+        // 1 process + 6 thread metadata records + 2 events
+        assert_eq!(evs.len(), 1 + 6 + 2);
+        let metas: Vec<&Json> =
+            evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("M")).collect();
+        assert_eq!(metas.len(), 7);
+        let x = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .expect("complete event");
+        assert_eq!(x.get("name").and_then(Json::as_str), Some("decode"));
+        assert_eq!(x.get("tid").and_then(Json::as_usize), Some(Track::Decode.tid() as usize));
+        assert!(x.get("dur").and_then(Json::as_f64).is_some());
+        let i = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(Json::as_str) == Some("i"))
+            .expect("instant event");
+        assert_eq!(i.get("s").and_then(Json::as_str), Some("t"));
+        assert_eq!(i.get("args").and_then(|a| a.get("to")).and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn config_gates_recorder_construction() {
+        let off = ObsConfig::default();
+        assert!(!off.enabled);
+        assert!(off.recorder().is_none());
+        let on = ObsConfig { enabled: true, ..Default::default() };
+        let rec = on.recorder().expect("enabled builds a recorder");
+        assert!(rec.is_empty());
+        assert_eq!(on.out, "trace.json");
+        assert_eq!(on.capacity, 262_144);
+    }
+}

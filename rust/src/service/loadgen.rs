@@ -26,6 +26,7 @@ use crate::fetcher::{
     JobTicket, SchedConfig, SchedPolicy, TenantSpec,
 };
 use crate::kvstore::StorageNode;
+use crate::obs::TraceRecorder;
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile};
 use crate::util::table;
@@ -112,6 +113,11 @@ pub struct LoadSpec {
     /// policy type the remote source retries servers with, so shed
     /// handling cannot drift between the two admission paths.
     pub retry: RetryPolicy,
+    /// Optional shared [`TraceRecorder`]: every per-chunk pipeline span
+    /// and every scheduler queue-wait/shed event of the run lands in
+    /// one ring, exported by the CLI as a Chrome trace. `None` (the
+    /// default wiring) keeps the replay path allocation-free.
+    pub recorder: Option<Arc<TraceRecorder>>,
 }
 
 /// The canonical two-tenant mix of the trace-replay generator: an
@@ -330,6 +336,7 @@ pub fn run_load(spec: &LoadSpec) -> LoadReport {
             ..Default::default()
         })
         .sched_policy(spec.sched.policy)
+        .recorder(spec.recorder.clone())
         .build();
 
     // deterministic per-tenant schedules, merged into one arrival trace
@@ -343,7 +350,8 @@ pub fn run_load(spec: &LoadSpec) -> LoadReport {
     arrivals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
 
     let tenant_specs: Vec<TenantSpec> = spec.tenants.iter().map(|t| t.spec.clone()).collect();
-    let sched = FetchScheduler::new(spec.sched.clone(), tenant_specs);
+    let sched =
+        FetchScheduler::with_recorder(spec.sched.clone(), tenant_specs, spec.recorder.clone());
     let n = spec.tenants.len();
     let mut resubmits = vec![0usize; n];
     let mut dropped = vec![0usize; n];
@@ -479,8 +487,13 @@ mod tests {
             sched: SchedConfig { slots: 2, ..Default::default() },
             tenants: demo_mix(4, 1e5, 4),
             retry: RetryPolicy::default(),
+            recorder: Some(TraceRecorder::new(65_536)),
         };
         let report = run_load(&spec);
+        let rec = spec.recorder.as_deref().unwrap();
+        // 2 tenants x 4 jobs x 2 chunks: every restore leaves a span
+        assert_eq!(rec.events().iter().filter(|e| e.name == "restore").count(), 16);
+        assert_eq!(rec.events().iter().filter(|e| e.name == "service").count(), 8);
         assert!(report.failures.is_empty(), "{:?}", report.failures);
         assert_eq!(report.tenants.len(), 2);
         for t in &report.tenants {

@@ -40,7 +40,11 @@ pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
 ///   [`Request::PullChunk`] / [`Response::ChunkFull`] move a chunk's
 ///   full stored record (every resolution variant + scales) between
 ///   replicas, so a rejoined shard can be re-filled from a holder.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// * v4 — extends [`NodeStats`] with the cumulative
+///   [`served_bytes`](NodeStats::served_bytes) counter, so fleet
+///   dashboards (`stats --watch`) can derive per-shard delivered
+///   bandwidth from two successive polls.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 const TAG_LOOKUP_PREFIX: u8 = 1;
 const TAG_HAS_CHUNKS: u8 = 2;
@@ -114,6 +118,11 @@ pub struct NodeStats {
     /// `Busy` refusals issued since the node started (admission limits
     /// plus injected faults).
     pub busy_replies: u64,
+    /// Cumulative chunk-payload bytes fully sent to clients since the
+    /// node started (fetch replies plus repair pulls). Monotonic, so
+    /// `Δserved_bytes / Δt` between two `Stats` polls is the node's
+    /// delivered bandwidth — what `stats --watch` renders (wire v4).
+    pub served_bytes: u64,
 }
 
 /// A server -> client message.
@@ -622,6 +631,7 @@ pub fn encode_response(r: &Response) -> (u8, Vec<u8>) {
             put_u64(&mut out, s.inflight_bytes);
             put_u64(&mut out, s.peak_inflight_bytes);
             put_u64(&mut out, s.busy_replies);
+            put_u64(&mut out, s.served_bytes);
             (TAG_STATS_REPLY, out)
         }
         Response::Err { msg } => {
@@ -678,6 +688,7 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, FetchError> 
             let inflight_bytes = rd.u64()?;
             let peak_inflight_bytes = rd.u64()?;
             let busy_replies = rd.u64()?;
+            let served_bytes = rd.u64()?;
             Response::Stats(NodeStats {
                 chunks,
                 used_bytes,
@@ -686,6 +697,7 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, FetchError> 
                 inflight_bytes,
                 peak_inflight_bytes,
                 busy_replies,
+                served_bytes,
             })
         }
         TAG_ERR => Response::Err { msg: rd.str_()? },
@@ -787,6 +799,7 @@ mod tests {
                 inflight_bytes: 512,
                 peak_inflight_bytes: 4096,
                 busy_replies: 9,
+                served_bytes: 123_456,
             }),
             Response::Stats(NodeStats { capacity_bytes: None, ..NodeStats::default() }),
             Response::Busy { retry_after_ms: 25 },

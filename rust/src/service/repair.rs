@@ -29,7 +29,10 @@
 //! proves kill → rejoin → repair → holder sets back at factor `r` with
 //! bit-identical restores.
 
+use std::sync::Arc;
+
 use crate::fetcher::FetchError;
+use crate::obs::{ArgValue, Track, TraceRecorder};
 
 use super::shard::{ShardMap, ShardRouter};
 use super::source::RetryPolicy;
@@ -140,17 +143,26 @@ impl RepairReport {
 pub struct RepairScanner {
     router: ShardRouter,
     retry: RetryPolicy,
+    rec: Option<Arc<TraceRecorder>>,
 }
 
 impl RepairScanner {
     /// A scanner over a connected (possibly lenient) router.
     pub fn new(router: ShardRouter) -> RepairScanner {
-        RepairScanner { router, retry: RetryPolicy::default() }
+        RepairScanner { router, retry: RetryPolicy::default(), rec: None }
     }
 
     /// Override the `Busy` retry/backoff budget of repair transfers.
     pub fn with_retry(mut self, retry: RetryPolicy) -> RepairScanner {
         self.retry = retry;
+        self
+    }
+
+    /// Attach a [`TraceRecorder`]: every successful repair pull/re-put
+    /// lands as an instant on the repair track, so background healing
+    /// traffic is visible next to foreground fetch spans.
+    pub fn with_recorder(mut self, rec: Option<Arc<TraceRecorder>>) -> RepairScanner {
+        self.rec = rec;
         self
     }
 
@@ -249,7 +261,16 @@ impl RepairScanner {
                 &mut busy_retries,
             );
             let chunk = match pulled {
-                Ok(Some(chunk)) => chunk,
+                Ok(Some(chunk)) => {
+                    if let Some(r) = self.rec.as_deref() {
+                        let args = vec![
+                            ("chunk", ArgValue::U64(c.idx as u64)),
+                            ("from", ArgValue::U64(from as u64)),
+                        ];
+                        r.instant(Track::Repair, "repair_pull", args);
+                    }
+                    chunk
+                }
                 Ok(None) => {
                     failed.push(RepairFailure {
                         idx: c.idx,
@@ -273,6 +294,13 @@ impl RepairScanner {
                 );
                 match put {
                     Ok((true, _evicted)) => {
+                        if let Some(r) = self.rec.as_deref() {
+                            let args = vec![
+                                ("chunk", ArgValue::U64(c.idx as u64)),
+                                ("to", ArgValue::U64(to as u64)),
+                            ];
+                            r.instant(Track::Repair, "repair_put", args);
+                        }
                         repaired.push(RepairAction { idx: c.idx, hash: c.hash, from, to });
                     }
                     Ok((false, _)) => failed.push(RepairFailure {
@@ -342,7 +370,8 @@ mod tests {
         let addrs = vec![a.local_addr().to_string(), b.local_addr().to_string()];
         let router =
             ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 2).expect("connect");
-        let scanner = RepairScanner::new(router);
+        let rec = TraceRecorder::new(1024);
+        let scanner = RepairScanner::new(router).with_recorder(Some(rec.clone()));
 
         let scan = scanner.scan(&hashes);
         assert!(!scan.healthy());
@@ -362,6 +391,12 @@ mod tests {
         assert!(scanner.scan(&hashes).healthy(), "post-repair fleet must be at factor r");
         // bytes actually landed on shard 1
         assert_eq!(b.node().lock().unwrap().len(), 3);
+
+        // each landed transfer left a pull + put instant on the repair track
+        let events = rec.events();
+        assert_eq!(events.iter().filter(|e| e.name == "repair_pull").count(), 3);
+        assert_eq!(events.iter().filter(|e| e.name == "repair_put").count(), 3);
+        assert!(events.iter().all(|e| e.track == Track::Repair));
 
         let again = scanner.repair(&hashes);
         assert!(again.repaired.is_empty() && again.failed.is_empty(), "repair is idempotent");

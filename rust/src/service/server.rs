@@ -112,6 +112,10 @@ struct Admission {
     inflight: AtomicUsize,
     peak_inflight: AtomicUsize,
     busy_replies: AtomicU64,
+    /// Chunk-payload frame bytes fully sent to clients (fetch replies
+    /// and repair pulls) — the monotonic counter behind
+    /// `NodeStats::served_bytes` (wire v4).
+    served_bytes: AtomicU64,
     /// `FetchChunk` replies fully sent (drives `die_after_fetches`).
     fetches_served: AtomicUsize,
     /// Chunk-read requests seen — fetches and repair pulls (drives
@@ -363,6 +367,11 @@ fn serve_conn(
         let sent = send_paced(stream, &frame, bucket.as_mut());
         if reserved {
             admission.release(frame.len());
+            if sent.is_ok() {
+                // chunk bytes fully on the wire: count them toward the
+                // node's delivered-bandwidth counter (wire v4)
+                admission.served_bytes.fetch_add(frame.len() as u64, Ordering::SeqCst);
+            }
         }
         if let Some(hash) = pinned {
             node.lock().expect("node lock").unpin(hash);
@@ -438,6 +447,7 @@ fn handle_request(
                 inflight_bytes: admission.inflight.load(Ordering::SeqCst) as u64,
                 peak_inflight_bytes: admission.peak_inflight.load(Ordering::SeqCst) as u64,
                 busy_replies: admission.busy_replies.load(Ordering::SeqCst),
+                served_bytes: admission.served_bytes.load(Ordering::SeqCst),
             };
             (Response::Stats(stats), None)
         }
@@ -507,6 +517,8 @@ mod tests {
         let stats = client.stats().unwrap();
         assert_eq!(stats.chunks, 2);
         assert_eq!(stats.capacity_bytes, None);
+        // one chunk reply fully sent: served_bytes covers its frame
+        assert!(stats.served_bytes > 100, "served_bytes {}", stats.served_bytes);
         assert_eq!(client.lookup_prefix(&tokens).unwrap(), hashes);
         server.shutdown();
     }

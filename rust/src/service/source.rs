@@ -37,6 +37,7 @@ use crate::fetcher::{
 };
 use crate::kvstore::StorageNode;
 use crate::net::BandwidthEstimator;
+use crate::obs::{ArgValue, Track, TraceRecorder};
 
 use super::shard::{Placement, ShardRouter};
 
@@ -187,6 +188,9 @@ pub struct RemoteSource {
     /// `FetchReport` by `take_timings`). `WireTiming::shard` records
     /// which replica actually served each chunk.
     pub timings: Vec<WireTiming>,
+    /// Trace sink for busy / failover / capacity instants (Track
+    /// `source`); `None` keeps the replica walk untraced at zero cost.
+    rec: Option<Arc<TraceRecorder>>,
 }
 
 impl RemoteSource {
@@ -202,12 +206,21 @@ impl RemoteSource {
             policy: ReadPolicy::PrimaryFirst,
             estimators,
             timings: Vec::new(),
+            rec: None,
         }
     }
 
     /// Override the busy retry/backoff policy.
     pub fn with_retry(mut self, retry: RetryPolicy) -> RemoteSource {
         self.retry = retry;
+        self
+    }
+
+    /// Attach a trace recorder: every `Busy` refusal, replica failover,
+    /// and all-replicas-saturated capacity refusal lands as an instant
+    /// on Track `source` (see [`crate::obs::TraceRecorder`]).
+    pub fn with_recorder(mut self, rec: Option<Arc<TraceRecorder>>) -> RemoteSource {
+        self.rec = rec;
         self
     }
 
@@ -289,7 +302,18 @@ impl RemoteSource {
     ) -> Result<ChunkPayload, FetchError> {
         let fetched = self.retry.run_busy(
             || self.router.client(shard).fetch_chunk(hash, name),
-            || {},
+            || {
+                if let Some(r) = self.rec.as_deref() {
+                    r.instant(
+                        Track::Source,
+                        "busy",
+                        vec![
+                            ("chunk", ArgValue::U64(idx as u64)),
+                            ("shard", ArgValue::U64(shard as u64)),
+                        ],
+                    );
+                }
+            },
             |e| FetchError::Transport {
                 chunk: Some(idx),
                 shard: Some(shard),
@@ -342,6 +366,21 @@ impl TransportSource for RemoteSource {
                     // and being first-picked for every later chunk
                     self.estimators[shard]
                         .observe(0, t_attempt.elapsed().as_secs_f64().max(1e-6));
+                    if let Some(r) = self.rec.as_deref() {
+                        let why = match &e {
+                            FetchError::Busy { .. } => "busy",
+                            _ => "fault",
+                        };
+                        r.instant(
+                            Track::Source,
+                            "failover",
+                            vec![
+                                ("chunk", ArgValue::U64(idx as u64)),
+                                ("from_shard", ArgValue::U64(shard as u64)),
+                                ("why", ArgValue::Str(why)),
+                            ],
+                        );
+                    }
                     match e {
                         FetchError::Busy { .. } => {}
                         e => last_fault = Some(e),
@@ -351,6 +390,13 @@ impl TransportSource for RemoteSource {
         }
         // every replica failed: any real fault outranks saturation;
         // Busy everywhere is a capacity refusal
+        if let Some(r) = self.rec.as_deref() {
+            r.instant(
+                Track::Source,
+                "all_replicas_failed",
+                vec![("chunk", ArgValue::U64(idx as u64))],
+            );
+        }
         match last_fault {
             Some(e) => Err(e.at_chunk(idx)),
             None => Err(FetchError::Capacity {
@@ -374,6 +420,10 @@ impl TransportSource for RemoteSource {
 
     fn take_timings(&mut self) -> Vec<WireTiming> {
         std::mem::take(&mut self.timings)
+    }
+
+    fn last_shard(&self) -> Option<usize> {
+        self.timings.last().and_then(|t| t.shard)
     }
 }
 
@@ -528,6 +578,10 @@ pub struct SourceSpec {
     /// rides along like `read_policy` so custom factories can plumb the
     /// class into their own admission or prioritization.
     pub sched_policy: SchedPolicy,
+    /// Trace recorder the built source stamps busy/failover instants
+    /// onto (TCP backend; see [`RemoteSource::with_recorder`]). `None`
+    /// (the default) keeps tracing off at zero cost.
+    pub recorder: Option<Arc<TraceRecorder>>,
 }
 
 impl SourceSpec {
@@ -617,7 +671,8 @@ impl SourceFactory for TcpFactory {
         Ok(Box::new(
             RemoteSource::new(router, hashes, spec.ladder()?)
                 .with_retry(spec.retry)
-                .with_policy(spec.read_policy),
+                .with_policy(spec.read_policy)
+                .with_recorder(spec.recorder.clone()),
         ))
     }
 }

@@ -1,0 +1,261 @@
+//! End-to-end observability contracts (ISSUE 7): the trace recorder
+//! rides the real TCP fetch path and its export is a faithful,
+//! Perfetto-loadable account of the run.
+//!
+//! Acceptance:
+//! * the exported Chrome trace-event JSON parses and is schema-shaped
+//!   (process/thread metadata, `ph:"X"` slices with `dur`, `ph:"i"`
+//!   thread-scoped instants);
+//! * per chunk, the wall-clock spans are properly nested: transmit ends
+//!   before decode starts, decode ends before restore starts, and each
+//!   track's spans are time-ordered;
+//! * every restored chunk has exactly one transmit/decode/restore span
+//!   triple — 100% coverage, no extras;
+//! * the transmit span's `shard` arg matches the serving replica the
+//!   source reported in `WireTiming.shard`;
+//! * with no recorder attached the fetch restores bit-identically on
+//!   an unchanged virtual timeline — tracing off costs nothing.
+
+use std::sync::Arc;
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::{FetchConfig, FetchReport, FetchRequest, Fetcher, ResolutionPolicy};
+use kvfetcher::kvstore::StorageNode;
+use kvfetcher::net::BandwidthTrace;
+use kvfetcher::obs::{ArgValue, ObsConfig, TraceEvent, TraceRecorder, Track};
+use kvfetcher::service::{
+    demo_prefix, Backend, DemoPrefix, Placement, ServerConfig, ShardRouter, SourceRegistry,
+    SourceSpec, StorageServer, DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
+};
+use kvfetcher::util::json::Json;
+
+fn demo_request(demo: &DemoPrefix) -> FetchRequest {
+    let total_tokens = demo.hashes.len() * demo.chunk_tokens;
+    FetchRequest::new(total_tokens, total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2)
+        .with_hashes(demo.hashes.clone())
+        .resolution(ResolutionPolicy::Fixed(3))
+        .exec(ExecMode::Pipelined)
+}
+
+/// Spawn `n` loopback shards and register the demo chunks round-robin.
+fn spawn_shards(demo: &DemoPrefix, n: usize) -> (Vec<StorageServer>, Vec<String>) {
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for _ in 0..n {
+        let node = StorageNode::new(demo.chunk_tokens);
+        let server =
+            StorageServer::spawn("127.0.0.1:0", node, ServerConfig::default()).expect("bind");
+        addrs.push(server.local_addr().to_string());
+        servers.push(server);
+    }
+    let router = ShardRouter::connect(&addrs, Placement::RoundRobin).expect("connect");
+    for (i, chunk) in demo.chunks.iter().enumerate() {
+        let (stored, _) = router.put_chunk(i, chunk).expect("put chunk");
+        assert!(stored);
+    }
+    (servers, addrs)
+}
+
+/// One pipelined demo fetch over TCP, with the recorder (when given)
+/// shared between the executor and the remote source.
+fn tcp_fetch(
+    demo: &DemoPrefix,
+    addrs: &[String],
+    rec: Option<Arc<TraceRecorder>>,
+) -> FetchReport {
+    let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+    spec.addrs = addrs.to_vec();
+    spec.tokens = demo.tokens.clone();
+    spec.chunk_tokens = demo.chunk_tokens;
+    spec.recorder = rec.clone();
+    let source = SourceRegistry::with_defaults().create(Backend::Tcp, &spec).expect("tcp source");
+    let fetcher = Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .fetch_config(FetchConfig { chunk_tokens: demo.chunk_tokens, ..Default::default() })
+        .bandwidth(BandwidthTrace::constant(8.0))
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .recorder(rec)
+        .build();
+    let mut session = fetcher.session(demo_request(demo)).with_source(source);
+    session.run().expect("demo fetch");
+    session.take_report().expect("report stored")
+}
+
+fn u64_arg(e: &TraceEvent, key: &str) -> Option<u64> {
+    e.args.iter().find(|(k, _)| *k == key).and_then(|(_, v)| match v {
+        ArgValue::U64(x) => Some(*x),
+        _ => None,
+    })
+}
+
+/// The per-chunk span of `name` on `track` — asserting there is exactly
+/// one (the coverage contract: one triple per restored chunk).
+fn span_of<'e>(events: &'e [TraceEvent], track: Track, name: &str, chunk: u64) -> &'e TraceEvent {
+    let matches: Vec<&TraceEvent> = events
+        .iter()
+        .filter(|e| e.track == track && e.name == name && u64_arg(e, "chunk") == Some(chunk))
+        .collect();
+    assert_eq!(matches.len(), 1, "chunk {chunk} needs exactly one {name} span");
+    let e = matches[0];
+    assert!(e.dur_us.is_some(), "{name} must be a complete span, not an instant");
+    e
+}
+
+/// Exported Chrome JSON parses back and is schema-shaped: metadata
+/// names the process and all six tracks, slices carry `dur`, instants
+/// carry `s:"t"`, and every event sits on a declared track.
+#[test]
+fn chrome_export_parses_and_is_schema_shaped() {
+    let demo = demo_prefix(21, 4, 32);
+    let (servers, addrs) = spawn_shards(&demo, 2);
+    let rec = TraceRecorder::new(1 << 16);
+    let report = tcp_fetch(&demo, &addrs, Some(rec.clone()));
+    assert_eq!(report.restored.len(), 4);
+    assert_eq!(rec.dropped(), 0, "a 64k ring must hold a 4-chunk run");
+
+    let doc = rec.to_chrome_json();
+    let parsed = Json::parse(&doc.to_string()).expect("export must parse back");
+    assert_eq!(parsed.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    assert_eq!(parsed.get("droppedEvents").and_then(Json::as_usize), Some(0));
+    let events = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+
+    let metas: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+        .collect();
+    assert_eq!(metas.len(), 1 + Track::all().len(), "process + one name per track");
+    let thread_names: Vec<&str> = metas
+        .iter()
+        .filter(|m| m.get("name").and_then(Json::as_str) == Some("thread_name"))
+        .filter_map(|m| m.get("args").and_then(|a| a.get("name")).and_then(Json::as_str))
+        .collect();
+    for t in Track::all() {
+        assert!(thread_names.contains(&t.label()), "missing thread_name for {}", t.label());
+    }
+
+    let tids: Vec<usize> = Track::all().iter().map(|t| t.tid() as usize).collect();
+    let mut slices = 0;
+    for e in events.iter().filter(|e| e.get("ph").and_then(Json::as_str) != Some("M")) {
+        let ph = e.get("ph").and_then(Json::as_str).expect("ph");
+        assert!(e.get("name").and_then(Json::as_str).is_some());
+        assert!(e.get("ts").and_then(Json::as_f64).is_some());
+        let tid = e.get("tid").and_then(Json::as_usize).expect("tid");
+        assert!(tids.contains(&tid), "event on undeclared track {tid}");
+        match ph {
+            "X" => {
+                slices += 1;
+                assert!(e.get("dur").and_then(Json::as_f64).is_some(), "slice needs dur");
+            }
+            "i" => assert_eq!(e.get("s").and_then(Json::as_str), Some("t")),
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    // at minimum the 3 executor spans per chunk made it out
+    assert!(slices >= 3 * 4, "expected >= 12 slices, got {slices}");
+
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Per-chunk coverage and ordering: every restored chunk has exactly
+/// one transmit/decode/restore triple, the triple nests in wall-clock
+/// order, each track's spans are time-sorted, and the transmit span's
+/// `shard` arg agrees with `WireTiming.shard`.
+#[test]
+fn span_triples_cover_chunks_nested_with_shard_attribution() {
+    let n_chunks = 6;
+    let demo = demo_prefix(22, n_chunks, 32);
+    let (servers, addrs) = spawn_shards(&demo, 2);
+    let rec = TraceRecorder::new(1 << 16);
+    let report = tcp_fetch(&demo, &addrs, Some(rec.clone()));
+    assert_eq!(report.restored.len(), n_chunks);
+    let events = rec.events();
+
+    for d in &report.restored {
+        let chunk = d.idx as u64;
+        let t = span_of(&events, Track::Transmit, "transmit", chunk);
+        let dec = span_of(&events, Track::Decode, "decode", chunk);
+        let r = span_of(&events, Track::Restore, "restore", chunk);
+        // hand-off order: a stage's span closes before the next opens
+        assert!(
+            dec.ts_us >= t.ts_us + t.dur_us.unwrap(),
+            "chunk {chunk}: decode starts inside transmit"
+        );
+        assert!(
+            r.ts_us >= dec.ts_us + dec.dur_us.unwrap(),
+            "chunk {chunk}: restore starts inside decode"
+        );
+        // attribution: the span names the replica the source used
+        let timing = report
+            .wire_timings
+            .iter()
+            .find(|w| w.idx == d.idx)
+            .expect("tcp source reports one wire timing per chunk");
+        assert_eq!(
+            u64_arg(t, "shard"),
+            timing.shard.map(|s| s as u64),
+            "chunk {chunk}: transmit shard arg vs WireTiming.shard"
+        );
+        // the span carries the virtual wire estimate the planner used
+        assert!(u64_arg(t, "wire_bytes").is_some_and(|b| b > 0));
+        assert_eq!(u64_arg(r, "restored_bytes"), Some(d.quant.data.len() as u64));
+    }
+    // exactly one triple per chunk and nothing else on those tracks
+    for (track, name) in
+        [(Track::Transmit, "transmit"), (Track::Decode, "decode"), (Track::Restore, "restore")]
+    {
+        let spans: Vec<&TraceEvent> = events.iter().filter(|e| e.track == track).collect();
+        assert_eq!(spans.len(), n_chunks, "{name}: one span per chunk, no extras");
+        assert!(
+            spans.windows(2).all(|w| w[0].ts_us <= w[1].ts_us),
+            "{name} spans must be time-ordered"
+        );
+    }
+
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Tracing off is absent, not muted: a run with no recorder restores
+/// bit-identically to the traced run on an unchanged virtual timeline,
+/// and a default (disabled) config builds no recorder at all.
+#[test]
+fn disabled_recorder_leaves_the_fetch_path_untouched() {
+    assert!(ObsConfig::default().recorder().is_none(), "tracing defaults to off");
+
+    let n_chunks = 4;
+    let demo = demo_prefix(23, n_chunks, 32);
+    let (servers, addrs) = spawn_shards(&demo, 2);
+    let rec = TraceRecorder::new(1 << 16);
+    let traced = tcp_fetch(&demo, &addrs, Some(rec.clone()));
+    let plain = tcp_fetch(&demo, &addrs, None);
+
+    for (a, b) in traced.restored.iter().zip(&plain.restored) {
+        assert_eq!(a.idx, b.idx);
+        assert_eq!(a.quant.data, b.quant.data, "restores must be bit-identical");
+        assert_eq!(a.quant.scales, b.quant.scales);
+    }
+    for (d, q) in plain.restored.iter().zip(&demo.quants) {
+        assert_eq!(d.quant.data, q.data, "untraced restore vs ground truth");
+    }
+    // the virtual timeline is deterministic and tracing never moves it
+    assert_eq!(traced.plan.chunks.len(), plain.plan.chunks.len());
+    for (a, b) in traced.plan.chunks.iter().zip(&plain.plan.chunks) {
+        assert_eq!(a.res_idx, b.res_idx);
+        assert_eq!(a.wire_bytes, b.wire_bytes);
+        assert!((a.trans_end - b.trans_end).abs() < 1e-9);
+        assert!((a.dec_end - b.dec_end).abs() < 1e-9);
+    }
+    assert!((traced.done_at() - plain.done_at()).abs() < 1e-9);
+    // the traced run recorded real work; the plain run had nowhere to
+    assert!(!rec.is_empty());
+    assert!(traced.stage_summary().contains("transmit"), "CLI summary covers the stages");
+
+    for s in servers {
+        s.shutdown();
+    }
+}
