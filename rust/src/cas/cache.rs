@@ -1,0 +1,184 @@
+//! The LRU edge cache in front of the object store.
+//!
+//! The reason content addressing pays off on the fetch path: an
+//! object's bytes can never change under its key, so the only cache
+//! policy the edge needs is eviction — no invalidation, no TTLs, no
+//! revalidation round trips. Hit/miss/evict counters feed the `obs`
+//! trace instants and the CLI's cache summary line.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::digest::Digest;
+
+/// Snapshot of an [`EdgeCache`]'s counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// GETs answered from the cache.
+    pub hits: u64,
+    /// GETs that fell through to the store.
+    pub misses: u64,
+    /// Objects evicted to make room.
+    pub evictions: u64,
+    /// Bytes currently cached.
+    pub used_bytes: u64,
+    /// Capacity in bytes.
+    pub capacity_bytes: u64,
+}
+
+struct Inner {
+    cap: u64,
+    used: u64,
+    tick: u64,
+    map: HashMap<Digest, (u64, Vec<u8>)>,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Byte-capacity-bounded LRU cache of immutable objects, safe to share
+/// behind an `Arc` across fetch passes and sources.
+pub struct EdgeCache {
+    inner: Mutex<Inner>,
+}
+
+impl EdgeCache {
+    /// A cache holding at most `capacity_bytes` of object bytes
+    /// (floored at 1 KiB so a degenerate config can't make every
+    /// insert evict itself).
+    pub fn new(capacity_bytes: usize) -> EdgeCache {
+        EdgeCache {
+            inner: Mutex::new(Inner {
+                cap: (capacity_bytes as u64).max(1024),
+                used: 0,
+                tick: 0,
+                map: HashMap::new(),
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// Look up `key`, counting a hit or a miss; a hit refreshes the
+    /// entry's LRU slot. Returns a copy of the object bytes.
+    pub fn get(&self, key: &Digest) -> Option<Vec<u8>> {
+        let mut g = self.inner.lock().expect("edge cache lock");
+        g.tick += 1;
+        let tick = g.tick;
+        let found = match g.map.get_mut(key) {
+            Some((last, bytes)) => {
+                *last = tick;
+                Some(bytes.clone())
+            }
+            None => None,
+        };
+        match found {
+            Some(b) => {
+                g.hits += 1;
+                Some(b)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert `bytes` under `key`, evicting least-recently-used
+    /// objects until it fits; returns how many were evicted. An object
+    /// larger than the whole cache is not cached; re-inserting a
+    /// cached key only refreshes its LRU slot.
+    pub fn insert(&self, key: Digest, bytes: Vec<u8>) -> u64 {
+        let size = bytes.len() as u64;
+        let mut g = self.inner.lock().expect("edge cache lock");
+        g.tick += 1;
+        let tick = g.tick;
+        if size > g.cap {
+            return 0;
+        }
+        if let Some((last, _)) = g.map.get_mut(&key) {
+            *last = tick;
+            return 0;
+        }
+        let mut evicted = 0u64;
+        while g.used + size > g.cap {
+            let Some((&victim, _)) = g.map.iter().min_by_key(|(_, (last, _))| *last) else {
+                break;
+            };
+            if let Some((_, b)) = g.map.remove(&victim) {
+                g.used -= b.len() as u64;
+                evicted += 1;
+            }
+        }
+        g.used += size;
+        g.map.insert(key, (tick, bytes));
+        g.evictions += evicted;
+        evicted
+    }
+
+    /// Objects cached right now.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("edge cache lock").map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of the counters.
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().expect("edge cache lock");
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            used_bytes: g.used,
+            capacity_bytes: g.cap,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: u8) -> Digest {
+        Digest::of(&[n])
+    }
+
+    #[test]
+    fn counts_hits_and_misses() {
+        let cache = EdgeCache::new(1 << 20);
+        assert_eq!(cache.get(&key(1)), None);
+        assert_eq!(cache.insert(key(1), vec![7; 10]), 0);
+        assert_eq!(cache.get(&key(1)).as_deref(), Some(&[7u8; 10][..]));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert_eq!(s.used_bytes, 10);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        // capacity floors at 1024; three 400-byte objects can't coexist
+        let cache = EdgeCache::new(1);
+        cache.insert(key(1), vec![0; 400]);
+        cache.insert(key(2), vec![0; 400]);
+        assert!(cache.get(&key(1)).is_some(), "touch 1 so 2 is the LRU");
+        assert_eq!(cache.insert(key(3), vec![0; 400]), 1, "one eviction to fit");
+        assert!(cache.get(&key(2)).is_none(), "2 was evicted");
+        assert!(cache.get(&key(1)).is_some() && cache.get(&key(3)).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn oversized_objects_are_skipped_not_thrashed() {
+        let cache = EdgeCache::new(1);
+        cache.insert(key(1), vec![0; 100]);
+        assert_eq!(cache.insert(key(9), vec![0; 4096]), 0, "larger than the cache");
+        assert!(cache.get(&key(1)).is_some(), "resident entry untouched");
+        assert!(cache.get(&key(9)).is_none());
+    }
+}

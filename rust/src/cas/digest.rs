@@ -1,0 +1,115 @@
+//! Content digests: the keys of the object store.
+
+use std::fmt;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// SplitMix64 finalizer — avalanches the raw FNV lane state so close
+/// inputs land far apart in key space.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// 128-bit content digest keying immutable chunk objects.
+///
+/// Two independently seeded FNV-1a-64 lanes over the bytes (the second
+/// lane also rotates between bytes so the lanes stay decorrelated),
+/// each finalized through a SplitMix64 avalanche that folds in the
+/// input length. This is content addressing, **not** cryptography: it
+/// defends against corruption and accidental collision, matching the
+/// store's trust model — publishers are in-process, the wire and the
+/// disk are the threat.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Digest(pub [u8; 16]);
+
+impl Digest {
+    /// Digest of `bytes`.
+    pub fn of(bytes: &[u8]) -> Digest {
+        let mut a = FNV_OFFSET;
+        let mut b = FNV_OFFSET ^ 0x6C62_272E_07BB_0142;
+        for &x in bytes {
+            a = (a ^ x as u64).wrapping_mul(FNV_PRIME);
+            b = (b.rotate_left(29) ^ x as u64).wrapping_mul(FNV_PRIME);
+        }
+        let len = bytes.len() as u64;
+        let a = splitmix(a ^ len);
+        let b = splitmix(b ^ len.rotate_left(32));
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&a.to_le_bytes());
+        out[8..].copy_from_slice(&b.to_le_bytes());
+        Digest(out)
+    }
+
+    /// Lowercase-hex form — the object's file name inside a store.
+    pub fn to_hex(&self) -> String {
+        self.to_string()
+    }
+
+    /// Parse the hex form back; `None` unless exactly 32 hex digits.
+    pub fn from_hex(s: &str) -> Option<Digest> {
+        let s = s.as_bytes();
+        if s.len() != 32 {
+            return None;
+        }
+        fn nib(c: u8) -> Option<u8> {
+            match c {
+                b'0'..=b'9' => Some(c - b'0'),
+                b'a'..=b'f' => Some(c - b'a' + 10),
+                b'A'..=b'F' => Some(c - b'A' + 10),
+                _ => None,
+            }
+        }
+        let mut out = [0u8; 16];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = (nib(s[2 * i])? << 4) | nib(s[2 * i + 1])?;
+        }
+        Some(Digest(out))
+    }
+}
+
+impl fmt::Display for Digest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for b in self.0 {
+            write!(f, "{b:02x}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_length_sensitive() {
+        assert_eq!(Digest::of(b"chunk"), Digest::of(b"chunk"));
+        assert_ne!(Digest::of(b"chunk"), Digest::of(b"chunk\0"));
+        assert_ne!(Digest::of(b""), Digest::of(b"\0"));
+    }
+
+    #[test]
+    fn single_byte_flips_change_the_digest() {
+        let base: Vec<u8> = (0..=255u8).collect();
+        let d0 = Digest::of(&base);
+        for i in 0..base.len() {
+            let mut bad = base.clone();
+            bad[i] ^= 1;
+            assert_ne!(d0, Digest::of(&bad), "flip at {i} went unnoticed");
+        }
+    }
+
+    #[test]
+    fn hex_round_trips_and_rejects_junk() {
+        let d = Digest::of(b"object body");
+        let hex = d.to_hex();
+        assert_eq!(hex.len(), 32);
+        assert_eq!(Digest::from_hex(&hex), Some(d));
+        assert_eq!(Digest::from_hex("short"), None);
+        assert_eq!(Digest::from_hex(&"z".repeat(32)), None);
+        assert_eq!(Digest::from_hex(&"0".repeat(33)), None);
+    }
+}

@@ -1,0 +1,223 @@
+//! The versioned per-prefix manifest.
+//!
+//! A manifest is the only mutable-looking piece of the CAS path, and
+//! even it is named deterministically: its store key is the digest of
+//! the chained `prefix_hashes` sequence ([`Manifest::key_for`]), so a
+//! publisher and a fetcher that agree on the token stream agree on the
+//! manifest key with no out-of-band naming. The body maps each chain
+//! position onto one immutable object per published resolution.
+//!
+//! Wire layout (all integers little-endian):
+//!
+//! ```text
+//! "KVM1" | u16 version | u32 chunk_tokens
+//!        | u16 n_res   | (u16 len | name bytes) × n_res
+//!        | u32 n_chunks
+//!        | (u64 hash | u32 tokens | (16-byte key | u64 bytes) × n_res) × n_chunks
+//! ```
+
+use crate::codec::CodecError;
+
+use super::digest::Digest;
+use super::wire::Reader;
+
+/// Leading magic of every manifest.
+pub const MANIFEST_MAGIC: [u8; 4] = *b"KVM1";
+
+/// The only manifest version this build reads and writes.
+pub const MANIFEST_VERSION: u16 = 1;
+
+/// One stored object a manifest entry points at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObjectRef {
+    /// Content digest — the object's key in the store.
+    pub key: Digest,
+    /// Encoded object size in bytes, for dedup accounting.
+    pub bytes: u64,
+}
+
+/// Per-chunk manifest entry: chain identity plus one object per
+/// published resolution (parallel to [`Manifest::resolutions`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestChunk {
+    /// Chained chunk hash at this chain position.
+    pub hash: u64,
+    /// Tokens the chunk covers.
+    pub tokens: usize,
+    /// One object per resolution, parallel to the manifest's ladder.
+    pub objects: Vec<ObjectRef>,
+}
+
+/// Maps a chained `prefix_hashes` chunk sequence onto the
+/// content-addressed objects holding each chunk's encoded variants.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Manifest {
+    /// Tokens per chunk of the chain.
+    pub chunk_tokens: usize,
+    /// Resolution-variant names published per chunk.
+    pub resolutions: Vec<String>,
+    /// One entry per chunk, in chain order.
+    pub chunks: Vec<ManifestChunk>,
+}
+
+impl Manifest {
+    /// The store key of the manifest for a chunk chain: the digest of
+    /// the chained hashes themselves, derivable by anyone who can run
+    /// `prefix_hashes` over the token stream.
+    pub fn key_for(hashes: &[u64]) -> Digest {
+        let mut bytes = Vec::with_capacity(hashes.len() * 8);
+        for h in hashes {
+            bytes.extend_from_slice(&h.to_le_bytes());
+        }
+        Digest::of(&bytes)
+    }
+
+    /// Serialize to the versioned wire form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&MANIFEST_MAGIC);
+        out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.chunk_tokens as u32).to_le_bytes());
+        out.extend_from_slice(&(self.resolutions.len() as u16).to_le_bytes());
+        for name in &self.resolutions {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+        }
+        out.extend_from_slice(&(self.chunks.len() as u32).to_le_bytes());
+        for c in &self.chunks {
+            out.extend_from_slice(&c.hash.to_le_bytes());
+            out.extend_from_slice(&(c.tokens as u32).to_le_bytes());
+            for o in &c.objects {
+                out.extend_from_slice(&o.key.0);
+                out.extend_from_slice(&o.bytes.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse a manifest back, rejecting corruption with typed
+    /// [`CodecError`]s: bad magic, an unsupported version, non-UTF-8
+    /// resolution names, or trailing garbage is
+    /// [`CodecError::Malformed`]; any declared count outrunning the
+    /// remaining input is [`CodecError::Truncated`]. Counts are checked
+    /// against the remaining bytes before allocating.
+    pub fn decode(bytes: &[u8]) -> Result<Manifest, CodecError> {
+        let mut r = Reader::new(bytes);
+        let magic = r.take(4, "manifest magic")?;
+        if magic != MANIFEST_MAGIC {
+            return Err(CodecError::Malformed(format!("bad manifest magic {magic:?}")));
+        }
+        let version = r.u16("manifest version")?;
+        if version != MANIFEST_VERSION {
+            return Err(CodecError::Malformed(format!(
+                "unsupported manifest version {version} (this build reads {MANIFEST_VERSION})"
+            )));
+        }
+        let chunk_tokens = r.u32("chunk_tokens")? as usize;
+        let n_res = r.u16("resolution count")? as usize;
+        if n_res > r.remaining() / 2 {
+            return Err(CodecError::Truncated(format!(
+                "manifest declares {n_res} resolutions but only {} bytes remain",
+                r.remaining()
+            )));
+        }
+        let mut resolutions = Vec::with_capacity(n_res);
+        for _ in 0..n_res {
+            let len = r.u16("resolution name length")? as usize;
+            let raw = r.take(len, "resolution name")?;
+            let name = std::str::from_utf8(raw).map_err(|_| {
+                CodecError::Malformed("resolution name is not UTF-8".to_string())
+            })?;
+            resolutions.push(name.to_string());
+        }
+        let n_chunks = r.u32("chunk count")? as usize;
+        let per_chunk = 8 + 4 + n_res * (16 + 8);
+        if n_chunks > r.remaining() / per_chunk.max(1) {
+            return Err(CodecError::Truncated(format!(
+                "manifest declares {n_chunks} chunks but only {} bytes remain",
+                r.remaining()
+            )));
+        }
+        let mut chunks = Vec::with_capacity(n_chunks);
+        for _ in 0..n_chunks {
+            let hash = r.u64("chunk hash")?;
+            let tokens = r.u32("chunk tokens")? as usize;
+            let mut objects = Vec::with_capacity(n_res);
+            for _ in 0..n_res {
+                let raw = r.take(16, "object key")?;
+                let mut key = [0u8; 16];
+                key.copy_from_slice(raw);
+                let bytes = r.u64("object size")?;
+                objects.push(ObjectRef { key: Digest(key), bytes });
+            }
+            chunks.push(ManifestChunk { hash, tokens, objects });
+        }
+        r.done("manifest")?;
+        Ok(Manifest { chunk_tokens, resolutions, chunks })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    fn arbitrary(rng: &mut crate::util::Prng) -> Manifest {
+        let n_res = 1 + rng.below(3) as usize;
+        let resolutions: Vec<String> =
+            (0..n_res).map(|i| format!("res{i}x{}", rng.below(999))).collect();
+        let n_chunks = rng.below(6) as usize;
+        let chunks = (0..n_chunks)
+            .map(|_| ManifestChunk {
+                hash: rng.next_u64(),
+                tokens: rng.below(4096) as usize,
+                objects: (0..n_res)
+                    .map(|_| ObjectRef {
+                        key: Digest::of(&rng.next_u64().to_le_bytes()),
+                        bytes: rng.below(1 << 20),
+                    })
+                    .collect(),
+            })
+            .collect();
+        Manifest { chunk_tokens: 1 + rng.below(1024) as usize, resolutions, chunks }
+    }
+
+    #[test]
+    fn round_trip_property() {
+        check(0xCA5, 128, "manifest round trip", |rng| {
+            let m = arbitrary(rng);
+            let back = Manifest::decode(&m.encode()).map_err(|e| e.to_string())?;
+            if back != m {
+                return Err("decode != original".to_string());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chain_key_depends_on_every_hash() {
+        let k = Manifest::key_for(&[1, 2, 3]);
+        assert_eq!(k, Manifest::key_for(&[1, 2, 3]));
+        assert_ne!(k, Manifest::key_for(&[1, 2]));
+        assert_ne!(k, Manifest::key_for(&[1, 2, 4]));
+        assert_ne!(k, Manifest::key_for(&[3, 2, 1]));
+    }
+
+    #[test]
+    fn truncations_and_version_skew_are_typed() {
+        let mut rng = crate::util::Prng::new(7);
+        let enc = arbitrary(&mut rng).encode();
+        for cut in 0..enc.len() {
+            match Manifest::decode(&enc[..cut]) {
+                Err(CodecError::Truncated(_)) | Err(CodecError::Malformed(_)) => {}
+                other => panic!("cut at {cut}: expected typed error, got {other:?}"),
+            }
+        }
+        let mut future = enc.clone();
+        future[4] = 9; // version low byte
+        assert!(matches!(Manifest::decode(&future), Err(CodecError::Malformed(_))));
+        let mut junk = enc;
+        junk.push(0);
+        assert!(matches!(Manifest::decode(&junk), Err(CodecError::Malformed(_))));
+    }
+}

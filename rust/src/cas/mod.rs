@@ -1,0 +1,202 @@
+//! Content-addressed chunk-object delivery — the "CDN path".
+//!
+//! The paper's remote prefix store assumes KV chunks can be served
+//! from commodity storage; this module makes that concrete the way a
+//! CDN would. Each (chunk, resolution variant) becomes one immutable
+//! object keyed by a content [`Digest`], a small versioned [`Manifest`]
+//! per prefix maps the chained `prefix_hashes` sequence onto object
+//! keys, and because identical content gets identical keys, a system
+//! prompt shared by many prefixes is stored exactly once — the dedup
+//! that makes hash-addressed delivery cheap at fleet scale.
+//!
+//! Subsystem layout:
+//!
+//! * [`Digest`] — 128-bit content digest keying immutable objects;
+//! * [`object`] — one object per (chunk, variant) holding exactly the
+//!   wire payload (scales + group bitstreams); identity lives in the
+//!   manifest so identical content dedupes across prefixes;
+//! * [`Manifest`] — versioned per-prefix document mapping the chained
+//!   chunk sequence onto object keys, itself keyed by the chain digest;
+//! * [`DirStore`] — directory-backed GET-only object store: no ranges,
+//!   write-once objects, fsync'd atomic publish;
+//! * [`EdgeCache`] — byte-bounded LRU in front of the store whose
+//!   hit/miss/evict counters feed [`crate::obs`] trace instants;
+//! * [`CasSource`] — the `Backend::Cas` transport: manifest resolve,
+//!   cached GET, digest verification, optional object-store shaping;
+//! * [`publish_prefix`] / [`store_dedup`] — the `kvfetcher publish`
+//!   path: chunk a stored prefix out of a
+//!   [`crate::kvstore::StorageNode`] into objects plus a manifest and
+//!   measure the store-wide dedup ratio.
+
+#![warn(missing_docs)]
+
+pub mod cache;
+pub mod digest;
+pub mod manifest;
+pub mod object;
+pub mod source;
+pub mod store;
+mod wire;
+
+pub use cache::{CacheStats, EdgeCache};
+pub use digest::Digest;
+pub use manifest::{Manifest, ManifestChunk, ObjectRef};
+pub use source::CasSource;
+pub use store::DirStore;
+
+use crate::fetcher::FetchError;
+use crate::kvstore::StorageNode;
+
+/// `[cas]` config table: store directory, edge-cache capacity, GET
+/// shaping.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CasConfig {
+    /// Root directory of the object store (`[cas] dir`); empty means
+    /// unconfigured, and the CLI then requires `--cas-dir`.
+    pub dir: String,
+    /// Edge-cache capacity in bytes (`[cas] cache_bytes`).
+    pub cache_bytes: usize,
+    /// Shape cache-miss GETs with the `[network]` object-store shape
+    /// (`[cas] shaped`).
+    pub shaped: bool,
+}
+
+impl Default for CasConfig {
+    fn default() -> Self {
+        CasConfig { dir: String::new(), cache_bytes: 64 << 20, shaped: false }
+    }
+}
+
+/// What one [`publish_prefix`] call wrote — and found already stored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PublishReport {
+    /// Store key of the written manifest.
+    pub manifest_key: Digest,
+    /// Chunks in the published chain.
+    pub chunks: usize,
+    /// Objects this publish added to the store.
+    pub objects_new: usize,
+    /// Objects that already existed — cross-prefix dedup hits.
+    pub objects_shared: usize,
+    /// Bytes of the newly stored objects.
+    pub bytes_new: u64,
+    /// Bytes of the deduplicated (already stored) objects.
+    pub bytes_shared: u64,
+}
+
+/// Store-wide dedup accounting: logical (manifest-referenced) versus
+/// physical (stored-once) objects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct DedupStats {
+    /// Manifests scanned.
+    pub manifests: usize,
+    /// Object references across all manifests.
+    pub logical_objects: usize,
+    /// Bytes those references would occupy without dedup.
+    pub logical_bytes: u64,
+    /// Objects physically stored.
+    pub physical_objects: usize,
+    /// Bytes physically stored.
+    pub physical_bytes: u64,
+}
+
+impl DedupStats {
+    /// Logical over physical bytes: 1.0 for an empty store, above 1
+    /// once prefixes share chunks.
+    pub fn ratio(&self) -> f64 {
+        if self.physical_bytes == 0 {
+            1.0
+        } else {
+            self.logical_bytes as f64 / self.physical_bytes as f64
+        }
+    }
+}
+
+/// Publish the chain `hashes` out of `node` into `store`: one
+/// immutable object per (chunk, resolution) — skipped when its digest
+/// is already stored, which is the dedup — plus the chain's
+/// [`Manifest`], keyed by [`Manifest::key_for`] so any fetcher that
+/// can compute `prefix_hashes` can find it. Typed failures: a chunk
+/// missing from the node or a variant it never encoded is
+/// [`FetchError::Transport`]; store I/O maps to the same.
+pub fn publish_prefix(
+    store: &DirStore,
+    node: &StorageNode,
+    hashes: &[u64],
+    resolutions: &[&'static str],
+) -> Result<PublishReport, FetchError> {
+    let mut report = PublishReport {
+        manifest_key: Manifest::key_for(hashes),
+        chunks: hashes.len(),
+        objects_new: 0,
+        objects_shared: 0,
+        bytes_new: 0,
+        bytes_shared: 0,
+    };
+    let mut chunks = Vec::with_capacity(hashes.len());
+    for (idx, &hash) in hashes.iter().enumerate() {
+        let chunk = node.get(hash).ok_or_else(|| {
+            FetchError::transport(format!("chunk {hash:#x} is not in the storage node"))
+                .at_chunk(idx)
+        })?;
+        let mut objects = Vec::with_capacity(resolutions.len());
+        for &name in resolutions {
+            let variant = chunk.variant(name).ok_or_else(|| {
+                FetchError::transport(format!("chunk {hash:#x} has no {name} variant"))
+                    .at_chunk(idx)
+            })?;
+            let body = object::encode_object(&chunk.scales, &variant.group_bytes);
+            let key = Digest::of(&body);
+            let wrote = store.put_object(&key, &body).map_err(|e| {
+                FetchError::transport(format!("cas PUT {key}: {e}")).at_chunk(idx)
+            })?;
+            if wrote {
+                report.objects_new += 1;
+                report.bytes_new += body.len() as u64;
+            } else {
+                report.objects_shared += 1;
+                report.bytes_shared += body.len() as u64;
+            }
+            objects.push(ObjectRef { key, bytes: body.len() as u64 });
+        }
+        chunks.push(ManifestChunk { hash, tokens: chunk.tokens, objects });
+    }
+    let manifest = Manifest {
+        chunk_tokens: node.block_tokens,
+        resolutions: resolutions.iter().map(|r| r.to_string()).collect(),
+        chunks,
+    };
+    store
+        .put_manifest(&report.manifest_key, &manifest.encode())
+        .map_err(|e| FetchError::transport(format!("cas manifest PUT: {e}")))?;
+    Ok(report)
+}
+
+/// Scan every manifest in `store` against the physical object set and
+/// report the dedup ratio (logical bytes over stored bytes).
+pub fn store_dedup(store: &DirStore) -> Result<DedupStats, FetchError> {
+    let mut stats = DedupStats::default();
+    let keys = store
+        .list_manifests()
+        .map_err(|e| FetchError::transport(format!("cas manifest list: {e}")))?;
+    for key in keys {
+        let bytes = store
+            .get_manifest(&key)
+            .map_err(|e| FetchError::transport(format!("cas manifest GET {key}: {e}")))?
+            .ok_or_else(|| FetchError::transport(format!("manifest {key} vanished mid-scan")))?;
+        let manifest = Manifest::decode(&bytes)?;
+        stats.manifests += 1;
+        for chunk in &manifest.chunks {
+            for obj in &chunk.objects {
+                stats.logical_objects += 1;
+                stats.logical_bytes += obj.bytes;
+            }
+        }
+    }
+    let (n, bytes) = store
+        .object_stats()
+        .map_err(|e| FetchError::transport(format!("cas object scan: {e}")))?;
+    stats.physical_objects = n;
+    stats.physical_bytes = bytes;
+    Ok(stats)
+}

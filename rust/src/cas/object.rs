@@ -1,0 +1,138 @@
+//! The immutable chunk-object body format.
+//!
+//! One object holds exactly the wire payload of one (chunk, resolution
+//! variant): the f32 scale sideband plus the per-group entropy-coded
+//! bitstreams. Chain hash, token count, and resolution name stay *out*
+//! of the body on purpose — they live in the manifest — so two prefixes
+//! whose chunks encode to identical bytes share one stored object. The
+//! object's store key is the [`Digest`](super::Digest) of its entire
+//! encoded body.
+//!
+//! Wire layout (all integers little-endian):
+//!
+//! ```text
+//! "KVO1" | u32 n_scales | f32 × n_scales
+//!        | u32 n_groups | (u32 len | bytes) × n_groups
+//! ```
+
+use crate::codec::CodecError;
+
+use super::wire::Reader;
+
+/// Leading magic of every object body.
+pub const OBJECT_MAGIC: [u8; 4] = *b"KVO1";
+
+/// Serialize one chunk variant's payload as an immutable object body.
+pub fn encode_object(scales: &[f32], group_bytes: &[Vec<u8>]) -> Vec<u8> {
+    let body: usize = group_bytes.iter().map(|g| 4 + g.len()).sum();
+    let mut out = Vec::with_capacity(4 + 4 + scales.len() * 4 + 4 + body);
+    out.extend_from_slice(&OBJECT_MAGIC);
+    out.extend_from_slice(&(scales.len() as u32).to_le_bytes());
+    for s in scales {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    out.extend_from_slice(&(group_bytes.len() as u32).to_le_bytes());
+    for g in group_bytes {
+        out.extend_from_slice(&(g.len() as u32).to_le_bytes());
+        out.extend_from_slice(g);
+    }
+    out
+}
+
+/// Parse an object body back into `(scales, group_bytes)`.
+///
+/// Corruption maps to typed [`CodecError`]s: a bad magic or trailing
+/// garbage is [`CodecError::Malformed`], any declared count or length
+/// exceeding the remaining input is [`CodecError::Truncated`]. Declared
+/// counts are checked against the remaining bytes *before* allocating,
+/// so a corrupt header can never trigger a huge allocation.
+pub fn decode_object(bytes: &[u8]) -> Result<(Vec<f32>, Vec<Vec<u8>>), CodecError> {
+    let mut r = Reader::new(bytes);
+    let magic = r.take(4, "object magic")?;
+    if magic != OBJECT_MAGIC {
+        return Err(CodecError::Malformed(format!("bad object magic {magic:?}")));
+    }
+    let n_scales = r.u32("scale count")? as usize;
+    if n_scales > r.remaining() / 4 {
+        return Err(CodecError::Truncated(format!(
+            "object declares {n_scales} scales but only {} bytes remain",
+            r.remaining()
+        )));
+    }
+    let mut scales = Vec::with_capacity(n_scales);
+    for _ in 0..n_scales {
+        let b = r.take(4, "scale")?;
+        scales.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+    }
+    let n_groups = r.u32("group count")? as usize;
+    if n_groups > r.remaining() / 4 {
+        return Err(CodecError::Truncated(format!(
+            "object declares {n_groups} groups but only {} bytes remain",
+            r.remaining()
+        )));
+    }
+    let mut groups = Vec::with_capacity(n_groups);
+    for _ in 0..n_groups {
+        let len = r.u32("group length")? as usize;
+        groups.push(r.take(len, "group bitstream")?.to_vec());
+    }
+    r.done("object")?;
+    Ok((scales, groups))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> (Vec<f32>, Vec<Vec<u8>>) {
+        let scales = vec![0.5, 1.25, -3.0];
+        let groups = vec![vec![1, 2, 3], Vec::new(), vec![0xAB; 17]];
+        (scales, groups)
+    }
+
+    #[test]
+    fn round_trips() {
+        let (scales, groups) = sample();
+        let enc = encode_object(&scales, &groups);
+        let (s2, g2) = decode_object(&enc).expect("decode");
+        assert_eq!(s2, scales);
+        assert_eq!(g2, groups);
+    }
+
+    #[test]
+    fn empty_payload_round_trips() {
+        let enc = encode_object(&[], &[]);
+        let (s, g) = decode_object(&enc).expect("decode");
+        assert!(s.is_empty() && g.is_empty());
+    }
+
+    #[test]
+    fn every_truncation_is_typed() {
+        let (scales, groups) = sample();
+        let enc = encode_object(&scales, &groups);
+        for cut in 0..enc.len() {
+            match decode_object(&enc[..cut]) {
+                Err(CodecError::Truncated(_)) | Err(CodecError::Malformed(_)) => {}
+                other => panic!("cut at {cut}: expected typed error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_trailing_junk_are_malformed() {
+        let (scales, groups) = sample();
+        let mut enc = encode_object(&scales, &groups);
+        let mut bad = enc.clone();
+        bad[0] ^= 0xFF;
+        assert!(matches!(decode_object(&bad), Err(CodecError::Malformed(_))));
+        enc.push(0);
+        assert!(matches!(decode_object(&enc), Err(CodecError::Malformed(_))));
+    }
+
+    #[test]
+    fn huge_declared_counts_fail_without_allocating() {
+        let mut enc = Vec::from(OBJECT_MAGIC);
+        enc.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_object(&enc), Err(CodecError::Truncated(_))));
+    }
+}

@@ -1,0 +1,241 @@
+//! `CasSource`: the content-addressed (CDN-path) transport backend.
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::codec::CodecError;
+use crate::fetcher::{ChunkPayload, FetchError, TransportSource, WireTiming};
+use crate::obs::{ArgValue, TraceRecorder, Track};
+use crate::service::{Ladder, ObjStoreShape};
+
+use super::cache::EdgeCache;
+use super::digest::Digest;
+use super::manifest::Manifest;
+use super::object::decode_object;
+use super::store::DirStore;
+
+/// The content-addressed transport backend: resolves each chunk
+/// through a per-prefix [`Manifest`], GETs immutable objects from a
+/// [`DirStore`] behind a shared [`EdgeCache`], verifies every object's
+/// digest before decoding, and optionally shapes store GETs like an
+/// object store ([`ObjStoreShape`]) so the analytic wire model still
+/// applies. Cache hits skip the shaping entirely — that is the CDN win
+/// being modeled.
+pub struct CasSource {
+    store: DirStore,
+    manifest: Manifest,
+    hashes: Vec<u64>,
+    ladder: Ladder,
+    cache: Arc<EdgeCache>,
+    shape: Option<ObjStoreShape>,
+    timings: Vec<WireTiming>,
+    rec: Option<Arc<TraceRecorder>>,
+}
+
+impl CasSource {
+    /// A source serving the chain `hashes` at `ladder` out of `store`
+    /// through `cache`, after validating that `manifest` covers
+    /// exactly that chain — length and every per-position hash. A
+    /// stale or foreign manifest is a typed [`FetchError::Decode`],
+    /// never a silent wrong restore.
+    pub fn new(
+        store: DirStore,
+        manifest: Manifest,
+        hashes: Vec<u64>,
+        ladder: Ladder,
+        cache: Arc<EdgeCache>,
+    ) -> Result<CasSource, FetchError> {
+        if manifest.chunks.len() != hashes.len() {
+            return Err(FetchError::decode(format!(
+                "manifest covers {} chunks, the requested chain has {}",
+                manifest.chunks.len(),
+                hashes.len()
+            )));
+        }
+        for (idx, (c, &h)) in manifest.chunks.iter().zip(&hashes).enumerate() {
+            if c.hash != h {
+                return Err(FetchError::decode(format!(
+                    "manifest chain diverges at chunk {idx}: has {:#x}, expected {h:#x}",
+                    c.hash
+                )));
+            }
+        }
+        Ok(CasSource {
+            store,
+            manifest,
+            hashes,
+            ladder,
+            cache,
+            shape: None,
+            timings: Vec::new(),
+            rec: None,
+        })
+    }
+
+    /// Shape store GETs (cache misses only) like an object store;
+    /// `None` keeps GETs at raw filesystem speed.
+    pub fn with_shape(mut self, shape: Option<ObjStoreShape>) -> CasSource {
+        self.shape = shape;
+        self
+    }
+
+    /// Attach a trace recorder: per-chunk `manifest_resolve` and
+    /// `object_get` spans plus `cache_hit` / `cache_miss` /
+    /// `cache_evict` instants land on [`Track::Cas`].
+    pub fn with_recorder(mut self, rec: Option<Arc<TraceRecorder>>) -> CasSource {
+        self.rec = rec;
+        self
+    }
+
+    /// The shared edge cache (and its counters).
+    pub fn cache(&self) -> &Arc<EdgeCache> {
+        &self.cache
+    }
+
+    /// GET one object through the edge cache, verifying its digest on
+    /// every store read. Returns the bytes and whether they came from
+    /// the cache.
+    fn get_object(&self, idx: usize, key: &Digest) -> Result<(Vec<u8>, bool), FetchError> {
+        if let Some(bytes) = self.cache.get(key) {
+            if let Some(r) = self.rec.as_deref() {
+                r.instant(
+                    Track::Cas,
+                    "cache_hit",
+                    vec![
+                        ("chunk", ArgValue::U64(idx as u64)),
+                        ("bytes", ArgValue::U64(bytes.len() as u64)),
+                    ],
+                );
+            }
+            return Ok((bytes, true));
+        }
+        if let Some(r) = self.rec.as_deref() {
+            r.instant(Track::Cas, "cache_miss", vec![("chunk", ArgValue::U64(idx as u64))]);
+        }
+        let bytes = self
+            .store
+            .get_object(key)
+            .map_err(|e| FetchError::Transport {
+                chunk: Some(idx),
+                shard: None,
+                detail: format!("cas GET {key}: {e}"),
+            })?
+            .ok_or_else(|| FetchError::Transport {
+                chunk: Some(idx),
+                shard: None,
+                detail: format!("object {key} is not in the store (dangling manifest ref)"),
+            })?;
+        if let Some(shape) = self.shape {
+            let wall =
+                shape.latency_s + bytes.len() as f64 * 8.0 / (shape.gbps.max(1e-9) * 1e9);
+            if wall > 0.0 {
+                thread::sleep(Duration::from_secs_f64(wall));
+            }
+        }
+        let got = Digest::of(&bytes);
+        if got != *key {
+            return Err(FetchError::from(CodecError::Mismatch(format!(
+                "object {key} failed digest verification (stored bytes hash to {got})"
+            )))
+            .at_chunk(idx));
+        }
+        let evicted = self.cache.insert(*key, bytes.clone());
+        if evicted > 0 {
+            if let Some(r) = self.rec.as_deref() {
+                r.instant(
+                    Track::Cas,
+                    "cache_evict",
+                    vec![
+                        ("chunk", ArgValue::U64(idx as u64)),
+                        ("evicted", ArgValue::U64(evicted)),
+                    ],
+                );
+            }
+        }
+        Ok((bytes, false))
+    }
+}
+
+impl TransportSource for CasSource {
+    fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, FetchError> {
+        let t0 = Instant::now();
+        let hash = *self
+            .hashes
+            .get(idx)
+            .ok_or_else(|| FetchError::transport(format!("no chunk at index {idx}")))?;
+        let tr = self.rec.as_deref().map(|_| Instant::now());
+        let entry = self.manifest.chunks.get(idx).ok_or_else(|| {
+            FetchError::decode(format!("manifest has no entry for chunk {idx}")).at_chunk(idx)
+        })?;
+        if entry.hash != hash {
+            return Err(FetchError::decode(format!(
+                "manifest chain diverges at chunk {idx}: has {:#x}, expected {hash:#x}",
+                entry.hash
+            ))
+            .at_chunk(idx));
+        }
+        let name = self.ladder[res_idx.min(self.ladder.len() - 1)];
+        let ri = self
+            .manifest
+            .resolutions
+            .iter()
+            .position(|r| r.as_str() == name)
+            .ok_or_else(|| {
+                FetchError::decode(format!("manifest has no {name} variant published"))
+                    .at_chunk(idx)
+            })?;
+        let tokens = entry.tokens;
+        let obj = entry.objects[ri];
+        if let (Some(r), Some(t)) = (self.rec.as_deref(), tr) {
+            r.span(
+                Track::Cas,
+                "manifest_resolve",
+                t,
+                Instant::now(),
+                vec![
+                    ("chunk", ArgValue::U64(idx as u64)),
+                    ("res", ArgValue::U64(res_idx as u64)),
+                ],
+            );
+        }
+        let tg = self.rec.as_deref().map(|_| Instant::now());
+        let (bytes, hit) = self.get_object(idx, &obj.key)?;
+        let (scales, group_bytes) =
+            decode_object(&bytes).map_err(|e| FetchError::from(e).at_chunk(idx))?;
+        if let (Some(r), Some(t)) = (self.rec.as_deref(), tg) {
+            r.span(
+                Track::Cas,
+                "object_get",
+                t,
+                Instant::now(),
+                vec![
+                    ("chunk", ArgValue::U64(idx as u64)),
+                    ("bytes", ArgValue::U64(bytes.len() as u64)),
+                    ("src", ArgValue::Str(if hit { "cache" } else { "store" })),
+                ],
+            );
+        }
+        let payload =
+            ChunkPayload { hash, tokens, resolution: name.to_string(), scales, group_bytes };
+        self.timings.push(WireTiming {
+            idx,
+            wire_bytes: payload.wire_bytes(),
+            wall_secs: t0.elapsed().as_secs_f64(),
+            shard: None,
+        });
+        Ok(payload)
+    }
+
+    fn kind(&self) -> &'static str {
+        "cas"
+    }
+
+    fn set_hashes(&mut self, hashes: &[u64]) {
+        self.hashes = hashes.to_vec();
+    }
+
+    fn take_timings(&mut self) -> Vec<WireTiming> {
+        std::mem::take(&mut self.timings)
+    }
+}

@@ -1,0 +1,180 @@
+//! Directory-backed, GET-only object store.
+//!
+//! The CDN origin of the CAS path. Deliberately primitive so anything
+//! that can serve files can stand in for it: whole-object GETs only
+//! (no range reads — objects are one chunk variant each, so partial
+//! reads buy nothing and whole objects keep every cache tier trivially
+//! correct), write-once immutable objects, and an fsync'd
+//! write-to-tmp-then-rename publish so a crashed publisher can leave
+//! garbage in `tmp/` but never a partially visible object.
+//!
+//! On-disk layout under the store root:
+//!
+//! ```text
+//! root/objects/<32-hex-digest>     immutable object bodies
+//! root/manifests/<32-hex-digest>   per-prefix manifests, keyed by chain
+//! root/tmp/                        staging for atomic publishes
+//! ```
+
+use std::fs::{self, File};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use super::digest::Digest;
+
+/// Handle on a store root (see the module docs for the layout).
+#[derive(Debug)]
+pub struct DirStore {
+    root: PathBuf,
+}
+
+impl DirStore {
+    /// Open the store rooted at `root`, creating its directories as
+    /// needed.
+    pub fn open(root: impl AsRef<Path>) -> io::Result<DirStore> {
+        let root = root.as_ref().to_path_buf();
+        fs::create_dir_all(root.join("objects"))?;
+        fs::create_dir_all(root.join("manifests"))?;
+        fs::create_dir_all(root.join("tmp"))?;
+        Ok(DirStore { root })
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn object_path(&self, key: &Digest) -> PathBuf {
+        self.root.join("objects").join(key.to_hex())
+    }
+
+    fn manifest_path(&self, key: &Digest) -> PathBuf {
+        self.root.join("manifests").join(key.to_hex())
+    }
+
+    /// Stage `bytes` in `tmp/`, fsync, and rename into place; a
+    /// best-effort directory fsync afterwards makes the rename itself
+    /// durable.
+    fn publish(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("blob");
+        let tmp = self.root.join("tmp").join(format!("{name}.{}", std::process::id()));
+        {
+            let mut f = File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)?;
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(())
+    }
+
+    /// Publish `bytes` under `key`, write-once: an already-stored
+    /// object is never rewritten (content addressing guarantees the
+    /// bytes are the same), and the skip is what dedup measures.
+    /// Returns `true` when the object was actually written.
+    pub fn put_object(&self, key: &Digest, bytes: &[u8]) -> io::Result<bool> {
+        let path = self.object_path(key);
+        if path.exists() {
+            return Ok(false);
+        }
+        self.publish(&path, bytes)?;
+        Ok(true)
+    }
+
+    /// GET an object's bytes; `Ok(None)` when the key is not stored.
+    pub fn get_object(&self, key: &Digest) -> io::Result<Option<Vec<u8>>> {
+        read_opt(&self.object_path(key))
+    }
+
+    /// Whether `key` is stored.
+    pub fn contains_object(&self, key: &Digest) -> bool {
+        self.object_path(key).exists()
+    }
+
+    /// Publish a manifest under `key`. Unlike objects, manifests are
+    /// replaceable pointers (republishing the same chain with more
+    /// resolutions must win), so this always writes — still atomically,
+    /// via the same staged rename.
+    pub fn put_manifest(&self, key: &Digest, bytes: &[u8]) -> io::Result<()> {
+        self.publish(&self.manifest_path(key), bytes)
+    }
+
+    /// GET a manifest's bytes by chain key; `Ok(None)` when no prefix
+    /// with that chain has been published.
+    pub fn get_manifest(&self, key: &Digest) -> io::Result<Option<Vec<u8>>> {
+        read_opt(&self.manifest_path(key))
+    }
+
+    /// Keys of every manifest in the store, sorted for determinism.
+    pub fn list_manifests(&self) -> io::Result<Vec<Digest>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(self.root.join("manifests"))? {
+            let entry = entry?;
+            if let Some(k) = entry.file_name().to_str().and_then(Digest::from_hex) {
+                out.push(k);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// `(count, total bytes)` over the physically stored objects.
+    pub fn object_stats(&self) -> io::Result<(usize, u64)> {
+        let mut n = 0usize;
+        let mut bytes = 0u64;
+        for entry in fs::read_dir(self.root.join("objects"))? {
+            let entry = entry?;
+            n += 1;
+            bytes += entry.metadata()?.len();
+        }
+        Ok((n, bytes))
+    }
+}
+
+fn read_opt(path: &Path) -> io::Result<Option<Vec<u8>>> {
+    match fs::read(path) {
+        Ok(b) => Ok(Some(b)),
+        Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(None),
+        Err(e) => Err(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(tag: &str) -> DirStore {
+        let dir =
+            std::env::temp_dir().join(format!("kvfetcher-store-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        DirStore::open(dir).expect("open store")
+    }
+
+    #[test]
+    fn objects_are_write_once_and_get_only() {
+        let store = tmp_store("once");
+        let key = Digest::of(b"payload");
+        assert!(!store.contains_object(&key));
+        assert_eq!(store.get_object(&key).unwrap(), None);
+        assert!(store.put_object(&key, b"payload").unwrap(), "first put writes");
+        assert!(!store.put_object(&key, b"payload").unwrap(), "second put dedups");
+        assert_eq!(store.get_object(&key).unwrap().as_deref(), Some(&b"payload"[..]));
+        let (n, bytes) = store.object_stats().unwrap();
+        assert_eq!((n, bytes), (1, 7));
+    }
+
+    #[test]
+    fn manifests_replace_and_list() {
+        let store = tmp_store("manifests");
+        let key = Digest::of(b"chain");
+        assert_eq!(store.get_manifest(&key).unwrap(), None);
+        store.put_manifest(&key, b"v1").unwrap();
+        store.put_manifest(&key, b"v2-longer").unwrap();
+        assert_eq!(store.get_manifest(&key).unwrap().as_deref(), Some(&b"v2-longer"[..]));
+        assert_eq!(store.list_manifests().unwrap(), vec![key]);
+    }
+}

@@ -1,0 +1,57 @@
+//! Byte-level reader shared by the object and manifest decoders: every
+//! short read becomes a typed [`CodecError::Truncated`], never a panic.
+
+use crate::codec::CodecError;
+
+pub(super) struct Reader<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(super) fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, at: 0 }
+    }
+
+    pub(super) fn remaining(&self) -> usize {
+        self.buf.len() - self.at
+    }
+
+    pub(super) fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated(format!(
+                "{what}: need {n} bytes, {} remain",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+
+    pub(super) fn u16(&mut self, what: &str) -> Result<u16, CodecError> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub(super) fn u32(&mut self, what: &str) -> Result<u32, CodecError> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(super) fn u64(&mut self, what: &str) -> Result<u64, CodecError> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// Reject trailing garbage after the declared structure.
+    pub(super) fn done(&self, what: &str) -> Result<(), CodecError> {
+        if self.remaining() > 0 {
+            return Err(CodecError::Malformed(format!(
+                "{what}: {} trailing bytes after the declared structure",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}

@@ -2,6 +2,7 @@
 //! fetcher / trace settings so experiments are reproducible from files
 //! (and the CLI can override individual keys).
 
+use crate::cas::CasConfig;
 use crate::cluster::{DeviceSpec, ModelSpec};
 use crate::engine::{EngineConfig, ExecMode};
 use crate::fetcher::{FetchConfig, PipelineConfig, ReadPolicy, SchedConfig, SchedPolicy};
@@ -60,8 +61,8 @@ pub struct Experiment {
     pub bandwidth_gbps: f64,
     pub jitter: bool,
     /// Transport backend of the demo-restore path (`[network] backend =
-    /// "tcp" | "local" | "objstore"`). `None` = not configured; the CLI
-    /// falls back to `tcp` when remote addresses are present.
+    /// "tcp" | "local" | "objstore" | "cas"`). `None` = not configured;
+    /// the CLI falls back to `tcp` when remote addresses are present.
     pub backend: Option<Backend>,
     /// Remote storage-node addresses (`[network] remote = "a:p,b:p"`);
     /// empty = in-process fetch simulation only.
@@ -69,6 +70,10 @@ pub struct Experiment {
     /// Wall-clock shape of the `objstore` backend (`[network]
     /// objstore_latency_ms` / `objstore_gbps`).
     pub objstore: ObjStoreShape,
+    /// Content-addressed store of the `cas` backend (`[cas] dir /
+    /// cache_bytes / shaped`); `shaped` reuses the `[network]`
+    /// object-store shape for cache-miss GETs.
+    pub cas: CasConfig,
     /// Storage-node scaling (`[service] max_inflight / max_conns /
     /// replication`).
     pub service: ServiceConfig,
@@ -100,6 +105,7 @@ impl Default for Experiment {
             backend: None,
             remote_addrs: Vec::new(),
             objstore: ObjStoreShape::default(),
+            cas: CasConfig::default(),
             service: ServiceConfig::default(),
             fetch_sched: SchedConfig::default(),
             engine: EngineConfig::default(),
@@ -186,6 +192,14 @@ impl Experiment {
             latency_s: c.get_f64("network", "objstore_latency_ms", 10.0) / 1e3,
             gbps: c.get_f64("network", "objstore_gbps", 8.0),
         };
+        let cas_default = CasConfig::default();
+        let cas = CasConfig {
+            dir: c.get_str("cas", "dir", &cas_default.dir).to_string(),
+            cache_bytes: c
+                .get_i64("cas", "cache_bytes", cas_default.cache_bytes as i64)
+                .max(1) as usize,
+            shaped: c.get_bool("cas", "shaped", cas_default.shaped),
+        };
         let service = ServiceConfig {
             max_inflight: c.get_i64("service", "max_inflight", 0).max(0) as usize,
             max_conns: c.get_i64("service", "max_conns", 0).max(0) as usize,
@@ -224,6 +238,7 @@ impl Experiment {
             backend,
             remote_addrs: parse_addr_list(c.get_str("network", "remote", "")),
             objstore,
+            cas,
             service,
             fetch_sched,
             engine,
@@ -272,6 +287,9 @@ mod tests {
         assert!(e.backend.is_none());
         assert!((e.objstore.latency_s - 0.010).abs() < 1e-12);
         assert!((e.objstore.gbps - 8.0).abs() < 1e-12);
+        assert_eq!(e.cas.dir, "", "cas store must default unconfigured");
+        assert_eq!(e.cas.cache_bytes, 64 << 20);
+        assert!(!e.cas.shaped);
         assert_eq!(e.service.max_inflight, 0);
         assert_eq!(e.service.max_conns, 0);
         assert_eq!(e.service.replication, 1);
@@ -304,6 +322,10 @@ backend = "objstore"
 objstore_latency_ms = 2.5
 objstore_gbps = 12.0
 remote = "127.0.0.1:7301, 127.0.0.1:7302"
+[cas]
+dir = "/tmp/kv-cas"
+cache_bytes = 1048576
+shaped = true
 [service]
 max_inflight = 50000000
 max_conns = 32
@@ -348,6 +370,9 @@ capacity = 4096
         assert_eq!(e.backend, Some(Backend::ObjStore));
         assert!((e.objstore.latency_s - 0.0025).abs() < 1e-12);
         assert!((e.objstore.gbps - 12.0).abs() < 1e-12);
+        assert_eq!(e.cas.dir, "/tmp/kv-cas");
+        assert_eq!(e.cas.cache_bytes, 1_048_576);
+        assert!(e.cas.shaped);
         assert_eq!(e.remote_addrs, vec!["127.0.0.1:7301", "127.0.0.1:7302"]);
         assert_eq!(e.service.max_inflight, 50_000_000);
         assert_eq!(e.service.max_conns, 32);
@@ -368,5 +393,11 @@ capacity = 4096
             let b = tr.at(i as f64);
             assert!(b >= 1.0 && b <= 8.0, "bw {b}");
         }
+    }
+
+    #[test]
+    fn parses_cas_backend_name() {
+        let e = Experiment::from_config(&Config::parse("[network]\nbackend = \"cas\"").unwrap());
+        assert_eq!(e.backend, Some(Backend::Cas));
     }
 }

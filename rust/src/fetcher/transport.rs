@@ -78,7 +78,7 @@ pub trait TransportSource: Send {
     fn fetch_chunk(&mut self, idx: usize, res_idx: usize) -> Result<ChunkPayload, FetchError>;
 
     /// Registry name of this backend ("local" | "tcp" | "objstore" |
-    /// "custom"), recorded in the [`super::api::FetchReport`].
+    /// "cas" | "custom"), recorded in the [`super::api::FetchReport`].
     fn kind(&self) -> &'static str {
         "custom"
     }

@@ -21,6 +21,7 @@
 
 pub mod asic;
 pub mod cache;
+pub mod cas;
 pub mod cluster;
 pub mod baselines;
 pub mod codec;

@@ -18,6 +18,11 @@
 //!               --read-policy balances replicated reads;
 //!               --sched-policy/--tenant/--deadline-ms route the fetch
 //!               through the multi-tenant scheduler
+//!   publish   — chunk the demo prefix into a content-addressed object
+//!               store (one immutable object per chunk variant plus a
+//!               manifest keyed by the hash chain) and report the
+//!               cross-prefix dedup ratio; fetch it back with
+//!               `fetch --backend cas`
 //!   repair    — anti-entropy pass over a replicated fleet: diff every
 //!               chunk's holders against its replica set, re-put the
 //!               missing copies, and exit non-zero unless the fleet is
@@ -429,11 +434,14 @@ fn cmd_repair(args: &[String]) {
     println!("# fleet is at full replication (factor {replication})");
 }
 
-/// `fetch --backend local|tcp|objstore [--remote a:p,b:p]` (or
+/// `fetch --backend local|tcp|objstore|cas [--remote a:p,b:p]` (or
 /// `[network] backend` / `[network] remote` in the config) — stream the
 /// demo prefix through the selected transport backend via the `Fetcher`
 /// facade and verify bit-exact restore. Every backend must restore the
-/// same bytes; only the wall-clock wire timings differ.
+/// same bytes; only the wall-clock wire timings differ. The `cas`
+/// backend reads a store written by `publish`; `--passes n` re-runs
+/// the fetch through fresh sources sharing one edge cache, so pass 2+
+/// measures CDN-style cache hits (and fails if there are none).
 fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &[String]) {
     use std::sync::{Arc, Mutex};
 
@@ -451,6 +459,15 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     // of the run's spans land on one timeline in the exported trace
     let trace = trace_setup(args, &exp);
     let rec = trace.as_ref().map(|(r, _)| Arc::clone(r));
+
+    // one edge cache shared by every pass's source: a --passes warm
+    // re-fetch measures real CDN-style hits instead of cold GETs
+    let cas_cache = (backend == Backend::Cas)
+        .then(|| Arc::new(kvfetcher::cas::EdgeCache::new(exp.cas.cache_bytes)));
+    let passes: usize = parse_flag(args, "--passes")
+        .map(|s| s.parse().expect("--passes takes a count"))
+        .unwrap_or(1)
+        .max(1);
 
     let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
     spec.chunk_tokens = chunk_tokens;
@@ -471,6 +488,23 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
             }
             spec.node = Some(Arc::new(Mutex::new(node)));
             spec.objstore = exp.objstore;
+        }
+        Backend::Cas => {
+            let dir = parse_flag(args, "--cas-dir")
+                .or_else(|| (!exp.cas.dir.is_empty()).then(|| exp.cas.dir.clone()))
+                .unwrap_or_else(|| {
+                    eprintln!(
+                        "backend cas needs --cas-dir <dir> (or [cas] dir) — publish the \
+                         prefix there first with `kvfetcher publish --cas-dir <dir>`"
+                    );
+                    std::process::exit(2);
+                });
+            spec.cas_dir = Some(dir);
+            spec.cas_cache = cas_cache.clone();
+            spec.cas_cache_bytes = exp.cas.cache_bytes;
+            if exp.cas.shaped || args.iter().any(|a| a == "--cas-shaped") {
+                spec.cas_shape = Some(exp.objstore);
+            }
         }
     }
     let fetcher = Fetcher::builder()
@@ -495,12 +529,12 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     spec.read_policy = fetcher.read_policy();
     spec.sched_policy = fetcher.sched_policy();
     spec.recorder = rec.clone();
-    let source = match SourceRegistry::with_defaults().create(backend, &spec) {
-        Ok(s) => s,
-        Err(e) => {
+    let registry = SourceRegistry::with_defaults();
+    let new_source = |spec: &SourceSpec| {
+        registry.create(backend, spec).unwrap_or_else(|e| {
             eprintln!("cannot build {backend} source: {e}");
             std::process::exit(1);
-        }
+        })
     };
 
     println!(
@@ -521,6 +555,17 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
     let req = FetchRequest::new(total_tokens, raw_bytes_total)
         .with_hashes(demo.hashes.clone())
         .exec(ExecMode::Pipelined);
+    // warm-up passes: identical fetches through fresh sources that
+    // share the spec's edge cache, so the final (reported) pass runs
+    // against a warm CDN edge
+    for pass in 1..passes {
+        let mut session = fetcher.clone().session(req.clone()).with_source(new_source(&spec));
+        if let Err(e) = session.run() {
+            eprintln!("warm-up pass {pass} failed: {e}");
+            std::process::exit(1);
+        }
+    }
+    let source = new_source(&spec);
     // any scheduler flag routes the fetch through a single-tenant
     // FetchScheduler so admission, ordering, and TTFT accounting run
     // end to end; without them the session path is unchanged
@@ -619,9 +664,104 @@ fn cmd_fetch_demo(exp: Experiment, backend: Backend, addrs: Vec<String>, args: &
         fmt_secs(report.breakdown().restore),
     );
     println!("# per-stage latency:\n{}", report.stage_summary());
+    if let Some(cache) = &cas_cache {
+        let s = cache.stats();
+        println!(
+            "# cas edge cache: {} hits, {} misses, {} evictions, {} cached across {passes} \
+             pass(es)",
+            s.hits,
+            s.misses,
+            s.evictions,
+            fmt_bytes(s.used_bytes as usize)
+        );
+        if passes > 1 && s.hits == 0 {
+            eprintln!("a warm pass must hit the edge cache (0 hits after {passes} passes)");
+            std::process::exit(1);
+        }
+    }
     if let Some((rec, path)) = &trace {
         write_trace(rec, path);
     }
+}
+
+/// `publish --cas-dir <dir>` — chunk the demo prefix out of an
+/// in-process `StorageNode` into the content-addressed store: one
+/// immutable object per (chunk, resolution variant), deduplicated by
+/// content digest against everything already stored, plus a versioned
+/// manifest keyed by the chain of `prefix_hashes`. Prints what this
+/// publish wrote versus found already stored, then the store-wide
+/// dedup ratio (logical manifest-referenced bytes over physically
+/// stored bytes); `--min-dedup r` turns that ratio into an exit-code
+/// gate — the CI cross-prefix dedup check.
+fn cmd_publish(args: &[String]) {
+    use kvfetcher::cas::{publish_prefix, store_dedup, DirStore};
+    use kvfetcher::kvstore::StorageNode;
+    use kvfetcher::service::{demo_prefix, DEMO_LADDER};
+
+    let exp = load_experiment(args);
+    let dir = parse_flag(args, "--cas-dir")
+        .or_else(|| (!exp.cas.dir.is_empty()).then(|| exp.cas.dir.clone()))
+        .unwrap_or_else(|| {
+            eprintln!("publish needs --cas-dir <dir> (or [cas] dir in the config)");
+            std::process::exit(2);
+        });
+    let (seed, n_chunks, chunk_tokens) = demo_params(args);
+    let demo = demo_prefix(seed, n_chunks, chunk_tokens);
+    let mut node = StorageNode::new(chunk_tokens);
+    for c in &demo.chunks {
+        node.register(c.clone());
+    }
+    let store = DirStore::open(&dir).unwrap_or_else(|e| {
+        eprintln!("cannot open cas store {dir:?}: {e}");
+        std::process::exit(1);
+    });
+    // publish every resolution the demo prefix encodes — the distinct
+    // names of its ladder
+    let mut resolutions: Vec<&'static str> = Vec::new();
+    for name in DEMO_LADDER {
+        if !resolutions.contains(&name) {
+            resolutions.push(name);
+        }
+    }
+    let report = publish_prefix(&store, &node, &demo.hashes, &resolutions).unwrap_or_else(|e| {
+        eprintln!("publish failed: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "# published seed={seed} chunks={n_chunks} chunk_tokens={chunk_tokens} -> {dir}: \
+         {} new objects ({}), {} shared ({}) | manifest {}",
+        report.objects_new,
+        fmt_bytes(report.bytes_new as usize),
+        report.objects_shared,
+        fmt_bytes(report.bytes_shared as usize),
+        report.manifest_key,
+    );
+    let dedup = store_dedup(&store).unwrap_or_else(|e| {
+        eprintln!("dedup scan failed: {e}");
+        std::process::exit(1);
+    });
+    println!(
+        "# store: {} manifests, {} logical objects over {} stored, dedup ratio {:.2}x \
+         ({} logical / {} stored)",
+        dedup.manifests,
+        dedup.logical_objects,
+        dedup.physical_objects,
+        dedup.ratio(),
+        fmt_bytes(dedup.logical_bytes as usize),
+        fmt_bytes(dedup.physical_bytes as usize),
+    );
+    if let Some(min) = parse_flag(args, "--min-dedup") {
+        let min: f64 = min.parse().expect("--min-dedup takes a ratio");
+        if dedup.ratio() < min {
+            eprintln!("dedup ratio {:.2} is below the required {min:.2}", dedup.ratio());
+            std::process::exit(1);
+        }
+        println!("# dedup gate: {:.2}x >= {min:.2}x", dedup.ratio());
+    }
+    println!(
+        "# fetch it back with `kvfetcher fetch --backend cas --cas-dir {dir} --seed {seed} \
+         --chunks {n_chunks} --chunk-tokens {chunk_tokens}`"
+    );
 }
 
 /// `serve --loadgen` — replay the canonical two-tenant arrival trace
@@ -847,7 +987,7 @@ fn cmd_fetch(args: &[String]) {
     let backend = parse_flag(args, "--backend")
         .map(|b| {
             Backend::by_name(&b).unwrap_or_else(|| {
-                eprintln!("--backend takes `local`, `tcp`, or `objstore` (got {b:?})");
+                eprintln!("--backend takes `local`, `tcp`, `objstore`, or `cas` (got {b:?})");
                 std::process::exit(2);
             })
         })
@@ -969,7 +1109,7 @@ fn cmd_real(_args: &[String]) {
     std::process::exit(2);
 }
 
-const USAGE: &str = "kvfetcher <serve|fetch|stats|repair|calibrate|layout|real> [flags]
+const USAGE: &str = "kvfetcher <serve|fetch|publish|stats|repair|calibrate|layout|real> [flags]
   serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
             [--exec analytic|pipelined]
   serve     --listen a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
@@ -991,8 +1131,9 @@ const USAGE: &str = "kvfetcher <serve|fetch|stats|repair|calibrate|layout|real> 
              point; --quick shrinks the prefix for CI; --trace-out records
              every pipeline + scheduler event as a Chrome trace JSON)
   fetch     --config <toml> [--context tokens] [--bandwidth G]
-  fetch     --backend local|tcp|objstore [--remote a:p[,b:p...]] [--seed s]
+  fetch     --backend local|tcp|objstore|cas [--remote a:p[,b:p...]] [--seed s]
             [--chunks n] [--chunk-tokens t] [--replication r]
+            [--cas-dir dir] [--cas-shaped] [--passes n]
             [--read-policy primary-first|round-robin|least-inflight|estimator-weighted]
             [--sched-policy fifo|deadline-edf|fair-share|strict-priority]
             [--tenant name] [--deadline-ms n] [--trace-out file]
@@ -1003,8 +1144,22 @@ const USAGE: &str = "kvfetcher <serve|fetch|stats|repair|calibrate|layout|real> 
              reads per --read-policy and fails over between a chunk's
              replicas; any --sched-* flag routes the fetch through the
              multi-tenant scheduler and reports wall TTFT against the
-             deadline; --trace-out writes the run's transmit/decode/
-             restore spans as a Chrome trace JSON for ui.perfetto.dev)
+             deadline; --backend cas reads the content-addressed store
+             written by `publish` at --cas-dir through an LRU edge
+             cache, --cas-shaped applies the [objstore] latency model to
+             cache misses, and --passes n re-runs the fetch sharing one
+             edge cache so a warm pass must record hits; --trace-out
+             writes the run's transmit/decode/restore spans as a Chrome
+             trace JSON for ui.perfetto.dev)
+  publish   --cas-dir <dir> [--seed s] [--chunks n] [--chunk-tokens t]
+            [--min-dedup ratio]
+            (chunk the demo prefix into the content-addressed store: one
+             immutable write-once object per chunk resolution variant,
+             deduplicated by content digest against everything already
+             stored, plus a versioned manifest keyed by the prefix hash
+             chain; prints new-vs-shared objects and the store-wide
+             dedup ratio, and --min-dedup gates that ratio via the exit
+             code)
   stats     --remote a:p[,b:p...] [--watch] [--interval-secs n]
             (poll every shard's NodeStats into one fleet table: chunks,
              bytes, inflight/peak, busy refusals, evictions, served
@@ -1026,6 +1181,7 @@ fn main() {
     match args.first().map(String::as_str) {
         Some("serve") => cmd_serve(&args[1..]),
         Some("fetch") => cmd_fetch(&args[1..]),
+        Some("publish") => cmd_publish(&args[1..]),
         Some("stats") => cmd_stats(&args[1..]),
         Some("repair") => cmd_repair(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),

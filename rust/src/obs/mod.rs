@@ -15,7 +15,10 @@
 //!   scheduler (queue-cap and credit-deficit sheds are distinct),
 //! * **busy / failover / capacity instants** from the remote source's
 //!   replica walk,
-//! * **repair pull/re-put instants** from anti-entropy passes.
+//! * **repair pull/re-put instants** from anti-entropy passes,
+//! * **manifest-resolve / object-get spans** plus cache
+//!   hit/miss/evict instants from the content-addressed
+//!   [`crate::cas::CasSource`] delivery path.
 //!
 //! The recorder exports Chrome trace-event JSON
 //! ([`TraceRecorder::to_chrome_json`]) loadable in `ui.perfetto.dev`
@@ -88,6 +91,9 @@ pub enum Track {
     Source,
     /// Anti-entropy repair traffic (pulls and re-puts).
     Repair,
+    /// The content-addressed delivery path (manifest resolves, object
+    /// GETs, edge-cache hit/miss/evict).
+    Cas,
 }
 
 impl Track {
@@ -100,6 +106,7 @@ impl Track {
             Track::Sched => 4,
             Track::Source => 5,
             Track::Repair => 6,
+            Track::Cas => 7,
         }
     }
 
@@ -112,13 +119,22 @@ impl Track {
             Track::Sched => "scheduler",
             Track::Source => "source",
             Track::Repair => "repair",
+            Track::Cas => "cas",
         }
     }
 
     /// Every track, in `tid` order (the exporter emits one thread-name
     /// metadata record per entry).
-    pub fn all() -> [Track; 6] {
-        [Track::Transmit, Track::Decode, Track::Restore, Track::Sched, Track::Source, Track::Repair]
+    pub fn all() -> [Track; 7] {
+        [
+            Track::Transmit,
+            Track::Decode,
+            Track::Restore,
+            Track::Sched,
+            Track::Source,
+            Track::Repair,
+            Track::Cas,
+        ]
     }
 }
 
@@ -382,11 +398,11 @@ mod tests {
         let doc = rec.to_chrome_json();
         let parsed = Json::parse(&doc.to_string()).expect("export parses");
         let evs = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
-        // 1 process + 6 thread metadata records + 2 events
-        assert_eq!(evs.len(), 1 + 6 + 2);
+        // 1 process + 7 thread metadata records + 2 events
+        assert_eq!(evs.len(), 1 + 7 + 2);
         let metas: Vec<&Json> =
             evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("M")).collect();
-        assert_eq!(metas.len(), 7);
+        assert_eq!(metas.len(), 8);
         let x = evs
             .iter()
             .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))

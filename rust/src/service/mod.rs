@@ -22,8 +22,9 @@
 //! * [`source`] — the transport-backend registry: a [`Backend`] enum +
 //!   [`SourceFactory`] trait mapping config strings onto
 //!   [`crate::fetcher::TransportSource`] impls (in-process store, TCP
-//!   shards, object-store-shaped), so `ExecMode::Pipelined` streams and
-//!   restores *real bytes* while its virtual timeline stays
+//!   shards, object-store-shaped, and the content-addressed
+//!   [`crate::cas::CasSource`] CDN path), so `ExecMode::Pipelined`
+//!   streams and restores *real bytes* while its virtual timeline stays
 //!   bit-identical to the analytic planner. Replicated TCP fleets
 //!   balance reads under a pluggable `ReadPolicy`;
 //! * [`repair`] — the anti-entropy scanner: diff every chunk's holder

@@ -1,6 +1,7 @@
 //! Transport backends: where the pipelined executor's transmit stage
 //! gets real chunk bytes from, and the registry that selects one by
-//! config string (`[network] backend = "tcp" | "local" | "objstore"`).
+//! config string
+//! (`[network] backend = "tcp" | "local" | "objstore" | "cas"`).
 //!
 //! * [`LocalSource`] reads an in-process [`StorageNode`] — the
 //!   reference the remote paths must restore bit-identically against;
@@ -22,6 +23,11 @@
 //!   store (per-request latency plus a throughput ceiling) — the
 //!   ROADMAP's "object-store-shaped `TransportSource`" behind the same
 //!   wire payloads;
+//! * [`crate::cas::CasSource`] (built here by the `cas` factory) is
+//!   the content-addressed CDN path: a per-prefix manifest resolves
+//!   chunks to immutable digest-keyed objects GET from a
+//!   [`crate::cas::DirStore`] through an LRU edge cache, with every
+//!   object digest-verified before decode;
 //! * [`SourceRegistry`] maps a [`Backend`] onto a [`SourceFactory`],
 //!   so the CLI / config / tests select transports uniformly instead
 //!   of hard-wiring constructors per entry point. Custom factories
@@ -511,6 +517,9 @@ pub enum Backend {
     Tcp,
     /// Latency/throughput-shaped object store ([`ObjectStoreSource`]).
     ObjStore,
+    /// Content-addressed manifest + object store — the CDN path
+    /// ([`crate::cas::CasSource`]).
+    Cas,
 }
 
 impl Backend {
@@ -520,6 +529,7 @@ impl Backend {
             "local" => Some(Backend::Local),
             "tcp" | "remote" => Some(Backend::Tcp),
             "objstore" | "object-store" | "obj" => Some(Backend::ObjStore),
+            "cas" | "cdn" => Some(Backend::Cas),
             _ => None,
         }
     }
@@ -530,6 +540,7 @@ impl Backend {
             Backend::Local => "local",
             Backend::Tcp => "tcp",
             Backend::ObjStore => "objstore",
+            Backend::Cas => "cas",
         }
     }
 }
@@ -572,6 +583,18 @@ pub struct SourceSpec {
     pub node: Option<Arc<Mutex<StorageNode>>>,
     /// Object-store backend: its wall-clock shape.
     pub objstore: ObjStoreShape,
+    /// CAS backend: root directory of the published object store.
+    pub cas_dir: Option<String>,
+    /// CAS backend: a shared edge cache. Reusing one `Arc` across
+    /// sources/passes is what makes warm fetches hit; `None` gives the
+    /// source a private cache of `cas_cache_bytes`.
+    pub cas_cache: Option<Arc<crate::cas::EdgeCache>>,
+    /// CAS backend: capacity of the private edge cache built when
+    /// `cas_cache` is `None` (0 falls back to the `[cas]` default).
+    pub cas_cache_bytes: usize,
+    /// CAS backend: shape cache-miss GETs like an object store;
+    /// `None` (default) serves at raw filesystem speed.
+    pub cas_shape: Option<ObjStoreShape>,
     /// Scheduling class of the requests this source will serve.
     /// Built-in factories don't consume it (ordering happens in
     /// [`crate::fetcher::FetchScheduler`], above the transport), but it
@@ -694,22 +717,63 @@ impl SourceFactory for ObjStoreFactory {
     }
 }
 
+struct CasFactory;
+
+impl SourceFactory for CasFactory {
+    fn backend(&self) -> Backend {
+        Backend::Cas
+    }
+
+    fn create(&self, spec: &SourceSpec) -> Result<Box<dyn TransportSource>, FetchError> {
+        use crate::cas::{CasConfig, CasSource, DirStore, EdgeCache, Manifest};
+        let dir = spec.cas_dir.as_deref().filter(|d| !d.is_empty()).ok_or_else(|| {
+            FetchError::transport("cas backend needs an object-store directory (cas_dir)")
+        })?;
+        let store = DirStore::open(dir)
+            .map_err(|e| FetchError::transport(format!("cannot open cas store {dir:?}: {e}")))?;
+        let key = Manifest::key_for(&spec.hashes);
+        let bytes = store
+            .get_manifest(&key)
+            .map_err(|e| FetchError::transport(format!("cas manifest GET {key}: {e}")))?
+            .ok_or_else(|| {
+                FetchError::transport(format!(
+                    "no manifest for this prefix chain in {dir:?} — publish it first"
+                ))
+            })?;
+        let manifest = Manifest::decode(&bytes)?;
+        let cache = spec.cas_cache.clone().unwrap_or_else(|| {
+            let cap = if spec.cas_cache_bytes > 0 {
+                spec.cas_cache_bytes
+            } else {
+                CasConfig::default().cache_bytes
+            };
+            Arc::new(EdgeCache::new(cap))
+        });
+        Ok(Box::new(
+            CasSource::new(store, manifest, spec.hashes.clone(), spec.ladder()?, cache)?
+                .with_shape(spec.cas_shape)
+                .with_recorder(spec.recorder.clone()),
+        ))
+    }
+}
+
 /// The pluggable transport registry: one factory per [`Backend`],
 /// selected by enum or config string. [`SourceRegistry::with_defaults`]
-/// installs the three built-ins; later registrations shadow earlier
+/// installs the four built-ins; later registrations shadow earlier
 /// ones, so deployments can swap a backend without forking call sites.
 pub struct SourceRegistry {
     factories: Vec<Box<dyn SourceFactory>>,
 }
 
 impl SourceRegistry {
-    /// A registry with the three built-in factories installed.
+    /// A registry with the four built-in factories installed.
     pub fn with_defaults() -> SourceRegistry {
         SourceRegistry {
             factories: vec![
                 Box::new(LocalFactory),
                 Box::new(TcpFactory),
                 Box::new(ObjStoreFactory),
+                Box::new(CasFactory),
             ],
         }
     }
@@ -780,10 +844,11 @@ mod tests {
 
     #[test]
     fn backend_names_roundtrip() {
-        for b in [Backend::Local, Backend::Tcp, Backend::ObjStore] {
+        for b in [Backend::Local, Backend::Tcp, Backend::ObjStore, Backend::Cas] {
             assert_eq!(Backend::by_name(b.name()), Some(b));
         }
         assert_eq!(Backend::by_name("remote"), Some(Backend::Tcp));
+        assert_eq!(Backend::by_name("cdn"), Some(Backend::Cas));
         assert_eq!(Backend::by_name("rdma"), None);
     }
 
@@ -791,7 +856,7 @@ mod tests {
     fn registry_defaults_cover_all_backends() {
         let reg = SourceRegistry::with_defaults();
         let backends = reg.backends();
-        for b in [Backend::Local, Backend::Tcp, Backend::ObjStore] {
+        for b in [Backend::Local, Backend::Tcp, Backend::ObjStore, Backend::Cas] {
             assert!(backends.contains(&b), "{b} missing");
         }
     }
@@ -808,6 +873,13 @@ mod tests {
                 }
                 other => panic!("{name}: wrong result {:?}", other.err()),
             }
+        }
+        // cas without a store directory
+        match reg.create_by_name("cas", &spec) {
+            Err(FetchError::Transport { detail, .. }) => {
+                assert!(detail.contains("directory"), "{detail}")
+            }
+            other => panic!("cas: wrong result {:?}", other.err()),
         }
         // tcp without addresses
         match reg.create_by_name("tcp", &spec) {

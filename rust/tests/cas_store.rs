@@ -1,0 +1,309 @@
+//! Content-addressed store contracts (ISSUE 8): publish the demo
+//! prefix into a `DirStore`, fetch it back through the `cas` backend,
+//! and hold the CDN-path promises the CLI and CI rely on.
+//!
+//! Acceptance:
+//! * a `cas` fetch restores bit-identically to the `local` backend and
+//!   to ground truth — the store round-trips encoded payloads exactly;
+//! * two prefixes sharing a system-prompt head store the shared chunks'
+//!   objects exactly once (cross-prefix dedup ratio > 1) and both still
+//!   restore bit-exactly;
+//! * a second fetch through the same edge cache is served from memory
+//!   (hits == objects, no new store GETs);
+//! * truncated or corrupted manifests and digest-mismatched objects
+//!   fail with typed `CodecError` / `FetchError` values — never a
+//!   panic, never a silently wrong restore.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::cas::{
+    publish_prefix, store_dedup, CasSource, DirStore, EdgeCache, Manifest, PublishReport,
+};
+use kvfetcher::codec::CodecError;
+use kvfetcher::engine::ExecMode;
+use kvfetcher::fetcher::{
+    FetchConfig, FetchError, FetchReport, FetchRequest, Fetcher, ResolutionPolicy, TransportSource,
+};
+use kvfetcher::kvstore::StorageNode;
+use kvfetcher::net::BandwidthTrace;
+use kvfetcher::service::{
+    demo_prefix, Backend, DemoPrefix, SourceRegistry, SourceSpec, DEMO_HEADS, DEMO_HEAD_DIM,
+    DEMO_LADDER, DEMO_PLANES,
+};
+
+/// Fresh per-test scratch directory (no tempfile dep in a std-only
+/// crate); recreated empty so reruns never see stale objects.
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("kvfetcher-cas-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create scratch dir");
+    dir
+}
+
+/// Publish the demo prefix `(seed, n_chunks, 32)` at both demo
+/// resolutions and return it with the publish accounting.
+fn publish_demo(store: &DirStore, seed: u64, n_chunks: usize) -> (DemoPrefix, PublishReport) {
+    let demo = demo_prefix(seed, n_chunks, 32);
+    let mut node = StorageNode::new(demo.chunk_tokens);
+    for c in &demo.chunks {
+        node.register(c.clone());
+    }
+    let report =
+        publish_prefix(store, &node, &demo.hashes, &["144p", "240p"]).expect("publish demo");
+    (demo, report)
+}
+
+fn demo_request(demo: &DemoPrefix) -> FetchRequest {
+    let total_tokens = demo.hashes.len() * demo.chunk_tokens;
+    FetchRequest::new(total_tokens, total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2)
+        .with_hashes(demo.hashes.clone())
+        .resolution(ResolutionPolicy::Fixed(3))
+        .exec(ExecMode::Pipelined)
+}
+
+/// One pipelined demo fetch through the given source.
+fn fetch_via(
+    demo: &DemoPrefix,
+    source: Box<dyn TransportSource>,
+) -> Result<FetchReport, FetchError> {
+    let fetcher = Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .fetch_config(FetchConfig { chunk_tokens: demo.chunk_tokens, ..Default::default() })
+        .bandwidth(BandwidthTrace::constant(8.0))
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .build();
+    let mut session = fetcher.session(demo_request(demo)).with_source(source);
+    session.run()?;
+    Ok(session.take_report().expect("run stores a report"))
+}
+
+/// Open a CAS source on the published store for the demo's chain.
+fn cas_source(dir: &Path, demo: &DemoPrefix, cache: Arc<EdgeCache>) -> CasSource {
+    let store = DirStore::open(dir).expect("open store");
+    let key = Manifest::key_for(&demo.hashes);
+    let bytes = store.get_manifest(&key).expect("manifest IO").expect("manifest published");
+    let manifest = Manifest::decode(&bytes).expect("manifest decodes");
+    CasSource::new(store, manifest, demo.hashes.clone(), DEMO_LADDER, cache).expect("chain matches")
+}
+
+#[test]
+fn cas_fetch_is_bit_identical_to_local_backend() {
+    let dir = tmpdir("roundtrip");
+    let (demo, pub_report) = publish_demo(&DirStore::open(&dir).expect("open"), 42, 4);
+    // 4 chunks x 2 resolutions, nothing published before: all new
+    assert_eq!(pub_report.chunks, 4);
+    assert_eq!(pub_report.objects_new, 8);
+    assert_eq!(pub_report.objects_shared, 0);
+
+    let cache = Arc::new(EdgeCache::new(64 << 20));
+    let cas = fetch_via(&demo, Box::new(cas_source(&dir, &demo, cache))).expect("cas fetch");
+    assert_eq!(cas.backend, Some("cas"));
+    assert_eq!(cas.restored.len(), 4);
+
+    let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+    spec.chunk_tokens = demo.chunk_tokens;
+    let mut node = StorageNode::new(demo.chunk_tokens);
+    for c in &demo.chunks {
+        node.register(c.clone());
+    }
+    spec.node = Some(Arc::new(std::sync::Mutex::new(node)));
+    let local = SourceRegistry::with_defaults()
+        .create(Backend::Local, &spec)
+        .expect("local source");
+    let local = fetch_via(&demo, local).expect("local fetch");
+
+    for ((c, l), truth) in cas.restored.iter().zip(&local.restored).zip(&demo.quants) {
+        assert_eq!(c.idx, l.idx);
+        assert_eq!(c.quant.data, truth.data, "cas restore vs ground truth");
+        assert_eq!(c.quant.scales, truth.scales);
+        assert_eq!(c.quant.data, l.quant.data, "cas vs local backend");
+    }
+    // a CAS GET has no shard fleet behind it; timings still cover every
+    // chunk with real wire bytes
+    assert_eq!(cas.wire_timings.len(), 4);
+    for t in &cas.wire_timings {
+        assert_eq!(t.shard, None);
+        assert!(t.wire_bytes > 0);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The paper's shared-system-prompt scenario: two prefixes with the
+/// same seed share all leading chunks, so the second publish stores
+/// zero new bytes for them — the store holds each shared object once.
+#[test]
+fn shared_prefix_head_is_stored_exactly_once() {
+    let dir = tmpdir("dedup");
+    let store = DirStore::open(&dir).expect("open");
+    let (short, first) = publish_demo(&store, 7, 3);
+    assert_eq!(first.objects_new, 6);
+    let (long, second) = publish_demo(&store, 7, 6);
+    // the 3 shared head chunks (x 2 resolutions) dedup against the
+    // first publish; only the 3 new tail chunks write objects
+    assert_eq!(second.objects_shared, 6, "shared system-prompt head must dedup");
+    assert_eq!(second.objects_new, 6);
+    assert!(second.bytes_shared > 0);
+
+    let dedup = store_dedup(&store).expect("scan");
+    assert_eq!(dedup.manifests, 2);
+    assert_eq!(dedup.logical_objects, 18);
+    assert_eq!(dedup.physical_objects, 12);
+    assert!(dedup.ratio() > 1.0, "cross-prefix dedup ratio must exceed 1, got {}", dedup.ratio());
+
+    // dedup is invisible to readers: both prefixes restore bit-exactly
+    for demo in [&short, &long] {
+        let cache = Arc::new(EdgeCache::new(64 << 20));
+        let report = fetch_via(demo, Box::new(cas_source(&dir, demo, cache))).expect("fetch");
+        assert_eq!(report.restored.len(), demo.hashes.len());
+        for (d, truth) in report.restored.iter().zip(&demo.quants) {
+            assert_eq!(d.quant.data, truth.data);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_edge_cache_serves_the_second_pass() {
+    let dir = tmpdir("cache");
+    let (demo, _) = publish_demo(&DirStore::open(&dir).expect("open"), 9, 4);
+    let cache = Arc::new(EdgeCache::new(64 << 20));
+
+    fetch_via(&demo, Box::new(cas_source(&dir, &demo, cache.clone()))).expect("cold pass");
+    let cold = cache.stats();
+    assert_eq!(cold.misses, 4, "cold pass GETs every object from the store");
+    assert_eq!(cold.hits, 0);
+    assert_eq!(cold.evictions, 0);
+    assert!(cold.used_bytes > 0);
+
+    let warm_report =
+        fetch_via(&demo, Box::new(cas_source(&dir, &demo, cache.clone()))).expect("warm pass");
+    let warm = cache.stats();
+    assert_eq!(warm.hits, 4, "warm pass must be served from the edge cache");
+    assert_eq!(warm.misses, 4, "no new store GETs on the warm pass");
+    for (d, truth) in warm_report.restored.iter().zip(&demo.quants) {
+        assert_eq!(d.quant.data, truth.data, "cached bytes restore bit-exactly");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Manifest robustness: every truncation fails typed, header corruption
+/// fails typed, and a flipped chain hash is caught at source-open time
+/// (the manifest no longer matches the requested chain).
+#[test]
+fn corrupt_manifests_fail_typed_never_panic() {
+    let dir = tmpdir("manifest");
+    let store = DirStore::open(&dir).expect("open");
+    let (demo, _) = publish_demo(&store, 5, 2);
+    let key = Manifest::key_for(&demo.hashes);
+    let bytes = store.get_manifest(&key).expect("IO").expect("published");
+    Manifest::decode(&bytes).expect("the untouched manifest decodes");
+
+    for cut in 0..bytes.len() {
+        match Manifest::decode(&bytes[..cut]) {
+            Err(CodecError::Truncated(_) | CodecError::Malformed(_)) => {}
+            Ok(_) => panic!("truncation at {cut} must not decode"),
+            Err(e) => panic!("truncation at {cut}: unexpected error {e}"),
+        }
+    }
+    // header corruption: magic and version are both load-bearing
+    let mut bad_magic = bytes.clone();
+    bad_magic[0] ^= 0xff;
+    assert!(matches!(Manifest::decode(&bad_magic), Err(CodecError::Malformed(_))));
+    let mut future_version = bytes.clone();
+    future_version[4] = 9;
+    assert!(matches!(Manifest::decode(&future_version), Err(CodecError::Malformed(_))));
+
+    // a flipped chain hash still decodes (the bytes are self-
+    // consistent) but can never serve the requested chain: layout is
+    // magic(4) version(2) chunk_tokens(4) n_res(2) "144p"(6) "240p"(6)
+    // n_chunks(4), so chunk 0's hash starts at offset 28
+    let mut wrong_chain = bytes.clone();
+    wrong_chain[28] ^= 0xff;
+    let manifest = Manifest::decode(&wrong_chain).expect("self-consistent bytes decode");
+    let err = CasSource::new(
+        DirStore::open(&dir).expect("open"),
+        manifest,
+        demo.hashes.clone(),
+        DEMO_LADDER,
+        Arc::new(EdgeCache::new(1 << 20)),
+    )
+    .expect_err("a diverged chain must be rejected at open");
+    match err {
+        FetchError::Decode { detail, .. } => {
+            assert!(detail.contains("diverges"), "unexpected detail: {detail}")
+        }
+        other => panic!("expected a typed Decode error, got {other}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Object robustness: any corrupted stored object is caught by digest
+/// verification as a typed decode failure (never restored wrong), and
+/// a deleted object surfaces as a typed transport failure naming the
+/// dangling reference.
+#[test]
+fn corrupt_or_missing_objects_fail_typed() {
+    let dir = tmpdir("objects");
+    let (demo, _) = publish_demo(&DirStore::open(&dir).expect("open"), 13, 2);
+
+    let objects_dir = dir.join("objects");
+    let mut object_files: Vec<PathBuf> = std::fs::read_dir(&objects_dir)
+        .expect("objects dir")
+        .map(|e| e.expect("dir entry").path())
+        .collect();
+    object_files.sort();
+    assert_eq!(object_files.len(), 4);
+
+    // corrupt one byte in the middle of every object: the digest check
+    // must catch each, whichever object the fixed-res fetch reads first
+    let originals: Vec<Vec<u8>> =
+        object_files.iter().map(|p| std::fs::read(p).expect("read object")).collect();
+    for (path, orig) in object_files.iter().zip(&originals) {
+        let mut bad = orig.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x40;
+        std::fs::write(path, &bad).expect("corrupt object");
+    }
+    let cache = Arc::new(EdgeCache::new(1 << 20));
+    let err = fetch_via(&demo, Box::new(cas_source(&dir, &demo, cache)))
+        .expect_err("digest mismatch must fail the fetch");
+    match err {
+        FetchError::Decode { chunk, detail } => {
+            assert!(chunk.is_some(), "the failure names the chunk it struck at");
+            assert!(detail.contains("digest"), "unexpected detail: {detail}");
+        }
+        other => panic!("expected a typed Decode error, got {other}"),
+    }
+
+    // restore the bytes, then delete exactly the object the fixed-res
+    // fetch reads (chunk 0 at 240p, per the manifest): a dangling
+    // manifest reference is a transport-level miss, not a decode fault
+    for (path, orig) in object_files.iter().zip(&originals) {
+        std::fs::write(path, orig).expect("restore object");
+    }
+    let cache = Arc::new(EdgeCache::new(1 << 20));
+    fetch_via(&demo, Box::new(cas_source(&dir, &demo, cache))).expect("restored store fetches");
+    let store = DirStore::open(&dir).expect("open");
+    let manifest = Manifest::decode(
+        &store.get_manifest(&Manifest::key_for(&demo.hashes)).expect("IO").expect("published"),
+    )
+    .expect("decode");
+    let res_pos =
+        manifest.resolutions.iter().position(|r| r == "240p").expect("240p is published");
+    let victim = manifest.chunks[0].objects[res_pos].key;
+    std::fs::remove_file(objects_dir.join(victim.to_hex())).expect("delete referenced object");
+    let cache = Arc::new(EdgeCache::new(1 << 20));
+    let err = fetch_via(&demo, Box::new(cas_source(&dir, &demo, cache)))
+        .expect_err("a dangling manifest ref must fail the fetch");
+    match err {
+        FetchError::Transport { chunk, detail, .. } => {
+            assert_eq!(chunk, Some(0), "the miss names the chunk");
+            assert!(detail.contains("not in the store"), "unexpected detail: {detail}");
+        }
+        other => panic!("expected a typed Transport error, got {other}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

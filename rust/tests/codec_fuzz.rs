@@ -1,8 +1,11 @@
-//! Decoder robustness: the video decoder and entropy decoder parse
-//! bytes that arrive over the network — they must *never* panic,
-//! whatever the input. Random inputs, truncations, and single-byte
-//! corruptions of valid streams must all return Ok or Err.
+//! Decoder robustness: the video decoder, entropy decoder, and the
+//! CAS wire parsers (ISSUE 8) parse bytes that arrive over the network
+//! or from disk — they must *never* panic, whatever the input. Random
+//! inputs, truncations, and single-byte corruptions of valid streams
+//! must all return Ok or Err.
 
+use kvfetcher::cas::object::{decode_object, encode_object};
+use kvfetcher::cas::{Digest, Manifest, ManifestChunk, ObjectRef};
 use kvfetcher::codec::{decode_video, encode_video, rans, CodecConfig, Frame};
 use kvfetcher::util::proptest::gen_bytes;
 use kvfetcher::util::Prng;
@@ -58,6 +61,60 @@ fn decode_never_panics_on_corrupted_streams() {
         let mut ext = valid.clone();
         ext.extend(gen_bytes(&mut rng, 64, false));
         let _ = std::hint::black_box(decode_video(&ext));
+    }
+}
+
+#[test]
+fn cas_parsers_never_panic_on_random_bytes() {
+    let mut rng = Prng::new(4000);
+    for _ in 0..500 {
+        let len = rng.below(2048) as usize;
+        let data = gen_bytes(&mut rng, len, false);
+        let _ = std::hint::black_box(Manifest::decode(&data));
+        let _ = std::hint::black_box(decode_object(&data));
+    }
+}
+
+#[test]
+fn cas_parsers_never_panic_on_corrupted_streams() {
+    let mut rng = Prng::new(5000);
+    let object = encode_object(&[1.0, 0.5], &[vec![1, 2, 3], vec![4, 5]]);
+    decode_object(&object).expect("valid object must decode");
+    let manifest = Manifest {
+        chunk_tokens: 32,
+        resolutions: vec!["144p".into(), "240p".into()],
+        chunks: (0..3u64)
+            .map(|i| ManifestChunk {
+                hash: 0x1000 + i,
+                tokens: 32,
+                objects: vec![
+                    ObjectRef { key: Digest::of(&[i as u8]), bytes: 10 },
+                    ObjectRef { key: Digest::of(&[i as u8, 1]), bytes: 11 },
+                ],
+            })
+            .collect(),
+    }
+    .encode();
+    Manifest::decode(&manifest).expect("valid manifest must decode");
+    // each parser also sees the *other* format's bytes: cross-feeding
+    // must fail typed, never panic
+    for valid in [object, manifest] {
+        for _ in 0..200 {
+            let mut bad = valid.clone();
+            let i = rng.below(bad.len() as u64) as usize;
+            bad[i] ^= 1 << rng.below(8);
+            let _ = std::hint::black_box(Manifest::decode(&bad));
+            let _ = std::hint::black_box(decode_object(&bad));
+        }
+        for _ in 0..50 {
+            let cut = rng.below(valid.len() as u64) as usize;
+            let _ = std::hint::black_box(Manifest::decode(&valid[..cut]));
+            let _ = std::hint::black_box(decode_object(&valid[..cut]));
+        }
+        let mut ext = valid.clone();
+        ext.extend(gen_bytes(&mut rng, 64, false));
+        let _ = std::hint::black_box(Manifest::decode(&ext));
+        let _ = std::hint::black_box(decode_object(&ext));
     }
 }
 

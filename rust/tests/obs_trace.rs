@@ -14,7 +14,10 @@
 //! * the transmit span's `shard` arg matches the serving replica the
 //!   source reported in `WireTiming.shard`;
 //! * with no recorder attached the fetch restores bit-identically on
-//!   an unchanged virtual timeline — tracing off costs nothing.
+//!   an unchanged virtual timeline — tracing off costs nothing;
+//! * (ISSUE 8) the CAS path lands `manifest_resolve` / `object_get`
+//!   spans and `cache_hit` / `cache_miss` instants on its own track,
+//!   and they survive into the Perfetto export.
 
 use std::sync::Arc;
 
@@ -104,8 +107,8 @@ fn span_of<'e>(events: &'e [TraceEvent], track: Track, name: &str, chunk: u64) -
 }
 
 /// Exported Chrome JSON parses back and is schema-shaped: metadata
-/// names the process and all six tracks, slices carry `dur`, instants
-/// carry `s:"t"`, and every event sits on a declared track.
+/// names the process and every declared track, slices carry `dur`,
+/// instants carry `s:"t"`, and every event sits on a declared track.
 #[test]
 fn chrome_export_parses_and_is_schema_shaped() {
     let demo = demo_prefix(21, 4, 32);
@@ -218,6 +221,73 @@ fn span_triples_cover_chunks_nested_with_shard_attribution() {
     for s in servers {
         s.shutdown();
     }
+}
+
+/// CAS-path observability: across a cold and a warm pass sharing one
+/// edge cache, every chunk gets exactly one `manifest_resolve` +
+/// `object_get` span per pass on the cas track, the cold pass records
+/// one `cache_miss` per chunk and the warm pass one `cache_hit`, and
+/// the export carries the cas track and all four event names.
+#[test]
+fn cas_spans_and_cache_instants_cover_both_passes() {
+    use kvfetcher::cas::{publish_prefix, CasSource, DirStore, EdgeCache, Manifest};
+
+    let n_chunks = 4;
+    let demo = demo_prefix(31, n_chunks, 32);
+    let dir = std::env::temp_dir().join(format!("kvfetcher-obs-cas-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = DirStore::open(&dir).expect("open store");
+    let mut node = StorageNode::new(demo.chunk_tokens);
+    for c in &demo.chunks {
+        node.register(c.clone());
+    }
+    publish_prefix(&store, &node, &demo.hashes, &["144p", "240p"]).expect("publish");
+
+    let rec = TraceRecorder::new(1 << 16);
+    let cache = Arc::new(EdgeCache::new(64 << 20));
+    for _pass in 0..2 {
+        let store = DirStore::open(&dir).expect("open store");
+        let key = Manifest::key_for(&demo.hashes);
+        let manifest =
+            Manifest::decode(&store.get_manifest(&key).expect("IO").expect("published"))
+                .expect("manifest decodes");
+        let source =
+            CasSource::new(store, manifest, demo.hashes.clone(), DEMO_LADDER, cache.clone())
+                .expect("chain matches")
+                .with_recorder(Some(rec.clone()));
+        let fetcher = Fetcher::builder()
+            .profile(SystemProfile::kvfetcher())
+            .fetch_config(FetchConfig { chunk_tokens: demo.chunk_tokens, ..Default::default() })
+            .bandwidth(BandwidthTrace::constant(8.0))
+            .decode_pool(DecodePool::new(7, h20_table()))
+            .recorder(Some(rec.clone()))
+            .build();
+        let mut session = fetcher.session(demo_request(&demo)).with_source(Box::new(source));
+        session.run().expect("cas fetch");
+    }
+
+    let events = rec.events();
+    let cas: Vec<&TraceEvent> = events.iter().filter(|e| e.track == Track::Cas).collect();
+    for chunk in 0..n_chunks as u64 {
+        for name in ["manifest_resolve", "object_get"] {
+            let spans: Vec<_> = cas
+                .iter()
+                .filter(|e| e.name == name && u64_arg(e, "chunk") == Some(chunk))
+                .collect();
+            assert_eq!(spans.len(), 2, "chunk {chunk}: one {name} span per pass");
+            assert!(spans.iter().all(|e| e.dur_us.is_some()), "{name} must be a span");
+        }
+    }
+    let count = |name: &str| cas.iter().filter(|e| e.name == name).count();
+    assert_eq!(count("cache_miss"), n_chunks, "the cold pass misses once per chunk");
+    assert_eq!(count("cache_hit"), n_chunks, "the warm pass hits once per chunk");
+    assert_eq!(count("cache_evict"), 0, "a 64 MiB cache never evicts the demo");
+
+    let doc = rec.to_chrome_json().to_string();
+    for needle in ["\"cas\"", "manifest_resolve", "object_get", "cache_hit", "cache_miss"] {
+        assert!(doc.contains(needle), "export must mention {needle}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// Tracing off is absent, not muted: a run with no recorder restores
