@@ -5,8 +5,16 @@
 //! policy the edge needs is eviction — no invalidation, no TTLs, no
 //! revalidation round trips. Hit/miss/evict counters feed the `obs`
 //! trace instants and the CLI's cache summary line.
+//!
+//! Recency is tracked incrementally: alongside the byte map, a
+//! tick-ordered `BTreeMap<u64, Digest>` mirrors every entry under its
+//! last-touch tick, so an eviction pops the smallest tick in O(log n)
+//! instead of scanning the whole map under the mutex — an eviction
+//! storm of many small objects stays O(k log n) rather than O(k·n).
+//! Ticks are unique and monotone (every touch takes a fresh one), so
+//! the two structures stay in bijection.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
 use super::digest::Digest;
@@ -31,9 +39,21 @@ struct Inner {
     used: u64,
     tick: u64,
     map: HashMap<Digest, (u64, Vec<u8>)>,
+    /// Recency index: last-touch tick -> key, one entry per cached
+    /// object (ticks are unique), smallest tick = LRU victim.
+    lru: BTreeMap<u64, Digest>,
     hits: u64,
     misses: u64,
     evictions: u64,
+}
+
+impl Inner {
+    /// Move `key`'s recency slot from `old_tick` to `tick` (which must
+    /// be fresh), keeping `map` and `lru` in bijection.
+    fn retouch(&mut self, key: Digest, old_tick: u64, tick: u64) {
+        self.lru.remove(&old_tick);
+        self.lru.insert(tick, key);
+    }
 }
 
 /// Byte-capacity-bounded LRU cache of immutable objects, safe to share
@@ -53,6 +73,7 @@ impl EdgeCache {
                 used: 0,
                 tick: 0,
                 map: HashMap::new(),
+                lru: BTreeMap::new(),
                 hits: 0,
                 misses: 0,
                 evictions: 0,
@@ -68,13 +89,15 @@ impl EdgeCache {
         let tick = g.tick;
         let found = match g.map.get_mut(key) {
             Some((last, bytes)) => {
+                let old = *last;
                 *last = tick;
-                Some(bytes.clone())
+                Some((old, bytes.clone()))
             }
             None => None,
         };
         match found {
-            Some(b) => {
+            Some((old, b)) => {
+                g.retouch(*key, old, tick);
                 g.hits += 1;
                 Some(b)
             }
@@ -98,14 +121,18 @@ impl EdgeCache {
             return 0;
         }
         if let Some((last, _)) = g.map.get_mut(&key) {
+            let old = *last;
             *last = tick;
+            g.retouch(key, old, tick);
             return 0;
         }
         let mut evicted = 0u64;
         while g.used + size > g.cap {
-            let Some((&victim, _)) = g.map.iter().min_by_key(|(_, (last, _))| *last) else {
+            // O(log n) victim selection: the smallest tick is the LRU
+            let Some((&victim_tick, &victim)) = g.lru.iter().next() else {
                 break;
             };
+            g.lru.remove(&victim_tick);
             if let Some((_, b)) = g.map.remove(&victim) {
                 g.used -= b.len() as u64;
                 evicted += 1;
@@ -113,6 +140,7 @@ impl EdgeCache {
         }
         g.used += size;
         g.map.insert(key, (tick, bytes));
+        g.lru.insert(tick, key);
         g.evictions += evicted;
         evicted
     }
@@ -171,6 +199,30 @@ mod tests {
         assert!(cache.get(&key(1)).is_some() && cache.get(&key(3)).is_some());
         assert_eq!(cache.stats().evictions, 1);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn eviction_storm_keeps_the_recency_index_and_byte_accounting_consistent() {
+        // many small objects cycling through a small cache: every insert
+        // evicts, and the recency index must keep map/lru in bijection
+        let cache = EdgeCache::new(1); // floors to 1024 bytes
+        for n in 0..100u8 {
+            cache.insert(key(n), vec![n; 300]);
+        }
+        // 1024 / 300 = 3 residents; the 3 most recent survive
+        assert_eq!(cache.len(), 3);
+        for n in 97..100u8 {
+            assert!(cache.get(&key(n)).is_some(), "object {n} is resident");
+        }
+        let s = cache.stats();
+        assert_eq!(s.used_bytes, 900);
+        assert_eq!(s.evictions, 97);
+        // a re-insert of a resident key only refreshes its slot...
+        assert_eq!(cache.insert(key(99), vec![99; 300]), 0);
+        // ...so 97 (now the LRU) is the next victim, not 99
+        assert_eq!(cache.insert(key(100), vec![1; 300]), 1);
+        assert!(cache.get(&key(97)).is_none());
+        assert!(cache.get(&key(99)).is_some());
     }
 
     #[test]

@@ -9,7 +9,7 @@ use crate::fetcher::{FetchConfig, PipelineConfig, ReadPolicy, SchedConfig, Sched
 use crate::net::BandwidthTrace;
 use crate::obs::ObsConfig;
 use crate::scheduler::SchedulerConfig;
-use crate::service::{AdmissionConfig, Backend, ObjStoreShape};
+use crate::service::{AdmissionConfig, Backend, ObjStoreShape, WritePolicy};
 use crate::trace::TraceConfig;
 use crate::util::config::Config;
 
@@ -28,6 +28,9 @@ pub struct ServiceConfig {
     /// `replication >= 2` (`primary-first` | `round-robin` |
     /// `least-inflight` | `estimator-weighted`).
     pub read_policy: ReadPolicy,
+    /// Write placement: how write-through and migration puts order the
+    /// candidate replicas (`ring-successor` | `least-used`).
+    pub write_policy: WritePolicy,
 }
 
 impl Default for ServiceConfig {
@@ -37,6 +40,7 @@ impl Default for ServiceConfig {
             max_conns: 0,
             replication: 1,
             read_policy: ReadPolicy::PrimaryFirst,
+            write_policy: WritePolicy::RingSuccessor,
         }
     }
 }
@@ -75,7 +79,7 @@ pub struct Experiment {
     /// object-store shape for cache-miss GETs.
     pub cas: CasConfig,
     /// Storage-node scaling (`[service] max_inflight / max_conns /
-    /// replication`).
+    /// replication / read_policy / write_policy`).
     pub service: ServiceConfig,
     /// Multi-tenant fetch scheduling (`[scheduler] policy / slots /
     /// queue_cap / deadline_ms / shed_retry_ms / fleet_rate_bytes /
@@ -213,6 +217,15 @@ impl Experiment {
                     ReadPolicy::PrimaryFirst
                 })
             },
+            write_policy: {
+                let name = c.get_str("service", "write_policy", "ring-successor");
+                WritePolicy::by_name(name).unwrap_or_else(|| {
+                    eprintln!(
+                        "config: unknown [service] write_policy = {name:?}; using ring-successor"
+                    );
+                    WritePolicy::RingSuccessor
+                })
+            },
         };
         let fetch_sched = SchedConfig {
             policy: {
@@ -294,6 +307,7 @@ mod tests {
         assert_eq!(e.service.max_conns, 0);
         assert_eq!(e.service.replication, 1);
         assert_eq!(e.service.read_policy, ReadPolicy::PrimaryFirst);
+        assert_eq!(e.service.write_policy, WritePolicy::RingSuccessor);
         assert_eq!(e.fetch_sched.policy, SchedPolicy::Fifo);
         assert_eq!(e.fetch_sched.slots, 4);
         assert_eq!(e.fetch_sched.queue_cap, 0);
@@ -331,6 +345,7 @@ max_inflight = 50000000
 max_conns = 32
 replication = 2
 read_policy = "least-inflight"
+write_policy = "least-used"
 [scheduler]
 fetching_aware = false
 policy = "fair-share"
@@ -378,6 +393,7 @@ capacity = 4096
         assert_eq!(e.service.max_conns, 32);
         assert_eq!(e.service.replication, 2);
         assert_eq!(e.service.read_policy, ReadPolicy::LeastInflight);
+        assert_eq!(e.service.write_policy, WritePolicy::LeastUsed);
         assert_eq!(e.fetch_sched.policy, SchedPolicy::FairShare);
         assert_eq!(e.fetch_sched.slots, 2);
         assert_eq!(e.fetch_sched.queue_cap, 64);

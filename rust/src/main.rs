@@ -27,6 +27,11 @@
 //!               chunk's holders against its replica set, re-put the
 //!               missing copies, and exit non-zero unless the fleet is
 //!               back at full replication
+//!   rebalance — grow or shrink a running fleet by one node: migrate
+//!               every chunk whose replica set changed onto the new
+//!               ring (reads fall back to old-ring holders meanwhile)
+//!               and exit non-zero unless the new map alone can serve
+//!               every chunk
 //!   calibrate — measure real-codec compression ratios per system
 //!   layout    — run the intra-frame layout search and print the table
 //!   real      — smoke-test the PJRT runtime on the AOT artifacts
@@ -46,7 +51,7 @@ use kvfetcher::fetcher::{ExecMode, FetchRequest, Fetcher, ReadPolicy, SchedPolic
 use kvfetcher::layout;
 use kvfetcher::obs::TraceRecorder;
 use kvfetcher::quant::quantize;
-use kvfetcher::service::Backend;
+use kvfetcher::service::{Backend, WritePolicy};
 use kvfetcher::tensor::KvCache;
 use kvfetcher::trace::generate;
 use kvfetcher::util::table::{fmt_bytes, fmt_secs, markdown};
@@ -102,6 +107,18 @@ fn read_policy_of(args: &[String], exp: &Experiment) -> ReadPolicy {
             })
         })
         .unwrap_or(exp.service.read_policy)
+}
+
+/// `--write-policy` flag, falling back to `[service] write_policy`.
+fn write_policy_of(args: &[String], exp: &Experiment) -> WritePolicy {
+    parse_flag(args, "--write-policy")
+        .map(|s| {
+            WritePolicy::by_name(&s).unwrap_or_else(|| {
+                eprintln!("--write-policy takes `ring-successor` or `least-used` (got {s:?})");
+                std::process::exit(2);
+            })
+        })
+        .unwrap_or(exp.service.write_policy)
 }
 
 /// `--sched-policy` flag, falling back to `[scheduler] policy`.
@@ -179,7 +196,9 @@ fn load_experiment(args: &[String]) -> Experiment {
 /// `--repair-every-secs N` runs a background anti-entropy pass over
 /// the whole fleet every N seconds. `--die-after-fetches N` injects a
 /// shard-0 death after N served chunk fetches (the CI failover round
-/// trip).
+/// trip). `--map-version v` overrides the shard-map version the node
+/// echoes in Stats replies (wire v5) — a node started mid-rebalance is
+/// launched under the grown map.
 fn cmd_serve_store(listen: &str, args: &[String]) {
     use kvfetcher::kvstore::{prefix_hashes, StorageNode};
     use kvfetcher::net::BandwidthTrace;
@@ -229,6 +248,10 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
     let empty = args.iter().any(|a| a == "--empty");
     let repair_every: Option<u64> = parse_flag(args, "--repair-every-secs")
         .map(|s| s.parse().expect("--repair-every-secs takes seconds"));
+    // a node started mid-rebalance is launched under the *grown* map;
+    // the override makes it echo that version in Stats (wire v5)
+    let map_version: Option<u64> = parse_flag(args, "--map-version")
+        .map(|s| s.parse().expect("--map-version takes a counter"));
 
     // the chunk-chain hashes are cheap to derive; the full demo encode
     // (quantize + codec of every chunk) is paid only when this process
@@ -271,6 +294,7 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
                 die_after_fetches: if i == 0 { die_after } else { None },
                 ..Default::default()
             },
+            map_version: map_version.unwrap_or_else(|| map.version()),
         };
         match StorageServer::spawn(addr, node, cfg) {
             Ok(server) => {
@@ -432,6 +456,181 @@ fn cmd_repair(args: &[String]) {
         std::process::exit(1);
     }
     println!("# fleet is at full replication (factor {replication})");
+}
+
+/// `rebalance --remote a:p,b:p,... (--add addr | --remove idx)` — grow
+/// or shrink a running fleet by one node: build the versioned map
+/// transition (old ring over `--remote`, new ring with the node added
+/// or removed), then run repair-driven migration passes until every
+/// chunk sits on all of its *new*-ring replicas. Reads keep working
+/// throughout — the fetch path falls back to old-ring holders for
+/// chunks that have not moved yet. `--check` scans without copying;
+/// `--write-policy least-used` ranks migration targets by live node
+/// load; `--max-passes` bounds the pass loop. Exits non-zero unless the
+/// new map alone can serve everything — CI uses the exit code as the
+/// convergence gate, exactly like `repair`. (No delete verb exists:
+/// surplus copies on old-only slots simply age out of each node's LRU.)
+fn cmd_rebalance(args: &[String]) {
+    use kvfetcher::kvstore::prefix_hashes;
+    use kvfetcher::service::{
+        demo_tokens, MapTransition, Placement, Rebalancer, ShardMap, ShardRouter,
+    };
+
+    let exp = load_experiment(args);
+    let addrs = parse_flag(args, "--remote")
+        .map(|list| Experiment::parse_addrs(&list))
+        .unwrap_or_else(|| exp.remote_addrs.clone());
+    if addrs.is_empty() {
+        eprintln!("rebalance needs --remote a:p[,b:p...] (or [network] remote)");
+        std::process::exit(2);
+    }
+    let add = parse_flag(args, "--add");
+    let remove: Option<usize> =
+        parse_flag(args, "--remove").map(|s| s.parse().expect("--remove takes a shard index"));
+    if add.is_some() == remove.is_some() {
+        eprintln!("rebalance takes exactly one of --add <addr> or --remove <idx>");
+        std::process::exit(2);
+    }
+    let replication = replication_of(args, &exp);
+    let write_policy = write_policy_of(args, &exp);
+    let (seed, n_chunks, chunk_tokens) = demo_params(args);
+    let check_only = args.iter().any(|a| a == "--check");
+    let max_passes: usize = parse_flag(args, "--max-passes")
+        .map(|s| s.parse().expect("--max-passes takes a count"))
+        .unwrap_or(8)
+        .max(1);
+    let hashes = prefix_hashes(&demo_tokens(seed, n_chunks * chunk_tokens), chunk_tokens);
+
+    // old ring over the current fleet; the union address list gives
+    // every slot either map addresses a client at that index
+    let old = ShardMap::with_replication(addrs.len(), Placement::RoundRobin, replication);
+    let (new, union_addrs) = match (&add, remove) {
+        (Some(addr), None) => {
+            // grown() appends slot n — the new address's index
+            let mut union_addrs = addrs.clone();
+            union_addrs.push(addr.clone());
+            (old.grown(), union_addrs)
+        }
+        (None, Some(idx)) => {
+            let Some(new) = old.shrunk(idx) else {
+                eprintln!(
+                    "--remove {idx} is not a removable shard (fleet has {}, and the last \
+                     shard cannot be removed)",
+                    addrs.len()
+                );
+                std::process::exit(2);
+            };
+            // survivors keep their slots, so the address list is unchanged
+            (new, addrs.clone())
+        }
+        _ => unreachable!("validated above"),
+    };
+    println!(
+        "# rebalance: map v{} ({} shards) -> v{} ({} shards) | replication {} | {} chunks | \
+         write policy {write_policy}{}",
+        old.version(),
+        old.n_shards(),
+        new.version(),
+        new.n_shards(),
+        new.replication(),
+        hashes.len(),
+        if check_only { " (check only)" } else { "" }
+    );
+    let transition = MapTransition::new(old, new.clone()).expect("grown/shrunk raises the version");
+
+    let (mut router, dead) =
+        match ShardRouter::connect_lenient(&union_addrs, Placement::RoundRobin, replication) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("# rebalance: cannot reach the fleet: {e}");
+                std::process::exit(1);
+            }
+        };
+    if !dead.is_empty() {
+        println!("# rebalance: unreachable shards {dead:?} (their moves persist this pass)");
+    }
+    router.set_map(new);
+    let router = router.with_write_policy(write_policy);
+    let rb = Rebalancer::new(router, transition).unwrap_or_else(|e| {
+        eprintln!("# rebalance: {e}");
+        std::process::exit(1);
+    });
+
+    let fmt_set = |s: &[usize]| {
+        if s.is_empty() {
+            "-".to_string()
+        } else {
+            s.iter().map(usize::to_string).collect::<Vec<_>>().join(" ")
+        }
+    };
+    let print_scan = |scan: &kvfetcher::service::MigrationScan| {
+        let rows: Vec<Vec<String>> = scan
+            .chunks
+            .iter()
+            .map(|c| {
+                vec![
+                    c.idx.to_string(),
+                    fmt_set(&c.targets),
+                    fmt_set(&c.holders),
+                    fmt_set(&c.missing),
+                    fmt_set(&c.unreachable),
+                ]
+            })
+            .collect();
+        println!("{}", markdown(&["chunk", "targets", "holders", "missing", "unreachable"], &rows));
+        println!("# scan: {} chunks, {} pending migration", scan.chunks.len(), scan.pending());
+    };
+    if check_only {
+        let scan = rb.scan(&hashes);
+        print_scan(&scan);
+        if !scan.converged() {
+            eprintln!("# new map CANNOT yet serve every chunk");
+            std::process::exit(1);
+        }
+        println!("# new map v{} can serve every chunk", rb.transition().new.version());
+        return;
+    }
+    for pass in 1..=max_passes {
+        let report = rb.migrate(&hashes);
+        if !report.migrated.is_empty() {
+            let rows: Vec<Vec<String>> = report
+                .migrated
+                .iter()
+                .map(|a| {
+                    vec![
+                        a.idx.to_string(),
+                        format!("{:#x}", a.hash),
+                        a.from.to_string(),
+                        a.to.to_string(),
+                    ]
+                })
+                .collect();
+            println!("{}", markdown(&["chunk", "hash", "from", "to"], &rows));
+        }
+        for f in &report.failed {
+            eprintln!("# rebalance: chunk {} @ shard {}: {}", f.idx, f.shard, f.error);
+        }
+        println!(
+            "# pass {pass}: {} copied, {} failed, {} busy backoffs",
+            report.migrated.len(),
+            report.failed.len(),
+            report.busy_retries
+        );
+        let after = rb.scan(&hashes);
+        if after.converged() {
+            println!(
+                "# new map v{} can serve every chunk ({} passes)",
+                rb.transition().new.version(),
+                pass
+            );
+            return;
+        }
+        if pass == max_passes {
+            print_scan(&after);
+        }
+    }
+    eprintln!("# new map CANNOT serve every chunk after {max_passes} passes");
+    std::process::exit(1);
 }
 
 /// `fetch --backend local|tcp|objstore|cas [--remote a:p,b:p]` (or
@@ -888,6 +1087,7 @@ fn cmd_stats(args: &[String]) {
                     vec![
                         i.to_string(),
                         addrs[i].clone(),
+                        if s.map_version == 0 { "-".into() } else { format!("v{}", s.map_version) },
                         s.chunks.to_string(),
                         fmt_bytes(s.used_bytes as usize),
                         s.capacity_bytes.map_or("-".into(), |c| fmt_bytes(c as usize)),
@@ -901,14 +1101,14 @@ fn cmd_stats(args: &[String]) {
                 }
                 None => {
                     let mut row = vec![i.to_string(), addrs[i].clone()];
-                    row.extend((0..9).map(|_| "-".to_string()));
+                    row.extend((0..10).map(|_| "-".to_string()));
                     row
                 }
             });
         }
         let headers = [
-            "shard", "addr", "chunks", "used", "cap", "inflight", "peak", "busy", "evict",
-            "served", "Mbps",
+            "shard", "addr", "map", "chunks", "used", "cap", "inflight", "peak", "busy",
+            "evict", "served", "Mbps",
         ];
         println!("{}", markdown(&headers, &rows));
         let up = polled.iter().filter(|s| s.is_some()).count();
@@ -1109,13 +1309,15 @@ fn cmd_real(_args: &[String]) {
     std::process::exit(2);
 }
 
-const USAGE: &str = "kvfetcher <serve|fetch|publish|stats|repair|calibrate|layout|real> [flags]
+const USAGE: &str =
+    "kvfetcher <serve|fetch|publish|stats|repair|rebalance|calibrate|layout|real> [flags]
   serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
             [--exec analytic|pipelined]
   serve     --listen a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
             [--capacity bytes] [--throttle-gbps G] [--replication r]
             [--max-inflight bytes] [--max-conns n] [--die-after-fetches n]
             [--shards i,j] [--empty] [--repair-every-secs n]
+            [--map-version v]
             (storage shard servers; each chunk is written through to r
              shards, admission limits answer Busy instead of dropping,
              --die-after-fetches kills shard 0 at a chunk boundary,
@@ -1172,6 +1374,17 @@ const USAGE: &str = "kvfetcher <serve|fetch|publish|stats|repair|calibrate|layou
             (anti-entropy pass: diff holder sets against the replica map,
              re-put missing chunks from surviving holders, exit non-zero
              unless the fleet converges to factor r; --check only scans)
+  rebalance --remote a:p[,b:p...] (--add addr | --remove idx)
+            [--replication r] [--write-policy ring-successor|least-used]
+            [--seed s] [--chunks n] [--chunk-tokens t] [--check]
+            [--max-passes n]
+            (elastic fleet change: build the versioned map transition,
+             copy every chunk whose replica set changed onto its new-ring
+             replicas via the repair pull/put path, and exit non-zero
+             unless the new map alone can serve every chunk within
+             --max-passes; reads keep working mid-migration by falling
+             back to old-ring holders; --check only scans; surplus copies
+             on removed slots age out of the LRU, no delete verb needed)
   calibrate [--tokens n]
   layout    [--heads h] [--dim d]
   real      [--artifacts dir]   (requires --features pjrt)";
@@ -1184,6 +1397,7 @@ fn main() {
         Some("publish") => cmd_publish(&args[1..]),
         Some("stats") => cmd_stats(&args[1..]),
         Some("repair") => cmd_repair(&args[1..]),
+        Some("rebalance") => cmd_rebalance(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("layout") => cmd_layout(&args[1..]),
         Some("real") => cmd_real(&args[1..]),

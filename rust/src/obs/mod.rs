@@ -15,7 +15,10 @@
 //!   scheduler (queue-cap and credit-deficit sheds are distinct),
 //! * **busy / failover / capacity instants** from the remote source's
 //!   replica walk,
-//! * **repair pull/re-put instants** from anti-entropy passes,
+//! * **repair pull/re-put instants** from anti-entropy passes, plus
+//!   `migrate_pull` / `migrate_put` instants when a
+//!   [`crate::service::Rebalancer`] copies chunks onto a new shard-map
+//!   version,
 //! * **manifest-resolve / object-get spans** plus cache
 //!   hit/miss/evict instants from the content-addressed
 //!   [`crate::cas::CasSource`] delivery path.
@@ -89,7 +92,8 @@ pub enum Track {
     Sched,
     /// The remote source's replica walk (busy, failover, capacity).
     Source,
-    /// Anti-entropy repair traffic (pulls and re-puts).
+    /// Anti-entropy repair traffic (pulls and re-puts), shared with
+    /// rebalance migration (`migrate_pull` / `migrate_put`).
     Repair,
     /// The content-addressed delivery path (manifest resolves, object
     /// GETs, edge-cache hit/miss/evict).

@@ -166,6 +166,13 @@ impl StoreClient {
             r => Err(self.unexpected("Stats", &r)),
         }
     }
+
+    /// Shard-map version the node serves under (wire v5); 0 = unset or
+    /// a pre-elastic node. A convenience probe for `rebalance`, which
+    /// uses it to spot nodes still launched under a stale ring.
+    pub fn map_version(&self) -> io::Result<u64> {
+        Ok(self.stats()?.map_version)
+    }
 }
 
 #[cfg(test)]

@@ -16,9 +16,12 @@
 //!   connections), and deterministic fault injection ([`FaultSpec`])
 //!   for the `tests/service_faults.rs` harness;
 //! * [`client`] — typed calls over a per-node connection pool;
-//! * [`shard`] — the placement map + router spreading a chained prefix
-//!   across N nodes (optionally on `r` replica shards each, written
-//!   through and read with failover) with per-node capacity stats;
+//! * [`shard`] — the versioned placement map + router spreading a
+//!   chained prefix across N nodes (optionally on `r` replica shards
+//!   each, written through under a pluggable [`WritePolicy`] and read
+//!   with failover) with per-node capacity stats; a
+//!   [`MapTransition`] pairs two map versions while the fleet grows
+//!   or shrinks;
 //! * [`source`] — the transport-backend registry: a [`Backend`] enum +
 //!   [`SourceFactory`] trait mapping config strings onto
 //!   [`crate::fetcher::TransportSource`] impls (in-process store, TCP
@@ -30,6 +33,8 @@
 //! * [`repair`] — the anti-entropy scanner: diff every chunk's holder
 //!   set against its replica set and re-put what's missing, so a shard
 //!   that dies and rejoins converges back to replication factor `r`;
+//!   the [`Rebalancer`] reuses the same pull/put transfer to migrate
+//!   chunks onto a new map version when the fleet grows or shrinks;
 //! * [`loadgen`] — the trace-replay load generator: Poisson/bursty
 //!   multi-tenant arrivals driven through the
 //!   [`crate::fetcher::FetchScheduler`], with bit-identical restore
@@ -58,10 +63,14 @@ pub use loadgen::{
 };
 pub use protocol::{NodeStats, Request, Response, PROTOCOL_VERSION};
 pub use repair::{
-    ChunkHealth, RepairAction, RepairFailure, RepairReport, RepairScanner, ScanReport,
+    ChunkHealth, ChunkMove, MigrationReport, MigrationScan, Rebalancer, RepairAction,
+    RepairFailure, RepairReport, RepairScanner, ScanReport,
 };
 pub use server::{AdmissionConfig, FaultSpec, ServerConfig, StorageServer};
-pub use shard::{Placement, ShardMap, ShardRouter};
+pub use shard::{
+    MapTransition, Placement, PutOutcome, ReplicaPut, ReplicaWrite, ShardMap, ShardRouter,
+    WritePolicy,
+};
 pub use source::{
     Backend, Ladder, LocalSource, ObjStoreShape, ObjectStoreSource, RemoteSource, RetryPolicy,
     SourceFactory, SourceRegistry, SourceSpec,

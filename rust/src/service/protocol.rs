@@ -44,7 +44,12 @@ pub const MAX_FRAME_BYTES: usize = 256 * 1024 * 1024;
 ///   [`served_bytes`](NodeStats::served_bytes) counter, so fleet
 ///   dashboards (`stats --watch`) can derive per-shard delivered
 ///   bandwidth from two successive polls.
-pub const PROTOCOL_VERSION: u32 = 4;
+/// * v5 — extends [`NodeStats`] with the
+///   [`map_version`](NodeStats::map_version) counter: the shard-map
+///   revision the node was launched under, so `rebalance` and fleet
+///   dashboards can spot nodes still serving under a stale ring
+///   (0 = map-unaware / pre-elastic build).
+pub const PROTOCOL_VERSION: u32 = 5;
 
 const TAG_LOOKUP_PREFIX: u8 = 1;
 const TAG_HAS_CHUNKS: u8 = 2;
@@ -123,6 +128,10 @@ pub struct NodeStats {
     /// `Δserved_bytes / Δt` between two `Stats` polls is the node's
     /// delivered bandwidth — what `stats --watch` renders (wire v4).
     pub served_bytes: u64,
+    /// Version of the [`ShardMap`](super::shard::ShardMap) the node was
+    /// launched under; 0 = map-unaware / unset (wire v5). Lets the
+    /// rebalance path and dashboards spot nodes on a stale ring.
+    pub map_version: u64,
 }
 
 /// A server -> client message.
@@ -632,6 +641,7 @@ pub fn encode_response(r: &Response) -> (u8, Vec<u8>) {
             put_u64(&mut out, s.peak_inflight_bytes);
             put_u64(&mut out, s.busy_replies);
             put_u64(&mut out, s.served_bytes);
+            put_u64(&mut out, s.map_version);
             (TAG_STATS_REPLY, out)
         }
         Response::Err { msg } => {
@@ -689,6 +699,7 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, FetchError> 
             let peak_inflight_bytes = rd.u64()?;
             let busy_replies = rd.u64()?;
             let served_bytes = rd.u64()?;
+            let map_version = rd.u64()?;
             Response::Stats(NodeStats {
                 chunks,
                 used_bytes,
@@ -698,6 +709,7 @@ pub fn decode_response(tag: u8, payload: &[u8]) -> Result<Response, FetchError> 
                 peak_inflight_bytes,
                 busy_replies,
                 served_bytes,
+                map_version,
             })
         }
         TAG_ERR => Response::Err { msg: rd.str_()? },
@@ -800,6 +812,7 @@ mod tests {
                 peak_inflight_bytes: 4096,
                 busy_replies: 9,
                 served_bytes: 123_456,
+                map_version: 7,
             }),
             Response::Stats(NodeStats { capacity_bytes: None, ..NodeStats::default() }),
             Response::Busy { retry_after_ms: 25 },

@@ -28,13 +28,26 @@
 //! `serve --listen ... --repair-every-secs N`; `tests/replica_balance.rs`
 //! proves kill → rejoin → repair → holder sets back at factor `r` with
 //! bit-identical restores.
+//!
+//! **Rebalancing.** The same pull/re-put machinery drives *elastic*
+//! fleet changes: the [`Rebalancer`] takes a
+//! [`MapTransition`](super::shard::MapTransition) (the serving map
+//! paired with its grown/shrunk successor — the fleet size is no
+//! longer fixed at serve time) and copies every chunk whose replica
+//! set changed onto its new-ring replicas, riding the identical
+//! `Busy`-aware wire-v3 transfers. Convergence means the *new map
+//! alone* can serve every chunk at factor `r`; surplus copies on
+//! departed or demoted slots are not deleted (there is no remote
+//! delete verb) — they simply age out of the LRU. The CLI surfaces
+//! this as `kvfetcher rebalance --remote ... --add/--remove` with a
+//! convergence exit code mirroring `repair`.
 
 use std::sync::Arc;
 
 use crate::fetcher::FetchError;
 use crate::obs::{ArgValue, Track, TraceRecorder};
 
-use super::shard::{ShardMap, ShardRouter};
+use super::shard::{MapTransition, ShardRouter};
 use super::source::RetryPolicy;
 
 /// Replication health of one chunk: its replica set diffed against the
@@ -175,7 +188,7 @@ impl RepairScanner {
     /// batched `HasChunks` probe per shard, never fatal — a failed
     /// probe marks the shard unreachable for this pass.
     pub fn scan(&self, hashes: &[u64]) -> ScanReport {
-        let map: ShardMap = self.router.map();
+        let map = self.router.map();
         let n = self.router.n_shards();
         // per_shard[s] = (chain idx, hash) of every chunk replicated on s
         let mut per_shard: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
@@ -332,6 +345,308 @@ impl RepairScanner {
     }
 }
 
+// ------------------------------------------------------------ rebalance
+
+/// Migration state of one chunk under a [`MapTransition`]: the new
+/// ring's replica set diffed against who actually holds the chunk
+/// right now (probed across both rings).
+#[derive(Debug, Clone)]
+pub struct ChunkMove {
+    /// Chain position of the chunk.
+    pub idx: usize,
+    /// Chained hash of the chunk.
+    pub hash: u64,
+    /// The new map's replica set (primary first) — where the chunk
+    /// must end up.
+    pub targets: Vec<usize>,
+    /// Slots (of either ring) that answered a probe and hold the
+    /// chunk, in [`MapTransition::read_order`] order — so the first
+    /// entry is the migration's preferred pull source.
+    pub holders: Vec<usize>,
+    /// New-ring targets that answered a probe but lack the chunk.
+    pub missing: Vec<usize>,
+    /// New-ring targets whose probe failed this pass.
+    pub unreachable: Vec<usize>,
+}
+
+impl ChunkMove {
+    /// Every new-ring target is reachable and holds the chunk.
+    pub fn migrated(&self) -> bool {
+        self.missing.is_empty() && self.unreachable.is_empty()
+    }
+
+    /// Something is missing *and* a reachable holder can source it.
+    pub fn movable(&self) -> bool {
+        !self.missing.is_empty() && !self.holders.is_empty()
+    }
+}
+
+/// One scan pass of a migration: per-chunk move state plus which slots
+/// never answered a probe.
+#[derive(Debug, Clone)]
+pub struct MigrationScan {
+    /// Move state of each chunk, in chain order.
+    pub chunks: Vec<ChunkMove>,
+    /// Slots whose membership probe failed this pass.
+    pub unreachable_shards: Vec<usize>,
+}
+
+impl MigrationScan {
+    /// The new map alone can serve everything: every chunk sits on all
+    /// of its new-ring replicas. (Surplus copies on old-only slots are
+    /// irrelevant — they age out of the LRU.)
+    pub fn converged(&self) -> bool {
+        self.chunks.iter().all(ChunkMove::migrated)
+    }
+
+    /// Chunks still short of their new-ring replica set.
+    pub fn pending(&self) -> usize {
+        self.chunks.iter().filter(|c| !c.migrated()).count()
+    }
+}
+
+/// What one migration pass did, mirroring [`RepairReport`]: the
+/// pre-pass scan, every copy that landed, every one that didn't, and
+/// the `Busy` refusals absorbed along the way.
+#[derive(Debug, Clone)]
+pub struct MigrationReport {
+    /// Fleet state *before* this pass copied anything.
+    pub before: MigrationScan,
+    /// Copies that landed (`hash` moved `from` -> `to`).
+    pub migrated: Vec<RepairAction>,
+    /// Copies (or pulls) that failed or were skipped this round.
+    pub failed: Vec<RepairFailure>,
+    /// `Busy` refusals absorbed by backoff across all transfers.
+    pub busy_retries: usize,
+}
+
+impl MigrationReport {
+    /// Every deficit that could be moved was moved: no failures, and
+    /// no new-ring target was unreachable when the pass started.
+    /// Re-scan for ground truth — this summarizes what *this pass* saw.
+    pub fn converged(&self) -> bool {
+        self.failed.is_empty() && self.before.chunks.iter().all(|c| c.unreachable.is_empty())
+    }
+}
+
+/// Drives the repair machinery across a [`MapTransition`]: copy every
+/// chunk whose replica set changed onto its new-ring replicas (wire-v3
+/// `PullChunk` / `ChunkFull`, `Busy`-aware) *before* the new map is
+/// activated. The router must cover the transition's union fleet —
+/// every slot either map addresses needs a client at that index
+/// (`ShardRouter::connect_lenient` over the union address list).
+pub struct Rebalancer {
+    router: ShardRouter,
+    transition: MapTransition,
+    retry: RetryPolicy,
+    rec: Option<Arc<TraceRecorder>>,
+}
+
+impl Rebalancer {
+    /// A rebalancer for `transition` over a router connected to the
+    /// union fleet. Fails if the router is missing a client for any
+    /// slot the transition addresses.
+    pub fn new(router: ShardRouter, transition: MapTransition) -> Result<Rebalancer, FetchError> {
+        if let Some(&slot) =
+            transition.union_slots().iter().find(|&&s| s >= router.n_shards())
+        {
+            return Err(FetchError::transport(format!(
+                "transition addresses slot {slot} but the router holds {} clients",
+                router.n_shards()
+            )));
+        }
+        Ok(Rebalancer { router, transition, retry: RetryPolicy::default(), rec: None })
+    }
+
+    /// Override the `Busy` retry/backoff budget of migration transfers.
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Rebalancer {
+        self.retry = retry;
+        self
+    }
+
+    /// Attach a [`TraceRecorder`]: every successful migration pull /
+    /// re-put lands as a `migrate_pull` / `migrate_put` instant on the
+    /// repair track, next to the anti-entropy instants.
+    pub fn with_recorder(mut self, rec: Option<Arc<TraceRecorder>>) -> Rebalancer {
+        self.rec = rec;
+        self
+    }
+
+    /// The union-fleet router this rebalancer copies through.
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// The map transition being driven.
+    pub fn transition(&self) -> &MapTransition {
+        &self.transition
+    }
+
+    /// Probe both rings and diff each chunk's holder set against the
+    /// *new* map's replica set: one batched `HasChunks` probe per
+    /// slot, never fatal — a failed probe marks the slot unreachable
+    /// for this pass.
+    pub fn scan(&self, hashes: &[u64]) -> MigrationScan {
+        let n = self.router.n_shards();
+        // per_shard[s] = (chain idx, hash) of every chunk probed on s:
+        // its new-ring targets plus its old-ring holders
+        let mut per_shard: Vec<Vec<(usize, u64)>> = vec![Vec::new(); n];
+        for (i, &h) in hashes.iter().enumerate() {
+            for shard in self.transition.read_order(i, h) {
+                per_shard[shard].push((i, h));
+            }
+        }
+        let mut holds: Vec<Vec<(usize, Option<bool>)>> = vec![Vec::new(); hashes.len()];
+        let mut unreachable_shards = Vec::new();
+        for (shard, items) in per_shard.iter().enumerate() {
+            if items.is_empty() {
+                continue;
+            }
+            let probe: Vec<u64> = items.iter().map(|&(_, h)| h).collect();
+            match self.router.client(shard).has_chunks(&probe) {
+                Ok(found) => {
+                    for (&(i, _), ok) in items.iter().zip(found) {
+                        holds[i].push((shard, Some(ok)));
+                    }
+                }
+                Err(_) => {
+                    unreachable_shards.push(shard);
+                    for &(i, _) in items {
+                        holds[i].push((shard, None));
+                    }
+                }
+            }
+        }
+        let chunks = hashes
+            .iter()
+            .enumerate()
+            .map(|(i, &h)| {
+                let targets = self.transition.new.replicas_of(i, h);
+                let verdict = |s: usize| {
+                    holds[i].iter().find(|&&(shard, _)| shard == s).and_then(|&(_, v)| v)
+                };
+                // holder order follows read_order (new ring first), so
+                // holders[0] is the preferred pull source
+                let holders: Vec<usize> = self
+                    .transition
+                    .read_order(i, h)
+                    .into_iter()
+                    .filter(|&s| verdict(s) == Some(true))
+                    .collect();
+                let missing: Vec<usize> =
+                    targets.iter().copied().filter(|&s| verdict(s) == Some(false)).collect();
+                let unreachable: Vec<usize> =
+                    targets.iter().copied().filter(|&s| verdict(s).is_none()).collect();
+                ChunkMove { idx: i, hash: h, targets, holders, missing, unreachable }
+            })
+            .collect();
+        MigrationScan { chunks, unreachable_shards }
+    }
+
+    /// Scan, then copy every movable chunk: pull the full record from
+    /// the first reachable holder (either ring) and register it on
+    /// each new-ring target missing it, riding out `Busy` refusals
+    /// under the retry policy. Targets are written in the router's
+    /// [`WritePolicy`](super::shard::WritePolicy) order, so `least-used`
+    /// placement steers migration load toward the emptiest nodes.
+    /// Per-chunk faults are recorded, never fatal.
+    pub fn migrate(&self, hashes: &[u64]) -> MigrationReport {
+        let before = self.scan(hashes);
+        let mut migrated = Vec::new();
+        let mut failed = Vec::new();
+        let mut busy_retries = 0usize;
+        for c in &before.chunks {
+            if c.missing.is_empty() {
+                continue;
+            }
+            let Some(&from) = c.holders.first() else {
+                for &to in &c.missing {
+                    failed.push(RepairFailure {
+                        idx: c.idx,
+                        shard: to,
+                        error: FetchError::transport(format!(
+                            "chunk {:#x} has no reachable holder to migrate from",
+                            c.hash
+                        )),
+                    });
+                }
+                continue;
+            };
+            let pulled = self.with_busy_retry(
+                || self.router.client(from).pull_chunk(c.hash),
+                &mut busy_retries,
+            );
+            let chunk = match pulled {
+                Ok(Some(chunk)) => {
+                    if let Some(r) = self.rec.as_deref() {
+                        let args = vec![
+                            ("chunk", ArgValue::U64(c.idx as u64)),
+                            ("from", ArgValue::U64(from as u64)),
+                        ];
+                        r.instant(Track::Repair, "migrate_pull", args);
+                    }
+                    chunk
+                }
+                Ok(None) => {
+                    failed.push(RepairFailure {
+                        idx: c.idx,
+                        shard: from,
+                        error: FetchError::transport(format!(
+                            "holder shard {from} evicted chunk {:#x} between scan and pull",
+                            c.hash
+                        )),
+                    });
+                    continue;
+                }
+                Err(e) => {
+                    failed.push(RepairFailure { idx: c.idx, shard: from, error: e });
+                    continue;
+                }
+            };
+            for to in self.router.write_order(&c.missing) {
+                let put = self.with_busy_retry(
+                    || self.router.client(to).put_chunk(&chunk),
+                    &mut busy_retries,
+                );
+                match put {
+                    Ok((true, _evicted)) => {
+                        if let Some(r) = self.rec.as_deref() {
+                            let args = vec![
+                                ("chunk", ArgValue::U64(c.idx as u64)),
+                                ("to", ArgValue::U64(to as u64)),
+                            ];
+                            r.instant(Track::Repair, "migrate_put", args);
+                        }
+                        migrated.push(RepairAction { idx: c.idx, hash: c.hash, from, to });
+                    }
+                    Ok((false, _)) => failed.push(RepairFailure {
+                        idx: c.idx,
+                        shard: to,
+                        error: FetchError::Capacity {
+                            detail: format!(
+                                "shard {to} refused migration put of chunk {:#x} (full?)",
+                                c.hash
+                            ),
+                        },
+                    }),
+                    Err(e) => failed.push(RepairFailure { idx: c.idx, shard: to, error: e }),
+                }
+            }
+        }
+        MigrationReport { before, migrated, failed, busy_retries }
+    }
+
+    /// Run `op` through the shared [`RetryPolicy::run_busy`] loop —
+    /// the same semantics as the repair scanner's transfers.
+    fn with_busy_retry<T>(
+        &self,
+        op: impl FnMut() -> std::io::Result<T>,
+        busy_retries: &mut usize,
+    ) -> Result<T, FetchError> {
+        self.retry.run_busy(op, || *busy_retries += 1, |e| FetchError::transport(e.to_string()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -444,6 +759,64 @@ mod tests {
             other => panic!("wrong error {other:?}"),
         }
         assert!(!report.converged());
+        b.shutdown();
+    }
+
+    /// Growing a 1-shard fleet to 2 moves the odd chain positions: the
+    /// rebalancer copies exactly those chunks onto the new slot, emits
+    /// migrate instants, and a re-scan converges.
+    #[test]
+    fn rebalancer_copies_moved_chunks_onto_the_new_ring() {
+        use crate::service::shard::MapTransition;
+
+        let tokens: Vec<u32> = (0..24).collect();
+        let hashes = prefix_hashes(&tokens, 8);
+        assert_eq!(hashes.len(), 3);
+        let mut full = StorageNode::new(8);
+        for &h in &hashes {
+            full.register(chunk(h, 40));
+        }
+        let a = StorageServer::spawn("127.0.0.1:0", full, ServerConfig::default()).expect("bind");
+        let b = StorageServer::spawn("127.0.0.1:0", StorageNode::new(8), ServerConfig::default())
+            .expect("bind");
+        let addrs = vec![a.local_addr().to_string(), b.local_addr().to_string()];
+
+        let old = crate::service::ShardMap::new(1, Placement::RoundRobin);
+        let new = old.grown();
+        let t = MapTransition::new(old, new).expect("valid transition");
+        let router = ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 1)
+            .expect("connect union fleet");
+        let rec = TraceRecorder::new(256);
+        let rb = Rebalancer::new(router, t)
+            .expect("union covered")
+            .with_recorder(Some(rec.clone()));
+
+        // chunk 1 (odd position) moves to slot 1; chunks 0 and 2 stay
+        let scan = rb.scan(&hashes);
+        assert!(!scan.converged());
+        assert_eq!(scan.pending(), 1);
+        assert_eq!(scan.chunks[1].targets, vec![1]);
+        assert_eq!(scan.chunks[1].holders, vec![0]);
+        assert_eq!(scan.chunks[1].missing, vec![1]);
+        assert!(scan.chunks[1].movable());
+        assert!(scan.chunks[0].migrated() && scan.chunks[2].migrated());
+
+        let report = rb.migrate(&hashes);
+        assert!(report.converged(), "failed: {:?}", report.failed);
+        assert_eq!(report.migrated.len(), 1);
+        assert_eq!((report.migrated[0].from, report.migrated[0].to), (0, 1));
+        assert!(rb.scan(&hashes).converged(), "post-migration scan must converge");
+        assert_eq!(b.node().lock().unwrap().len(), 1, "the moved chunk landed on the new node");
+
+        let events = rec.events();
+        assert_eq!(events.iter().filter(|e| e.name == "migrate_pull").count(), 1);
+        assert_eq!(events.iter().filter(|e| e.name == "migrate_put").count(), 1);
+        assert!(events.iter().all(|e| e.track == Track::Repair));
+
+        // idempotent: a second pass has nothing to move
+        let again = rb.migrate(&hashes);
+        assert!(again.migrated.is_empty() && again.failed.is_empty());
+        a.shutdown();
         b.shutdown();
     }
 }

@@ -103,6 +103,9 @@ pub struct ServerConfig {
     pub admission: AdmissionConfig,
     /// Injected faults (tests and CI only).
     pub fault: FaultSpec,
+    /// [`ShardMap`](super::shard::ShardMap) version this node serves
+    /// under, echoed in `Stats` replies (wire v5). 0 = unset.
+    pub map_version: u64,
 }
 
 /// Live admission state shared by every handler thread of one node.
@@ -343,7 +346,7 @@ fn serve_conn(
             }
             continue;
         }
-        let (resp, pinned) = handle_request(req, node, admission);
+        let (resp, pinned) = handle_request(req, node, admission, cfg.map_version);
         let is_fetch_reply = matches!(resp, Response::Chunk(_));
         let (tag, body) = protocol::encode_response(&resp);
         let frame = protocol::frame_bytes(tag, &body);
@@ -399,6 +402,7 @@ fn handle_request(
     req: Request,
     node: &Arc<Mutex<StorageNode>>,
     admission: &Admission,
+    map_version: u64,
 ) -> (Response, Option<u64>) {
     let mut node = node.lock().expect("node lock");
     match req {
@@ -448,6 +452,7 @@ fn handle_request(
                 peak_inflight_bytes: admission.peak_inflight.load(Ordering::SeqCst) as u64,
                 busy_replies: admission.busy_replies.load(Ordering::SeqCst),
                 served_bytes: admission.served_bytes.load(Ordering::SeqCst),
+                map_version,
             };
             (Response::Stats(stats), None)
         }

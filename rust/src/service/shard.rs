@@ -4,14 +4,14 @@
 //! (see `kvstore::prefix_hashes`). The [`ShardMap`] assigns each
 //! `(chain position, hash)` to one node:
 //!
-//! * [`Placement::RoundRobin`] — position `i` lives on shard `i % N`.
-//!   Deterministic and perfectly balanced per prefix; consecutive
-//!   chunks stripe across nodes, so a pipelined fetch spreads its
-//!   transmissions over every node's NIC.
-//! * [`Placement::ByHash`] — shard is a mixed function of the chunk
-//!   hash alone. Placement survives renumbering (a chunk's home does
-//!   not depend on where its chain starts) at the cost of statistical
-//!   rather than exact balance.
+//! * [`Placement::RoundRobin`] — position `i` lives on ring position
+//!   `i % N`. Deterministic and perfectly balanced per prefix;
+//!   consecutive chunks stripe across nodes, so a pipelined fetch
+//!   spreads its transmissions over every node's NIC.
+//! * [`Placement::ByHash`] — ring position is a mixed function of the
+//!   chunk hash alone. Placement survives renumbering (a chunk's home
+//!   does not depend on where its chain starts) at the cost of
+//!   statistical rather than exact balance.
 //!
 //! The [`ShardRouter`] owns one pooled [`StoreClient`] per node and
 //! implements chain-aware operations: `match_prefix` batches one
@@ -27,8 +27,28 @@
 //! and the fetch path (`service::source::RemoteSource`) fails over in
 //! replica order — so any single shard can die mid-fetch without losing
 //! a chunk.
+//!
+//! **Versioning / elasticity.** The map is versioned: it carries an
+//! explicit *slot list* (`shards`) rather than a bare count, and a
+//! monotonically increasing `version`. Slots are stable node
+//! identities — indices into the fleet address list — so
+//! [`ShardMap::grown`] appends a fresh slot and [`ShardMap::shrunk`]
+//! drops one, each bumping the version, without renumbering the
+//! survivors. A [`MapTransition`] pairs the serving map with its
+//! successor: the rebalancer (`service::repair::Rebalancer`) migrates
+//! every chunk whose replica set changed onto its new-ring replicas,
+//! and mid-transition readers try the new ring first, then fall back
+//! to old-ring holders ([`MapTransition::read_order`]), so fetches stay
+//! correct *during* the copy.
+//!
+//! **Write placement.** Reads have had a pluggable `ReadPolicy` since
+//! PR 5; [`WritePolicy`] is the put-side counterpart: `RingSuccessor`
+//! writes replicas in ring order, `LeastUsed` probes each candidate's
+//! wire `NodeStats` (`used_bytes + inflight_bytes`) and writes the
+//! least-loaded first — so under capacity pressure the chunk lands on
+//! the nodes with room before a full one gets the chance to refuse.
 
-use std::io;
+use std::fmt;
 
 use crate::fetcher::FetchError;
 use crate::kvstore::{prefix_hashes, StoredChunk};
@@ -39,17 +59,64 @@ use super::protocol::NodeStats;
 /// How chunks map onto shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Placement {
-    /// Chain position `i` -> shard `i % N`.
+    /// Chain position `i` -> ring position `i % N`.
     #[default]
     RoundRobin,
     /// `mix(hash) % N`, independent of chain position.
     ByHash,
 }
 
+/// How a write-through put (or a migration re-put) orders the candidate
+/// shards it writes to (`[service] write_policy` / `--write-policy`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WritePolicy {
+    /// Write replicas in ring order (primary first) — the blind
+    /// pre-elastic behavior: deterministic, no control-plane traffic.
+    #[default]
+    RingSuccessor,
+    /// Probe each candidate's `NodeStats` (one control-plane `Stats`
+    /// round trip per candidate — these always pass admission) and
+    /// write the least-loaded first, ranked by
+    /// `used_bytes + inflight_bytes`. Ties and unreachable probes keep
+    /// ring order, with unreachable candidates sorted last.
+    LeastUsed,
+}
+
+impl WritePolicy {
+    /// Parse a config/CLI name.
+    pub fn by_name(name: &str) -> Option<WritePolicy> {
+        match name.to_ascii_lowercase().as_str() {
+            "ring" | "ring-successor" | "successor" => Some(WritePolicy::RingSuccessor),
+            "least-used" | "used" => Some(WritePolicy::LeastUsed),
+            _ => None,
+        }
+    }
+
+    /// Canonical config/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WritePolicy::RingSuccessor => "ring-successor",
+            WritePolicy::LeastUsed => "least-used",
+        }
+    }
+}
+
+impl fmt::Display for WritePolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// The pure placement function (no I/O), shared by writers and readers.
-#[derive(Debug, Clone, Copy)]
+///
+/// Versioned: carries an explicit slot list (stable node identities,
+/// indices into the fleet address list) and a monotonically increasing
+/// `version`, so the fleet can grow or shrink live — see the module
+/// docs and [`MapTransition`].
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardMap {
-    n: usize,
+    version: u64,
+    shards: Vec<usize>,
     placement: Placement,
     replication: usize,
 }
@@ -63,14 +130,40 @@ impl ShardMap {
     /// A map storing each chunk on `replication` distinct shards (the
     /// primary plus the next `r - 1` in ring order). `replication` is
     /// clamped to `[1, n]` — a 2-shard fleet cannot hold 3 replicas.
+    /// Slots are dense (`0..n`), version starts at 1.
     pub fn with_replication(n: usize, placement: Placement, replication: usize) -> ShardMap {
         assert!(n > 0, "need at least one shard");
-        ShardMap { n, placement, replication: replication.clamp(1, n) }
+        ShardMap {
+            version: 1,
+            shards: (0..n).collect(),
+            placement,
+            replication: replication.clamp(1, n),
+        }
+    }
+
+    /// Map revision: bumped by every [`grown`](Self::grown) /
+    /// [`shrunk`](Self::shrunk) step, surfaced on the wire through
+    /// `NodeStats::map_version` so operators can see which revision
+    /// each node is serving under.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The slot list, in ring order. Slots are stable node identities
+    /// (indices into the fleet address list): a shrunk map keeps its
+    /// survivors' slots, so slot `2` still addresses the third node.
+    pub fn shards(&self) -> &[usize] {
+        &self.shards
+    }
+
+    /// Whether `slot` is part of this map's ring.
+    pub fn contains(&self, slot: usize) -> bool {
+        self.shards.contains(&slot)
     }
 
     /// Number of shards in the fleet.
     pub fn n_shards(&self) -> usize {
-        self.n
+        self.shards.len()
     }
 
     /// Effective replication factor (post-clamp).
@@ -78,19 +171,56 @@ impl ShardMap {
         self.replication
     }
 
-    /// Primary shard owning chunk `chain_idx` with hash `hash`.
-    pub fn shard_of(&self, chain_idx: usize, hash: u64) -> usize {
-        match self.placement {
-            Placement::RoundRobin => chain_idx % self.n,
-            Placement::ByHash => (mix(hash) % self.n as u64) as usize,
+    /// The next map of a grow step: one fresh slot (max slot + 1, so a
+    /// previously removed slot id is never reused) appended to the
+    /// ring, version bumped. The new node's address goes at that index
+    /// of the fleet address list.
+    pub fn grown(&self) -> ShardMap {
+        let next = self.shards.iter().max().map_or(0, |&m| m + 1);
+        let mut shards = self.shards.clone();
+        shards.push(next);
+        ShardMap {
+            version: self.version + 1,
+            shards,
+            placement: self.placement,
+            replication: self.replication,
         }
     }
 
+    /// The next map of a shrink step: `slot` dropped from the ring,
+    /// version bumped, replication re-clamped to the smaller fleet.
+    /// `None` if the slot is not in the ring or is the last one.
+    pub fn shrunk(&self, slot: usize) -> Option<ShardMap> {
+        if self.shards.len() < 2 || !self.contains(slot) {
+            return None;
+        }
+        let shards: Vec<usize> = self.shards.iter().copied().filter(|&s| s != slot).collect();
+        let replication = self.replication.min(shards.len());
+        Some(ShardMap { version: self.version + 1, shards, placement: self.placement, replication })
+    }
+
+    /// Ring position (index into the slot list) of the primary.
+    fn ring_pos(&self, chain_idx: usize, hash: u64) -> usize {
+        let n = self.shards.len();
+        match self.placement {
+            Placement::RoundRobin => chain_idx % n,
+            Placement::ByHash => (mix(hash) % n as u64) as usize,
+        }
+    }
+
+    /// Primary shard (slot) owning chunk `chain_idx` with hash `hash`.
+    pub fn shard_of(&self, chain_idx: usize, hash: u64) -> usize {
+        self.shards[self.ring_pos(chain_idx, hash)]
+    }
+
     /// The `k`-th replica shard of chunk `chain_idx` (`k = 0` is the
-    /// primary; `k < replication`). Pure arithmetic — no allocation.
+    /// primary; `k < replication`). Ring steps walk *positions* in the
+    /// slot list, so a map with gaps (after a removal) still yields
+    /// distinct live slots. Pure arithmetic — no allocation.
     pub fn replica_at(&self, chain_idx: usize, hash: u64, k: usize) -> usize {
         debug_assert!(k < self.replication);
-        (self.shard_of(chain_idx, hash) + k) % self.n
+        let n = self.shards.len();
+        self.shards[(self.ring_pos(chain_idx, hash) + k) % n]
     }
 
     /// The replica set of chunk `chain_idx`: `replication` distinct
@@ -117,6 +247,70 @@ impl ShardMap {
     }
 }
 
+/// An in-flight map change: the map the fleet was placed under (`old`)
+/// paired with the map being activated (`new`). Drives the
+/// repair-style chunk migration (`service::repair::Rebalancer`) and
+/// the either-map read path ([`read_order`](Self::read_order)).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MapTransition {
+    /// The map chunks were placed under — its holders source the copy.
+    pub old: ShardMap,
+    /// The map being activated — its replica sets are the copy targets.
+    pub new: ShardMap,
+}
+
+impl MapTransition {
+    /// Pair a serving map with its successor. The successor must raise
+    /// the version and keep the placement function (a placement change
+    /// would move *every* chunk; grow/shrink moves only a slice).
+    pub fn new(old: ShardMap, new: ShardMap) -> Result<MapTransition, FetchError> {
+        if new.version <= old.version {
+            return Err(FetchError::transport(format!(
+                "map transition must raise the version (old v{}, new v{})",
+                old.version, new.version
+            )));
+        }
+        if new.placement != old.placement {
+            return Err(FetchError::transport(
+                "map transition cannot change the placement function",
+            ));
+        }
+        Ok(MapTransition { old, new })
+    }
+
+    /// Whether this chunk's replica set changes under the transition —
+    /// i.e. the migration has to copy it.
+    pub fn moved(&self, chain_idx: usize, hash: u64) -> bool {
+        self.new.replicas_of(chain_idx, hash) != self.old.replicas_of(chain_idx, hash)
+    }
+
+    /// Mid-transition read schedule for one chunk: the new ring's
+    /// replica set first (where the chunk lands as migration
+    /// progresses), then any old-ring replicas not already listed (the
+    /// holders it is migrating *from*). A fetch walking this order with
+    /// the normal failover machinery succeeds at every point of the
+    /// transition, whichever map each copy has reached.
+    pub fn read_order(&self, chain_idx: usize, hash: u64) -> Vec<usize> {
+        let mut order = self.new.replicas_of(chain_idx, hash);
+        for s in self.old.replicas_of(chain_idx, hash) {
+            if !order.contains(&s) {
+                order.push(s);
+            }
+        }
+        order
+    }
+
+    /// Every slot either map addresses, sorted — the union fleet a
+    /// rebalancing router must hold a client for.
+    pub fn union_slots(&self) -> Vec<usize> {
+        let mut slots: Vec<usize> =
+            self.old.shards.iter().chain(self.new.shards.iter()).copied().collect();
+        slots.sort_unstable();
+        slots.dedup();
+        slots
+    }
+}
+
 /// SplitMix64 finalizer: decorrelates the chained FNV hashes (which
 /// share low-byte structure between neighbours) before the modulo.
 fn mix(mut z: u64) -> u64 {
@@ -125,11 +319,126 @@ fn mix(mut z: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// One replica's verdict within a write-through put.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ReplicaWrite {
+    /// The node accepted and stored the chunk.
+    Stored {
+        /// Chunks its LRU evicted to make room.
+        evicted: u32,
+    },
+    /// The node answered but refused the chunk (capacity).
+    Refused {
+        /// Chunks evicted before the refusal (the node tried).
+        evicted: u32,
+    },
+    /// The exchange itself failed (dead shard, socket fault, `Busy`
+    /// past any caller-side retry) — the chunk's presence there is
+    /// unknown.
+    Failed {
+        /// The typed failure, shard-attributable by the caller.
+        error: FetchError,
+    },
+}
+
+/// One `(shard, verdict)` pair of a write-through put.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicaPut {
+    /// The slot that was written to.
+    pub shard: usize,
+    /// What that replica answered.
+    pub write: ReplicaWrite,
+}
+
+/// Per-replica outcome of one write-through put. A partial write is
+/// *visible* here: every replica gets its own verdict, so a caller can
+/// tell "stored on 0 and 2, shard 1 is dead" from a clean failure —
+/// the distinction the old first-error-aborts `?` loop silently ate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PutOutcome {
+    /// One verdict per candidate replica, in the order written.
+    pub replicas: Vec<ReplicaPut>,
+    /// Total evictions across replicas (saturating).
+    pub evicted: u32,
+}
+
+impl PutOutcome {
+    /// Every replica stored the chunk.
+    pub fn all_stored(&self) -> bool {
+        self.replicas.iter().all(|r| matches!(r.write, ReplicaWrite::Stored { .. }))
+    }
+
+    /// Slots that stored the chunk.
+    pub fn stored_shards(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .filter(|r| matches!(r.write, ReplicaWrite::Stored { .. }))
+            .map(|r| r.shard)
+            .collect()
+    }
+
+    /// Slots whose exchange failed (chunk presence unknown there).
+    pub fn failed_shards(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .filter(|r| matches!(r.write, ReplicaWrite::Failed { .. }))
+            .map(|r| r.shard)
+            .collect()
+    }
+
+    /// Slots that answered but refused the chunk (capacity).
+    pub fn refused_shards(&self) -> Vec<usize> {
+        self.replicas
+            .iter()
+            .filter(|r| matches!(r.write, ReplicaWrite::Refused { .. }))
+            .map(|r| r.shard)
+            .collect()
+    }
+
+    /// `Ok` iff every replica stored the chunk; otherwise a typed error
+    /// naming the shard(s) that failed or refused, so the caller knows
+    /// exactly which replicas to distrust.
+    pub fn require_stored(&self) -> Result<(), FetchError> {
+        let failed = self.failed_shards();
+        if !failed.is_empty() {
+            let causes: Vec<String> = self
+                .replicas
+                .iter()
+                .filter_map(|r| match &r.write {
+                    ReplicaWrite::Failed { error } => Some(format!("shard {}: {error}", r.shard)),
+                    _ => None,
+                })
+                .collect();
+            return Err(FetchError::Transport {
+                chunk: None,
+                shard: failed.first().copied(),
+                detail: format!(
+                    "write-through put failed on shard(s) {failed:?} \
+                     (stored on {:?}): {}",
+                    self.stored_shards(),
+                    causes.join("; ")
+                ),
+            });
+        }
+        let refused = self.refused_shards();
+        if !refused.is_empty() {
+            return Err(FetchError::Capacity {
+                detail: format!(
+                    "shard(s) {refused:?} refused the put (full); stored on {:?}",
+                    self.stored_shards()
+                ),
+            });
+        }
+        Ok(())
+    }
+}
+
 /// Clients for every shard of one logical store.
 #[derive(Debug)]
 pub struct ShardRouter {
     map: ShardMap,
     clients: Vec<StoreClient>,
+    write_policy: WritePolicy,
 }
 
 impl ShardRouter {
@@ -161,7 +470,7 @@ impl ShardRouter {
             clients.push(client);
         }
         let map = ShardMap::with_replication(clients.len(), placement, replication);
-        Ok(ShardRouter { map, clients })
+        Ok(ShardRouter { map, clients, write_policy: WritePolicy::default() })
     }
 
     /// [`connect_replicated`](Self::connect_replicated), but a dead
@@ -191,12 +500,36 @@ impl ShardRouter {
             }
         }
         let map = ShardMap::with_replication(clients.len(), placement, replication);
-        Ok((ShardRouter { map, clients }, unreachable))
+        Ok((ShardRouter { map, clients, write_policy: WritePolicy::default() }, unreachable))
     }
 
     /// The pure placement map this router routes by.
-    pub fn map(&self) -> ShardMap {
-        self.map
+    pub fn map(&self) -> &ShardMap {
+        &self.map
+    }
+
+    /// Route by `map` instead of the dense connect-time default. Every
+    /// slot the map addresses must have a client (slots index the
+    /// address list this router was connected with) — this is how a
+    /// router over the *union* fleet of a [`MapTransition`] serves a
+    /// non-dense post-removal map.
+    pub fn set_map(&mut self, map: ShardMap) {
+        assert!(
+            map.shards().iter().all(|&s| s < self.clients.len()),
+            "map addresses slot outside the connected fleet"
+        );
+        self.map = map;
+    }
+
+    /// Override the put-side placement policy (see [`WritePolicy`]).
+    pub fn with_write_policy(mut self, policy: WritePolicy) -> ShardRouter {
+        self.write_policy = policy;
+        self
+    }
+
+    /// The put-side placement policy in effect.
+    pub fn write_policy(&self) -> WritePolicy {
+        self.write_policy
     }
 
     /// Number of shards in the fleet.
@@ -209,6 +542,32 @@ impl ShardRouter {
         &self.clients[shard]
     }
 
+    /// Order candidate target shards for a write under the router's
+    /// [`WritePolicy`]: ring order as given, or ranked by each node's
+    /// `used_bytes + inflight_bytes` from a control-plane `Stats`
+    /// probe. The sort is stable, so ties keep ring order; an
+    /// unreachable candidate ranks last (it will surface its own error
+    /// when written to).
+    pub fn write_order(&self, candidates: &[usize]) -> Vec<usize> {
+        match self.write_policy {
+            WritePolicy::RingSuccessor => candidates.to_vec(),
+            WritePolicy::LeastUsed => {
+                let mut keyed: Vec<(u64, usize)> = candidates
+                    .iter()
+                    .map(|&s| {
+                        let load = self.clients[s]
+                            .stats()
+                            .map(|st| st.used_bytes.saturating_add(st.inflight_bytes))
+                            .unwrap_or(u64::MAX);
+                        (load, s)
+                    })
+                    .collect();
+                keyed.sort_by_key(|&(load, _)| load);
+                keyed.into_iter().map(|(_, s)| s).collect()
+            }
+        }
+    }
+
     /// Longest stored chain for `tokens` across the fleet: one batched
     /// membership probe per shard per replica round, then the chain
     /// walk. Probe round `k` asks each chunk's `k`-th replica only for
@@ -217,12 +576,12 @@ impl ShardRouter {
     /// replica holds it. A shard that fails its probe is treated as
     /// holding nothing; the error is surfaced only if the chain walk
     /// stops at a chunk no reachable replica could answer for.
-    pub fn match_prefix(&self, tokens: &[u32], block_tokens: usize) -> io::Result<Vec<u64>> {
+    pub fn match_prefix(&self, tokens: &[u32], block_tokens: usize) -> std::io::Result<Vec<u64>> {
         let hashes = prefix_hashes(tokens, block_tokens);
         let mut present = vec![false; hashes.len()];
         // covered[i]: some replica of chunk i answered a probe
         let mut covered = vec![false; hashes.len()];
-        let mut first_err: Option<io::Error> = None;
+        let mut first_err: Option<std::io::Error> = None;
         for round in 0..self.map.replication() {
             let mut per_shard: Vec<Vec<(usize, u64)>> = vec![Vec::new(); self.clients.len()];
             for (i, &h) in hashes.iter().enumerate() {
@@ -259,21 +618,43 @@ impl ShardRouter {
         Ok(hashes.into_iter().take(matched).collect())
     }
 
-    /// Register chunk `chain_idx`, writing through to every replica.
-    /// Returns (stored on all replicas, total evictions across them).
-    pub fn put_chunk(&self, chain_idx: usize, chunk: &StoredChunk) -> io::Result<(bool, u32)> {
-        let mut all_stored = true;
+    /// Register chunk `chain_idx`, writing through to every replica in
+    /// [`write_order`](Self::write_order). Never aborts early: a failed
+    /// replica is recorded in the [`PutOutcome`] and the loop moves on,
+    /// so one dead shard cannot hide which replicas *did* land —
+    /// `PutOutcome::require_stored` surfaces the typed error naming
+    /// the failed shard(s) when all-or-nothing semantics are wanted.
+    pub fn put_chunk(&self, chain_idx: usize, chunk: &StoredChunk) -> PutOutcome {
+        let candidates = self.map.replicas_of(chain_idx, chunk.hash);
+        let mut replicas = Vec::with_capacity(candidates.len());
         let mut total_evicted = 0u32;
-        for shard in self.map.replicas_of(chain_idx, chunk.hash) {
-            let (stored, evicted) = self.clients[shard].put_chunk(chunk)?;
-            all_stored &= stored;
-            total_evicted += evicted;
+        for shard in self.write_order(&candidates) {
+            let write = match self.clients[shard].put_chunk(chunk) {
+                Ok((true, evicted)) => {
+                    total_evicted = total_evicted.saturating_add(evicted);
+                    ReplicaWrite::Stored { evicted }
+                }
+                Ok((false, evicted)) => {
+                    total_evicted = total_evicted.saturating_add(evicted);
+                    ReplicaWrite::Refused { evicted }
+                }
+                Err(e) => ReplicaWrite::Failed {
+                    error: FetchError::from_io(&e).unwrap_or_else(|| {
+                        FetchError::Transport {
+                            chunk: None,
+                            shard: Some(shard),
+                            detail: e.to_string(),
+                        }
+                    }),
+                },
+            };
+            replicas.push(ReplicaPut { shard, write });
         }
-        Ok((all_stored, total_evicted))
+        PutOutcome { replicas, evicted: total_evicted }
     }
 
     /// Per-node capacity counters (index-aligned with the address list).
-    pub fn stats(&self) -> io::Result<Vec<NodeStats>> {
+    pub fn stats(&self) -> std::io::Result<Vec<NodeStats>> {
         self.clients.iter().map(|c| c.stats()).collect()
     }
 }
@@ -356,5 +737,82 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn grow_bumps_version_and_matches_the_dense_map() {
+        let m = ShardMap::with_replication(2, Placement::RoundRobin, 2);
+        assert_eq!((m.version(), m.shards()), (1, &[0usize, 1][..]));
+        let g = m.grown();
+        assert_eq!((g.version(), g.shards()), (2, &[0usize, 1, 2][..]));
+        assert_eq!(g.replication(), 2);
+        // a grown dense map places exactly like a fresh dense map of
+        // the same size — only the version differs
+        let fresh = ShardMap::with_replication(3, Placement::RoundRobin, 2);
+        for i in 0..12usize {
+            let h = crate::kvstore::block_hash(i as u64, &[i as u32]);
+            assert_eq!(g.replicas_of(i, h), fresh.replicas_of(i, h));
+        }
+    }
+
+    #[test]
+    fn shrink_keeps_survivor_slots_and_reclamps_replication() {
+        let m = ShardMap::with_replication(3, Placement::RoundRobin, 3);
+        let s = m.shrunk(1).expect("slot 1 removable");
+        assert_eq!((s.version(), s.shards()), (2, &[0usize, 2][..]));
+        assert_eq!(s.replication(), 2, "replication reclamps to the smaller fleet");
+        assert!(!s.contains(1) && s.contains(2));
+        // ring walks positions, so replicas stay distinct live slots
+        for i in 0..8usize {
+            let h = crate::kvstore::block_hash(i as u64, &[i as u32]);
+            let reps = s.replicas_of(i, h);
+            assert_eq!(reps.len(), 2);
+            assert!(reps.iter().all(|&r| r == 0 || r == 2), "dead slot in {reps:?}");
+            assert_ne!(reps[0], reps[1]);
+        }
+        // removing an absent slot or the last slot is refused
+        assert!(s.shrunk(1).is_none());
+        assert!(s.shrunk(0).and_then(|s2| s2.shrunk(2)).is_none());
+    }
+
+    #[test]
+    fn transition_validates_and_orders_reads_new_ring_first() {
+        let old = ShardMap::with_replication(2, Placement::RoundRobin, 2);
+        let new = old.grown();
+        // version must rise, placement must hold
+        assert!(MapTransition::new(new.clone(), old.clone()).is_err());
+        let mut other = ShardMap::with_replication(3, Placement::ByHash, 2);
+        other.version = 9;
+        assert!(MapTransition::new(old.clone(), other).is_err());
+
+        let t = MapTransition::new(old.clone(), new.clone()).expect("valid transition");
+        assert_eq!(t.union_slots(), vec![0, 1, 2]);
+        let tokens: Vec<u32> = (0..48).collect();
+        let hashes = crate::kvstore::prefix_hashes(&tokens, 8);
+        let mut any_moved = false;
+        for (i, &h) in hashes.iter().enumerate() {
+            let order = t.read_order(i, h);
+            // new-ring replicas lead, old-only holders trail, no dups
+            assert_eq!(order[..new.replication()], new.replicas_of(i, h)[..]);
+            for s in old.replicas_of(i, h) {
+                assert!(order.contains(&s), "old holder {s} unreadable in {order:?}");
+            }
+            let mut dedup = order.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), order.len(), "duplicate slot in {order:?}");
+            any_moved |= t.moved(i, h);
+        }
+        assert!(any_moved, "growing 2 -> 3 must move some replica sets");
+    }
+
+    #[test]
+    fn write_policy_names_roundtrip() {
+        for p in [WritePolicy::RingSuccessor, WritePolicy::LeastUsed] {
+            assert_eq!(WritePolicy::by_name(p.name()), Some(p));
+            assert_eq!(format!("{p}"), p.name());
+        }
+        assert_eq!(WritePolicy::by_name("ring"), Some(WritePolicy::RingSuccessor));
+        assert!(WritePolicy::by_name("blind-guess").is_none());
     }
 }

@@ -18,7 +18,11 @@
 //!   `NodeStats` in-flight counter — added in wire v2, still served at
 //!   v3 — or weighted by per-replica
 //!   bandwidth EWMAs), so a replicated fleet balances read load instead
-//!   of hammering primaries;
+//!   of hammering primaries. During an elastic map change a
+//!   [`MapTransition`](super::shard::MapTransition) can be attached
+//!   ([`RemoteSource::with_transition`]): reads then try the new
+//!   ring's replicas first and fall back to old-ring holders, staying
+//!   bit-correct while the rebalancer copies chunks between rings;
 //! * [`ObjectStoreSource`] shapes an in-process store like an object
 //!   store (per-request latency plus a throughput ceiling) — the
 //!   ROADMAP's "object-store-shaped `TransportSource`" behind the same
@@ -45,7 +49,7 @@ use crate::kvstore::StorageNode;
 use crate::net::BandwidthEstimator;
 use crate::obs::{ArgValue, Track, TraceRecorder};
 
-use super::shard::{Placement, ShardRouter};
+use super::shard::{MapTransition, Placement, ShardMap, ShardRouter};
 
 /// The resolution-ladder names a source serves for fetcher resolution
 /// indices 0..4 (240p..1080p nominal).
@@ -197,6 +201,12 @@ pub struct RemoteSource {
     /// Trace sink for busy / failover / capacity instants (Track
     /// `source`); `None` keeps the replica walk untraced at zero cost.
     rec: Option<Arc<TraceRecorder>>,
+    /// In-flight map change: when set, reads walk
+    /// [`MapTransition::read_order`] (new ring first, old-ring holders
+    /// as the failover tail) instead of the router map's replica set,
+    /// so a fetch issued *during* migration stays correct whichever
+    /// map each chunk's copy has reached.
+    transition: Option<MapTransition>,
 }
 
 impl RemoteSource {
@@ -213,6 +223,7 @@ impl RemoteSource {
             estimators,
             timings: Vec::new(),
             rec: None,
+            transition: None,
         }
     }
 
@@ -236,6 +247,22 @@ impl RemoteSource {
         self
     }
 
+    /// Serve reads through an in-flight [`MapTransition`]: each
+    /// chunk's candidate list becomes the new ring's replica set
+    /// (policy-ordered) followed by its old-ring holders, so fetches
+    /// issued mid-migration restore correctly from *either* map. The
+    /// router must cover the transition's union fleet.
+    pub fn with_transition(mut self, transition: Option<MapTransition>) -> RemoteSource {
+        if let Some(t) = &transition {
+            assert!(
+                t.union_slots().iter().all(|&s| s < self.router.n_shards()),
+                "transition addresses a slot outside the connected fleet"
+            );
+        }
+        self.transition = transition;
+        self
+    }
+
     /// The underlying fleet router.
     pub fn router(&self) -> &ShardRouter {
         &self.router
@@ -245,7 +272,15 @@ impl RemoteSource {
     /// is tried first, the rest are the failover chain. Every policy
     /// returns a permutation of `replicas`, so the PR 4 failover /
     /// `Busy` semantics are unchanged — only who gets asked first.
-    fn replica_order(&self, idx: usize, hash: u64, replicas: &[usize]) -> Vec<usize> {
+    /// `map` is the map `replicas` came from (the router's, or the new
+    /// map of an in-flight transition).
+    fn replica_order(
+        &self,
+        map: &ShardMap,
+        idx: usize,
+        hash: u64,
+        replicas: &[usize],
+    ) -> Vec<usize> {
         let mut order = replicas.to_vec();
         if order.len() < 2 {
             // nothing to schedule — and least-inflight must not pay a
@@ -257,7 +292,7 @@ impl RemoteSource {
             // hash-keyed rotation: a chain-position rotation would
             // alias with the RoundRobin placement stripe (see
             // ShardMap::rotated_replicas_of)
-            ReadPolicy::RoundRobin => order = self.router.map().rotated_replicas_of(idx, hash),
+            ReadPolicy::RoundRobin => order = map.rotated_replicas_of(idx, hash),
             ReadPolicy::LeastInflight => {
                 // one control-plane Stats probe per replica (these pass
                 // admission even on a saturated node); an unreachable
@@ -344,8 +379,24 @@ impl TransportSource for RemoteSource {
             .get(idx)
             .ok_or_else(|| FetchError::transport(format!("no chunk at index {idx}")))?;
         let name = self.ladder[res_idx.min(self.ladder.len() - 1)];
-        let replicas = self.router.map().replicas_of(idx, hash);
-        let order = self.replica_order(idx, hash, &replicas);
+        // mid-transition, candidates are the new ring's replica set
+        // (policy-ordered) with old-ring holders as the failover tail
+        let order = match &self.transition {
+            Some(t) => {
+                let new_reps = t.new.replicas_of(idx, hash);
+                let mut order = self.replica_order(&t.new, idx, hash, &new_reps);
+                for s in t.old.replicas_of(idx, hash) {
+                    if !order.contains(&s) {
+                        order.push(s);
+                    }
+                }
+                order
+            }
+            None => {
+                let replicas = self.router.map().replicas_of(idx, hash);
+                self.replica_order(self.router.map(), idx, hash, &replicas)
+            }
+        };
         let t0 = Instant::now();
         // Busy is transient and must never escape the source, so track
         // real faults separately: if any replica failed for a non-Busy
@@ -409,7 +460,7 @@ impl TransportSource for RemoteSource {
                 detail: format!(
                     "all {} replicas of chunk {idx} (hash {hash:#x}) are saturated \
                      (Busy past {} retries each)",
-                    replicas.len(),
+                    order.len(),
                     self.retry.max_busy_retries
                 ),
             }),

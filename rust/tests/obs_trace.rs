@@ -55,8 +55,8 @@ fn spawn_shards(demo: &DemoPrefix, n: usize) -> (Vec<StorageServer>, Vec<String>
     }
     let router = ShardRouter::connect(&addrs, Placement::RoundRobin).expect("connect");
     for (i, chunk) in demo.chunks.iter().enumerate() {
-        let (stored, _) = router.put_chunk(i, chunk).expect("put chunk");
-        assert!(stored);
+        let out = router.put_chunk(i, chunk);
+        assert!(out.all_stored(), "chunk {i} must register: {out:?}");
     }
     (servers, addrs)
 }

@@ -1,0 +1,334 @@
+//! Elastic fleet: versioned shard map, live rebalance, and write
+//! placement (ISSUE 9).
+//!
+//! Acceptance contracts:
+//! * grow N -> N+1: a `Rebalancer` pass over the map transition copies
+//!   every chunk whose replica set changed onto its new-ring replicas,
+//!   the post-pass scan converges (holders cover the new map — surplus
+//!   copies on old-only slots are allowed, they age out of the LRU),
+//!   and a fetch through the grown fleet restores bit-identically;
+//! * removal is symmetric: shrink N -> N-1, migrate, and the surviving
+//!   fleet alone serves a bit-identical restore;
+//! * a fetch issued *mid-migration* (transition attached, nothing
+//!   copied yet) restores bit-identically by falling back from
+//!   new-ring replicas to old-ring holders;
+//! * a write-through put with a dead replica does not abort: surviving
+//!   replicas hold the chunk and the typed error names the dead shard;
+//! * `WritePolicy::LeastUsed` ranks write candidates by live
+//!   `used_bytes + inflight_bytes` from wire `NodeStats`.
+
+use std::collections::BTreeMap;
+
+use kvfetcher::asic::{h20_table, DecodePool};
+use kvfetcher::baselines::SystemProfile;
+use kvfetcher::fetcher::{
+    ExecMode, FetchConfig, FetchReport, FetchRequest, Fetcher, ReadPolicy, ResolutionPolicy,
+};
+use kvfetcher::kvstore::StorageNode;
+use kvfetcher::net::BandwidthTrace;
+use kvfetcher::service::{
+    demo_prefix, Backend, DemoPrefix, MapTransition, Placement, Rebalancer, RemoteSource,
+    RetryPolicy, ServerConfig, ShardMap, ShardRouter, SourceRegistry, SourceSpec, StorageServer,
+    StoreClient, WritePolicy, DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
+};
+
+/// Spawn one server per shard of `map`, populated in-process with the
+/// chunks that shard's replica set owns under `map`.
+fn launch(demo: &DemoPrefix, map: &ShardMap) -> (Vec<StorageServer>, Vec<String>) {
+    let mut nodes: Vec<StorageNode> =
+        (0..map.n_shards()).map(|_| StorageNode::new(demo.chunk_tokens)).collect();
+    for (i, chunk) in demo.chunks.iter().enumerate() {
+        for shard in map.replicas_of(i, chunk.hash) {
+            assert!(nodes[shard].register(chunk.clone()).stored);
+        }
+    }
+    let mut servers = Vec::new();
+    let mut addrs = Vec::new();
+    for node in nodes {
+        let server = StorageServer::spawn("127.0.0.1:0", node, ServerConfig::default())
+            .expect("bind");
+        addrs.push(server.local_addr().to_string());
+        servers.push(server);
+    }
+    (servers, addrs)
+}
+
+/// Spawn one empty server (a node joining the fleet with no data).
+fn spawn_empty(demo: &DemoPrefix) -> (StorageServer, String) {
+    let node = StorageNode::new(demo.chunk_tokens);
+    let server = StorageServer::spawn("127.0.0.1:0", node, ServerConfig::default()).expect("bind");
+    let addr = server.local_addr().to_string();
+    (server, addr)
+}
+
+fn demo_request(demo: &DemoPrefix) -> FetchRequest {
+    let total_tokens = demo.hashes.len() * demo.chunk_tokens;
+    FetchRequest::new(total_tokens, total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2)
+        .with_hashes(demo.hashes.clone())
+        .resolution(ResolutionPolicy::Fixed(0))
+        .exec(ExecMode::Pipelined)
+}
+
+fn demo_fetcher(demo: &DemoPrefix, replication: usize) -> Fetcher {
+    Fetcher::builder()
+        .profile(SystemProfile::kvfetcher())
+        .fetch_config(FetchConfig { chunk_tokens: demo.chunk_tokens, ..Default::default() })
+        .bandwidth(BandwidthTrace::constant(8.0))
+        .decode_pool(DecodePool::new(7, h20_table()))
+        .replication(replication)
+        .read_policy(ReadPolicy::PrimaryFirst)
+        .build()
+}
+
+/// Bit-exactness assertion shared by every fetch in this file.
+fn assert_bit_exact(report: &FetchReport, demo: &DemoPrefix, label: &str) {
+    assert_eq!(report.restored.len(), demo.hashes.len(), "{label}");
+    for (d, q) in report.restored.iter().zip(&demo.quants) {
+        assert_eq!(d.quant.data, q.data, "{label}: restore must be bit-exact");
+        assert_eq!(d.quant.scales, q.scales, "{label}");
+    }
+}
+
+/// One pipelined fetch through a TCP fleet built from `addrs` with a
+/// dense replicated map (the post-transition steady state).
+fn steady_state_fetch(demo: &DemoPrefix, addrs: &[String], replication: usize) -> FetchReport {
+    let mut spec = SourceSpec::new(demo.hashes.clone(), DEMO_LADDER);
+    spec.addrs = addrs.to_vec();
+    spec.placement = Placement::RoundRobin;
+    spec.replication = replication;
+    spec.tokens = demo.tokens.clone();
+    spec.chunk_tokens = demo.chunk_tokens;
+    spec.retry = RetryPolicy { max_busy_retries: 6, min_backoff_ms: 2, max_backoff_ms: 50 };
+    let source = SourceRegistry::with_defaults().create(Backend::Tcp, &spec).expect("tcp source");
+    let fetcher = demo_fetcher(demo, replication);
+    let mut session = fetcher.session(demo_request(demo)).with_source(source);
+    session.run().expect("steady-state fetch completes");
+    let report = session.take_report().expect("report stored");
+    assert_bit_exact(&report, demo, "steady-state");
+    report
+}
+
+/// Over-the-wire holder sets: which of `addrs` hold each chunk.
+fn holder_sets(demo: &DemoPrefix, addrs: &[String]) -> Vec<Vec<usize>> {
+    let clients: Vec<StoreClient> =
+        addrs.iter().map(|a| StoreClient::connect(a).expect("connect")).collect();
+    demo.hashes
+        .iter()
+        .map(|&h| {
+            (0..addrs.len())
+                .filter(|&s| clients[s].has_chunks(&[h]).expect("probe")[0])
+                .collect()
+        })
+        .collect()
+}
+
+/// Acceptance: add a third node to a 2-shard replicated fleet, migrate,
+/// and converge — every chunk's holder set covers the new map's replica
+/// set, the grown fleet serves a bit-identical restore, and a second
+/// migration pass is a no-op.
+#[test]
+fn growing_the_fleet_converges_and_restores_bit_identically() {
+    let demo = demo_prefix(211, 6, 32);
+    let old = ShardMap::with_replication(2, Placement::RoundRobin, 2);
+    let (servers, mut addrs) = launch(&demo, &old);
+    let new = old.grown();
+    assert_eq!((new.version(), new.n_shards()), (2, 3));
+    let (joined, joined_addr) = spawn_empty(&demo);
+    addrs.push(joined_addr);
+
+    let t = MapTransition::new(old, new.clone()).expect("grown raises the version");
+    // chunks whose new-ring replica set includes the joined slot move
+    let must_move = (0..demo.hashes.len())
+        .filter(|&i| new.replicas_of(i, demo.hashes[i]).contains(&2))
+        .count();
+    assert!(must_move >= 2, "growth must move several chunks");
+
+    let router =
+        ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 2).expect("connect union");
+    let rb = Rebalancer::new(router, t).expect("union covered");
+    let before = rb.scan(&demo.hashes);
+    assert!(!before.converged(), "the joined node starts empty");
+    assert_eq!(before.pending(), must_move);
+
+    let report = rb.migrate(&demo.hashes);
+    assert!(report.converged(), "failed: {:?}", report.failed);
+    assert_eq!(report.migrated.len(), must_move);
+    assert!(report.migrated.iter().all(|a| a.to == 2), "only the joined slot was short");
+    assert!(rb.scan(&demo.hashes).converged(), "new map must serve everything");
+
+    // holder sets cover the new replica sets; surplus copies on the old
+    // ring are allowed (no delete verb — they age out of the LRU)
+    for (i, holders) in holder_sets(&demo, &addrs).iter().enumerate() {
+        for slot in new.replicas_of(i, demo.hashes[i]) {
+            assert!(holders.contains(&slot), "chunk {i} must land on new-ring slot {slot}");
+        }
+    }
+
+    // the grown fleet serves the whole prefix bit-identically
+    steady_state_fetch(&demo, &addrs, 2);
+
+    // idempotent: a second pass copies nothing
+    let again = rb.migrate(&demo.hashes);
+    assert!(again.migrated.is_empty() && again.failed.is_empty());
+
+    joined.shutdown();
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Removal is symmetric: migrate chunks off the leaving slot, shut it
+/// down, and the survivors alone serve a bit-identical restore.
+#[test]
+fn removing_a_node_migrates_its_chunks_to_the_survivors() {
+    let demo = demo_prefix(223, 6, 32);
+    let old = ShardMap::with_replication(3, Placement::RoundRobin, 2);
+    let (mut servers, addrs) = launch(&demo, &old);
+    let new = old.shrunk(1).expect("slot 1 is removable");
+    assert_eq!((new.version(), new.n_shards()), (2, 2));
+    assert_eq!(new.shards(), &[0, 2], "survivors keep their slot ids");
+
+    let t = MapTransition::new(old, new.clone()).expect("shrunk raises the version");
+    let router =
+        ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 2).expect("connect union");
+    let rb = Rebalancer::new(router, t).expect("union covered");
+    let report = rb.migrate(&demo.hashes);
+    assert!(report.converged(), "failed: {:?}", report.failed);
+    assert!(rb.scan(&demo.hashes).converged());
+    // every copy targeted a survivor, never the leaving slot
+    assert!(report.migrated.iter().all(|a| a.to != 1));
+
+    // with replication 2 over 2 survivors, both must hold every chunk
+    for (i, holders) in holder_sets(&demo, &addrs).iter().enumerate() {
+        assert!(
+            holders.contains(&0) && holders.contains(&2),
+            "chunk {i} must sit on both survivors: {holders:?}"
+        );
+    }
+
+    // the leaving node shuts down; the survivors alone serve the prefix
+    servers.remove(1).shutdown();
+    let survivor_addrs = vec![addrs[0].clone(), addrs[2].clone()];
+    steady_state_fetch(&demo, &survivor_addrs, 2);
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Acceptance: a fetch issued *during* migration — transition attached,
+/// nothing copied yet — restores bit-identically by falling back from
+/// the (empty) new-ring replicas to the old-ring holders; after the
+/// migration the same transition-aware source reads from the new ring.
+#[test]
+fn mid_migration_fetch_reads_through_either_map() {
+    let demo = demo_prefix(227, 6, 32);
+    let old = ShardMap::new(1, Placement::RoundRobin);
+    let (servers, mut addrs) = launch(&demo, &old);
+    let new = old.grown();
+    let (joined, joined_addr) = spawn_empty(&demo);
+    addrs.push(joined_addr);
+    let t = MapTransition::new(old, new).expect("grown raises the version");
+
+    let transition_fetch = |label: &str| -> FetchReport {
+        let router =
+            ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 1).expect("connect");
+        let source = RemoteSource::new(router, demo.hashes.clone(), DEMO_LADDER)
+            .with_retry(RetryPolicy { max_busy_retries: 6, min_backoff_ms: 2, max_backoff_ms: 50 })
+            .with_transition(Some(t.clone()));
+        let fetcher = demo_fetcher(&demo, 1);
+        let mut session = fetcher.session(demo_request(&demo)).with_source(Box::new(source));
+        session.run().unwrap_or_else(|e| panic!("{label} fetch must complete: {e}"));
+        let report = session.take_report().expect("report stored");
+        assert_bit_exact(&report, &demo, label);
+        report
+    };
+
+    // before any chunk moves: every chunk still comes off the old slot
+    let before = transition_fetch("mid-migration");
+    let served: BTreeMap<usize, usize> = before.wire_timings.iter().fold(
+        BTreeMap::new(),
+        |mut h, w| {
+            *h.entry(w.shard.expect("tcp names the shard")).or_insert(0) += 1;
+            h
+        },
+    );
+    assert_eq!(served.get(&0), Some(&demo.hashes.len()), "old slot serves all: {served:?}");
+
+    // migrate, then the same transition-aware read path prefers the new
+    // ring — chunks whose new primary is the joined slot move over
+    let router =
+        ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 1).expect("connect");
+    let rb = Rebalancer::new(router, t.clone()).expect("union covered");
+    let report = rb.migrate(&demo.hashes);
+    assert!(report.converged(), "failed: {:?}", report.failed);
+    let after = transition_fetch("post-migration");
+    for w in &after.wire_timings {
+        let new_primary = t.new.replicas_of(w.idx, demo.hashes[w.idx])[0];
+        assert_eq!(w.shard, Some(new_primary), "chunk {} must read the new ring", w.idx);
+    }
+
+    joined.shutdown();
+    for s in servers {
+        s.shutdown();
+    }
+}
+
+/// Bugfix acceptance: a write-through put with one dead replica keeps
+/// writing — the surviving replicas hold the chunk, the per-replica
+/// outcome distinguishes them, and the typed error names the dead
+/// shard.
+#[test]
+fn partial_write_through_survives_and_names_the_dead_shard() {
+    let demo = demo_prefix(229, 2, 32);
+    // two empty shards, replication 2: both are write targets
+    let a = spawn_empty(&demo);
+    let b = spawn_empty(&demo);
+    let addrs = vec![a.1.clone(), b.1.clone()];
+    // kill shard 1 before the put; lenient connect keeps slot 1 routable
+    b.0.shutdown();
+    let (router, dead) =
+        ShardRouter::connect_lenient(&addrs, Placement::RoundRobin, 2).expect("lenient");
+    assert_eq!(dead, vec![1]);
+
+    let out = router.put_chunk(0, &demo.chunks[0]);
+    assert!(!out.all_stored());
+    assert_eq!(out.stored_shards(), vec![0], "the live replica must still be written");
+    assert_eq!(out.failed_shards(), vec![1]);
+    let err = out.require_stored().expect_err("a partial write is an error");
+    let msg = err.to_string();
+    assert!(msg.contains("[1]"), "error must name the dead shard: {msg}");
+    assert!(msg.contains("[0]"), "error must name the surviving replicas: {msg}");
+
+    // the surviving replica really holds the chunk, over the wire
+    let live = StoreClient::connect(&addrs[0]).expect("connect");
+    assert!(live.has_chunks(&[demo.hashes[0]]).expect("probe")[0]);
+    a.0.shutdown();
+}
+
+/// `WritePolicy::LeastUsed` consults live `NodeStats`: with one loaded
+/// and one empty candidate, the empty shard is written first; the
+/// default ring-successor order is preserved under `RingSuccessor`.
+#[test]
+fn least_used_write_policy_prefers_the_emptier_shard() {
+    let demo = demo_prefix(233, 4, 32);
+    // shard 0 pre-loaded with every chunk, shard 1 empty
+    let mut loaded = StorageNode::new(demo.chunk_tokens);
+    for c in &demo.chunks {
+        assert!(loaded.register(c.clone()).stored);
+    }
+    let s0 = StorageServer::spawn("127.0.0.1:0", loaded, ServerConfig::default()).expect("bind");
+    let (s1, addr1) = spawn_empty(&demo);
+    let addrs = vec![s0.local_addr().to_string(), addr1];
+
+    let router =
+        ShardRouter::connect_replicated(&addrs, Placement::RoundRobin, 2).expect("connect");
+    assert_eq!(router.write_order(&[0, 1]), vec![0, 1], "ring order by default");
+    let router = router.with_write_policy(WritePolicy::LeastUsed);
+    assert_eq!(
+        router.write_order(&[0, 1]),
+        vec![1, 0],
+        "least-used must rank the empty shard first"
+    );
+    s0.shutdown();
+    s1.shutdown();
+}

@@ -87,8 +87,8 @@ fn spawn_shards(
     }
     let router = ShardRouter::connect(&addrs, Placement::RoundRobin).expect("connect router");
     for (i, chunk) in demo.chunks.iter().enumerate() {
-        let (stored, _) = router.put_chunk(i, chunk).expect("put chunk");
-        assert!(stored, "chunk {i} must register");
+        let out = router.put_chunk(i, chunk);
+        assert!(out.all_stored(), "chunk {i} must register: {out:?}");
     }
     (servers, router)
 }

@@ -92,8 +92,8 @@ impl FaultPlan {
         let router = ShardRouter::connect_replicated(&addrs, self.placement, self.replication)
             .expect("connect fleet");
         for (i, chunk) in demo.chunks.iter().enumerate() {
-            let (stored, _) = router.put_chunk(i, chunk).expect("write-through put");
-            assert!(stored, "chunk {i} must register on every replica");
+            let out = router.put_chunk(i, chunk);
+            assert!(out.all_stored(), "chunk {i} must register on every replica: {out:?}");
         }
         drop(router); // free the populate connections
         Fleet { servers, addrs, replication: self.replication, placement: self.placement }
