@@ -24,7 +24,7 @@ use std::process::exit;
 
 use kvfetcher::fetcher::{SchedConfig, SchedPolicy};
 use kvfetcher::obs::TraceRecorder;
-use kvfetcher::service::{demo_mix, run_load, LoadSpec, RetryPolicy};
+use kvfetcher::service::{demo_mix, run_load, LoadSource, LoadSpec, RetryPolicy};
 
 fn parse_flag(args: &[String], name: &str) -> Option<String> {
     args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).cloned()
@@ -79,6 +79,7 @@ fn main() {
         chunk_tokens,
         sched: SchedConfig { policy, slots, ..Default::default() },
         tenants: demo_mix(requests, rate, burst),
+        source: LoadSource::default(),
         retry: RetryPolicy::default(),
         recorder: trace_out.as_ref().map(|_| TraceRecorder::new(1 << 18)),
     };

@@ -32,6 +32,12 @@
 //!               ring (reads fall back to old-ring holders meanwhile)
 //!               and exit non-zero unless the new map alone can serve
 //!               every chunk
+//!   chaos     — expand a seed into a deterministic fault schedule
+//!               (kills, busy storms, accept delays, throttle swaps,
+//!               grow/shrink, load bursts), execute it against a live
+//!               loopback fleet, and exit non-zero unless every fetch
+//!               restores bit-identically and the fleet re-converges
+//!               after every fault; the printed seed replays failures
 //!   calibrate — measure real-codec compression ratios per system
 //!   layout    — run the intra-frame layout search and print the table
 //!   real      — smoke-test the PJRT runtime on the AOT artifacts
@@ -82,6 +88,57 @@ fn parse_flag(args: &[String], name: &str) -> Option<String> {
         .position(|a| a == name)
         .and_then(|i| args.get(i + 1))
         .cloned()
+}
+
+/// Every value of a repeatable flag, in order of appearance —
+/// `parse_flag` stops at the first hit, this collects them all.
+fn parse_flags(args: &[String], name: &str) -> Vec<String> {
+    args.iter()
+        .enumerate()
+        .filter(|(_, a)| *a == name)
+        .filter_map(|(i, _)| args.get(i + 1))
+        .cloned()
+        .collect()
+}
+
+/// Repeatable `--fault <shard>:<kind>[:<val>]` flags folded into one
+/// `FaultSpec` per shard. Kinds: `die-after-fetches:<n>` (default 0 —
+/// die before serving anything), `accept-delay-ms:<ms>` (default 1),
+/// `busy-first-fetches:<n>` (default 1). Later flags for the same
+/// shard+kind overwrite earlier ones; different kinds combine.
+fn parse_fault_specs(args: &[String], n_shards: usize) -> Vec<kvfetcher::service::FaultSpec> {
+    fn bad(spec: &str) -> ! {
+        eprintln!(
+            "--fault takes <shard>:<kind>[:<val>] with kind one of `die-after-fetches`, \
+             `accept-delay-ms`, `busy-first-fetches` (got {spec:?})"
+        );
+        std::process::exit(2);
+    }
+    let mut faults = vec![kvfetcher::service::FaultSpec::default(); n_shards];
+    for spec in parse_flags(args, "--fault") {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let (shard, kind, val) = match parts.as_slice() {
+            [s, k] => (*s, *k, None),
+            [s, k, v] => (*s, *k, Some(*v)),
+            _ => bad(&spec),
+        };
+        let Ok(shard) = shard.parse::<usize>() else { bad(&spec) };
+        if shard >= n_shards {
+            eprintln!("--fault shard {shard} out of range (fleet has {n_shards} shards)");
+            std::process::exit(2);
+        }
+        let num = |default: u64| match val {
+            Some(v) => v.parse().unwrap_or_else(|_| bad(&spec)),
+            None => default,
+        };
+        match kind {
+            "die-after-fetches" => faults[shard].die_after_fetches = Some(num(0) as usize),
+            "accept-delay-ms" => faults[shard].accept_delay_ms = num(1),
+            "busy-first-fetches" => faults[shard].busy_first_fetches = num(1) as usize,
+            _ => bad(&spec),
+        }
+    }
+    faults
 }
 
 /// `--replication` flag, falling back to `[service] replication`. Both
@@ -194,17 +251,19 @@ fn load_experiment(args: &[String]) -> Experiment {
 /// can live in separate processes and die/rejoin independently);
 /// `--empty` skips population (a rejoining shard that lost its data);
 /// `--repair-every-secs N` runs a background anti-entropy pass over
-/// the whole fleet every N seconds. `--die-after-fetches N` injects a
-/// shard-0 death after N served chunk fetches (the CI failover round
-/// trip). `--map-version v` overrides the shard-map version the node
+/// the whole fleet every N seconds. Repeatable `--fault
+/// <shard>:<kind>[:<val>]` flags inject deterministic faults on any
+/// hosted shard — `--fault 0:die-after-fetches:1` is the CI failover
+/// round trip, `--fault 2:busy-first-fetches:3` sheds the first three
+/// reads of shard 2. `--map-version v` overrides the shard-map version the node
 /// echoes in Stats replies (wire v5) — a node started mid-rebalance is
 /// launched under the grown map.
 fn cmd_serve_store(listen: &str, args: &[String]) {
     use kvfetcher::kvstore::{prefix_hashes, StorageNode};
     use kvfetcher::net::BandwidthTrace;
     use kvfetcher::service::{
-        demo_prefix, demo_tokens, AdmissionConfig, FaultSpec, Placement, ServerConfig,
-        ShardMap, StorageServer, ThrottleSpec,
+        demo_prefix, demo_tokens, AdmissionConfig, Placement, ServerConfig, ShardMap,
+        StorageServer, ThrottleSpec,
     };
 
     let addrs = Experiment::parse_addrs(listen);
@@ -230,8 +289,7 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
             .unwrap_or(exp.service.max_inflight),
         ..Default::default()
     };
-    let die_after: Option<usize> = parse_flag(args, "--die-after-fetches")
-        .map(|s| s.parse().expect("--die-after-fetches takes a count"));
+    let faults = parse_fault_specs(args, addrs.len());
     // host only a subset of the fleet's shards, so shards can live in
     // separate processes and die/rejoin independently
     let hosted: Vec<usize> = parse_flag(args, "--shards")
@@ -288,12 +346,7 @@ fn cmd_serve_store(listen: &str, args: &[String]) {
         let cfg = ServerConfig {
             throttle: throttle.clone(),
             admission: admission.clone(),
-            // the injected death applies to shard 0 only — enough for a
-            // deterministic "kill one of N mid-fetch" round trip
-            fault: FaultSpec {
-                die_after_fetches: if i == 0 { die_after } else { None },
-                ..Default::default()
-            },
+            fault: faults[i].clone(),
             map_version: map_version.unwrap_or_else(|| map.version()),
         };
         match StorageServer::spawn(addr, node, cfg) {
@@ -972,7 +1025,7 @@ fn cmd_publish(args: &[String]) {
 /// mismatched job.
 fn cmd_serve_loadgen(args: &[String]) {
     use kvfetcher::fetcher::SchedConfig;
-    use kvfetcher::service::{demo_mix, run_load, LoadSpec, RetryPolicy};
+    use kvfetcher::service::{demo_mix, run_load, LoadSource, LoadSpec, RetryPolicy};
 
     let exp = load_experiment(args);
     let quick = args.iter().any(|a| a == "--quick");
@@ -1005,6 +1058,7 @@ fn cmd_serve_loadgen(args: &[String]) {
         chunk_tokens,
         sched,
         tenants: demo_mix(requests, rate, burst),
+        source: LoadSource::default(),
         retry: RetryPolicy::default(),
         recorder: trace.as_ref().map(|(r, _)| Arc::clone(r)),
     };
@@ -1309,21 +1363,129 @@ fn cmd_real(_args: &[String]) {
     std::process::exit(2);
 }
 
+/// `chaos --seed n [--duration-secs s] [--shards k] ...` — expand the
+/// seed into a deterministic fault schedule (kills, busy storms, accept
+/// delays, throttle swaps, grow/shrink, load bursts), run it against a
+/// live loopback fleet, and gate the three chaos invariants
+/// (bit-identical restores, re-convergence after every kill and map
+/// change, consistent counters) via the exit code. The seed is always
+/// printed: any failure replays exactly with the same flags.
+/// `--scenario-out` writes the expanded schedule as deterministic JSON;
+/// `--max-events n` truncates the schedule to its first n events (the
+/// shrinking knob for minimizing a failing seed); `--trace-out` records
+/// the whole run — chaos events included, on their own track — as a
+/// Chrome trace.
+fn cmd_chaos(args: &[String]) {
+    use kvfetcher::service::{ChaosRunner, ChaosSpec};
+
+    let exp = load_experiment(args);
+    let (seed, n_chunks, chunk_tokens) = demo_params(args);
+    let mut spec = ChaosSpec { seed, n_chunks, chunk_tokens, ..Default::default() };
+    if let Some(s) = parse_flag(args, "--duration-secs") {
+        spec.duration_secs = s.parse().expect("--duration-secs takes seconds");
+    }
+    if let Some(s) = parse_flag(args, "--events-per-sec") {
+        spec.events_per_sec = s.parse().expect("--events-per-sec takes a rate");
+    }
+    if let Some(s) = parse_flag(args, "--shards") {
+        spec.fleet.shards = s.parse().expect("--shards takes a count");
+    }
+    if let Some(s) = parse_flag(args, "--replication") {
+        spec.fleet.replication = s.parse().expect("--replication takes a count");
+    }
+    if spec.fleet.shards == 0 || spec.fleet.replication == 0 {
+        eprintln!("chaos needs at least one shard and replication >= 1");
+        std::process::exit(2);
+    }
+    if spec.fleet.replication > spec.fleet.shards {
+        eprintln!(
+            "--replication {} exceeds --shards {}",
+            spec.fleet.replication, spec.fleet.shards
+        );
+        std::process::exit(2);
+    }
+    if let Some(s) = parse_flag(args, "--max-events") {
+        spec.max_events = Some(s.parse().expect("--max-events takes a count"));
+    }
+
+    let schedule = spec.expand();
+    println!(
+        "# chaos: seed={seed} | {} events over {:.1}s | fleet {} shards x r{} | {} chunks x \
+         {chunk_tokens} tokens",
+        schedule.events.len(),
+        spec.duration_secs,
+        spec.fleet.shards,
+        spec.fleet.replication,
+        n_chunks,
+    );
+    println!(
+        "# replay: kvfetcher chaos --seed {seed} --duration-secs {} --shards {} \
+         --replication {} --chunks {n_chunks} --chunk-tokens {chunk_tokens}",
+        spec.duration_secs,
+        spec.fleet.shards,
+        spec.fleet.replication,
+    );
+    if let Some(out) = parse_flag(args, "--scenario-out") {
+        let doc = schedule.to_json(&spec).to_string() + "\n";
+        if let Err(e) = std::fs::write(&out, doc) {
+            eprintln!("cannot write {out}: {e}");
+            std::process::exit(1);
+        }
+        println!("# wrote {out} ({} events)", schedule.events.len());
+    }
+    if args.iter().any(|a| a == "--expand-only") {
+        return;
+    }
+
+    let trace = trace_setup(args, &exp);
+    let runner = match ChaosRunner::new(spec.clone()) {
+        Ok(r) => r.with_recorder(trace.as_ref().map(|(rec, _)| Arc::clone(rec))),
+        Err(e) => {
+            eprintln!("chaos fleet failed to start: {e}");
+            std::process::exit(1);
+        }
+    };
+    let report = runner.run(&schedule);
+    println!(
+        "# chaos: {} events run | {} fetches bit-verified | {} repairs + {} rebalances \
+         converged | {} violations",
+        report.events_run,
+        report.fetches_verified,
+        report.repairs_converged,
+        report.rebalances_converged,
+        report.violations.len(),
+    );
+    for v in &report.violations {
+        eprintln!("# violation: {v}");
+    }
+    if let Some((rec, path)) = &trace {
+        write_trace(rec, path);
+    }
+    if !report.ok() {
+        eprintln!("# CHAOS FAILED — replay with `kvfetcher chaos --seed {seed}` (same flags)");
+        std::process::exit(1);
+    }
+    println!("# chaos ok: every invariant held (seed {seed})");
+}
+
 const USAGE: &str =
-    "kvfetcher <serve|fetch|publish|stats|repair|rebalance|calibrate|layout|real> [flags]
+    "kvfetcher <serve|fetch|publish|stats|repair|rebalance|chaos|calibrate|layout|real> [flags]
   serve     --config <toml> [--bandwidth G] [--device d] [--model m] [--requests n]
             [--exec analytic|pipelined]
   serve     --listen a:p[,b:p...] [--seed s] [--chunks n] [--chunk-tokens t]
             [--capacity bytes] [--throttle-gbps G] [--replication r]
-            [--max-inflight bytes] [--max-conns n] [--die-after-fetches n]
-            [--shards i,j] [--empty] [--repair-every-secs n]
-            [--map-version v]
+            [--max-inflight bytes] [--max-conns n]
+            [--fault <shard>:<kind>[:<val>]]... [--shards i,j] [--empty]
+            [--repair-every-secs n] [--map-version v]
             (storage shard servers; each chunk is written through to r
              shards, admission limits answer Busy instead of dropping,
-             --die-after-fetches kills shard 0 at a chunk boundary,
-             --shards hosts a fleet subset so shards can die/rejoin
-             independently, --empty rejoins without data, and
-             --repair-every-secs runs a background anti-entropy loop)
+             repeatable --fault arms deterministic faults on any hosted
+             shard — kind one of die-after-fetches:<n> (a death at a
+             chunk boundary), accept-delay-ms:<ms>,
+             busy-first-fetches:<n> — --shards hosts a fleet subset so
+             shards can die/rejoin independently, --empty rejoins
+             without data, and --repair-every-secs runs a background
+             anti-entropy loop)
   serve     --loadgen [--sched-policy p] [--slots n] [--requests n] [--rate r]
             [--burst n] [--quick] [--out file] [--seed s] [--chunks n]
             [--chunk-tokens t] [--trace-out file]
@@ -1385,6 +1547,20 @@ const USAGE: &str =
              --max-passes; reads keep working mid-migration by falling
              back to old-ring holders; --check only scans; surplus copies
              on removed slots age out of the LRU, no delete verb needed)
+  chaos     --seed n [--duration-secs s] [--events-per-sec e] [--shards k]
+            [--replication r] [--chunks n] [--chunk-tokens t]
+            [--max-events n] [--scenario-out file] [--expand-only]
+            [--trace-out file]
+            (seeded chaos scenario: the seed expands deterministically
+             into a schedule of shard kills, busy storms, accept delays,
+             throttle swaps, grow/shrink transitions, and multi-tenant
+             load bursts, executed against a live loopback fleet; exits
+             non-zero unless every fetch restores bit-identically, every
+             kill and map change re-converges, and counters stay
+             consistent; the printed seed replays any failure exactly,
+             --scenario-out writes the schedule as deterministic JSON,
+             --max-events shrinks a failing schedule, --expand-only
+             skips execution)
   calibrate [--tokens n]
   layout    [--heads h] [--dim d]
   real      [--artifacts dir]   (requires --features pjrt)";
@@ -1398,6 +1574,7 @@ fn main() {
         Some("stats") => cmd_stats(&args[1..]),
         Some("repair") => cmd_repair(&args[1..]),
         Some("rebalance") => cmd_rebalance(&args[1..]),
+        Some("chaos") => cmd_chaos(&args[1..]),
         Some("calibrate") => cmd_calibrate(&args[1..]),
         Some("layout") => cmd_layout(&args[1..]),
         Some("real") => cmd_real(&args[1..]),

@@ -21,7 +21,10 @@
 //!   version,
 //! * **manifest-resolve / object-get spans** plus cache
 //!   hit/miss/evict instants from the content-addressed
-//!   [`crate::cas::CasSource`] delivery path.
+//!   [`crate::cas::CasSource`] delivery path,
+//! * **chaos-event instants** from the seeded fault-scenario runner
+//!   ([`crate::service::chaos`]), so every injected kill / storm /
+//!   throttle swap renders next to the traffic it disturbed.
 //!
 //! The recorder exports Chrome trace-event JSON
 //! ([`TraceRecorder::to_chrome_json`]) loadable in `ui.perfetto.dev`
@@ -98,6 +101,9 @@ pub enum Track {
     /// The content-addressed delivery path (manifest resolves, object
     /// GETs, edge-cache hit/miss/evict).
     Cas,
+    /// Injected chaos events (kills, busy storms, accept delays,
+    /// throttle swaps, grow/shrink) from the scenario runner.
+    Chaos,
 }
 
 impl Track {
@@ -111,6 +117,7 @@ impl Track {
             Track::Source => 5,
             Track::Repair => 6,
             Track::Cas => 7,
+            Track::Chaos => 8,
         }
     }
 
@@ -124,12 +131,13 @@ impl Track {
             Track::Source => "source",
             Track::Repair => "repair",
             Track::Cas => "cas",
+            Track::Chaos => "chaos",
         }
     }
 
     /// Every track, in `tid` order (the exporter emits one thread-name
     /// metadata record per entry).
-    pub fn all() -> [Track; 7] {
+    pub fn all() -> [Track; 8] {
         [
             Track::Transmit,
             Track::Decode,
@@ -138,6 +146,7 @@ impl Track {
             Track::Source,
             Track::Repair,
             Track::Cas,
+            Track::Chaos,
         ]
     }
 }
@@ -402,11 +411,11 @@ mod tests {
         let doc = rec.to_chrome_json();
         let parsed = Json::parse(&doc.to_string()).expect("export parses");
         let evs = parsed.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
-        // 1 process + 7 thread metadata records + 2 events
-        assert_eq!(evs.len(), 1 + 7 + 2);
+        // 1 process + 8 thread metadata records + 2 events
+        assert_eq!(evs.len(), 1 + 8 + 2);
         let metas: Vec<&Json> =
             evs.iter().filter(|e| e.get("ph").and_then(Json::as_str) == Some("M")).collect();
-        assert_eq!(metas.len(), 8);
+        assert_eq!(metas.len(), 9);
         let x = evs
             .iter()
             .find(|e| e.get("ph").and_then(Json::as_str) == Some("X"))

@@ -1,0 +1,973 @@
+//! Seeded chaos engine: expand one `u64` seed into a deterministic
+//! fault schedule and prove the fleet survives it bit-identically.
+//!
+//! A [`ChaosSpec`] (seed, horizon, fleet shape, event weights) expands
+//! — through the repo's own splitmix64 [`Prng`], no new dependencies —
+//! into a [`ChaosSchedule`]: a timestamped list of [`ChaosEvent`]s
+//! drawn from everything the service layer can already survive one at
+//! a time: shard kills at chunk boundaries (the
+//! [`FaultSpec::die_after_fetches`](super::server::FaultSpec) fault,
+//! now armed *live* through [`super::server::FaultHandle`]),
+//! rejoin-empty + anti-entropy repair, injected `Busy` storms, accept
+//! delays, bandwidth-throttle swaps, grow/shrink map transitions with
+//! rebalance migration, and multi-tenant load bursts from the
+//! [`super::loadgen`] generator pointed at the live fleet
+//! ([`super::loadgen::LoadSource::Tcp`]).
+//!
+//! The [`ChaosRunner`] then executes the schedule against a real
+//! loopback fleet, and after **every** event window asserts the three
+//! chaos invariants:
+//!
+//! 1. **bit-identical restores** — a full fetch through the (possibly
+//!    degraded) fleet must match the local [`DemoPrefix`] ground truth
+//!    byte for byte;
+//! 2. **re-convergence** — every kill is followed by rejoin-empty plus
+//!    [`RepairScanner::repair_until_converged`], every grow/shrink by
+//!    [`Rebalancer::migrate_until_converged`], and a gate that fails
+//!    the run if the fleet does not heal;
+//! 3. **observability consistency** — in-flight byte counters drain to
+//!    zero at quiesce, `busy_replies` stay monotonic per node, and the
+//!    trace ring's length/drop accounting stays coherent.
+//!
+//! Violations never panic: they accumulate in
+//! [`ChaosReport::violations`] with the seed and event index, so the
+//! CLI (`kvfetcher chaos --seed N`) can exit nonzero *and* print the
+//! exact seed that replays the failure. Same seed, same schedule, same
+//! fleet walk — `chaos.json` (via [`ChaosSchedule::to_json`]) is
+//! byte-identical across runs.
+//!
+//! Event timestamps order the schedule (and label the exported trace);
+//! the runner executes event windows back to back rather than sleeping
+//! out the gaps, so a 30-second schedule gates CI in a few seconds.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::fetcher::{
+    ExecMode, FetchConfig, FetchError, FetchRequest, Fetcher, ReadPolicy, SchedConfig,
+};
+use crate::kvstore::StorageNode;
+use crate::net::BandwidthTrace;
+use crate::obs::{ArgValue, Track, TraceRecorder};
+use crate::util::json::Json;
+use crate::util::Prng;
+
+use super::loadgen::{demo_mix, run_load, LoadSource, LoadSpec};
+use super::repair::{Rebalancer, RepairScanner};
+use super::server::{ServerConfig, StorageServer};
+use super::shard::{MapTransition, Placement, ShardMap, ShardRouter};
+use super::source::{RemoteSource, RetryPolicy};
+use super::throttle::ThrottleSpec;
+use super::{
+    demo_prefix, DemoPrefix, DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
+};
+
+/// Salt mixed into the spec seed so chaos streams are decorrelated from
+/// the demo-prefix and loadgen streams derived from the same seed.
+const CHAOS_SEED_SALT: u64 = 0xC4A0_5EED_0000_0001;
+
+/// How many grow events can stack before the schedule stops growing
+/// the fleet (bounds the loopback fleet at `shards + GROW_CAP`).
+const GROW_CAP: usize = 2;
+
+/// Passes granted to each repair / migrate convergence gate.
+const CONVERGE_PASSES: usize = 8;
+
+/// The fleet the chaos scenario runs against.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosFleetSpec {
+    /// Shards at scenario start (grow/shrink events move around this).
+    pub shards: usize,
+    /// Replication factor. Kills are only scheduled at `>= 2` — at
+    /// factor 1 a chunk-holding shard's death loses data by design.
+    pub replication: usize,
+    /// Chunk→shard placement.
+    pub placement: Placement,
+}
+
+impl Default for ChaosFleetSpec {
+    fn default() -> Self {
+        ChaosFleetSpec { shards: 3, replication: 2, placement: Placement::RoundRobin }
+    }
+}
+
+/// Relative odds of each event kind in the expanded schedule. A weight
+/// of zero removes the kind; kinds the fleet state cannot support at a
+/// given step (kill at replication 1, shrink at the floor, grow at the
+/// cap) are masked out for that draw regardless of weight.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosWeights {
+    /// Shard death at a chunk boundary (+ rejoin-empty + repair gate).
+    pub kill: f64,
+    /// Injected `Busy` storm on one shard.
+    pub busy_storm: f64,
+    /// Accept-delay injection on one shard.
+    pub accept_delay: f64,
+    /// Bandwidth-throttle swap on one shard.
+    pub throttle_swap: f64,
+    /// Fleet grow by one node (+ rebalance gate).
+    pub grow: f64,
+    /// Fleet shrink by one node (+ rebalance gate).
+    pub shrink: f64,
+    /// Multi-tenant load burst through the live fleet.
+    pub load_burst: f64,
+}
+
+impl Default for ChaosWeights {
+    fn default() -> Self {
+        ChaosWeights {
+            kill: 2.0,
+            busy_storm: 3.0,
+            accept_delay: 2.0,
+            throttle_swap: 2.0,
+            grow: 1.5,
+            shrink: 1.5,
+            load_burst: 3.0,
+        }
+    }
+}
+
+/// Everything that determines a chaos scenario. Two specs with equal
+/// fields expand to identical schedules — the seed is the replay key.
+#[derive(Debug, Clone)]
+pub struct ChaosSpec {
+    /// Seed of the schedule *and* of the demo prefix the fleet serves.
+    pub seed: u64,
+    /// Schedule horizon in seconds (event timestamps land within it).
+    pub duration_secs: f64,
+    /// Mean event rate over the horizon (exponential gaps).
+    pub events_per_sec: f64,
+    /// Fleet shape at scenario start.
+    pub fleet: ChaosFleetSpec,
+    /// Event-kind odds.
+    pub weights: ChaosWeights,
+    /// Chunks in the demo prefix the fleet serves.
+    pub n_chunks: usize,
+    /// Tokens per chunk.
+    pub chunk_tokens: usize,
+    /// Keep only the first N events of the expansion — the schedule
+    /// shrinking knob (`chaos --max-events`) for minimizing a failing
+    /// seed. `None` keeps the whole horizon.
+    pub max_events: Option<usize>,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            seed: 42,
+            duration_secs: 5.0,
+            events_per_sec: 2.0,
+            fleet: ChaosFleetSpec::default(),
+            weights: ChaosWeights::default(),
+            n_chunks: 6,
+            chunk_tokens: 32,
+            max_events: None,
+        }
+    }
+}
+
+/// One scheduled fault (or traffic) injection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChaosEventKind {
+    /// Arm `die_after_fetches` on a live shard: it serves `after_fetches`
+    /// more chunks, dies at that boundary, rejoins empty, and the
+    /// repair convergence gate must pass.
+    KillShard {
+        /// Slot to kill.
+        shard: usize,
+        /// Chunk replies the shard still serves before dying.
+        after_fetches: usize,
+    },
+    /// Answer the next `n` chunk reads on one shard with `Busy`.
+    BusyStorm {
+        /// Slot to saturate.
+        shard: usize,
+        /// Injected refusals.
+        n: usize,
+    },
+    /// Delay every newly accepted connection on one shard.
+    AcceptDelay {
+        /// Slot to slow down.
+        shard: usize,
+        /// Per-accept delay in milliseconds.
+        ms: u64,
+    },
+    /// Swap the pacing of new connections on one shard to a constant-
+    /// bandwidth trace.
+    ThrottleSwap {
+        /// Slot to repace.
+        shard: usize,
+        /// New constant bandwidth in Gbit/s.
+        gbps: f64,
+    },
+    /// Grow the fleet by one empty node, then the rebalance gate.
+    Grow,
+    /// Shrink the fleet by retiring its highest slot (always the most
+    /// recently grown node, so the surviving slot list stays dense),
+    /// then the rebalance gate.
+    Shrink {
+        /// Slot being retired (the current max slot).
+        slot: usize,
+    },
+    /// Multi-tenant fetch traffic from the loadgen, reading through
+    /// the live fleet over TCP.
+    LoadBurst {
+        /// Requests per tenant of the two-tenant demo mix.
+        requests_per_tenant: usize,
+        /// Burst size of the interactive tenant.
+        burst: usize,
+    },
+}
+
+impl ChaosEventKind {
+    /// Stable kind name used in `chaos.json` and trace instants.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChaosEventKind::KillShard { .. } => "kill-shard",
+            ChaosEventKind::BusyStorm { .. } => "busy-storm",
+            ChaosEventKind::AcceptDelay { .. } => "accept-delay",
+            ChaosEventKind::ThrottleSwap { .. } => "throttle-swap",
+            ChaosEventKind::Grow => "grow",
+            ChaosEventKind::Shrink { .. } => "shrink",
+            ChaosEventKind::LoadBurst { .. } => "load-burst",
+        }
+    }
+}
+
+/// One timestamped schedule entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosEvent {
+    /// Offset from scenario start, milliseconds (orders the schedule;
+    /// the runner executes windows back to back).
+    pub at_ms: u64,
+    /// What happens.
+    pub kind: ChaosEventKind,
+}
+
+/// The deterministic expansion of a [`ChaosSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSchedule {
+    /// Seed that produced (and replays) this schedule.
+    pub seed: u64,
+    /// Events in timestamp order.
+    pub events: Vec<ChaosEvent>,
+}
+
+fn placement_name(p: Placement) -> &'static str {
+    match p {
+        Placement::RoundRobin => "round-robin",
+        Placement::ByHash => "by-hash",
+    }
+}
+
+impl ChaosSpec {
+    /// Expand the spec into its schedule. Pure in the spec fields: the
+    /// same spec always yields the same event list (asserted by
+    /// `tests/chaos.rs`), so printing the seed is a full repro.
+    pub fn expand(&self) -> ChaosSchedule {
+        let mut rng = Prng::new(self.seed ^ CHAOS_SEED_SALT);
+        let mut events = Vec::new();
+        // fleet-size walk mirrored by the runner: grow appends a slot,
+        // shrink always retires the max slot, floor at the spec size
+        let mut size = self.fleet.shards;
+        let mut t = 0.0f64;
+        loop {
+            t += rng.exp(self.events_per_sec.max(1e-9));
+            if t >= self.duration_secs && !events.is_empty() {
+                break;
+            }
+            let at_ms = (t.min(self.duration_secs) * 1000.0) as u64;
+            events.push(ChaosEvent { at_ms, kind: self.draw_kind(&mut rng, &mut size) });
+            if events.len() >= 4096 {
+                break; // runaway horizon guard
+            }
+        }
+        if let Some(cap) = self.max_events {
+            events.truncate(cap);
+        }
+        ChaosSchedule { seed: self.seed, events }
+    }
+
+    /// Draw one event kind, masking kinds the current fleet state
+    /// cannot support, and advance the simulated fleet size.
+    fn draw_kind(&self, rng: &mut Prng, size: &mut usize) -> ChaosEventKind {
+        let w = &self.weights;
+        let can_kill = self.fleet.replication >= 2;
+        let can_grow = *size < self.fleet.shards + GROW_CAP;
+        let can_shrink = *size > self.fleet.shards;
+        let lanes = [
+            (if can_kill { w.kill } else { 0.0 }, 0usize),
+            (w.busy_storm, 1),
+            (w.accept_delay, 2),
+            (w.throttle_swap, 3),
+            (if can_grow { w.grow } else { 0.0 }, 4),
+            (if can_shrink { w.shrink } else { 0.0 }, 5),
+            (w.load_burst, 6),
+        ];
+        let total: f64 = lanes.iter().map(|(w, _)| w.max(0.0)).sum();
+        let mut pick = 6usize; // all weights zero -> load burst
+        if total > 0.0 {
+            let mut x = rng.f64_range(0.0, total);
+            for &(lw, lane) in &lanes {
+                let lw = lw.max(0.0);
+                if x < lw {
+                    pick = lane;
+                    break;
+                }
+                x -= lw;
+            }
+        }
+        match pick {
+            0 => ChaosEventKind::KillShard {
+                shard: rng.below(*size as u64) as usize,
+                after_fetches: 1 + rng.below(3) as usize,
+            },
+            1 => ChaosEventKind::BusyStorm {
+                shard: rng.below(*size as u64) as usize,
+                n: 1 + rng.below(3) as usize,
+            },
+            2 => ChaosEventKind::AcceptDelay {
+                shard: rng.below(*size as u64) as usize,
+                ms: rng.range(5, 41),
+            },
+            3 => ChaosEventKind::ThrottleSwap {
+                shard: rng.below(*size as u64) as usize,
+                gbps: rng.f64_range(4.0, 12.0),
+            },
+            4 => {
+                *size += 1;
+                ChaosEventKind::Grow
+            }
+            5 => {
+                *size -= 1;
+                ChaosEventKind::Shrink { slot: *size }
+            }
+            _ => ChaosEventKind::LoadBurst {
+                requests_per_tenant: 2 + rng.below(2) as usize,
+                burst: 2 + rng.below(3) as usize,
+            },
+        }
+    }
+}
+
+impl ChaosSchedule {
+    /// The deterministic `chaos.json` document: spec echo plus the
+    /// flattened event list. [`Json`] objects are `BTreeMap`-ordered,
+    /// so the serialized bytes are identical run to run.
+    pub fn to_json(&self, spec: &ChaosSpec) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("chaos_schema".into(), Json::Num(1.0));
+        o.insert("seed".into(), Json::Num(self.seed as f64));
+        o.insert("duration_secs".into(), Json::Num(spec.duration_secs));
+        o.insert("events_per_sec".into(), Json::Num(spec.events_per_sec));
+        o.insert("shards".into(), Json::Num(spec.fleet.shards as f64));
+        o.insert("replication".into(), Json::Num(spec.fleet.replication as f64));
+        o.insert("placement".into(), Json::Str(placement_name(spec.fleet.placement).into()));
+        o.insert("n_chunks".into(), Json::Num(spec.n_chunks as f64));
+        o.insert("chunk_tokens".into(), Json::Num(spec.chunk_tokens as f64));
+        o.insert("n_events".into(), Json::Num(self.events.len() as f64));
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("at_ms".into(), Json::Num(e.at_ms as f64));
+                m.insert("kind".into(), Json::Str(e.kind.name().into()));
+                match e.kind {
+                    ChaosEventKind::KillShard { shard, after_fetches } => {
+                        m.insert("shard".into(), Json::Num(shard as f64));
+                        m.insert("after_fetches".into(), Json::Num(after_fetches as f64));
+                    }
+                    ChaosEventKind::BusyStorm { shard, n } => {
+                        m.insert("shard".into(), Json::Num(shard as f64));
+                        m.insert("n".into(), Json::Num(n as f64));
+                    }
+                    ChaosEventKind::AcceptDelay { shard, ms } => {
+                        m.insert("shard".into(), Json::Num(shard as f64));
+                        m.insert("ms".into(), Json::Num(ms as f64));
+                    }
+                    ChaosEventKind::ThrottleSwap { shard, gbps } => {
+                        m.insert("shard".into(), Json::Num(shard as f64));
+                        m.insert("gbps".into(), Json::Num(gbps));
+                    }
+                    ChaosEventKind::Grow => {}
+                    ChaosEventKind::Shrink { slot } => {
+                        m.insert("slot".into(), Json::Num(slot as f64));
+                    }
+                    ChaosEventKind::LoadBurst { requests_per_tenant, burst } => {
+                        m.insert("requests".into(), Json::Num(requests_per_tenant as f64));
+                        m.insert("burst".into(), Json::Num(burst as f64));
+                    }
+                }
+                Json::Obj(m)
+            })
+            .collect();
+        o.insert("events".into(), Json::Arr(events));
+        Json::Obj(o)
+    }
+}
+
+/// What a chaos run proved (or failed to prove).
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// The replay seed — always printed, pass or fail.
+    pub seed: u64,
+    /// Events the runner executed.
+    pub events_run: usize,
+    /// Full-prefix fetches that restored bit-identically.
+    pub fetches_verified: usize,
+    /// Kill windows whose repair gate converged.
+    pub repairs_converged: usize,
+    /// Grow/shrink windows whose rebalance gate converged.
+    pub rebalances_converged: usize,
+    /// Every invariant violation, with event context. Empty = the
+    /// scenario passed.
+    pub violations: Vec<String>,
+}
+
+impl ChaosReport {
+    /// `true` when the whole scenario held every invariant.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Executes a [`ChaosSchedule`] against a live loopback fleet.
+pub struct ChaosRunner {
+    spec: ChaosSpec,
+    demo: Arc<DemoPrefix>,
+    addrs: Vec<String>,
+    servers: Vec<Option<StorageServer>>,
+    map: ShardMap,
+    busy_baseline: Vec<u64>,
+    recorder: Option<Arc<TraceRecorder>>,
+    report: ChaosReport,
+}
+
+impl ChaosRunner {
+    /// Spawn the fleet (ephemeral loopback ports), populate it with the
+    /// spec's demo prefix at the spec's replication, and stand by to
+    /// [`run`](ChaosRunner::run).
+    pub fn new(spec: ChaosSpec) -> Result<ChaosRunner, FetchError> {
+        let demo = Arc::new(demo_prefix(spec.seed, spec.n_chunks, spec.chunk_tokens));
+        let map = ShardMap::with_replication(
+            spec.fleet.shards,
+            spec.fleet.placement,
+            spec.fleet.replication,
+        );
+        let mut nodes: Vec<StorageNode> =
+            (0..spec.fleet.shards).map(|_| StorageNode::new(spec.chunk_tokens)).collect();
+        for (i, &h) in demo.hashes.iter().enumerate() {
+            for shard in map.replicas_of(i, h) {
+                nodes[shard].register(demo.chunks[i].clone());
+            }
+        }
+        let cfg = ServerConfig { map_version: map.version(), ..Default::default() };
+        let mut servers = Vec::new();
+        let mut addrs = Vec::new();
+        for node in nodes {
+            let s = StorageServer::spawn("127.0.0.1:0", node, cfg.clone())
+                .map_err(|e| FetchError::transport(format!("chaos fleet spawn: {e}")))?;
+            addrs.push(s.local_addr().to_string());
+            servers.push(Some(s));
+        }
+        let busy_baseline = vec![0; servers.len()];
+        let seed = spec.seed;
+        Ok(ChaosRunner {
+            spec,
+            demo,
+            addrs,
+            servers,
+            map,
+            busy_baseline,
+            recorder: None,
+            report: ChaosReport {
+                seed,
+                events_run: 0,
+                fetches_verified: 0,
+                repairs_converged: 0,
+                rebalances_converged: 0,
+                violations: Vec::new(),
+            },
+        })
+    }
+
+    /// Attach a trace recorder: every event leaves an instant on the
+    /// chaos track, and all fetch/repair traffic it disturbs records
+    /// into the same ring.
+    pub fn with_recorder(mut self, rec: Option<Arc<TraceRecorder>>) -> ChaosRunner {
+        self.recorder = rec;
+        self
+    }
+
+    /// Execute the schedule: apply each event, keep fetching, gate
+    /// convergence, check counters — then tear the fleet down and
+    /// report. Never panics on an invariant breach; see
+    /// [`ChaosReport::violations`].
+    pub fn run(mut self, schedule: &ChaosSchedule) -> ChaosReport {
+        // steady-state proof before any fault lands
+        self.verify_fetch("pre-chaos baseline");
+        for (i, ev) in schedule.events.iter().enumerate() {
+            self.chaos_instant(ev);
+            let ctx = format!("event {i} ({} at {} ms)", ev.kind.name(), ev.at_ms);
+            match ev.kind.clone() {
+                ChaosEventKind::KillShard { shard, after_fetches } => {
+                    self.run_kill(shard, after_fetches, &ctx)
+                }
+                ChaosEventKind::BusyStorm { shard, n } => self.run_busy_storm(shard, n, &ctx),
+                ChaosEventKind::AcceptDelay { shard, ms } => {
+                    self.run_accept_delay(shard, ms, &ctx)
+                }
+                ChaosEventKind::ThrottleSwap { shard, gbps } => {
+                    self.run_throttle_swap(shard, gbps, &ctx)
+                }
+                ChaosEventKind::Grow => self.run_grow(&ctx),
+                ChaosEventKind::Shrink { slot } => self.run_shrink(slot, &ctx),
+                ChaosEventKind::LoadBurst { requests_per_tenant, burst } => {
+                    self.run_load_burst(requests_per_tenant, burst, &ctx)
+                }
+            }
+            self.check_counters(&ctx);
+            self.report.events_run += 1;
+        }
+        // final steady-state proof after the last window
+        self.verify_fetch("post-chaos steady state");
+        for s in self.servers.iter_mut() {
+            if let Some(srv) = s.take() {
+                srv.shutdown();
+            }
+        }
+        self.report
+    }
+
+    fn violation(&mut self, msg: String) {
+        self.report.violations.push(format!("[seed {}] {msg}", self.report.seed));
+    }
+
+    fn chaos_instant(&self, ev: &ChaosEvent) {
+        if let Some(r) = self.recorder.as_deref() {
+            r.instant(Track::Chaos, ev.kind.name(), vec![("at_ms", ArgValue::U64(ev.at_ms))]);
+        }
+    }
+
+    fn retry(&self) -> RetryPolicy {
+        RetryPolicy { max_busy_retries: 6, min_backoff_ms: 2, max_backoff_ms: 50 }
+    }
+
+    /// One full-prefix fetch through the live fleet, bit-verified
+    /// against the local ground truth. Invariant (a).
+    fn verify_fetch(&mut self, ctx: &str) {
+        let fleet = self.spec.fleet;
+        let router = match ShardRouter::connect_lenient(
+            &self.addrs,
+            fleet.placement,
+            fleet.replication,
+        ) {
+            Ok((router, _down)) => router,
+            Err(e) => {
+                self.violation(format!("{ctx}: fleet connect failed: {e}"));
+                return;
+            }
+        };
+        let src = RemoteSource::new(router, self.demo.hashes.clone(), DEMO_LADDER)
+            .with_retry(self.retry())
+            .with_policy(ReadPolicy::RoundRobin)
+            .with_recorder(self.recorder.clone());
+        let fetcher = Fetcher::builder()
+            .fetch_config(FetchConfig {
+                chunk_tokens: self.spec.chunk_tokens,
+                adaptive: false,
+                fixed_res: 3,
+                ..Default::default()
+            })
+            .replication(fleet.replication)
+            .recorder(self.recorder.clone())
+            .build();
+        let total_tokens = self.spec.n_chunks * self.spec.chunk_tokens;
+        let raw_bytes = total_tokens * DEMO_PLANES * DEMO_HEADS * DEMO_HEAD_DIM * 2;
+        let req = FetchRequest::new(total_tokens, raw_bytes)
+            .with_hashes(self.demo.hashes.clone())
+            .exec(ExecMode::Pipelined);
+        let mut session = fetcher.session(req).with_source(Box::new(src));
+        if let Err(e) = session.run() {
+            self.violation(format!("{ctx}: fetch failed: {e}"));
+            return;
+        }
+        let report = session.take_report().expect("run stores a report");
+        if report.restored.len() != self.spec.n_chunks {
+            self.violation(format!(
+                "{ctx}: restored {} of {} chunks",
+                report.restored.len(),
+                self.spec.n_chunks
+            ));
+            return;
+        }
+        for d in &report.restored {
+            let truth = &self.demo.quants[d.idx];
+            if d.quant.data != truth.data || d.quant.scales != truth.scales {
+                self.violation(format!("{ctx}: chunk {} restored with differences", d.idx));
+                return;
+            }
+        }
+        self.report.fetches_verified += 1;
+    }
+
+    /// Invariant (c): in-flight drains to zero at quiesce, per-node
+    /// busy counters are monotonic, trace-ring accounting is coherent.
+    fn check_counters(&mut self, ctx: &str) {
+        let deadline = Instant::now() + Duration::from_secs(2);
+        loop {
+            let drained = self
+                .servers
+                .iter()
+                .flatten()
+                .all(|s| s.fault().inflight_bytes() == 0);
+            if drained {
+                break;
+            }
+            if Instant::now() >= deadline {
+                self.violation(format!("{ctx}: in-flight bytes did not drain to 0 at quiesce"));
+                break;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        for (slot, s) in self.servers.iter().enumerate() {
+            let Some(srv) = s else { continue };
+            let busy = srv.fault().busy_replies();
+            if busy < self.busy_baseline[slot] {
+                self.report.violations.push(format!(
+                    "[seed {}] {ctx}: shard {slot} busy_replies went backwards ({} -> {busy})",
+                    self.report.seed, self.busy_baseline[slot]
+                ));
+            }
+            self.busy_baseline[slot] = busy;
+        }
+        if let Some(r) = self.recorder.as_deref() {
+            if r.events().len() != r.len() {
+                self.violation(format!("{ctx}: trace ring len/event-snapshot mismatch"));
+            }
+        }
+    }
+
+    /// Kill window: arm the death, drive the shard over its boundary,
+    /// fetch through the degraded fleet, rejoin empty, gate repair.
+    fn run_kill(&mut self, shard: usize, after_fetches: usize, ctx: &str) {
+        let Some(srv) = self.servers[shard].as_ref() else {
+            self.violation(format!("{ctx}: target shard {shard} is not live"));
+            return;
+        };
+        let fault = srv.fault();
+        fault.kill_after_more(after_fetches);
+        // deterministically walk the shard over its chunk boundary:
+        // direct fetches of a chunk it holds, until the armed death fires
+        let held = (0..self.demo.hashes.len())
+            .find(|&i| self.map.replicas_of(i, self.demo.hashes[i]).contains(&shard));
+        let Some(held) = held else {
+            // a shard with no chunks can't be killed at a chunk
+            // boundary; disarm and treat as a no-op window
+            fault.disarm_kill();
+            self.verify_fetch(ctx);
+            return;
+        };
+        match super::client::StoreClient::connect(&self.addrs[shard]) {
+            Ok(client) => {
+                for _ in 0..after_fetches + 1 {
+                    if client.fetch_chunk(self.demo.hashes[held], "240p").is_err() {
+                        break;
+                    }
+                }
+            }
+            Err(e) => self.violation(format!("{ctx}: connect to doomed shard failed: {e}")),
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !self.servers[shard].as_ref().is_some_and(|s| s.stopped()) {
+            if Instant::now() >= deadline {
+                self.violation(format!("{ctx}: armed death never fired on shard {shard}"));
+                return;
+            }
+            thread::sleep(Duration::from_millis(10));
+        }
+        // the fleet is degraded: the fetch must fail over bit-exactly
+        self.verify_fetch(&format!("{ctx}: degraded fetch"));
+        // rejoin EMPTY on the same address, then the repair gate
+        if let Some(dead) = self.servers[shard].take() {
+            dead.shutdown();
+        }
+        match self.respawn_empty(shard) {
+            Ok(srv) => {
+                self.servers[shard] = Some(srv);
+                self.busy_baseline[shard] = 0;
+            }
+            Err(e) => {
+                self.violation(format!("{ctx}: rejoin-empty respawn failed: {e}"));
+                return;
+            }
+        }
+        let converged = self.repair_gate();
+        if converged {
+            self.report.repairs_converged += 1;
+        } else {
+            self.violation(format!("{ctx}: repair did not re-converge after rejoin"));
+        }
+        self.verify_fetch(&format!("{ctx}: healed fetch"));
+    }
+
+    fn respawn_empty(&self, shard: usize) -> std::io::Result<StorageServer> {
+        let cfg = ServerConfig { map_version: self.map.version(), ..Default::default() };
+        let mut last_err = None;
+        // the freed port can linger briefly after the join — retry bind
+        for _ in 0..20 {
+            match StorageServer::spawn(
+                &self.addrs[shard],
+                StorageNode::new(self.spec.chunk_tokens),
+                cfg.clone(),
+            ) {
+                Ok(s) => return Ok(s),
+                Err(e) => {
+                    last_err = Some(e);
+                    thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+        Err(last_err.expect("bind retry loop ran"))
+    }
+
+    fn repair_gate(&mut self) -> bool {
+        let fleet = self.spec.fleet;
+        let router =
+            match ShardRouter::connect_lenient(&self.addrs, fleet.placement, fleet.replication) {
+                Ok((router, _down)) => router,
+                Err(_) => return false,
+            };
+        let scanner = RepairScanner::new(router)
+            .with_retry(self.retry())
+            .with_recorder(self.recorder.clone());
+        scanner.repair_until_converged(&self.demo.hashes, CONVERGE_PASSES)
+    }
+
+    fn run_busy_storm(&mut self, shard: usize, n: usize, ctx: &str) {
+        if let Some(srv) = self.servers[shard].as_ref() {
+            srv.fault().busy_storm(n);
+        }
+        // the fetch rides out the storm under its retry policy
+        self.verify_fetch(ctx);
+        if let Some(srv) = self.servers[shard].as_ref() {
+            srv.fault().busy_storm(0); // clear leftover credits
+        }
+    }
+
+    fn run_accept_delay(&mut self, shard: usize, ms: u64, ctx: &str) {
+        if let Some(srv) = self.servers[shard].as_ref() {
+            srv.fault().set_accept_delay_ms(ms);
+        }
+        self.verify_fetch(ctx);
+        if let Some(srv) = self.servers[shard].as_ref() {
+            srv.fault().set_accept_delay_ms(0);
+        }
+    }
+
+    fn run_throttle_swap(&mut self, shard: usize, gbps: f64, ctx: &str) {
+        if let Some(srv) = self.servers[shard].as_ref() {
+            let spec = ThrottleSpec::new(BandwidthTrace::constant(gbps), 1.0);
+            srv.fault().set_throttle(Some(spec));
+        }
+        self.verify_fetch(ctx);
+        if let Some(srv) = self.servers[shard].as_ref() {
+            srv.fault().set_throttle(None);
+        }
+    }
+
+    /// Grow window: spawn an empty node under the grown map, migrate,
+    /// gate convergence, fetch through the grown fleet.
+    fn run_grow(&mut self, ctx: &str) {
+        let old = self.map.clone();
+        let new = old.grown();
+        let cfg = ServerConfig { map_version: new.version(), ..Default::default() };
+        let srv = match StorageServer::spawn(
+            "127.0.0.1:0",
+            StorageNode::new(self.spec.chunk_tokens),
+            cfg,
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                self.violation(format!("{ctx}: grow spawn failed: {e}"));
+                return;
+            }
+        };
+        self.addrs.push(srv.local_addr().to_string());
+        self.servers.push(Some(srv));
+        self.busy_baseline.push(0);
+        self.map = new.clone();
+        if self.rebalance_gate(old, new, ctx) {
+            self.report.rebalances_converged += 1;
+        }
+        self.verify_fetch(&format!("{ctx}: grown fetch"));
+    }
+
+    /// Shrink window: migrate off the max slot, gate convergence, then
+    /// retire the node so the fleet is dense again.
+    fn run_shrink(&mut self, slot: usize, ctx: &str) {
+        if slot + 1 != self.addrs.len() || self.servers[slot].is_none() {
+            self.violation(format!("{ctx}: shrink target {slot} is not the live max slot"));
+            return;
+        }
+        let old = self.map.clone();
+        let Some(new) = old.shrunk(slot) else {
+            self.violation(format!("{ctx}: map refused to shrink slot {slot}"));
+            return;
+        };
+        if self.rebalance_gate(old, new.clone(), ctx) {
+            self.report.rebalances_converged += 1;
+        }
+        if let Some(retired) = self.servers[slot].take() {
+            retired.shutdown();
+        }
+        self.servers.pop();
+        self.addrs.pop();
+        self.busy_baseline.pop();
+        self.map = new;
+        self.verify_fetch(&format!("{ctx}: shrunk fetch"));
+    }
+
+    /// Migrate `old -> new` over the union fleet; `true` = converged.
+    fn rebalance_gate(&mut self, old: ShardMap, new: ShardMap, ctx: &str) -> bool {
+        let fleet = self.spec.fleet;
+        let transition = match MapTransition::new(old, new.clone()) {
+            Ok(t) => t,
+            Err(e) => {
+                self.violation(format!("{ctx}: invalid map transition: {e}"));
+                return false;
+            }
+        };
+        let mut router =
+            match ShardRouter::connect_lenient(&self.addrs, fleet.placement, fleet.replication) {
+                Ok((router, _down)) => router,
+                Err(e) => {
+                    self.violation(format!("{ctx}: union fleet connect failed: {e}"));
+                    return false;
+                }
+            };
+        router.set_map(new);
+        let rb = match Rebalancer::new(router, transition) {
+            Ok(rb) => rb.with_retry(self.retry()).with_recorder(self.recorder.clone()),
+            Err(e) => {
+                self.violation(format!("{ctx}: rebalancer rejected transition: {e}"));
+                return false;
+            }
+        };
+        let converged = rb.migrate_until_converged(&self.demo.hashes, CONVERGE_PASSES);
+        if !converged {
+            self.violation(format!("{ctx}: rebalance did not converge"));
+        }
+        converged
+    }
+
+    /// Multi-tenant load burst: the PR 6 loadgen pointed at the live
+    /// fleet over TCP; its verified/failed accounting feeds invariants.
+    ///
+    /// The loadgen seed must stay the chaos seed: `run_load` derives
+    /// its demo prefix (and so the hashes it requests) from it, and
+    /// the live fleet only holds the chaos seed's chunks.
+    fn run_load_burst(&mut self, requests: usize, burst: usize, ctx: &str) {
+        let fleet = self.spec.fleet;
+        let spec = LoadSpec {
+            seed: self.spec.seed,
+            n_chunks: self.spec.n_chunks,
+            chunk_tokens: self.spec.chunk_tokens,
+            sched: SchedConfig { slots: 2, ..Default::default() },
+            tenants: demo_mix(requests, 1e5, burst),
+            source: LoadSource::Tcp {
+                addrs: self.addrs.clone(),
+                placement: fleet.placement,
+                replication: fleet.replication,
+                read_policy: ReadPolicy::RoundRobin,
+            },
+            retry: self.retry(),
+            recorder: self.recorder.clone(),
+        };
+        let report = run_load(&spec);
+        for f in report.failures {
+            self.violation(format!("{ctx}: loadgen: {f}"));
+        }
+        let done: usize = report.tenants.iter().map(|t| t.verified).sum();
+        self.report.fetches_verified += done;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_is_deterministic_and_fleet_consistent() {
+        let spec = ChaosSpec { seed: 7, duration_secs: 30.0, ..Default::default() };
+        let a = spec.expand();
+        let b = spec.expand();
+        assert_eq!(a, b, "same spec, same schedule");
+        assert!(!a.events.is_empty());
+        assert!(a.events.windows(2).all(|w| w[0].at_ms <= w[1].at_ms), "sorted timestamps");
+        // replay the fleet walk: every event must target a live slot,
+        // shrinks retire the max slot, size stays in bounds
+        let mut size = spec.fleet.shards;
+        for ev in &a.events {
+            match ev.kind {
+                ChaosEventKind::KillShard { shard, after_fetches } => {
+                    assert!(shard < size && after_fetches >= 1);
+                }
+                ChaosEventKind::BusyStorm { shard, n } => assert!(shard < size && n >= 1),
+                ChaosEventKind::AcceptDelay { shard, ms } => assert!(shard < size && ms >= 5),
+                ChaosEventKind::ThrottleSwap { shard, gbps } => {
+                    assert!(shard < size && gbps >= 4.0);
+                }
+                ChaosEventKind::Grow => {
+                    size += 1;
+                    assert!(size <= spec.fleet.shards + GROW_CAP);
+                }
+                ChaosEventKind::Shrink { slot } => {
+                    assert_eq!(slot, size - 1, "shrink retires the max slot");
+                    size -= 1;
+                    assert!(size >= spec.fleet.shards);
+                }
+                ChaosEventKind::LoadBurst { requests_per_tenant, .. } => {
+                    assert!(requests_per_tenant >= 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replication_one_schedules_no_kills() {
+        let spec = ChaosSpec {
+            seed: 11,
+            duration_secs: 60.0,
+            fleet: ChaosFleetSpec { replication: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let sched = spec.expand();
+        assert!(!sched.events.is_empty());
+        assert!(
+            !sched.events.iter().any(|e| matches!(e.kind, ChaosEventKind::KillShard { .. })),
+            "a factor-1 fleet must never schedule data-losing kills"
+        );
+    }
+
+    #[test]
+    fn max_events_is_a_prefix_and_json_is_stable() {
+        let full = ChaosSpec { seed: 9, duration_secs: 20.0, ..Default::default() };
+        let all = full.expand();
+        let capped = ChaosSpec { max_events: Some(3), ..full.clone() }.expand();
+        assert_eq!(capped.events.len(), 3.min(all.events.len()));
+        assert_eq!(&all.events[..capped.events.len()], &capped.events[..], "prefix truncation");
+        let j1 = all.to_json(&full).to_string();
+        let j2 = full.expand().to_json(&full).to_string();
+        assert_eq!(j1, j2, "chaos.json bytes are deterministic");
+        let parsed = Json::parse(&j1).expect("chaos.json parses");
+        assert_eq!(parsed.get("seed").and_then(Json::as_usize), Some(9));
+        assert_eq!(
+            parsed.get("events").and_then(Json::as_arr).map(Vec::len),
+            Some(all.events.len())
+        );
+    }
+}

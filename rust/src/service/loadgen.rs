@@ -4,8 +4,11 @@
 //!
 //! A [`LoadSpec`] names the tenants, their arrival processes
 //! ([`ArrivalProcess::Poisson`] open-loop or [`ArrivalProcess::Bursty`]
-//! batched), and the scheduler shape; [`run_load`] replays the merged
-//! arrival trace in wall-clock time, submits one full pipelined fetch
+//! batched), the scheduler shape, and where traffic reads from (the
+//! in-process demo store, or a live TCP fleet via [`LoadSource::Tcp`]
+//! — how the chaos runner keeps tenants fetching through faults);
+//! [`run_load`] replays the merged arrival trace in wall-clock time,
+//! submits one full pipelined fetch
 //! of the shared demo prefix per arrival, honors `Busy` sheds with the
 //! [`RetryPolicy`] backoff (the same client loop the remote source
 //! runs), verifies every completed restore bit-identically against the
@@ -32,7 +35,10 @@ use crate::util::stats::{mean, percentile};
 use crate::util::table;
 use crate::util::Prng;
 
-use super::source::LocalSource;
+use crate::fetcher::{ReadPolicy, TransportSource};
+
+use super::shard::{Placement, ShardRouter};
+use super::source::{LocalSource, RemoteSource};
 use super::{
     demo_prefix, DemoPrefix, RetryPolicy, DEMO_HEADS, DEMO_HEAD_DIM, DEMO_LADDER, DEMO_PLANES,
 };
@@ -85,6 +91,32 @@ impl ArrivalProcess {
     }
 }
 
+/// Where the generated fetch traffic reads its chunks from.
+#[derive(Debug, Clone, Default)]
+pub enum LoadSource {
+    /// An in-process [`StorageNode`] populated with the demo prefix —
+    /// the original loadgen shape, isolating scheduler behavior from
+    /// the network.
+    #[default]
+    Local,
+    /// A live TCP shard fleet: every job connects a replicated router
+    /// over `addrs` and streams through a [`RemoteSource`], so the
+    /// load generator can drive multi-tenant traffic against a real
+    /// (possibly degraded) fleet — the chaos runner's traffic shape.
+    /// Unreachable shards are tolerated at connect time; replication
+    /// and failover decide whether each fetch still completes.
+    Tcp {
+        /// Shard addresses, slot order.
+        addrs: Vec<String>,
+        /// Chunk→shard placement of the fleet.
+        placement: Placement,
+        /// Replication factor the fleet was populated with.
+        replication: usize,
+        /// Which replica serves each chunk.
+        read_policy: ReadPolicy,
+    },
+}
+
 /// One tenant's slice of the generated load.
 #[derive(Debug, Clone)]
 pub struct TenantLoad {
@@ -109,6 +141,9 @@ pub struct LoadSpec {
     pub sched: SchedConfig,
     /// The tenants and their arrival processes.
     pub tenants: Vec<TenantLoad>,
+    /// Where fetch traffic reads from: the in-process demo store
+    /// (default) or a live TCP fleet (see [`LoadSource`]).
+    pub source: LoadSource,
     /// Client-side backoff on `Busy` sheds — deliberately the same
     /// policy type the remote source retries servers with, so shed
     /// handling cannot drift between the two admission paths.
@@ -288,11 +323,13 @@ impl LoadReport {
     }
 }
 
-/// One fetch job over the shared demo store: a pristine clone of the
-/// template fetcher pipelines the whole prefix through a [`LocalSource`]
-/// and returns the report with its restored chunks.
+/// One fetch job: a pristine clone of the template fetcher pipelines
+/// the whole prefix through the spec's [`LoadSource`] — the in-process
+/// demo store, or a [`RemoteSource`] over a live fleet — and returns
+/// the report with its restored chunks.
 fn fetch_job(
     template: &Fetcher,
+    spec: &LoadSpec,
     node: &Arc<Mutex<StorageNode>>,
     demo: &Arc<DemoPrefix>,
     total_tokens: usize,
@@ -301,12 +338,31 @@ fn fetch_job(
     let fetcher = template.fresh();
     let node = Arc::clone(node);
     let demo = Arc::clone(demo);
+    let source = spec.source.clone();
+    let retry = spec.retry;
+    let recorder = spec.recorder.clone();
     move || {
-        let src = LocalSource::new(node, demo.hashes.clone(), DEMO_LADDER);
+        let src: Box<dyn TransportSource> = match source {
+            LoadSource::Local => {
+                Box::new(LocalSource::new(node, demo.hashes.clone(), DEMO_LADDER))
+            }
+            LoadSource::Tcp { addrs, placement, replication, read_policy } => {
+                // lenient connect: a dead shard becomes a per-chunk
+                // failover problem, not a job-fatal connect error
+                let (router, _unreachable) =
+                    ShardRouter::connect_lenient(&addrs, placement, replication)?;
+                Box::new(
+                    RemoteSource::new(router, demo.hashes.clone(), DEMO_LADDER)
+                        .with_retry(retry)
+                        .with_policy(read_policy)
+                        .with_recorder(recorder),
+                )
+            }
+        };
         let req = FetchRequest::new(total_tokens, raw_bytes)
             .with_hashes(demo.hashes.clone())
             .exec(ExecMode::Pipelined);
-        let mut session = fetcher.session(req).with_source(Box::new(src));
+        let mut session = fetcher.session(req).with_source(src);
         if let Err(e) = session.run() {
             return Err(e);
         }
@@ -365,7 +421,7 @@ pub fn run_load(spec: &LoadSpec) -> LoadReport {
         }
         let mut attempt = 0usize;
         loop {
-            let work = fetch_job(&template, &node, &demo, total_tokens, raw_bytes);
+            let work = fetch_job(&template, spec, &node, &demo, total_tokens, raw_bytes);
             match sched.submit(ti, raw_bytes as u64, None, work) {
                 Ok(ticket) => {
                     pending.push(ticket);
@@ -486,6 +542,7 @@ mod tests {
             chunk_tokens: 16,
             sched: SchedConfig { slots: 2, ..Default::default() },
             tenants: demo_mix(4, 1e5, 4),
+            source: LoadSource::default(),
             retry: RetryPolicy::default(),
             recorder: Some(TraceRecorder::new(65_536)),
         };

@@ -39,7 +39,16 @@
 //!   multi-tenant arrivals driven through the
 //!   [`crate::fetcher::FetchScheduler`], with bit-identical restore
 //!   verification and per-tenant TTFT percentile reports emitted as
-//!   the repo's `BENCH_*.json` perf-trajectory points.
+//!   the repo's `BENCH_*.json` perf-trajectory points; its
+//!   [`LoadSource`] selects the in-process demo store or a live TCP
+//!   fleet;
+//! * [`chaos`] — the seeded fault-scenario generator: one `u64`
+//!   expands deterministically into a schedule of kills, busy storms,
+//!   accept delays, throttle swaps, grow/shrink transitions, and load
+//!   bursts, executed by [`ChaosRunner`] against a loopback fleet
+//!   with bit-identity, re-convergence, and counter invariants gated
+//!   after every event window (`kvfetcher chaos --seed N` replays any
+//!   failure exactly).
 //!
 //! Everything runs hermetically on loopback; `tests/remote_fetch.rs`
 //! asserts the end-to-end contracts (bit-exact restore across 2+
@@ -48,6 +57,7 @@
 
 #![warn(missing_docs)]
 
+pub mod chaos;
 pub mod client;
 pub mod loadgen;
 pub mod protocol;
@@ -57,9 +67,14 @@ pub mod shard;
 pub mod source;
 pub mod throttle;
 
+pub use chaos::{
+    ChaosEvent, ChaosEventKind, ChaosFleetSpec, ChaosReport, ChaosRunner, ChaosSchedule,
+    ChaosSpec, ChaosWeights,
+};
 pub use client::StoreClient;
 pub use loadgen::{
-    demo_mix, run_load, ArrivalProcess, LoadReport, LoadSpec, TenantLoad, TenantLoadReport,
+    demo_mix, run_load, ArrivalProcess, LoadReport, LoadSource, LoadSpec, TenantLoad,
+    TenantLoadReport,
 };
 pub use protocol::{NodeStats, Request, Response, PROTOCOL_VERSION};
 pub use repair::{

@@ -333,6 +333,25 @@ impl RepairScanner {
         RepairReport { before, repaired, failed, busy_retries }
     }
 
+    /// Run up to `max_passes` repair passes, re-scanning after each,
+    /// until the fleet is back at full replication. Returns `true` on
+    /// convergence — the chaos runner's (and the `repair` CLI's)
+    /// machine-checked "the fleet healed" gate. A pass that neither
+    /// repairs nor fails anything cannot make progress, so the loop
+    /// also stops early instead of burning the remaining passes.
+    pub fn repair_until_converged(&self, hashes: &[u64], max_passes: usize) -> bool {
+        for _ in 0..max_passes {
+            let report = self.repair(hashes);
+            if self.scan(hashes).healthy() {
+                return true;
+            }
+            if report.repaired.is_empty() && report.failed.is_empty() {
+                break;
+            }
+        }
+        false
+    }
+
     /// Run `op` through the shared [`RetryPolicy::run_busy`] loop,
     /// counting each `Busy` refusal into `busy_retries`; any other
     /// fault is returned typed.
@@ -634,6 +653,25 @@ impl Rebalancer {
             }
         }
         MigrationReport { before, migrated, failed, busy_retries }
+    }
+
+    /// Run up to `max_passes` migrate passes, re-scanning after each,
+    /// until the new map can serve every chunk. Returns `true` on
+    /// convergence — the same gate the `rebalance` CLI turns into an
+    /// exit code, packaged for the chaos runner's grow/shrink events.
+    /// A pass that neither migrates nor fails anything cannot make
+    /// progress, so the loop also stops early.
+    pub fn migrate_until_converged(&self, hashes: &[u64], max_passes: usize) -> bool {
+        for _ in 0..max_passes {
+            let report = self.migrate(hashes);
+            if self.scan(hashes).converged() {
+                return true;
+            }
+            if report.migrated.is_empty() && report.failed.is_empty() {
+                break;
+            }
+        }
+        false
     }
 
     /// Run `op` through the shared [`RetryPolicy::run_busy`] loop —

@@ -29,10 +29,14 @@
 //! replies) surface through `Stats`.
 //!
 //! **Fault injection** ([`FaultSpec`]): deterministic faults for the
-//! `tests/service_faults.rs` harness and the CI failover round trip —
-//! kill the shard after serving N chunk fetches (death at a chunk
-//! boundary), delay accepts, or force `Busy` on the first N fetches.
-//! All default to off.
+//! `tests/service_faults.rs` harness, the CI failover round trip, and
+//! the chaos engine ([`super::chaos`]) — kill the shard after serving N
+//! chunk fetches (death at a chunk boundary), delay accepts, or force
+//! `Busy` on the first N fetches. All default to off. The spawn-time
+//! [`FaultSpec`] seeds a shared fault cell that [`StorageServer::fault`]
+//! exposes as a [`FaultHandle`], so a running node can be re-armed live
+//! (chaos events arm kills, busy storms, accept delays, and throttle
+//! swaps on nodes that are already serving traffic).
 //!
 //! Shutdown is cooperative: handler sockets carry a short read timeout
 //! so every thread re-checks the stop flag between frames, and
@@ -121,9 +125,6 @@ struct Admission {
     served_bytes: AtomicU64,
     /// `FetchChunk` replies fully sent (drives `die_after_fetches`).
     fetches_served: AtomicUsize,
-    /// Chunk-read requests seen — fetches and repair pulls (drives
-    /// `busy_first_fetches`).
-    fetches_seen: AtomicUsize,
 }
 
 impl Admission {
@@ -152,6 +153,114 @@ impl Admission {
     }
 }
 
+/// Sentinel for a disarmed death fault: no realistic fetch counter ever
+/// reaches it, so comparing against it is always false.
+const DIE_DISARMED: usize = usize::MAX;
+
+/// Live (re-armable) fault state shared by the accept loop and every
+/// handler thread of one node. Seeded from the spawn-time [`FaultSpec`]
+/// and mutated through [`FaultHandle`] while the node keeps serving.
+#[derive(Debug)]
+struct FaultCell {
+    /// Total `FetchChunk` replies after which the node dies at a chunk
+    /// boundary; [`DIE_DISARMED`] = never.
+    die_after: AtomicUsize,
+    /// Sleep before handling each accepted connection (read per accept).
+    accept_delay_ms: AtomicU64,
+    /// Remaining chunk-read requests to answer `Busy` (a countdown; a
+    /// storm arms it to N and every chunk read consumes one while > 0).
+    busy_remaining: AtomicUsize,
+    /// Pacing spec picked up by each *new* connection; pooled
+    /// connections opened earlier keep the pacing they started with.
+    throttle: Mutex<Option<ThrottleSpec>>,
+}
+
+impl FaultCell {
+    fn from_spec(fault: &FaultSpec, throttle: Option<ThrottleSpec>) -> FaultCell {
+        FaultCell {
+            die_after: AtomicUsize::new(fault.die_after_fetches.unwrap_or(DIE_DISARMED)),
+            accept_delay_ms: AtomicU64::new(fault.accept_delay_ms),
+            busy_remaining: AtomicUsize::new(fault.busy_first_fetches),
+            throttle: Mutex::new(throttle),
+        }
+    }
+
+    /// Consume one injected-`Busy` credit; `true` while a storm is live.
+    fn consume_busy(&self) -> bool {
+        self.busy_remaining
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+            .is_ok()
+    }
+}
+
+/// Handle for arming faults on a *running* node (chaos events re-arm
+/// kills, busy storms, accept delays, and throttle swaps live), plus
+/// the served/busy counters chaos invariant checks read back.
+///
+/// Obtained from [`StorageServer::fault`]; cloning is cheap and every
+/// clone talks to the same node. A node that already died cannot be
+/// revived through this handle — rejoin means spawning a fresh
+/// [`StorageServer`] on the same address.
+#[derive(Clone)]
+pub struct FaultHandle {
+    cell: Arc<FaultCell>,
+    admission: Arc<Admission>,
+}
+
+impl FaultHandle {
+    /// Arm a death at the chunk boundary `total` fetches from node
+    /// start (absolute, matching [`FaultSpec::die_after_fetches`]).
+    pub fn kill_after_fetches(&self, total: usize) {
+        self.cell.die_after.store(total, Ordering::SeqCst);
+    }
+
+    /// Arm a death `more` fetch replies from *now*: the node serves
+    /// `more` further chunks, then dies at that chunk boundary.
+    pub fn kill_after_more(&self, more: usize) {
+        let served = self.admission.fetches_served.load(Ordering::SeqCst);
+        self.kill_after_fetches(served.saturating_add(more));
+    }
+
+    /// Disarm a pending death fault (a node already dead stays dead).
+    pub fn disarm_kill(&self) {
+        self.cell.die_after.store(DIE_DISARMED, Ordering::SeqCst);
+    }
+
+    /// Answer the next `n` chunk-read requests (`FetchChunk` /
+    /// `PullChunk`) with `Busy`, regardless of admission state.
+    pub fn busy_storm(&self, n: usize) {
+        self.cell.busy_remaining.store(n, Ordering::SeqCst);
+    }
+
+    /// Sleep this long before handling each newly accepted connection.
+    pub fn set_accept_delay_ms(&self, ms: u64) {
+        self.cell.accept_delay_ms.store(ms, Ordering::SeqCst);
+    }
+
+    /// Swap the pacing spec picked up by each **new** connection
+    /// (`None` removes pacing). Connections already open — including
+    /// pooled client connections — keep the pacing they started with.
+    pub fn set_throttle(&self, throttle: Option<ThrottleSpec>) {
+        *self.cell.throttle.lock().expect("throttle lock") = throttle;
+    }
+
+    /// `FetchChunk` replies fully sent since node start (monotonic).
+    pub fn fetches_served(&self) -> usize {
+        self.admission.fetches_served.load(Ordering::SeqCst)
+    }
+
+    /// `Busy` replies issued since node start (monotonic).
+    pub fn busy_replies(&self) -> u64 {
+        self.admission.busy_replies.load(Ordering::SeqCst)
+    }
+
+    /// Chunk-payload bytes currently in flight to clients. Settles back
+    /// to 0 once the node quiesces (chaos checks exactly this).
+    pub fn inflight_bytes(&self) -> usize {
+        self.admission.inflight.load(Ordering::SeqCst)
+    }
+}
+
 /// A running storage shard server. Threads run until [`shutdown`].
 ///
 /// [`shutdown`]: StorageServer::shutdown
@@ -159,6 +268,8 @@ pub struct StorageServer {
     addr: SocketAddr,
     node: Arc<Mutex<StorageNode>>,
     stop: Arc<AtomicBool>,
+    faults: Arc<FaultCell>,
+    admission: Arc<Admission>,
     accept: Option<thread::JoinHandle<()>>,
     workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
 }
@@ -172,14 +283,19 @@ impl StorageServer {
         let node = Arc::new(Mutex::new(node));
         let stop = Arc::new(AtomicBool::new(false));
         let admission = Arc::new(Admission::default());
+        let faults = Arc::new(FaultCell::from_spec(&cfg.fault, cfg.throttle.clone()));
         let workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let accept = {
             let node = Arc::clone(&node);
             let stop = Arc::clone(&stop);
             let workers = Arc::clone(&workers);
-            thread::spawn(move || accept_loop(listener, node, stop, admission, workers, cfg))
+            let admission = Arc::clone(&admission);
+            let faults = Arc::clone(&faults);
+            thread::spawn(move || {
+                accept_loop(listener, node, stop, admission, faults, workers, cfg)
+            })
         };
-        Ok(StorageServer { addr, node, stop, accept: Some(accept), workers })
+        Ok(StorageServer { addr, node, stop, faults, admission, accept: Some(accept), workers })
     }
 
     /// The bound address (resolves ephemeral ports).
@@ -190,6 +306,20 @@ impl StorageServer {
     /// Shared handle to the hosted shard (tests inspect LRU state).
     pub fn node(&self) -> Arc<Mutex<StorageNode>> {
         Arc::clone(&self.node)
+    }
+
+    /// Live fault handle: arm kills / busy storms / accept delays /
+    /// throttle swaps on this node while it keeps serving.
+    pub fn fault(&self) -> FaultHandle {
+        FaultHandle { cell: Arc::clone(&self.faults), admission: Arc::clone(&self.admission) }
+    }
+
+    /// `true` once the node has stopped serving — either [`shutdown`]
+    /// was called or an armed death fault fired at its chunk boundary.
+    ///
+    /// [`shutdown`]: StorageServer::shutdown
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
     }
 
     /// Stop accepting, wake every thread, and join them all.
@@ -212,6 +342,7 @@ fn accept_loop(
     node: Arc<Mutex<StorageNode>>,
     stop: Arc<AtomicBool>,
     admission: Arc<Admission>,
+    faults: Arc<FaultCell>,
     workers: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
     cfg: ServerConfig,
 ) {
@@ -228,16 +359,19 @@ fn accept_loop(
                 continue;
             }
         };
-        if cfg.fault.accept_delay_ms > 0 {
-            thread::sleep(Duration::from_millis(cfg.fault.accept_delay_ms));
+        let delay_ms = faults.accept_delay_ms.load(Ordering::SeqCst);
+        if delay_ms > 0 {
+            thread::sleep(Duration::from_millis(delay_ms));
         }
         let _ = stream.set_nodelay(true);
         let _ = stream.set_read_timeout(Some(POLL_INTERVAL));
         let node = Arc::clone(&node);
         let stop = Arc::clone(&stop);
         let admission = Arc::clone(&admission);
+        let faults = Arc::clone(&faults);
         let cfg = cfg.clone();
-        let handle = thread::spawn(move || handle_conn(stream, node, stop, admission, cfg));
+        let handle =
+            thread::spawn(move || handle_conn(stream, node, stop, admission, faults, cfg));
         let mut live = workers.lock().expect("workers lock");
         // reap handlers whose connections already closed, so a
         // long-running server holds handles only for live connections
@@ -258,10 +392,11 @@ fn handle_conn(
     node: Arc<Mutex<StorageNode>>,
     stop: Arc<AtomicBool>,
     admission: Arc<Admission>,
+    faults: Arc<FaultCell>,
     cfg: ServerConfig,
 ) {
     admission.conns.fetch_add(1, Ordering::SeqCst);
-    serve_conn(&mut stream, &node, &stop, &admission, &cfg);
+    serve_conn(&mut stream, &node, &stop, &admission, &faults, &cfg);
     admission.conns.fetch_sub(1, Ordering::SeqCst);
 }
 
@@ -283,9 +418,13 @@ fn serve_conn(
     node: &Arc<Mutex<StorageNode>>,
     stop: &AtomicBool,
     admission: &Admission,
+    faults: &FaultCell,
     cfg: &ServerConfig,
 ) {
-    let mut bucket = cfg.throttle.as_ref().map(TokenBucket::from_spec);
+    // each connection picks up the throttle armed at the time it opens;
+    // a later swap applies to new connections only
+    let mut bucket =
+        faults.throttle.lock().expect("throttle lock").as_ref().map(TokenBucket::from_spec);
     let retry_ms = cfg.admission.retry_after_ms;
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -316,19 +455,14 @@ fn serve_conn(
             // injected death at a chunk boundary: once the quota of
             // served fetches is reached, the shard is dead — close the
             // connection without a reply and stop the whole server
-            if let Some(limit) = cfg.fault.die_after_fetches {
-                if admission.fetches_served.load(Ordering::SeqCst) >= limit {
-                    stop.store(true, Ordering::SeqCst);
-                    break;
-                }
+            let limit = faults.die_after.load(Ordering::SeqCst);
+            if admission.fetches_served.load(Ordering::SeqCst) >= limit {
+                stop.store(true, Ordering::SeqCst);
+                break;
             }
         }
-        // injected saturation: Busy for the first N chunk-read requests
-        if is_chunk_read
-            && cfg.fault.busy_first_fetches > 0
-            && admission.fetches_seen.fetch_add(1, Ordering::SeqCst)
-                < cfg.fault.busy_first_fetches
-        {
+        // injected saturation: Busy while a storm has credits remaining
+        if is_chunk_read && faults.consume_busy() {
             if send_busy(stream, bucket.as_mut(), admission, retry_ms).is_err() {
                 break;
             }
@@ -386,7 +520,7 @@ fn serve_conn(
             // one more chunk fully on the wire (chunk boundary for the
             // die_after_fetches fault; repair pulls don't count)
             let served = admission.fetches_served.fetch_add(1, Ordering::SeqCst) + 1;
-            if cfg.fault.die_after_fetches.is_some_and(|limit| served >= limit) {
+            if served >= faults.die_after.load(Ordering::SeqCst) {
                 // die exactly at the boundary: stop the server and close
                 stop.store(true, Ordering::SeqCst);
                 break;
@@ -525,6 +659,41 @@ mod tests {
         // one chunk reply fully sent: served_bytes covers its frame
         assert!(stats.served_bytes > 100, "served_bytes {}", stats.served_bytes);
         assert_eq!(client.lookup_prefix(&tokens).unwrap(), hashes);
+        server.shutdown();
+    }
+
+    #[test]
+    fn fault_handle_rearms_a_running_node() {
+        let mut node = StorageNode::new(4);
+        let tokens: Vec<u32> = (0..4).collect();
+        let hashes = crate::kvstore::prefix_hashes(&tokens, 4);
+        node.register(chunk(hashes[0], 64));
+        let server =
+            StorageServer::spawn("127.0.0.1:0", node, ServerConfig::default()).expect("bind");
+        let fault = server.fault();
+        let client = StoreClient::connect(&server.local_addr().to_string()).expect("connect");
+
+        // no fault armed: fetches pass
+        assert!(client.fetch_chunk(hashes[0], "144p").unwrap().is_some());
+        assert_eq!(fault.fetches_served(), 1);
+
+        // live busy storm: exactly the next chunk read is refused
+        fault.busy_storm(1);
+        assert!(client.fetch_chunk(hashes[0], "144p").is_err(), "storm must refuse");
+        assert_eq!(fault.busy_replies(), 1);
+        assert!(client.fetch_chunk(hashes[0], "144p").unwrap().is_some());
+
+        // live kill: one more fetch is served, then the node is dead
+        fault.kill_after_more(1);
+        assert!(client.fetch_chunk(hashes[0], "144p").unwrap().is_some());
+        for _ in 0..50 {
+            if server.stopped() {
+                break;
+            }
+            thread::sleep(Duration::from_millis(20));
+        }
+        assert!(server.stopped(), "armed death must stop the node");
+        assert_eq!(fault.inflight_bytes(), 0, "in-flight must drain to zero");
         server.shutdown();
     }
 

@@ -1,0 +1,258 @@
+//! Chaos mode: seeded fault-scenario generation and fleet convergence
+//! (ISSUE 10).
+//!
+//! Acceptance contracts:
+//! * schedule determinism: the same `ChaosSpec` expands to an
+//!   identical event list AND a byte-identical `chaos.json`; distinct
+//!   seeds produce distinct schedules; `max_events` truncates to an
+//!   exact prefix of the full expansion (the shrinking knob);
+//! * `ShardMap` version transitions hold their invariants under
+//!   *randomized* grow/shrink walks (proptest-style loop over the
+//!   repo's own PRNG, arbitrary — not just max-slot — removals):
+//!   replica sets never contain a duplicate slot, every chunk stays
+//!   placeable mid-transition via `read_order` (new ring first, old
+//!   holders appended, all within `union_slots`), and `moved()` is
+//!   exactly the set of chunks whose replica set changed;
+//! * end to end, a `ChaosRunner` executes a seeded schedule against a
+//!   live loopback fleet and the run holds every invariant: each
+//!   completed fetch restores bit-identically, every kill re-converges
+//!   through repair and every grow/shrink through rebalance, and obs
+//!   counters stay consistent — with each injected event leaving an
+//!   instant on the dedicated chaos trace track.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use kvfetcher::obs::{Track, TraceRecorder};
+use kvfetcher::service::{
+    ChaosEventKind, ChaosFleetSpec, ChaosRunner, ChaosSpec, MapTransition, Placement, ShardMap,
+};
+use kvfetcher::util::json::Json;
+use kvfetcher::util::Prng;
+
+#[test]
+fn same_seed_expands_to_identical_schedule_and_json() {
+    for seed in [0u64, 1, 42, 0xDEAD_BEEF, u64::MAX] {
+        let spec = ChaosSpec { seed, duration_secs: 20.0, ..Default::default() };
+        let a = spec.expand();
+        let b = spec.expand();
+        assert_eq!(a, b, "seed {seed}: expansion must be pure in the spec");
+        assert_eq!(a.seed, seed);
+        let ja = a.to_json(&spec).to_string();
+        let jb = b.to_json(&spec).to_string();
+        assert_eq!(ja, jb, "seed {seed}: chaos.json must be byte-identical");
+        // the document round-trips through the repo's own parser
+        let parsed = Json::parse(&ja).expect("chaos.json parses");
+        assert_eq!(parsed.get("seed").and_then(Json::as_f64), Some(seed as f64));
+        assert_eq!(
+            parsed.get("n_events").and_then(Json::as_usize),
+            Some(a.events.len()),
+            "n_events echoes the schedule length"
+        );
+        let events = parsed.get("events").and_then(Json::as_arr).expect("events array");
+        assert_eq!(events.len(), a.events.len());
+        for (ev, doc) in a.events.iter().zip(events) {
+            assert_eq!(doc.get("kind").and_then(Json::as_str), Some(ev.kind.name()));
+            assert_eq!(doc.get("at_ms").and_then(Json::as_usize), Some(ev.at_ms as usize));
+        }
+    }
+}
+
+#[test]
+fn distinct_seeds_expand_to_distinct_schedules() {
+    let base = ChaosSpec { duration_secs: 30.0, ..Default::default() };
+    let schedules: Vec<_> = [1u64, 2, 3, 99, 1234]
+        .into_iter()
+        .map(|seed| ChaosSpec { seed, ..base.clone() }.expand())
+        .collect();
+    for (i, a) in schedules.iter().enumerate() {
+        for b in &schedules[i + 1..] {
+            assert_ne!(
+                a.events, b.events,
+                "seeds {} and {} must not collide on a 30s horizon",
+                a.seed, b.seed
+            );
+        }
+    }
+}
+
+#[test]
+fn max_events_shrinks_to_an_exact_prefix() {
+    let full = ChaosSpec { seed: 17, duration_secs: 25.0, ..Default::default() };
+    let all = full.expand();
+    assert!(all.events.len() >= 4, "horizon long enough to shrink meaningfully");
+    for cap in [0, 1, 2, all.events.len() - 1, all.events.len(), all.events.len() + 5] {
+        let capped = ChaosSpec { max_events: Some(cap), ..full.clone() }.expand();
+        let want = cap.min(all.events.len());
+        assert_eq!(capped.events.len(), want, "cap {cap}");
+        assert_eq!(
+            &capped.events[..],
+            &all.events[..want],
+            "cap {cap}: shrinking must keep an exact prefix, not redraw"
+        );
+    }
+}
+
+#[test]
+fn schedules_never_emit_events_the_fleet_cannot_absorb() {
+    // weights left at default: every kind eligible — the expansion
+    // itself must keep kills off replication-1 fleets and keep the
+    // simulated size within [shards, shards + cap]
+    for (replication, seed) in [(1usize, 5u64), (2, 6), (3, 7)] {
+        let spec = ChaosSpec {
+            seed,
+            duration_secs: 40.0,
+            fleet: ChaosFleetSpec { shards: 3, replication, placement: Placement::RoundRobin },
+            ..Default::default()
+        };
+        let mut size = spec.fleet.shards;
+        for ev in &spec.expand().events {
+            match ev.kind {
+                ChaosEventKind::KillShard { shard, .. } => {
+                    assert!(replication >= 2, "kills need a surviving replica");
+                    assert!(shard < size);
+                }
+                ChaosEventKind::BusyStorm { shard, .. }
+                | ChaosEventKind::AcceptDelay { shard, .. }
+                | ChaosEventKind::ThrottleSwap { shard, .. } => assert!(shard < size),
+                ChaosEventKind::Grow => size += 1,
+                ChaosEventKind::Shrink { slot } => {
+                    assert_eq!(slot, size - 1, "runner shrinks retire the max slot");
+                    size -= 1;
+                }
+                ChaosEventKind::LoadBurst { .. } => {}
+            }
+            assert!(size >= spec.fleet.shards, "never shrinks below the spec fleet");
+        }
+    }
+}
+
+/// One randomized grow/shrink walk: at every step, pair the old and
+/// new maps into a `MapTransition` and check the placement invariants
+/// over a synthetic chunk chain.
+fn transition_walk(rng: &mut Prng, placement: Placement) {
+    let n0 = 2 + rng.below(4) as usize;
+    let replication = 1 + rng.below(3) as usize;
+    let mut map = ShardMap::with_replication(n0, placement, replication);
+    let hashes: Vec<u64> = (0..32).map(|_| rng.next_u64()).collect();
+    for _ in 0..12 {
+        let old = map.clone();
+        // arbitrary-slot shrinks here, unlike the runner's dense walk
+        let new = if map.n_shards() >= 2 && rng.below(2) == 0 {
+            let victim = map.shards()[rng.below(map.n_shards() as u64) as usize];
+            map.shrunk(victim).expect("victim is in the ring and not last")
+        } else {
+            map.grown()
+        };
+        assert_eq!(new.version(), old.version() + 1, "every step bumps the version");
+        let t = MapTransition::new(old.clone(), new.clone()).expect("version raised");
+        let union: BTreeSet<usize> = t.union_slots().into_iter().collect();
+        for (i, &h) in hashes.iter().enumerate() {
+            for m in [&old, &new] {
+                let reps = m.replicas_of(i, h);
+                let distinct: BTreeSet<usize> = reps.iter().copied().collect();
+                assert_eq!(distinct.len(), reps.len(), "replica sets never collide");
+                assert_eq!(reps.len(), m.replication());
+                assert!(reps.iter().all(|s| m.contains(*s)), "replicas are ring members");
+            }
+            let order = t.read_order(i, h);
+            assert!(!order.is_empty(), "every chunk stays placeable mid-transition");
+            assert_eq!(
+                &order[..new.replication()],
+                &new.replicas_of(i, h)[..],
+                "read order tries the new ring first"
+            );
+            let in_order: BTreeSet<usize> = order.iter().copied().collect();
+            assert_eq!(in_order.len(), order.len(), "read order never repeats a slot");
+            assert!(order.iter().all(|s| union.contains(s)), "read order stays in the union");
+            for s in old.replicas_of(i, h) {
+                assert!(in_order.contains(&s), "old holders stay reachable mid-transition");
+            }
+            assert_eq!(
+                t.moved(i, h),
+                old.replicas_of(i, h) != new.replicas_of(i, h),
+                "moved() is exactly the set whose replica set changed"
+            );
+        }
+        map = new;
+    }
+}
+
+#[test]
+fn shard_map_transitions_hold_invariants_under_random_walks() {
+    // proptest-style: many independent seeded walks, both placements
+    let mut rng = Prng::new(0x5EED_CA05);
+    for _ in 0..40 {
+        transition_walk(&mut rng, Placement::RoundRobin);
+        transition_walk(&mut rng, Placement::ByHash);
+    }
+}
+
+#[test]
+fn chaos_runner_holds_every_invariant_on_a_seeded_scenario() {
+    // small but non-trivial: the first six events of a dense schedule
+    // against a 3-shard r2 fleet, with the trace recorder attached
+    let spec = ChaosSpec {
+        seed: 1001,
+        duration_secs: 6.0,
+        events_per_sec: 2.0,
+        n_chunks: 4,
+        chunk_tokens: 24,
+        max_events: Some(6),
+        ..Default::default()
+    };
+    let schedule = spec.expand();
+    assert!(!schedule.events.is_empty());
+    let rec = TraceRecorder::new(1 << 14);
+    let runner = ChaosRunner::new(spec).expect("loopback fleet spawns");
+    let report = runner.with_recorder(Some(Arc::clone(&rec))).run(&schedule);
+    assert!(
+        report.ok(),
+        "seed {} must hold every invariant, got: {:#?}",
+        report.seed,
+        report.violations
+    );
+    assert_eq!(report.events_run, schedule.events.len());
+    // baseline + post-chaos fetches always run, plus per-event checks
+    assert!(report.fetches_verified >= 2, "got {}", report.fetches_verified);
+    // every injected event left an instant on the chaos track
+    let chaos_marks =
+        rec.events().iter().filter(|e| e.track == Track::Chaos).count();
+    assert_eq!(chaos_marks, report.events_run, "one chaos instant per executed event");
+    // and the kill/rebalance gates that ran are accounted
+    let kills = schedule
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, ChaosEventKind::KillShard { .. }))
+        .count();
+    let moves = schedule
+        .events
+        .iter()
+        .filter(|e| matches!(e.kind, ChaosEventKind::Grow | ChaosEventKind::Shrink { .. }))
+        .count();
+    assert_eq!(report.repairs_converged, kills);
+    assert_eq!(report.rebalances_converged, moves);
+}
+
+#[test]
+fn chaos_runner_converges_under_by_hash_placement() {
+    let spec = ChaosSpec {
+        seed: 2002,
+        duration_secs: 4.0,
+        events_per_sec: 2.0,
+        fleet: ChaosFleetSpec { shards: 3, replication: 2, placement: Placement::ByHash },
+        n_chunks: 3,
+        chunk_tokens: 24,
+        max_events: Some(4),
+        ..Default::default()
+    };
+    let schedule = spec.expand();
+    let report = ChaosRunner::new(spec).expect("loopback fleet spawns").run(&schedule);
+    assert!(
+        report.ok(),
+        "seed {} must hold every invariant, got: {:#?}",
+        report.seed,
+        report.violations
+    );
+    assert_eq!(report.events_run, schedule.events.len());
+}

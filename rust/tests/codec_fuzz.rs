@@ -1,12 +1,21 @@
-//! Decoder robustness: the video decoder, entropy decoder, and the
-//! CAS wire parsers (ISSUE 8) parse bytes that arrive over the network
-//! or from disk — they must *never* panic, whatever the input. Random
-//! inputs, truncations, and single-byte corruptions of valid streams
-//! must all return Ok or Err.
+//! Decoder robustness: the video decoder, entropy decoder, the CAS
+//! wire parsers (ISSUE 8), and the wire-v5 service protocol parsers
+//! (ISSUE 10) parse bytes that arrive over the network or from disk —
+//! they must *never* panic, whatever the input. Random inputs,
+//! truncations, and single-byte corruptions of valid streams must all
+//! return Ok or a typed Err.
+
+use std::io::Cursor;
 
 use kvfetcher::cas::object::{decode_object, encode_object};
 use kvfetcher::cas::{Digest, Manifest, ManifestChunk, ObjectRef};
 use kvfetcher::codec::{decode_video, encode_video, rans, CodecConfig, Frame};
+use kvfetcher::fetcher::ChunkPayload;
+use kvfetcher::service::protocol::{
+    decode_request, decode_response, encode_request, encode_response, frame_bytes, read_frame,
+    validate_frame_len, FrameRead, MAX_FRAME_BYTES,
+};
+use kvfetcher::service::{demo_prefix, NodeStats, Request, Response};
 use kvfetcher::util::proptest::gen_bytes;
 use kvfetcher::util::Prng;
 
@@ -115,6 +124,175 @@ fn cas_parsers_never_panic_on_corrupted_streams() {
         ext.extend(gen_bytes(&mut rng, 64, false));
         let _ = std::hint::black_box(Manifest::decode(&ext));
         let _ = std::hint::black_box(decode_object(&ext));
+    }
+}
+
+/// Representative valid frames of every wire-v5 message kind, as
+/// `(tag, payload)` pairs straight from the canonical encoders.
+fn wire_corpus() -> (Vec<(u8, Vec<u8>)>, Vec<(u8, Vec<u8>)>) {
+    let demo = demo_prefix(3, 2, 24);
+    let chunk = demo.chunks[0].clone();
+    let variant = chunk.variants[1].clone();
+    let requests = vec![
+        Request::LookupPrefix { tokens: demo.tokens.clone() },
+        Request::HasChunks { hashes: demo.hashes.clone() },
+        Request::FetchChunk { hash: demo.hashes[0], resolution: "240p".into() },
+        Request::PullChunk { hash: demo.hashes[1] },
+        Request::PutChunk { chunk: chunk.clone() },
+        Request::Stats,
+    ];
+    let responses = vec![
+        Response::PrefixMatch { hashes: demo.hashes.clone() },
+        Response::Has { present: vec![true, false] },
+        Response::Chunk(ChunkPayload {
+            hash: chunk.hash,
+            tokens: chunk.tokens,
+            resolution: "240p".into(),
+            scales: chunk.scales.clone(),
+            group_bytes: variant.group_bytes,
+        }),
+        Response::NotFound { hash: 0xDEAD },
+        Response::Stored { stored: true, evicted: 3 },
+        Response::Stats(NodeStats {
+            chunks: 7,
+            used_bytes: 123_456,
+            capacity_bytes: Some(1 << 20),
+            evictions: 2,
+            inflight_bytes: 64,
+            peak_inflight_bytes: 4096,
+            busy_replies: 5,
+            served_bytes: 1 << 22,
+            map_version: 9,
+        }),
+        Response::Err { msg: "no such variant".into() },
+        Response::Busy { retry_after_ms: 25 },
+        Response::ChunkFull(chunk),
+    ];
+    (
+        requests.iter().map(encode_request).collect(),
+        responses.iter().map(encode_response).collect(),
+    )
+}
+
+#[test]
+fn wire_parsers_never_panic_on_random_payloads() {
+    let mut rng = Prng::new(6000);
+    for _ in 0..600 {
+        let tag = rng.below(256) as u8;
+        let len = rng.below(2048) as usize;
+        let data = gen_bytes(&mut rng, len, false);
+        let _ = std::hint::black_box(decode_request(tag, &data));
+        let _ = std::hint::black_box(decode_response(tag, &data));
+    }
+}
+
+#[test]
+fn wire_messages_round_trip_and_reject_cross_fed_tags() {
+    let demo = demo_prefix(3, 2, 24);
+    let chunk = demo.chunks[0].clone();
+    let requests = vec![
+        Request::LookupPrefix { tokens: demo.tokens.clone() },
+        Request::HasChunks { hashes: demo.hashes.clone() },
+        Request::FetchChunk { hash: demo.hashes[0], resolution: "240p".into() },
+        Request::PullChunk { hash: demo.hashes[1] },
+        Request::PutChunk { chunk: chunk.clone() },
+        Request::Stats,
+    ];
+    for req in &requests {
+        let (tag, payload) = encode_request(req);
+        let back = decode_request(tag, &payload).expect("valid request decodes");
+        assert_eq!(&back, req);
+        // a request tag is never a valid response tag
+        assert!(decode_response(tag, &payload).is_err(), "cross-fed request tag {tag}");
+    }
+    let responses =
+        vec![Response::Stats(NodeStats::default()), Response::ChunkFull(chunk)];
+    for resp in &responses {
+        let (tag, payload) = encode_response(resp);
+        let back = decode_response(tag, &payload).expect("valid response decodes");
+        assert_eq!(&back, resp);
+        assert!(decode_request(tag, &payload).is_err(), "cross-fed response tag {tag}");
+    }
+}
+
+#[test]
+fn wire_parsers_never_panic_on_corrupted_frames() {
+    let mut rng = Prng::new(7000);
+    let (requests, responses) = wire_corpus();
+    for (tag, payload) in requests.iter().chain(&responses) {
+        // sanity: one of the two decoders accepts the pristine frame
+        let pristine_ok = decode_request(*tag, payload).is_ok()
+            || decode_response(*tag, payload).is_ok();
+        assert!(pristine_ok, "tag {tag}: pristine frame must decode");
+        // single-bit corruptions — possibly still valid, never a panic
+        for _ in 0..60 {
+            let mut bad = payload.clone();
+            if bad.is_empty() {
+                break;
+            }
+            let i = rng.below(bad.len() as u64) as usize;
+            bad[i] ^= 1 << rng.below(8);
+            let _ = std::hint::black_box(decode_request(*tag, &bad));
+            let _ = std::hint::black_box(decode_response(*tag, &bad));
+        }
+        // truncations
+        for _ in 0..20 {
+            let cut = rng.below((payload.len() + 1) as u64) as usize;
+            let _ = std::hint::black_box(decode_request(*tag, &payload[..cut]));
+            let _ = std::hint::black_box(decode_response(*tag, &payload[..cut]));
+        }
+        // trailing junk: the deframer hands the parser an exact
+        // payload, so leftover bytes are a framing bug — both decoders
+        // must refuse them (`rd.finish()`), typed, never a panic
+        let mut ext = payload.clone();
+        ext.extend(gen_bytes(&mut rng, 32, false));
+        assert!(decode_request(*tag, &ext).is_err(), "tag {tag}: junk tail must not decode");
+        assert!(decode_response(*tag, &ext).is_err(), "tag {tag}: junk tail must not decode");
+    }
+}
+
+#[test]
+fn frame_layer_never_panics_and_gates_lengths() {
+    // length gate edges
+    assert!(validate_frame_len(0).is_err(), "zero-length frames are malformed");
+    assert!(validate_frame_len(1).is_ok());
+    assert!(validate_frame_len(MAX_FRAME_BYTES).is_ok());
+    assert!(validate_frame_len(MAX_FRAME_BYTES + 1).is_err(), "capacity refusal");
+
+    // a declared length past the cap must be refused before the
+    // payload allocation, whatever bytes follow
+    let mut huge = u32::MAX.to_le_bytes().to_vec();
+    huge.extend_from_slice(&[0u8; 16]);
+    assert!(read_frame(&mut Cursor::new(huge)).is_err());
+    let zero = 0u32.to_le_bytes().to_vec();
+    assert!(read_frame(&mut Cursor::new(zero)).is_err());
+
+    // a valid frame round-trips through the deframer...
+    let (tag, payload) = encode_request(&Request::PullChunk { hash: 77 });
+    let framed = frame_bytes(tag, &payload);
+    match read_frame(&mut Cursor::new(framed.clone())).expect("frame reads") {
+        FrameRead::Frame(t, p) => {
+            assert_eq!(t, tag);
+            assert_eq!(p, payload);
+        }
+        other => panic!("expected a frame, got {other:?}"),
+    }
+    // ...every truncation of it is Eof or a typed error, never a panic
+    for cut in 0..framed.len() {
+        let _ = std::hint::black_box(read_frame(&mut Cursor::new(framed[..cut].to_vec())));
+    }
+    // random byte streams with a bounded declared length (the first
+    // four bytes are the length header; keep it small so a fuzz case
+    // never legitimately allocates a quarter-gigabyte payload)
+    let mut rng = Prng::new(8000);
+    for _ in 0..300 {
+        let len = rng.below(64) as usize;
+        let mut data = gen_bytes(&mut rng, len, false);
+        if data.len() >= 4 {
+            data[2] = 0;
+            data[3] = 0;
+        }
+        let _ = std::hint::black_box(read_frame(&mut Cursor::new(data)));
     }
 }
 
